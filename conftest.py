@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from the repo root
+# (the canonical capture command is `pytest python/tests/ -q`).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,99 @@
+//! End-to-end driver (the repository's full-system validation run,
+//! recorded in EXPERIMENTS.md): schedule *training* of a real CNN on the
+//! scaled multi-node accelerator with all solver families, and reproduce
+//! the paper's headline metrics — KAPLA within a few percent of the
+//! exhaustively-searched optimum at orders-of-magnitude lower scheduling
+//! time (paper Fig. 7 + Table IV shape).
+//!
+//! The run exercises every layer of the stack: workload -> training-graph
+//! extension -> inter-layer DP (with conservative pruning) -> bottom-up
+//! intra-layer solving -> directive access calculus -> detailed simulator;
+//! the ML baseline additionally trains its cost surrogate online through
+//! the AOT JAX/Pallas artifacts over PJRT when `artifacts/` is present.
+//!
+//! Run: `cargo run --release --example e2e_training`
+//! (KAPLA_E2E_NET=alexnet|mlp|... and KAPLA_E2E_BATCH to vary.)
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_job, Job, SolverKind};
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::{eng, Table};
+use kapla::solvers::Objective;
+use kapla::util::stats::fmt_duration;
+use kapla::workloads::{by_name, training_graph};
+
+fn main() {
+    let net_name = std::env::var("KAPLA_E2E_NET").unwrap_or_else(|_| "alexnet".into());
+    let batch: u64 =
+        std::env::var("KAPLA_E2E_BATCH").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let arch = presets::bench_multi_node();
+    let fwd = by_name(&net_name).expect("unknown network");
+    let net = training_graph(&fwd);
+    println!(
+        "end-to-end: {} training graph ({} layers, {} fwd) batch={batch} on {}",
+        net.name,
+        net.len(),
+        fwd.len(),
+        arch.name
+    );
+
+    let dp = DpConfig { max_rounds: 16, ..DpConfig::default() };
+    let solvers = [
+        SolverKind::Baseline,
+        SolverKind::Kapla,
+        SolverKind::Random { p: 0.1, seed: 42 },
+        SolverKind::Ml { seed: 42, rounds: 8, batch: 32 },
+    ];
+
+    let mut rows = Vec::new();
+    let mut base_energy = None;
+    let mut base_time = None;
+    for solver in solvers {
+        println!("running {} ...", solver.letter());
+        let job =
+            Job { net: net.clone(), batch, objective: Objective::Energy, solver, dp };
+        let r = run_job(&arch, &job);
+        let e = r.eval.energy.total();
+        if solver == SolverKind::Baseline {
+            base_energy = Some(e);
+            base_time = Some(r.solve_s);
+        }
+        rows.push((solver.letter(), e, r.eval.latency_cycles, r.solve_s));
+    }
+
+    let be = base_energy.unwrap();
+    let bt = base_time.unwrap();
+    let mut t = Table::new(
+        &format!("{} training, batch {batch} (paper Fig.7 + Table IV shape)", net.name),
+        &["solver", "energy", "vs B", "latency", "solve time", "speedup vs B"],
+    );
+    for (letter, e, lat, s) in &rows {
+        t.row(vec![
+            letter.to_string(),
+            eng(*e, "pJ"),
+            format!("{:.3}x", e / be),
+            eng(*lat, "cy"),
+            fmt_duration(*s),
+            format!("{:.0}x", bt / s.max(1e-9)),
+        ]);
+    }
+    println!("\n{}", t.save_and_render("e2e_training"));
+
+    // Headline checks (paper: K within ~2.2% of B for training; R/M
+    // worse). K may come in slightly *below* B because the directive
+    // space B does not cover (buffer sharing, partial-region partitions)
+    // is available to K — the paper observes the same for solver S.
+    let k = rows.iter().find(|r| r.0 == "K").unwrap();
+    println!(
+        "KAPLA overhead vs exhaustive: {:+.2}% | speedup {:.0}x",
+        (k.1 / be - 1.0) * 100.0,
+        bt / k.3
+    );
+    assert!(
+        (0.75..=1.25).contains(&(k.1 / be)),
+        "KAPLA energy out of expected band: {:.3}x of B",
+        k.1 / be
+    );
+    assert!(k.3 < bt, "KAPLA must be faster than exhaustive");
+    println!("e2e training driver: OK");
+}

@@ -1,0 +1,40 @@
+//! Batch-1 inference on the small TPU-like edge device across the whole
+//! network zoo (the paper's Fig. 10 scenario), demonstrating KAPLA's
+//! generality across PE-array dataflows (row-stationary vs systolic).
+//!
+//! Run: `cargo run --release --example edge_inference`
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_job, Job, SolverKind};
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::{eng, Table};
+use kapla::solvers::Objective;
+use kapla::util::stats::fmt_duration;
+use kapla::workloads::all_networks;
+
+fn main() {
+    let arch = presets::edge_tpu();
+    println!("edge device: {} ({:?} array, {} kB GBUF)", arch.name, arch.pe_dataflow, arch.gbuf.bytes / 1024);
+
+    let mut t = Table::new(
+        "batch-1 edge inference (paper Fig. 10 scenario)",
+        &["network", "energy", "latency (ms)", "solve time"],
+    );
+    for net in all_networks() {
+        let job = Job {
+            net: net.clone(),
+            batch: 1,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp: DpConfig::default(),
+        };
+        let r = run_job(&arch, &job);
+        t.row(vec![
+            net.name.clone(),
+            eng(r.eval.energy.total(), "pJ"),
+            format!("{:.3}", r.eval.latency_s(&arch) * 1e3),
+            fmt_duration(r.solve_s),
+        ]);
+    }
+    println!("{}", t.save_and_render("edge_inference"));
+}

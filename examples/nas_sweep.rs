@@ -1,0 +1,91 @@
+//! NAS-style scheduling sweep (paper §II-C motivation: "network
+//! architecture search explores a large number of NN structure candidates;
+//! many layers must be re-scheduled due to different topologies and/or
+//! layer dimensions").
+//!
+//! Generates 16 width/depth variants of a ResNet-ish backbone and
+//! schedules each with KAPLA, showing per-variant energy/latency — the
+//! interactive-compilation workload that motivates a fast solver.
+//!
+//! Run: `cargo run --release --example nas_sweep`
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_jobs, Job, SolverKind};
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::{eng, Table};
+use kapla::solvers::Objective;
+use kapla::util::Timer;
+use kapla::workloads::{Layer, Network};
+
+/// A parameterized ResNet-ish candidate: `width` scales channels, `depth`
+/// is the number of blocks per stage.
+fn candidate(width: u64, depth: usize) -> Network {
+    let name = format!("nas-w{width}-d{depth}");
+    let mut n = Network::new(&name, 3, 64, 64);
+    n.chain(Layer::conv("stem", 3, 8 * width, 32, 3, 2));
+    let mut c = 8 * width;
+    let mut xo = 32;
+    for stage in 0..3 {
+        let k = 8 * width << stage;
+        for b in 0..depth {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            if b == 0 && stage > 0 {
+                xo /= 2;
+            }
+            n.chain(Layer::conv(&format!("s{stage}b{b}"), c, k, xo, 3, stride));
+            c = k;
+        }
+    }
+    n.chain(Layer::pool("gap", c, 1, xo, xo));
+    n.chain(Layer::fc("head", c, 100));
+    n
+}
+
+fn main() {
+    let arch = presets::bench_multi_node();
+    let variants: Vec<Network> = (1..=4)
+        .flat_map(|w| (1..=4).map(move |d| candidate(w, d)))
+        .collect();
+    println!("scheduling {} NAS candidates on {} ...", variants.len(), arch.name);
+
+    let jobs: Vec<Job> = variants
+        .iter()
+        .map(|net| Job {
+            net: net.clone(),
+            batch: 8,
+            objective: Objective::Latency,
+            solver: SolverKind::Kapla,
+            dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        })
+        .collect();
+
+    let t = Timer::start();
+    let results = run_jobs(&arch, &jobs, kapla::coordinator::default_threads());
+    let wall = t.elapsed_s();
+
+    let mut table = Table::new(
+        "NAS sweep: per-candidate schedule quality",
+        &["candidate", "layers", "MACs", "energy", "latency (ms)"],
+    );
+    let mut best: Option<(f64, &str)> = None;
+    for (net, r) in variants.iter().zip(&results) {
+        let lat = r.eval.latency_s(&arch) * 1e3;
+        if best.map(|(b, _)| lat < b).unwrap_or(true) {
+            best = Some((lat, &net.name));
+        }
+        table.row(vec![
+            net.name.clone(),
+            net.len().to_string(),
+            eng(net.total_macs(8) as f64, ""),
+            eng(r.eval.energy.total(), "pJ"),
+            format!("{lat:.3}"),
+        ]);
+    }
+    println!("{}", table.save_and_render("nas_sweep"));
+    let (blat, bname) = best.unwrap();
+    println!(
+        "{} candidates scheduled in {wall:.1} s wall ({:.2} s/candidate) — fastest: {bname} ({blat:.3} ms)",
+        variants.len(),
+        wall / variants.len() as f64
+    );
+}

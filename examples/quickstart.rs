@@ -1,0 +1,48 @@
+//! Quickstart: schedule a single CONV layer on the edge accelerator with
+//! KAPLA and print the resulting tensor-centric directive program plus its
+//! energy/latency evaluation.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kapla::arch::presets;
+use kapla::directives::emit::emit_layer;
+use kapla::sim::evaluate_layer;
+use kapla::solvers::kapla::solve_intra;
+use kapla::solvers::{IntraCtx, Objective};
+use kapla::workloads::Layer;
+
+fn main() {
+    // A mid-sized CONV layer (ResNet conv3_x shape).
+    let layer = Layer::conv("conv3a", 128, 256, 28, 3, 1);
+    let arch = presets::edge_tpu();
+    println!("arch: {} ({}x{} PEs, {:?})", arch.name, arch.pes.0, arch.pes.1, arch.pe_dataflow);
+    println!("layer: {} C={} K={} {}x{} R={}", layer.name, layer.c, layer.k, layer.xo, layer.yo, layer.r);
+
+    let ctx = IntraCtx {
+        region: (1, 1),
+        rb: 1, // batch-1 edge inference
+        ifm_on_chip: false,
+        objective: Objective::Energy,
+    };
+    let scheme = solve_intra(&arch, &layer, &ctx).expect("no valid scheme");
+    scheme.validate(&arch).expect("solver must return valid schemes");
+
+    println!("\n--- tensor-centric directives (paper Listing 1 format) ---");
+    println!("{}", emit_layer(&layer.name, &scheme));
+
+    let ev = evaluate_layer(&arch, &scheme, false);
+    println!("--- evaluation ---");
+    println!("energy: {:.3} uJ", ev.energy.total() / 1e6);
+    println!(
+        "  alu {:.1}% | regf {:.1}% | gbuf {:.1}% | dram {:.1}%",
+        100.0 * ev.energy.alu_pj / ev.energy.total(),
+        100.0 * ev.energy.regf_pj / ev.energy.total(),
+        100.0 * ev.energy.gbuf_pj / ev.energy.total(),
+        100.0 * ev.energy.dram_pj / ev.energy.total(),
+    );
+    println!("latency: {:.0} cycles ({:.3} ms @500MHz)", ev.latency_cycles, ev.latency_cycles / 500e3);
+    println!(
+        "DRAM traffic: ifm {} + ofm {} + wgt {} words",
+        ev.access.dram[0], ev.access.dram[1], ev.access.dram[2]
+    );
+}

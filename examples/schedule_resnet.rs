@@ -1,0 +1,67 @@
+//! Schedule full ResNet-50 inference on the paper's 16x16-node Eyeriss-like
+//! accelerator with KAPLA, and report the segment chain, energy breakdown
+//! and scheduling speed — the paper's flagship "complex NN on a scalable
+//! accelerator, solved in seconds" scenario.
+//!
+//! Run: `cargo run --release --example schedule_resnet`
+
+use kapla::arch::presets;
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::eng;
+use kapla::solvers::kapla::kapla_schedule;
+use kapla::solvers::Objective;
+use kapla::util::Timer;
+use kapla::workloads::nets;
+
+fn main() {
+    let arch = presets::multi_node_eyeriss();
+    let net = nets::resnet();
+    let batch = 64;
+    println!("scheduling {} ({} layers) batch={batch} on {}", net.name, net.len(), arch.name);
+
+    let t = Timer::start();
+    let (result, stats) = kapla_schedule(&arch, &net, batch, Objective::Energy, &DpConfig::default());
+    println!("\nKAPLA solved in {:.1} s", t.elapsed_s());
+    println!(
+        "inter-layer pruning: {} candidate schemes -> {} after validity -> {} after Pareto ({:.1}% pruned)",
+        stats.total,
+        stats.after_validity,
+        stats.after_pareto,
+        100.0 * (1.0 - stats.after_pareto as f64 / stats.total.max(1) as f64)
+    );
+
+    let ev = &result.eval;
+    println!("\nenergy  : {}", eng(ev.energy.total(), "pJ"));
+    println!("latency : {} cycles = {:.2} ms", eng(ev.latency_cycles, ""), ev.latency_s(&arch) * 1e3);
+    let b = &ev.energy;
+    for (name, v) in [
+        ("alu", b.alu_pj),
+        ("regf", b.regf_pj),
+        ("bus", b.bus_pj),
+        ("gbuf", b.gbuf_pj),
+        ("noc", b.noc_pj),
+        ("dram", b.dram_pj),
+    ] {
+        println!("  {name:5} {:>12} ({:.1}%)", eng(v, "pJ"), 100.0 * v / b.total());
+    }
+
+    println!("\nsegment chain ({} segments):", result.schedule.segments.len());
+    let mut pipelined = 0;
+    for (si, (seg, _)) in result.schedule.segments.iter().enumerate() {
+        let names: Vec<&str> = seg.layers.iter().map(|&i| net.layers[i].name.as_str()).collect();
+        if seg.spatial {
+            pipelined += 1;
+        }
+        if si < 12 || seg.spatial {
+            println!(
+                "  {si:>3}: {:<44} {} rounds={}",
+                names.join("+"),
+                if seg.spatial { "pipelined " } else { "time-shared" },
+                seg.rounds
+            );
+        } else if si == 12 {
+            println!("  ... ({} more)", result.schedule.segments.len() - 12);
+        }
+    }
+    println!("\n{pipelined} pipelined segments in the chain");
+}

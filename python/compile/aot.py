@@ -1,0 +1,90 @@
+"""AOT lowering: JAX/Pallas Layer-2 graphs -> HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (consumed by rust/src/runtime/):
+  cost_batch.hlo.txt       fn(feats [256,12], params [5]) -> [256,2]
+  surrogate_infer.hlo.txt  fn(w1 [16,64], b1 [64], w2 [64,1], b2 [1],
+                              x [128,16]) -> [128]
+  surrogate_train.hlo.txt  fn(w1, b1, w2, b2, x [64,16], y [64])
+                              -> (w1', b1', w2', b2', loss)
+
+Run once at build time (`make artifacts`); never on the solve path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_cost_batch():
+    feats = spec((model.COST_BATCH, ref.NUM_FEATURES))
+    params = spec((ref.NUM_PARAMS,))
+    return jax.jit(lambda f, p: (model.cost_batch_eval(f, p),)).lower(feats, params)
+
+
+def param_specs():
+    return (
+        spec((model.SCHEME_FEATURES, model.HIDDEN)),
+        spec((model.HIDDEN,)),
+        spec((model.HIDDEN, 1)),
+        spec((1,)),
+    )
+
+
+def lower_surrogate_infer():
+    x = spec((model.INFER_BATCH, model.SCHEME_FEATURES))
+    return jax.jit(lambda w1, b1, w2, b2, x: (model.mlp_forward(w1, b1, w2, b2, x),)).lower(
+        *param_specs(), x
+    )
+
+
+def lower_surrogate_train():
+    x = spec((model.TRAIN_BATCH, model.SCHEME_FEATURES))
+    y = spec((model.TRAIN_BATCH,))
+    return jax.jit(model.mlp_train_step).lower(*param_specs(), x, y)
+
+
+ARTIFACTS = {
+    "cost_batch.hlo.txt": lower_cost_batch,
+    "surrogate_infer.hlo.txt": lower_surrogate_infer,
+    "surrogate_train.hlo.txt": lower_surrogate_train,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

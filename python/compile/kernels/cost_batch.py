@@ -1,0 +1,54 @@
+"""Layer-1 Pallas kernel: batched KAPLA cost-model evaluation.
+
+The KAPLA solver's inter-layer phase scores hundreds of candidate segment
+schemes per layer; this kernel evaluates the lower-bound cost model over a
+whole candidate batch in one shot. The arithmetic is identical to
+`ref.cost_batch_ref` and to `rust/src/cost/mod.rs::cost_from_features`.
+
+TPU mapping: the grid tiles the batch dimension; each program instance
+holds a [bb, F] feature block and the broadcast [P] param vector in VMEM
+and emits a [bb, 2] result block — a pure VPU elementwise schedule with no
+cross-instance communication.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _cost_kernel(f_ref, p_ref, o_ref):
+    f = f_ref[...]
+    p = p_ref[...]
+    o_ref[...] = ref.cost_batch_ref(f, p)
+
+
+def _pick_block(dim, want):
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def cost_batch(feats, params, bb=64):
+    """feats [B, NUM_FEATURES] f32, params [NUM_PARAMS] f32 -> [B, 2]."""
+    b, f = feats.shape
+    assert f == ref.NUM_FEATURES, f"expected {ref.NUM_FEATURES} features, got {f}"
+    (p,) = params.shape
+    assert p == ref.NUM_PARAMS
+    bb = _pick_block(b, bb)
+    return pl.pallas_call(
+        _cost_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 2), jnp.float32),
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, f), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, 2), lambda i: (i, 0)),
+        interpret=True,
+    )(feats, params)

@@ -1,0 +1,53 @@
+"""Layer-1 Pallas kernel: blocked matrix multiply.
+
+The surrogate MLP's forward and backward passes are built entirely from
+this kernel (through a custom_vjp in model.py), so the whole L2 graph
+lowers into Pallas-generated HLO.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): the grid tiles M x N
+output blocks for VMEM residency with the full K panel streamed per tile —
+the natural MXU-feeding schedule for the small (<=128) dimensions used
+here. `interpret=True` is mandatory on this CPU-PJRT image; real-TPU
+lowering would emit a Mosaic custom-call the CPU plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # x_ref: [bm, K], w_ref: [K, bn] -> o_ref: [bm, bn]
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pick_block(dim, want):
+    """Largest divisor of `dim` not exceeding `want` (grid must tile)."""
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, w, bm=32, bn=32):
+    """Blocked Pallas matmul: x [M, K] @ w [K, N] -> [M, N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w)

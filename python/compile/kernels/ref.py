@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest sweeps shapes and asserts allclose between kernel and reference.
+The formulas mirror `rust/src/cost/mod.rs::cost_from_features` and
+`rust/src/solvers/ml.rs::NativeMlp` exactly (the Rust side is the third
+implementation of the same arithmetic, cross-checked in rust tests).
+"""
+
+import jax.numpy as jnp
+
+# Feature vector layout, keep in sync with rust cost::features():
+#  0 macs, 1 ifm, 2 ofm, 3 wgt, 4 nodes, 5 rounds, 6 ifm_on_chip,
+#  7 ofm_on_chip, 8 dram_hops, 9 pes_per_node, 10 gbuf_pj, 11 regf_pj
+NUM_FEATURES = 12
+
+# Arch param vector layout, keep in sync with rust runtime::cost_params():
+#  0 mac_pj, 1 dram_pj_per_word, 2 noc_pj_per_word_hop, 3 bus_pj_per_word,
+#  4 dram_words_per_cycle
+NUM_PARAMS = 5
+
+
+def cost_batch_ref(feats, params):
+    """Batched KAPLA lower-bound cost model.
+
+    feats: [B, NUM_FEATURES]; params: [NUM_PARAMS].
+    Returns [B, 2]: (energy_pj, latency_cycles_per_round).
+    """
+    macs = feats[:, 0]
+    ifm = feats[:, 1]
+    ofm = feats[:, 2]
+    wgt = feats[:, 3]
+    nodes = feats[:, 4]
+    rounds = feats[:, 5]
+    ifm_on = feats[:, 6]
+    ofm_on = feats[:, 7]
+    hops = feats[:, 8]
+    pes = feats[:, 9]
+    gbuf_pj = feats[:, 10]
+    regf_pj = feats[:, 11]
+
+    mac_pj, dram_pj, noc_pj, bus_pj, dram_wpc = (
+        params[0],
+        params[1],
+        params[2],
+        params[3],
+        params[4],
+    )
+
+    rounds_c = jnp.maximum(rounds, 1.0)
+    alu = macs * mac_pj
+    regf = 4.0 * macs * regf_pj
+    gbuf = 2.0 * (ifm + ofm + wgt / rounds_c) * gbuf_pj
+    dram_words = ifm * (1.0 - ifm_on) + ofm * (1.0 - ofm_on) + wgt / rounds_c
+    dram = dram_words * dram_pj
+    noc_hops = dram_words * hops + (ifm * ifm_on + ofm * ofm_on)
+    noc = noc_hops * noc_pj
+    bus = (ifm + ofm + wgt / rounds_c) * bus_pj
+    energy = (alu + regf + gbuf + dram + noc + bus) * rounds
+
+    compute = macs / (jnp.maximum(nodes, 1.0) * pes)
+    mem = dram_words / dram_wpc
+    latency = jnp.maximum(compute, mem)
+
+    return jnp.stack([energy, latency], axis=-1)
+
+
+def matmul_ref(x, w):
+    """Plain matmul oracle for the Pallas blocked-matmul kernel."""
+    return jnp.matmul(x, w)
+
+
+def mlp_forward_ref(w1, b1, w2, b2, x):
+    """Surrogate MLP forward: x [B,F] -> predictions [B]."""
+    h = jnp.maximum(jnp.matmul(x, w1) + b1, 0.0)
+    y = jnp.matmul(h, w2) + b2
+    return y[:, 0]
+
+
+def mlp_train_step_ref(w1, b1, w2, b2, x, y, lr):
+    """One explicit SGD step on MSE; mirrors rust NativeMlp::train_step."""
+    h_lin = jnp.matmul(x, w1) + b1
+    h = jnp.maximum(h_lin, 0.0)
+    pred = (jnp.matmul(h, w2) + b2)[:, 0]
+    err = pred - y
+    n = x.shape[0]
+    loss = jnp.mean(err * err)
+
+    g = (2.0 * err / n)[:, None]  # [B,1]
+    gb2 = jnp.sum(g)
+    gw2 = jnp.matmul(h.T, g)  # [H,1]
+    gh = jnp.matmul(g, w2.T) * (h_lin > 0.0)  # [B,H]
+    gb1 = jnp.sum(gh, axis=0)
+    gw1 = jnp.matmul(x.T, gh)  # [F,H]
+
+    return (
+        w1 - lr * gw1,
+        b1 - lr * gb1,
+        w2 - lr * gw2,
+        b2 - lr * gb2,
+        loss,
+    )

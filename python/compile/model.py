@@ -1,0 +1,99 @@
+"""Layer-2 JAX model: the cost-surrogate MLP (forward + SGD train step) and
+the batched cost evaluator, built on the Layer-1 Pallas kernels.
+
+The MLP (SCHEME_FEATURES -> HIDDEN ReLU -> 1) is the learned surrogate of
+the ML-based scheduling baseline (paper §V, AutoTVM-style). Its matmuls —
+forward *and* backward — run through the Pallas blocked-matmul kernel via a
+custom_vjp, so `jax.grad` of the training loss lowers entirely into
+Pallas-generated HLO. Hyperparameters mirror
+`rust/src/solvers/ml.rs` (HIDDEN, LEARNING_RATE) and
+`rust/src/cost/mod.rs::SCHEME_FEATURES`; the Rust runtime cross-checks
+numeric parity against its native implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as _pallas_matmul
+
+# Keep in sync with rust/src/cost/mod.rs and rust/src/solvers/ml.rs.
+SCHEME_FEATURES = 16
+HIDDEN = 64
+LEARNING_RATE = 1e-2
+
+# AOT artifact shapes (static for HLO export; the Rust runtime pads).
+INFER_BATCH = 128
+TRAIN_BATCH = 64
+COST_BATCH = 256
+
+
+@jax.custom_vjp
+def mm(x, w):
+    """Matmul as a differentiable primitive backed by the Pallas kernel."""
+    return _pallas_matmul(x, w)
+
+
+def _mm_fwd(x, w):
+    return _pallas_matmul(x, w), (x, w)
+
+
+def _mm_bwd(res, g):
+    x, w = res
+    # Both cotangents are themselves Pallas matmuls.
+    dx = _pallas_matmul(g, w.T)
+    dw = _pallas_matmul(x.T, g)
+    return dx, dw
+
+
+mm.defvjp(_mm_fwd, _mm_bwd)
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    """Surrogate forward: x [B, F] -> predictions [B]."""
+    h = jnp.maximum(mm(x, w1) + b1, 0.0)
+    y = mm(h, w2) + b2
+    return y[:, 0]
+
+
+def mlp_loss(params, x, y):
+    w1, b1, w2, b2 = params
+    pred = mlp_forward(w1, b1, w2, b2, x)
+    err = pred - y
+    return jnp.mean(err * err)
+
+
+def mlp_train_step(w1, b1, w2, b2, x, y):
+    """One SGD step; returns (w1', b1', w2', b2', loss).
+
+    The gradient flows through the Pallas matmul custom_vjp.
+    """
+    loss, grads = jax.value_and_grad(mlp_loss)((w1, b1, w2, b2), x, y)
+    gw1, gb1, gw2, gb2 = grads
+    lr = LEARNING_RATE
+    return (
+        w1 - lr * gw1,
+        b1 - lr * gb1,
+        w2 - lr * gw2,
+        b2 - lr * gb2,
+        loss,
+    )
+
+
+def cost_batch_eval(feats, params):
+    """Batched KAPLA lower-bound cost model (Layer-1 kernel pass-through)."""
+    from .kernels.cost_batch import cost_batch
+
+    return cost_batch(feats, params)
+
+
+def init_params(seed=0):
+    """He-normal init, used by pytest only (the Rust runtime owns the real
+    parameter buffers and initializes them with its own PRNG)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w1 = jax.random.normal(k1, (SCHEME_FEATURES, HIDDEN), jnp.float32) * (
+        2.0 / SCHEME_FEATURES
+    ) ** 0.5
+    b1 = jnp.zeros((HIDDEN,), jnp.float32)
+    w2 = jax.random.normal(k2, (HIDDEN, 1), jnp.float32) * (2.0 / HIDDEN) ** 0.5
+    b2 = jnp.zeros((1,), jnp.float32)
+    return w1, b1, w2, b2

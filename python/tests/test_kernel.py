@@ -1,0 +1,111 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Shape/seed sweeps stand in for hypothesis (not installed in this image):
+every test iterates a parameter grid with seeded random data and asserts
+allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.cost_batch import cost_batch
+from compile.kernels.matmul import matmul
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@pytest.mark.parametrize("m", [1, 3, 16, 32, 33, 64, 128])
+@pytest.mark.parametrize("k", [1, 16, 17, 64])
+@pytest.mark.parametrize("n", [1, 8, 64])
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 32), (64, 64), (128, 128)])
+def test_matmul_block_shape_invariance(bm, bn):
+    rng = np.random.default_rng(7)
+    x, w = rand(rng, 64, 32), rand(rng, 32, 48)
+    base = matmul(x, w)
+    got = matmul(x, w, bm=bm, bn=bn)
+    # Different block shapes reorder the f32 accumulation.
+    np.testing.assert_allclose(got, base, rtol=1e-3, atol=1e-4)
+
+
+def test_matmul_rejects_mismatched_contraction():
+    rng = np.random.default_rng(8)
+    with pytest.raises(AssertionError):
+        matmul(rand(rng, 4, 5), rand(rng, 6, 4))
+
+
+# ------------------------------------------------------------- cost batch
+
+
+def random_feats(rng, b):
+    """Feature rows shaped like real candidates (positive, large range)."""
+    f = np.zeros((b, ref.NUM_FEATURES), np.float32)
+    f[:, 0] = rng.uniform(1e6, 1e10, b)  # macs
+    f[:, 1] = rng.uniform(1e3, 1e7, b)  # ifm
+    f[:, 2] = rng.uniform(1e3, 1e7, b)  # ofm
+    f[:, 3] = rng.uniform(1e2, 1e7, b)  # wgt
+    f[:, 4] = rng.integers(1, 257, b)  # nodes
+    f[:, 5] = 2.0 ** rng.integers(0, 7, b)  # rounds
+    f[:, 6] = rng.integers(0, 2, b)  # ifm_on_chip
+    f[:, 7] = rng.integers(0, 2, b)  # ofm_on_chip
+    f[:, 8] = rng.uniform(1.0, 8.0, b)  # hops
+    f[:, 9] = 64.0  # pes per node
+    f[:, 10] = 3.4  # gbuf pj
+    f[:, 11] = 0.35  # regf pj
+    return jnp.asarray(f)
+
+
+PARAMS = jnp.asarray([1.0, 200.0, 9.76, 2.0, 25.6], jnp.float32)
+
+
+@pytest.mark.parametrize("b", [1, 2, 63, 64, 128, 256])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cost_batch_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    feats = random_feats(rng, b)
+    got = cost_batch(feats, PARAMS)
+    want = ref.cost_batch_ref(feats, PARAMS)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_cost_batch_block_invariance():
+    rng = np.random.default_rng(3)
+    feats = random_feats(rng, 128)
+    a = cost_batch(feats, PARAMS, bb=16)
+    b = cost_batch(feats, PARAMS, bb=128)
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_cost_monotone_in_macs():
+    rng = np.random.default_rng(4)
+    feats = np.array(random_feats(rng, 8))
+    hi = feats.copy()
+    hi[:, 0] *= 2.0
+    lo = np.asarray(cost_batch(jnp.asarray(feats), PARAMS))
+    up = np.asarray(cost_batch(jnp.asarray(hi), PARAMS))
+    assert (up[:, 0] > lo[:, 0]).all()
+    assert (up[:, 1] >= lo[:, 1]).all()
+
+
+def test_on_chip_forwarding_cheaper():
+    rng = np.random.default_rng(5)
+    feats = np.array(random_feats(rng, 16))
+    feats[:, 6] = 0.0
+    off = np.asarray(cost_batch(jnp.asarray(feats), PARAMS))
+    feats[:, 6] = 1.0
+    on = np.asarray(cost_batch(jnp.asarray(feats), PARAMS))
+    assert (on[:, 0] <= off[:, 0]).all()

@@ -1,0 +1,46 @@
+//! Paper Fig. 11: impact of the segment-candidate count k_S on the
+//! energy-overhead / scheduling-time tradeoff. The paper finds overheads
+//! barely grow as k_S shrinks (cost-estimation errors are small) while
+//! search speed improves substantially; default k_S = 4.
+//!
+//! Run: `cargo bench --bench fig11_ks_sensitivity`
+
+use kapla::coordinator::SolverKind;
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::benchkit as bk;
+use kapla::report::Table;
+use kapla::solvers::kapla::kapla_schedule;
+use kapla::solvers::Objective;
+use kapla::util::stats::fmt_duration;
+use kapla::workloads::training_graph;
+
+fn main() {
+    let arch = bk::bench_arch();
+    let batch = bk::bench_batch();
+    let nets = bk::bench_nets(&["alexnet", "mlp"]);
+
+    let mut t = Table::new(
+        &format!("Fig.11 — k_S sensitivity (training, batch {batch}, {})", arch.name),
+        &["network", "k_S", "energy vs B", "solve time"],
+    );
+    for fwd in &nets {
+        let net = training_graph(fwd);
+        eprintln!("[fig11] reference B for {}...", net.name);
+        let b = bk::run_cell(&arch, &net, batch, Objective::Energy, SolverKind::Baseline);
+        let be = b.eval.energy.total();
+        for ks in [1usize, 2, 4, 8] {
+            let dp = DpConfig { ks, ..bk::bench_dp() };
+            let (r, _) = kapla_schedule(&arch, &net, batch, Objective::Energy, &dp);
+            t.row(vec![
+                fwd.name.clone(),
+                ks.to_string(),
+                format!("{:.3}", r.eval.energy.total() / be),
+                fmt_duration(r.solve_s),
+            ]);
+        }
+    }
+    let out = t.save_and_render("fig11_ks_sensitivity");
+    println!("{out}");
+    bk::log_section("fig11_ks_sensitivity", &out);
+    println!("paper shape: energy ~flat in k_S (estimation errors small); time grows with k_S.");
+}

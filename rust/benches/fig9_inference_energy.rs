@@ -1,0 +1,55 @@
+//! Paper Fig. 9: dataflow energy for *inference* on multi-node
+//! Eyeriss-like accelerators (batch 64), all five solvers normalized to B.
+//! Inference DAGs are simpler than training DAGs and have fewer
+//! constraints, so the scheduling space is relatively richer — the paper
+//! reports K at 7.7% average overhead here (vs 2.2% for training), with
+//! R and M degrading much further (59% / 36.1%).
+//!
+//! Run: `cargo bench --bench fig9_inference_energy`
+
+use kapla::report::benchkit as bk;
+use kapla::report::Table;
+use kapla::solvers::Objective;
+use kapla::util::stats::{fmt_duration, geomean};
+
+fn main() {
+    let arch = bk::bench_arch();
+    let batch = bk::bench_batch();
+    let nets = bk::bench_nets(&["alexnet", "mlp"]);
+    let solvers = bk::paper_solvers(0.1);
+
+    let mut t = Table::new(
+        &format!("Fig.9 — inference energy normalized to B (batch {batch}, {})", arch.name),
+        &["network", "B", "S", "R", "M", "K", "K solve", "B solve"],
+    );
+    let mut per_solver: Vec<Vec<f64>> = vec![Vec::new(); solvers.len()];
+    for net in &nets {
+        eprintln!("[fig9] {} ({} layers)...", net.name, net.len());
+        let results: Vec<_> = solvers
+            .iter()
+            .map(|&s| bk::run_cell(&arch, net, batch, Objective::Energy, s))
+            .collect();
+        let base = results[0].eval.energy.total();
+        let mut row = vec![net.name.clone()];
+        for (i, r) in results.iter().enumerate() {
+            let norm = r.eval.energy.total() / base;
+            per_solver[i].push(norm);
+            row.push(format!("{norm:.3}"));
+        }
+        row.push(fmt_duration(results[4].solve_s));
+        row.push(fmt_duration(results[0].solve_s));
+        t.row(row);
+    }
+    let mut gm = vec!["geomean".to_string()];
+    for s in &per_solver {
+        gm.push(format!("{:.3}", geomean(s)));
+    }
+    gm.push(String::new());
+    gm.push(String::new());
+    t.row(gm);
+
+    let out = t.save_and_render("fig9_inference_energy");
+    println!("{out}");
+    bk::log_section("fig9_inference_energy", &out);
+    println!("paper shape: K ~7.7% over B on average; R worst (esp. MLP), M between.");
+}

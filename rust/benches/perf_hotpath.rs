@@ -1,0 +1,138 @@
+//! Hot-path micro-benchmarks backing EXPERIMENTS.md §Perf: throughput of
+//! the solver inner loops at each layer of the stack.
+//!
+//!   L3a  directive access-count calculus (the innermost arithmetic)
+//!   L3b  KAPLA bottom-up intra-layer solve (per layer-context)
+//!   L3c  exhaustive enumeration rate (schemes/s) — baseline B's inner loop
+//!   L3d  inter-layer DP (per network)
+//!   L1   AOT batched cost kernel via PJRT vs native Rust loop
+//!        (the batch-size amortization curve)
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use kapla::arch::presets;
+use kapla::cost::{cost_from_features, features, LayerCtx};
+use kapla::directives::{Grp, LevelBlock, LoopOrder, Qty};
+use kapla::interlayer::dp::{best_chains, DpConfig};
+use kapla::mapping::UnitMap;
+use kapla::partition::PartitionScheme;
+use kapla::report::benchkit as bk;
+use kapla::solvers::kapla::solve_intra;
+use kapla::solvers::space::visit_schemes;
+use kapla::solvers::{IntraCtx, Objective};
+use kapla::util::Timer;
+use kapla::workloads::nets;
+
+fn main() {
+    let arch = presets::multi_node_eyeriss();
+    let net = nets::alexnet();
+    let conv2 = &net.layers[2];
+    let mut lines = Vec::new();
+
+    // L3a: access-count calculus throughput.
+    {
+        let part = PartitionScheme { region: (4, 4), pk: 4, pn: 4, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(conv2, 16));
+        let s = kapla::directives::LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock {
+                qty: unit.align_block(Qty::new(2, 16, 16)),
+                order: LoopOrder([Grp::B, Grp::C, Grp::K]),
+            },
+        };
+        let n = 2_000_000u64;
+        let t = Timer::start();
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc = acc.wrapping_add(s.access_counts(false).dram_total());
+        }
+        let rate = n as f64 / t.elapsed_s();
+        lines.push(format!("L3a access_counts: {:.1} M evals/s (checksum {acc})", rate / 1e6));
+    }
+
+    // L3b: KAPLA intra-layer solve.
+    {
+        let ctx =
+            IntraCtx { region: (16, 16), rb: 64, ifm_on_chip: false, objective: Objective::Energy };
+        let n = 200;
+        let t = Timer::start();
+        for _ in 0..n {
+            let s = solve_intra(&arch, conv2, &ctx).unwrap();
+            std::hint::black_box(s);
+        }
+        let per = t.elapsed_ms() / n as f64;
+        lines.push(format!("L3b kapla solve_intra(conv2 @16x16,b64): {per:.2} ms/layer"));
+    }
+
+    // L3c: exhaustive enumeration rate.
+    {
+        let t = Timer::start();
+        let mut count = 0u64;
+        visit_schemes(&arch, conv2, (4, 4), 16, true, |s| {
+            std::hint::black_box(s);
+            count += 1;
+            count < 2_000_000
+        });
+        let rate = count as f64 / t.elapsed_s();
+        lines.push(format!("L3c exhaustive enumeration: {:.2} M schemes/s ({count} visited)", rate / 1e6));
+    }
+
+    // L3d: inter-layer DP.
+    {
+        let cfg = DpConfig::default();
+        let t = Timer::start();
+        let n = 20;
+        for _ in 0..n {
+            let (c, _) = best_chains(&arch, &net, 64, &cfg);
+            std::hint::black_box(c);
+        }
+        lines.push(format!("L3d inter-layer DP (alexnet, 16x16): {:.1} ms/net", t.elapsed_ms() / n as f64));
+    }
+
+    // L1: PJRT batched cost kernel vs native formula.
+    {
+        let ctx = LayerCtx {
+            nodes: 64,
+            round_batch: 8,
+            rounds: 4,
+            ifm_on_chip: false,
+            ofm_on_chip: false,
+            dram_hops: 2.0,
+        };
+        let feats: Vec<_> = (0..4096).map(|_| features(&arch, conv2, &ctx)).collect();
+        let t = Timer::start();
+        let reps = 100;
+        for _ in 0..reps {
+            for f in &feats {
+                std::hint::black_box(cost_from_features(&arch, f));
+            }
+        }
+        let native_rate = (reps * feats.len()) as f64 / t.elapsed_s();
+        lines.push(format!("L1 native cost formula: {:.1} M evals/s", native_rate / 1e6));
+
+        if kapla::runtime::artifacts_available() {
+            let rt = kapla::runtime::Runtime::cpu().expect("pjrt client");
+            let eval = rt.cost_evaluator().expect("cost artifact");
+            let params = kapla::runtime::cost_params(&arch);
+            for chunk in [256usize, 1024, 4096] {
+                let t = Timer::start();
+                let out = eval.eval(&feats[..chunk], params).unwrap();
+                std::hint::black_box(out);
+                let per_call = t.elapsed_ms();
+                let rate = chunk as f64 / t.elapsed_s();
+                lines.push(format!(
+                    "L1 PJRT cost kernel batch={chunk}: {per_call:.2} ms/call, {:.2} M evals/s",
+                    rate / 1e6
+                ));
+            }
+        } else {
+            lines.push("L1 PJRT cost kernel: skipped (run `make artifacts`)".into());
+        }
+    }
+
+    let body = lines.join("\n");
+    println!("{body}");
+    bk::log_section("perf_hotpath", &body);
+}

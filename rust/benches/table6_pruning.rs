@@ -1,0 +1,62 @@
+//! Paper Table VI: effectiveness of the inter-layer conservative pruning —
+//! number of candidate inter-layer schemes of one representative segment
+//! per network, before and after validity + Pareto pruning. Runs at the
+//! paper's full 16x16-node scale (pruning statistics are cheap: no
+//! intra-layer solving happens here — that is the whole point).
+//!
+//! Run: `cargo bench --bench table6_pruning`
+
+use kapla::arch::presets;
+use kapla::interlayer::prune::prune_and_rank;
+use kapla::interlayer::enumerate_segment_schemes;
+use kapla::report::benchkit as bk;
+use kapla::report::Table;
+use kapla::workloads::{all_networks, training_graph, LayerKind};
+
+/// Pick a representative multi-layer segment: the first span of 3
+/// consecutive weighted layers in the training graph (falls back to 2).
+fn representative_span(net: &kapla::workloads::Network) -> Vec<usize> {
+    let weighted: Vec<usize> = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.kind != LayerKind::Eltwise)
+        .map(|(i, _)| i)
+        .collect();
+    for w in weighted.windows(3) {
+        if w[2] - w[0] == 2 {
+            return w.to_vec();
+        }
+    }
+    vec![0, 1]
+}
+
+fn main() {
+    let arch = presets::multi_node_eyeriss(); // full scale, like the paper
+    let batch = bk::bench_batch();
+
+    let mut t = Table::new(
+        "Table VI — inter-layer conservative pruning (one representative segment per NN)",
+        &["network", "segment", "total schemes", "after validity", "after Pareto", "% pruned"],
+    );
+    for fwd in all_networks() {
+        let net = training_graph(&fwd);
+        let span = representative_span(&net);
+        let cands = enumerate_segment_schemes(&net, &arch, batch, &span, 64);
+        let total = cands.len();
+        let (_, stats) = prune_and_rank(&arch, &net, batch, cands);
+        let seg_name: Vec<&str> = span.iter().map(|&i| net.layers[i].name.as_str()).collect();
+        t.row(vec![
+            fwd.name.clone(),
+            seg_name.join("+"),
+            total.to_string(),
+            stats.after_validity.to_string(),
+            stats.after_pareto.to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - stats.after_pareto as f64 / total.max(1) as f64)),
+        ]);
+    }
+    let out = t.save_and_render("table6_pruning");
+    println!("{out}");
+    bk::log_section("table6_pruning", &out);
+    println!("paper shape: 85.7%..99.8% of candidate inter-layer schemes pruned per segment.");
+}

@@ -1,0 +1,80 @@
+//! Per-access SRAM energy model (McPAT-substitute, see DESIGN.md
+//! Substitutions).
+//!
+//! The paper models register files and SRAM buffers of different sizes with
+//! McPAT 1.3 at 28 nm. We cannot ship McPAT, so we fit the well-published
+//! Eyeriss energy hierarchy (normalized to a 1 pJ 16-bit MAC):
+//!
+//!   REGF (0.5 kB)   ~ 1x MAC
+//!   inter-PE bus    ~ 2x
+//!   GBUF (100 kB)   ~ 6x
+//!   DRAM            ~ 200x
+//!
+//! and scale SRAM access energy with the square root of capacity (wordline/
+//! bitline growth), which matches the McPAT trend across the 32 B – 512 kB
+//! range used in the paper's Table V sweep.
+
+/// Reference points for the sqrt-capacity fit.
+const REGF_REF_BYTES: f64 = 512.0;
+const REGF_REF_PJ: f64 = 1.0;
+const GBUF_REF_BYTES: f64 = 100.0 * 1024.0;
+const GBUF_REF_PJ: f64 = 6.0;
+
+/// Per-word (16-bit) access energy of a register file of `bytes` capacity.
+pub fn regf_pj_per_word(bytes: u64) -> f64 {
+    // Floor at 0.03 pJ: even a tiny latch-based file pays wire + mux energy.
+    (REGF_REF_PJ * ((bytes as f64) / REGF_REF_BYTES).sqrt()).max(0.03)
+}
+
+/// Per-word access energy of an SRAM global buffer of `bytes` capacity.
+pub fn gbuf_pj_per_word(bytes: u64) -> f64 {
+    (GBUF_REF_PJ * ((bytes as f64) / GBUF_REF_BYTES).sqrt()).max(0.5)
+}
+
+/// Per-word DRAM access energy. LPDDR4 at ~28 nm host: the paper models the
+/// Micron datasheet; the Eyeriss-normalized figure is ~200x a MAC.
+pub fn dram_pj_per_word() -> f64 {
+    200.0
+}
+
+/// Per-word energy of the intra-node PE-array bus (multicast network).
+pub fn pe_bus_pj_per_word() -> f64 {
+    2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_reference_points() {
+        assert!((regf_pj_per_word(512) - 1.0).abs() < 1e-12);
+        assert!((gbuf_pj_per_word(100 * 1024) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_capacity() {
+        let caps = [32u64, 64, 128, 512, 4096];
+        for w in caps.windows(2) {
+            assert!(regf_pj_per_word(w[0]) <= regf_pj_per_word(w[1]));
+            assert!(gbuf_pj_per_word(w[0] * 1024) <= gbuf_pj_per_word(w[1] * 1024));
+        }
+    }
+
+    #[test]
+    fn hierarchy_ordering_holds() {
+        // REGF < bus < GBUF < DRAM for the paper's large config sizes.
+        let regf = regf_pj_per_word(64);
+        let gbuf = gbuf_pj_per_word(32 * 1024);
+        assert!(regf < pe_bus_pj_per_word());
+        assert!(pe_bus_pj_per_word() < gbuf);
+        assert!(gbuf < dram_pj_per_word());
+    }
+
+    #[test]
+    fn sqrt_scaling() {
+        let e1 = gbuf_pj_per_word(64 * 1024);
+        let e4 = gbuf_pj_per_word(256 * 1024);
+        assert!((e4 / e1 - 2.0).abs() < 1e-9);
+    }
+}

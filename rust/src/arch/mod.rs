@@ -1,0 +1,174 @@
+//! Hardware architecture templates (paper §III-C, Fig. 1 and Fig. 4).
+//!
+//! A scalable NN accelerator is a 2D mesh of *nodes* connected by a NoC and
+//! to off-chip DRAM. Each node has a global buffer (GBUF) and a 2D array of
+//! PEs, each PE with a register file (REGF). Every memory level carries a
+//! capacity, a bandwidth, and a per-word access cost, plus a flag for
+//! same-level (neighbour) transfers which enables systolic flows at the PE
+//! level and buffer sharing at the node level.
+
+pub mod energy;
+pub mod presets;
+
+pub use presets::*;
+
+/// PE-array dataflow the lowest (REGF) level is constrained to
+/// (paper §III-C: "most hardware architectures require specific dataflow
+/// across the on-chip PEs").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PeDataflow {
+    /// Eyeriss-like row stationary: 1D conv rows per PE, filter rows ×
+    /// fmap rows across the array, neighbour (same-level) psum transfer.
+    RowStationary,
+    /// TPU-like weight-stationary systolic array: inputs flow left→right,
+    /// partial sums top→bottom; same-level transfers on both axes.
+    Systolic,
+}
+
+/// One level of the memory hierarchy.
+#[derive(Debug, Clone)]
+pub struct MemLevel {
+    pub name: &'static str,
+    /// Capacity in bytes of a single instance of this buffer.
+    pub bytes: u64,
+    /// Per-word (16-bit) access energy in pJ.
+    pub pj_per_word: f64,
+    /// Words per cycle an instance can sustain.
+    pub words_per_cycle: f64,
+    /// Whether hardware supports fetching from a neighbour instance at the
+    /// same level (systolic / buffer sharing), paper §III-C.
+    pub same_level_transfer: bool,
+}
+
+/// Complete hardware configuration (the template of Fig. 4).
+#[derive(Debug, Clone)]
+pub struct ArchConfig {
+    pub name: &'static str,
+    /// Node mesh dimensions (nodes_x, nodes_y).
+    pub nodes: (u64, u64),
+    /// PE array dimensions per node (pes_x, pes_y).
+    pub pes: (u64, u64),
+    /// Register file per PE.
+    pub regf: MemLevel,
+    /// Global buffer per node.
+    pub gbuf: MemLevel,
+    /// Off-chip DRAM.
+    pub dram: MemLevel,
+    /// Bytes per data word (16-bit => 2).
+    pub word_bytes: u64,
+    /// Logic frequency in Hz.
+    pub freq_hz: f64,
+    /// Total DRAM bandwidth in bytes/s (shared by all nodes).
+    pub dram_bw_bytes_per_s: f64,
+    /// NoC energy per bit per hop in pJ (paper: 0.61 pJ/bit/hop).
+    pub noc_pj_per_bit_hop: f64,
+    /// NoC link bandwidth in words/cycle per node port.
+    pub noc_words_per_cycle: f64,
+    /// Energy of one 16-bit MAC in pJ (paper: 1 pJ).
+    pub mac_pj: f64,
+    /// PE-array dataflow constraint.
+    pub pe_dataflow: PeDataflow,
+    /// Enable temporal inter-layer dataflow (segment slicing).
+    pub temporal_layer_pipe: bool,
+    /// Enable spatial inter-layer dataflow (layer pipelining).
+    pub spatial_layer_pipe: bool,
+}
+
+impl ArchConfig {
+    /// Total node count.
+    pub fn num_nodes(&self) -> u64 {
+        self.nodes.0 * self.nodes.1
+    }
+
+    /// PEs per node.
+    pub fn pes_per_node(&self) -> u64 {
+        self.pes.0 * self.pes.1
+    }
+
+    /// Total PE count across the accelerator.
+    pub fn total_pes(&self) -> u64 {
+        self.num_nodes() * self.pes_per_node()
+    }
+
+    /// REGF capacity in 16-bit words.
+    pub fn regf_words(&self) -> u64 {
+        self.regf.bytes / self.word_bytes
+    }
+
+    /// GBUF capacity in words.
+    pub fn gbuf_words(&self) -> u64 {
+        self.gbuf.bytes / self.word_bytes
+    }
+
+    /// Aggregate on-chip SRAM in bytes (sanity metric; the paper's large
+    /// config totals 8 MB).
+    pub fn total_sram_bytes(&self) -> u64 {
+        self.num_nodes() * (self.gbuf.bytes + self.pes_per_node() * self.regf.bytes)
+    }
+
+    /// NoC energy to move one word over `hops` mesh hops.
+    pub fn noc_pj_per_word(&self, hops: f64) -> f64 {
+        self.noc_pj_per_bit_hop * (self.word_bytes * 8) as f64 * hops
+    }
+
+    /// DRAM bandwidth expressed in words per cycle (whole chip).
+    pub fn dram_words_per_cycle(&self) -> f64 {
+        self.dram_bw_bytes_per_s / self.freq_hz / self.word_bytes as f64
+    }
+
+    /// Peak MACs/cycle of a node region holding `nodes` nodes.
+    pub fn peak_macs_per_cycle(&self, nodes: u64) -> f64 {
+        (nodes * self.pes_per_node()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_large_config_totals() {
+        let a = presets::multi_node_eyeriss();
+        assert_eq!(a.num_nodes(), 256);
+        assert_eq!(a.pes_per_node(), 64);
+        assert_eq!(a.total_pes(), 16384);
+        // 256 nodes x 32 kB = 8 MB GBUF SRAM (paper: "8 MB on-chip SRAM")
+        assert_eq!(a.num_nodes() * a.gbuf.bytes, 8 * 1024 * 1024);
+        assert_eq!(a.regf.bytes, 64);
+        assert_eq!(a.word_bytes, 2);
+    }
+
+    #[test]
+    fn edge_config_matches_paper() {
+        let a = presets::edge_tpu();
+        assert_eq!(a.num_nodes(), 1);
+        assert_eq!(a.pes, (16, 16));
+        assert_eq!(a.regf.bytes, 512);
+        assert_eq!(a.gbuf.bytes, 256 * 1024);
+        assert_eq!(a.pe_dataflow, PeDataflow::Systolic);
+    }
+
+    #[test]
+    fn word_capacities() {
+        let a = presets::multi_node_eyeriss();
+        assert_eq!(a.regf_words(), 32);
+        assert_eq!(a.gbuf_words(), 16 * 1024);
+    }
+
+    #[test]
+    fn noc_word_energy_scales_with_hops() {
+        let a = presets::multi_node_eyeriss();
+        let e1 = a.noc_pj_per_word(1.0);
+        let e3 = a.noc_pj_per_word(3.0);
+        assert!((e3 / e1 - 3.0).abs() < 1e-12);
+        // 0.61 pJ/bit * 16 bits = 9.76 pJ per word-hop
+        assert!((e1 - 9.76).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_words_per_cycle_reasonable() {
+        let a = presets::multi_node_eyeriss();
+        // 25.6 GB/s at 500 MHz, 2 B/word => 25.6 words/cycle
+        assert!((a.dram_words_per_cycle() - 25.6).abs() < 1e-9);
+    }
+}

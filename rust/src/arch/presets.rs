@@ -1,0 +1,124 @@
+//! Concrete hardware configurations used in the paper's evaluation (§V) and
+//! the Table V sweep, plus the scaled "bench" configs used so that the
+//! exhaustive baseline stays feasible in CI (see DESIGN.md Substitutions).
+
+use super::energy;
+use super::{ArchConfig, MemLevel, PeDataflow};
+
+fn mem(name: &'static str, bytes: u64, pj: f64, wpc: f64, same_level: bool) -> MemLevel {
+    MemLevel { name, bytes, pj_per_word: pj, words_per_cycle: wpc, same_level_transfer: same_level }
+}
+
+/// Build a multi-node Eyeriss-like configuration with the given mesh, PE
+/// array, and buffer sizes. Used by the Table V hardware sweep.
+pub fn eyeriss_like(
+    nodes: (u64, u64),
+    pes: (u64, u64),
+    regf_bytes: u64,
+    gbuf_bytes: u64,
+) -> ArchConfig {
+    ArchConfig {
+        name: "eyeriss-like",
+        nodes,
+        pes,
+        regf: mem("REGF", regf_bytes, energy::regf_pj_per_word(regf_bytes), 2.0, true),
+        gbuf: mem("GBUF", gbuf_bytes, energy::gbuf_pj_per_word(gbuf_bytes), 8.0, true),
+        dram: mem("DRAM", u64::MAX, energy::dram_pj_per_word(), 25.6, false),
+        word_bytes: 2,
+        freq_hz: 500e6,
+        dram_bw_bytes_per_s: 25.6e9,
+        noc_pj_per_bit_hop: 0.61,
+        noc_words_per_cycle: 4.0,
+        mac_pj: 1.0,
+        pe_dataflow: PeDataflow::RowStationary,
+        temporal_layer_pipe: true,
+        spatial_layer_pipe: true,
+    }
+}
+
+/// The paper's large multi-node accelerator (§V): 16x16 nodes, 8x8 PEs per
+/// node, 64 B REGF per PE, 32 kB GBUF per node, row-stationary PE arrays.
+pub fn multi_node_eyeriss() -> ArchConfig {
+    let mut a = eyeriss_like((16, 16), (8, 8), 64, 32 * 1024);
+    a.name = "multi-node-eyeriss-16x16";
+    a
+}
+
+/// Scaled-down multi-node config for benches/tests where the exhaustive
+/// baseline must terminate in seconds rather than hours: 4x4 nodes, same
+/// node internals as the paper config.
+pub fn bench_multi_node() -> ArchConfig {
+    let mut a = eyeriss_like((4, 4), (8, 8), 64, 32 * 1024);
+    a.name = "bench-multi-node-4x4";
+    a
+}
+
+/// The paper's small edge inference device (§V): single node, 16x16 PE
+/// systolic array (TPU-like), 512 B registers per PE, 256 kB global buffer.
+pub fn edge_tpu() -> ArchConfig {
+    ArchConfig {
+        name: "edge-tpu-16x16pe",
+        nodes: (1, 1),
+        pes: (16, 16),
+        regf: mem("REGF", 512, energy::regf_pj_per_word(512), 2.0, true),
+        gbuf: mem("GBUF", 256 * 1024, energy::gbuf_pj_per_word(256 * 1024), 8.0, false),
+        dram: mem("DRAM", u64::MAX, energy::dram_pj_per_word(), 12.8, false),
+        word_bytes: 2,
+        freq_hz: 500e6,
+        dram_bw_bytes_per_s: 12.8e9,
+        noc_pj_per_bit_hop: 0.61,
+        noc_words_per_cycle: 4.0,
+        mac_pj: 1.0,
+        pe_dataflow: PeDataflow::Systolic,
+        temporal_layer_pipe: true,
+        // Single node: no spatial layer pipelining possible.
+        spatial_layer_pipe: false,
+    }
+}
+
+/// The Table V sweep rows: (batch, nodes, pes, gbuf, regf) per the paper.
+pub fn table5_configs() -> Vec<(u64, ArchConfig)> {
+    let rows: [(u64, (u64, u64), (u64, u64), u64, u64); 5] = [
+        (64, (4, 4), (8, 8), 32 * 1024, 32),
+        (64, (4, 4), (8, 8), 32 * 1024, 64),
+        (64, (4, 4), (8, 8), 32 * 1024, 128),
+        (8, (4, 4), (16, 16), 32 * 1024, 32),
+        (1, (16, 16), (8, 8), 32 * 1024, 64),
+    ];
+    rows.iter()
+        .map(|&(batch, nodes, pes, gbuf, regf)| (batch, eyeriss_like(nodes, pes, regf, gbuf)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for a in [multi_node_eyeriss(), bench_multi_node(), edge_tpu()] {
+            assert!(a.num_nodes() >= 1);
+            assert!(a.pes_per_node() >= 1);
+            assert!(a.regf.bytes >= 2, "{}: regf too small", a.name);
+            assert!(a.gbuf.bytes > a.regf.bytes);
+            assert!(a.gbuf.pj_per_word > a.regf.pj_per_word);
+            assert!(a.dram.pj_per_word > a.gbuf.pj_per_word);
+        }
+    }
+
+    #[test]
+    fn table5_has_five_rows_with_paper_params() {
+        let rows = table5_configs();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].0, 64);
+        assert_eq!(rows[3].1.pes, (16, 16));
+        assert_eq!(rows[4].1.nodes, (16, 16));
+        assert_eq!(rows[4].0, 1);
+    }
+
+    #[test]
+    fn edge_has_no_spatial_pipe() {
+        assert!(!edge_tpu().spatial_layer_pipe);
+        assert!(multi_node_eyeriss().spatial_layer_pipe);
+    }
+}

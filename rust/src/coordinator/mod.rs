@@ -1,0 +1,175 @@
+//! Scheduling coordinator: solver registry, parallel batch scheduling, and
+//! the request-loop service mode.
+//!
+//! The paper measures scheduling time "with 8 parallel processes" (Table
+//! IV); the coordinator parallelizes scheduling jobs across OS threads
+//! (scoped, no external runtime dependency) and reuses solved results via
+//! the per-run intra-layer caches inside each solver. The service mode
+//! makes the binary a long-running scheduler: one line per request, JSON
+//! out — the "real-time interactive compilation" use the paper motivates
+//! (NAS, MLaaS).
+
+pub mod service;
+
+use crate::arch::ArchConfig;
+use crate::interlayer::dp::DpConfig;
+use crate::solvers::exhaustive::{baseline_schedule, directive_exhaustive_schedule};
+use crate::solvers::kapla::kapla_schedule;
+use crate::solvers::ml::ml_schedule;
+use crate::solvers::random::random_schedule;
+use crate::solvers::{Objective, SolveResult};
+use crate::workloads::Network;
+
+/// The five evaluated solvers (paper §V letters).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverKind {
+    /// B — nn-dataflow exhaustive baseline.
+    Baseline,
+    /// S — exhaustive over the directive space.
+    DirectiveExhaustive,
+    /// R — random sampling with keep-probability `p`.
+    Random { p: f64, seed: u64 },
+    /// M — simulated annealing + surrogate.
+    Ml { seed: u64, rounds: usize, batch: usize },
+    /// K — KAPLA.
+    Kapla,
+}
+
+impl SolverKind {
+    pub fn letter(&self) -> &'static str {
+        match self {
+            SolverKind::Baseline => "B",
+            SolverKind::DirectiveExhaustive => "S",
+            SolverKind::Random { .. } => "R",
+            SolverKind::Ml { .. } => "M",
+            SolverKind::Kapla => "K",
+        }
+    }
+
+    /// Parse a CLI name ("kapla", "b", "random:0.1", "ml", ...).
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        let lower = s.to_ascii_lowercase();
+        let (name, arg) = match lower.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        match name {
+            "k" | "kapla" => Some(SolverKind::Kapla),
+            "b" | "baseline" | "nn-dataflow" => Some(SolverKind::Baseline),
+            "s" | "exhaustive" => Some(SolverKind::DirectiveExhaustive),
+            "r" | "random" => {
+                let p = arg.and_then(|a| a.parse().ok()).unwrap_or(0.1);
+                Some(SolverKind::Random { p, seed: 0xDA7AF10 })
+            }
+            "m" | "ml" => {
+                let rounds = arg.and_then(|a| a.parse().ok()).unwrap_or(16);
+                Some(SolverKind::Ml { seed: 0x5EED, rounds, batch: 64 })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// One scheduling request.
+#[derive(Clone)]
+pub struct Job {
+    pub net: Network,
+    pub batch: u64,
+    pub objective: Objective,
+    pub solver: SolverKind,
+    pub dp: DpConfig,
+}
+
+/// Run one scheduling job to completion.
+pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
+    match job.solver {
+        SolverKind::Kapla => kapla_schedule(arch, &job.net, job.batch, job.objective, &job.dp).0,
+        SolverKind::Baseline => baseline_schedule(arch, &job.net, job.batch, job.objective, &job.dp),
+        SolverKind::DirectiveExhaustive => {
+            directive_exhaustive_schedule(arch, &job.net, job.batch, job.objective, &job.dp)
+        }
+        SolverKind::Random { p, seed } => {
+            random_schedule(arch, &job.net, job.batch, job.objective, &job.dp, p, seed)
+        }
+        SolverKind::Ml { seed, rounds, batch } => {
+            ml_schedule(arch, &job.net, job.batch, job.objective, &job.dp, seed, rounds, batch)
+        }
+    }
+}
+
+/// Run a batch of jobs over `threads` worker threads (work stealing via a
+/// shared atomic index). Results come back in job order.
+pub fn run_jobs(arch: &ArchConfig, jobs: &[Job], threads: usize) -> Vec<SolveResult> {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<SolveResult>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let r = run_job(arch, &jobs[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("job not run")).collect()
+}
+
+/// Default worker-thread count (the paper used 8 parallel processes).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workloads::nets;
+
+    #[test]
+    fn solver_kind_parsing() {
+        assert_eq!(SolverKind::parse("kapla"), Some(SolverKind::Kapla));
+        assert_eq!(SolverKind::parse("K"), Some(SolverKind::Kapla));
+        assert_eq!(SolverKind::parse("b"), Some(SolverKind::Baseline));
+        assert!(matches!(SolverKind::parse("random:0.5"), Some(SolverKind::Random { p, .. }) if p == 0.5));
+        assert!(matches!(SolverKind::parse("ml:4"), Some(SolverKind::Ml { rounds: 4, .. })));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn parallel_jobs_match_serial() {
+        let arch = presets::bench_multi_node();
+        let mk = |solver| Job {
+            net: nets::mlp(),
+            batch: 8,
+            objective: Objective::Energy,
+            solver,
+            dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        };
+        let jobs =
+            vec![mk(SolverKind::Kapla), mk(SolverKind::Random { p: 0.2, seed: 1 }), mk(SolverKind::Kapla)];
+        let par = run_jobs(&arch, &jobs, 3);
+        let ser: Vec<_> = jobs.iter().map(|j| run_job(&arch, j)).collect();
+        assert_eq!(par.len(), 3);
+        for (p, s) in par.iter().zip(&ser) {
+            assert!((p.eval.energy.total() - s.eval.energy.total()).abs() < 1e-6);
+        }
+        // KAPLA deterministic: jobs 0 and 2 identical.
+        assert!((par[0].eval.energy.total() - par[2].eval.energy.total()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn letters_match_paper() {
+        assert_eq!(SolverKind::Kapla.letter(), "K");
+        assert_eq!(SolverKind::Baseline.letter(), "B");
+        assert_eq!(SolverKind::DirectiveExhaustive.letter(), "S");
+        assert_eq!(SolverKind::Random { p: 0.1, seed: 0 }.letter(), "R");
+        assert_eq!(SolverKind::Ml { seed: 0, rounds: 1, batch: 1 }.letter(), "M");
+    }
+}

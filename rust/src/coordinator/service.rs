@@ -1,0 +1,156 @@
+//! Request-loop service mode: the long-running scheduler front end.
+//!
+//! Protocol (one request per line on stdin, one JSON response per line on
+//! stdout):
+//!
+//! ```text
+//! schedule <network> <batch> <solver> [energy|latency] [train]
+//! quit
+//! ```
+//!
+//! This is the deployment shape the paper motivates for NAS and MLaaS
+//! use cases (§II-C): dataflow scheduling as an interactive service.
+
+use std::io::{BufRead, Write};
+
+use crate::arch::ArchConfig;
+use crate::interlayer::dp::DpConfig;
+use crate::solvers::Objective;
+use crate::util::json::Json;
+use crate::workloads;
+
+use super::{run_job, Job, SolverKind};
+
+/// Handle a single request line; `None` means "quit".
+pub fn handle_line(arch: &ArchConfig, line: &str) -> Option<Json> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.as_slice() {
+        [] => Some(err_json("empty request")),
+        ["quit"] | ["exit"] => None,
+        ["schedule", rest @ ..] => Some(handle_schedule(arch, rest)),
+        _ => Some(err_json(&format!("unknown request: {line}"))),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", false.into()).set("error", msg.into());
+    o
+}
+
+fn handle_schedule(arch: &ArchConfig, args: &[&str]) -> Json {
+    let (&net_name, rest) = match args.split_first() {
+        Some(x) => x,
+        None => return err_json("schedule: missing network"),
+    };
+    let Some(fwd) = workloads::by_name(net_name) else {
+        return err_json(&format!("unknown network {net_name}"));
+    };
+    let batch: u64 = rest.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let solver = rest
+        .get(1)
+        .and_then(|s| SolverKind::parse(s))
+        .unwrap_or(SolverKind::Kapla);
+    let objective = match rest.get(2) {
+        Some(&"latency") => Objective::Latency,
+        _ => Objective::Energy,
+    };
+    let net = if rest.contains(&"train") { workloads::training_graph(&fwd) } else { fwd };
+
+    let job = Job { net, batch, objective, solver, dp: DpConfig::default() };
+    let r = run_job(arch, &job);
+
+    let mut o = Json::obj();
+    o.set("ok", true.into())
+        .set("network", job.net.name.as_str().into())
+        .set("batch", batch.into())
+        .set("solver", solver.letter().into())
+        .set("energy_pj", r.eval.energy.total().into())
+        .set("latency_cycles", r.eval.latency_cycles.into())
+        .set("latency_s", r.eval.latency_s(arch).into())
+        .set("solve_s", r.solve_s.into())
+        .set("segments", r.schedule.segments.len().into());
+    let segs: Vec<Json> = r
+        .schedule
+        .segments
+        .iter()
+        .map(|(seg, _)| {
+            let mut s = Json::obj();
+            s.set(
+                "layers",
+                Json::Arr(
+                    seg.layers
+                        .iter()
+                        .map(|&i| Json::Str(job.net.layers[i].name.clone()))
+                        .collect(),
+                ),
+            )
+            .set("spatial", seg.spatial.into())
+            .set("rounds", seg.rounds.into());
+            s
+        })
+        .collect();
+    o.set("chain", Json::Arr(segs));
+    o
+}
+
+/// Run the blocking stdin/stdout service loop.
+pub fn serve(arch: &ArchConfig) {
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    eprintln!("kapla service ready (schedule <net> <batch> <solver> [objective] [train] | quit)");
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        match handle_line(arch, &line) {
+            Some(resp) => {
+                let _ = writeln!(stdout, "{}", resp.to_string_compact());
+                let _ = stdout.flush();
+            }
+            None => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn quit_ends_loop() {
+        let arch = presets::bench_multi_node();
+        assert!(handle_line(&arch, "quit").is_none());
+        assert!(handle_line(&arch, "exit").is_none());
+    }
+
+    #[test]
+    fn bad_requests_report_errors() {
+        let arch = presets::bench_multi_node();
+        let r = handle_line(&arch, "bogus").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        let r = handle_line(&arch, "schedule nonexistent-net").unwrap();
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown network"));
+    }
+
+    #[test]
+    fn schedule_request_roundtrip() {
+        let arch = presets::bench_multi_node();
+        let r = handle_line(&arch, "schedule mlp 8 kapla").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert!(r.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(r.get("solver").unwrap().as_str(), Some("K"));
+        let s = r.to_string_compact();
+        assert!(s.starts_with('{') && s.ends_with('}'));
+    }
+
+    #[test]
+    fn training_request() {
+        let arch = presets::bench_multi_node();
+        let r = handle_line(&arch, "schedule mlp 8 kapla energy train").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert!(r.get("network").unwrap().as_str().unwrap().contains("train"));
+    }
+}

@@ -1,0 +1,344 @@
+//! KAPLA's fast cost model (paper §IV-A "Cost model", §IV-B "Fast cost
+//! estimation").
+//!
+//! Energy and latency are simple functions of resource utilization and data
+//! access counts. During inter-layer exploration the model "approximates to
+//! the optimistic cases if there is insufficient information, so the
+//! estimated cost [is] a (relatively tight) lower bound" — good enough to
+//! *prioritize* candidates, with DP keeping top-k chains to absorb errors.
+//!
+//! The same per-candidate formula is exported as a feature vector
+//! (`features()`), mirrored bit-for-bit by the AOT-compiled JAX/Pallas
+//! batched cost kernel (`python/compile/kernels/cost_batch.py`) that the
+//! runtime can invoke to score large candidate batches in one call.
+
+use crate::arch::{energy as earch, ArchConfig};
+use crate::interlayer::Segment;
+use crate::workloads::{Layer, Network};
+
+/// Number of features per candidate in the batched-kernel interchange.
+pub const NUM_FEATURES: usize = 12;
+
+/// A fast (optimistic) cost estimate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    pub energy_pj: f64,
+    pub latency_cycles: f64,
+}
+
+impl CostEstimate {
+    /// Scalar objective: energy-delay-ish weighting used for ranking. The
+    /// paper co-optimizes energy and performance (Fig. 7/8 trends match);
+    /// we rank by energy with a latency tie-breaker.
+    pub fn score(&self) -> f64 {
+        self.energy_pj * (1.0 + 1e-12 * self.latency_cycles)
+    }
+}
+
+/// Per-layer lower-bound terms within a segment context.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCtx {
+    /// Nodes allocated to the layer.
+    pub nodes: u64,
+    /// Per-round batch.
+    pub round_batch: u64,
+    /// Rounds in the segment.
+    pub rounds: u64,
+    /// Input forwarded on-chip (producer in segment).
+    pub ifm_on_chip: bool,
+    /// Output consumed on-chip (consumer in segment).
+    pub ofm_on_chip: bool,
+    /// Average DRAM-distribution hops for the region.
+    pub dram_hops: f64,
+}
+
+/// The feature vector for one (layer, ctx) candidate — the interchange
+/// format of the AOT batched cost kernel. Mirrored in python
+/// `compile/kernels/cost_batch.py::FEATURES`.
+pub fn features(arch: &ArchConfig, layer: &Layer, ctx: &LayerCtx) -> [f64; NUM_FEATURES] {
+    let rb = ctx.round_batch;
+    // Role volumes fold the back-weight pass's streamed dY into the input
+    // slot and zero the (non-resident) weight slot, so the shared formula
+    // stays correct for every layer kind.
+    let (inp, out, wgt) = layer.role_volumes(rb);
+    [
+        layer.macs(rb) as f64,
+        inp as f64,
+        out as f64,
+        wgt as f64,
+        ctx.nodes as f64,
+        ctx.rounds as f64,
+        ctx.ifm_on_chip as u64 as f64,
+        ctx.ofm_on_chip as u64 as f64,
+        ctx.dram_hops,
+        arch.pes_per_node() as f64,
+        arch.gbuf.pj_per_word,
+        arch.regf.pj_per_word,
+    ]
+}
+
+/// Evaluate the lower-bound cost from a feature vector. This is the single
+/// source of truth for the formula: the Rust hot path, the Pallas kernel
+/// and its jnp reference all implement exactly this arithmetic.
+pub fn cost_from_features(arch: &ArchConfig, f: &[f64; NUM_FEATURES]) -> CostEstimate {
+    let [macs, ifm, ofm, wgt, nodes, rounds, ifm_on, ofm_on, hops, pes, gbuf_pj, regf_pj] = *f;
+
+    // --- energy lower bound (per round) --------------------------------
+    let alu = macs * arch.mac_pj;
+    let regf = 4.0 * macs * regf_pj;
+    // Compulsory single pass through GBUF both ways.
+    let gbuf = 2.0 * (ifm + ofm + wgt / rounds.max(1.0)) * gbuf_pj;
+    // DRAM: compulsory misses only; weights amortized over rounds
+    // (resident across rounds).
+    let dram_words = ifm * (1.0 - ifm_on) + ofm * (1.0 - ofm_on) + wgt / rounds.max(1.0);
+    let dram = dram_words * arch.dram.pj_per_word;
+    // NoC: DRAM distribution plus on-chip forwarding at one hop.
+    let noc_hops = dram_words * hops + (ifm * ifm_on + ofm * ofm_on) * 1.0;
+    let noc = noc_hops * arch.noc_pj_per_word(1.0);
+    let bus = (ifm + ofm + wgt / rounds.max(1.0)) * earch::pe_bus_pj_per_word();
+    let energy_round = alu + regf + gbuf + dram + noc + bus;
+
+    // --- latency lower bound (per round) --------------------------------
+    // Optimistically assume all PEs across all allocated nodes are busy
+    // (paper §IV-B: "assume that the layer could use all the PEs").
+    let compute = macs / (nodes.max(1.0) * pes);
+    let mem = dram_words / arch.dram_words_per_cycle();
+    let lat_round = compute.max(mem);
+
+    CostEstimate { energy_pj: energy_round * rounds, latency_cycles: lat_round }
+}
+
+/// Lower-bound estimate for one layer in a segment context.
+pub fn layer_lower_bound(arch: &ArchConfig, layer: &Layer, ctx: &LayerCtx) -> CostEstimate {
+    let f = features(arch, layer, ctx);
+    cost_from_features(arch, &f)
+}
+
+/// Structural feature count for intra-layer *scheme* candidates — the
+/// input dimension of the learned cost surrogate used by the ML baseline
+/// (mirrored by `python/compile/model.py::SCHEME_FEATURES`).
+pub const SCHEME_FEATURES: usize = 16;
+
+/// Cheap structural featurization of an intra-layer scheme (AutoTVM-style
+/// "knob" features: no access counts, so the surrogate has something
+/// non-trivial to learn). Log-scaled where dynamic range is large.
+pub fn scheme_features(s: &crate::directives::LayerScheme) -> [f64; SCHEME_FEATURES] {
+    fn lg(x: u64) -> f64 {
+        ((x.max(1)) as f64).ln()
+    }
+    let p = &s.part;
+    let order_id = |o: crate::directives::LoopOrder| -> f64 {
+        crate::directives::LoopOrder::all().iter().position(|x| *x == o).unwrap() as f64
+    };
+    [
+        lg(p.pn),
+        lg(p.pk),
+        lg(p.pc),
+        lg(p.px * p.py),
+        p.share_ifm as u64 as f64,
+        p.share_wgt as u64 as f64,
+        lg(s.gbuf.qty.b),
+        lg(s.gbuf.qty.c),
+        lg(s.gbuf.qty.k),
+        lg(s.regf.qty.b),
+        lg(s.regf.qty.c),
+        lg(s.regf.qty.k),
+        order_id(s.gbuf.order),
+        order_id(s.regf.order),
+        s.unit.utilization,
+        lg(s.unit.node_macs()),
+    ]
+}
+
+/// Lower-bound estimate for a whole segment scheme (paper §IV-B): per-layer
+/// optimistic costs, fine-grained pipelining credited when granularities
+/// match, fill/drain rounds included.
+pub fn segment_lower_bound(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    seg: &Segment,
+) -> CostEstimate {
+    let rb = seg.round_batch(batch);
+    let mut energy = 0.0;
+    let mut round_lat: f64 = 0.0;
+    for (pos, &li) in seg.layers.iter().enumerate() {
+        let layer = &net.layers[li];
+        let nodes = seg.regions[pos].0 * seg.regions[pos].1;
+        let ctx = LayerCtx {
+            nodes,
+            round_batch: rb,
+            rounds: seg.rounds,
+            ifm_on_chip: seg.ifm_on_chip(net, li),
+            ofm_on_chip: seg.ofm_on_chip(net, li),
+            dram_hops: ((seg.regions[pos].0 + seg.regions[pos].1) as f64 / 4.0).max(1.0),
+        };
+        let est = layer_lower_bound(arch, layer, &ctx);
+        energy += est.energy_pj;
+        round_lat = round_lat.max(est.latency_cycles);
+    }
+    let latency = if seg.spatial {
+        round_lat * (seg.rounds as f64 + seg.len() as f64 - 1.0)
+    } else {
+        // time-multiplexed single layer(s)
+        seg.layers
+            .iter()
+            .enumerate()
+            .map(|(pos, &li)| {
+                let nodes = seg.regions[pos].0 * seg.regions[pos].1;
+                let ctx = LayerCtx {
+                    nodes,
+                    round_batch: rb,
+                    rounds: seg.rounds,
+                    ifm_on_chip: false,
+                    ofm_on_chip: false,
+                    dram_hops: ((seg.regions[pos].0 + seg.regions[pos].1) as f64 / 4.0).max(1.0),
+                };
+                layer_lower_bound(arch, &net.layers[li], &ctx).latency_cycles
+            })
+            .sum::<f64>()
+            * seg.rounds as f64
+    };
+    CostEstimate { energy_pj: energy, latency_cycles: latency }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::interlayer::Segment;
+    use crate::workloads::nets;
+
+    fn ctx(nodes: u64, rb: u64) -> LayerCtx {
+        LayerCtx {
+            nodes,
+            round_batch: rb,
+            rounds: 1,
+            ifm_on_chip: false,
+            ofm_on_chip: false,
+            dram_hops: 2.0,
+        }
+    }
+
+    #[test]
+    fn estimate_positive_and_scales_with_batch() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let l = &net.layers[0];
+        let e1 = layer_lower_bound(&arch, l, &ctx(256, 1));
+        let e4 = layer_lower_bound(&arch, l, &ctx(256, 4));
+        assert!(e1.energy_pj > 0.0);
+        assert!(e4.energy_pj > 3.0 * e1.energy_pj && e4.energy_pj < 5.0 * e1.energy_pj);
+    }
+
+    #[test]
+    fn more_nodes_cut_latency_not_energy_floor() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let l = &net.layers[2];
+        let few = layer_lower_bound(&arch, l, &ctx(16, 4));
+        let many = layer_lower_bound(&arch, l, &ctx(256, 4));
+        assert!(many.latency_cycles < few.latency_cycles);
+    }
+
+    #[test]
+    fn on_chip_forwarding_cheaper() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let l = &net.layers[2];
+        let mut c = ctx(64, 4);
+        let off = layer_lower_bound(&arch, l, &c);
+        c.ifm_on_chip = true;
+        let on = layer_lower_bound(&arch, l, &c);
+        assert!(on.energy_pj < off.energy_pj);
+    }
+
+    #[test]
+    fn estimate_is_lower_bound_of_simulator() {
+        // The fast model must never exceed the detailed simulator for the
+        // same layer placement (it drops all refetch traffic).
+        use crate::directives::{Grp, LevelBlock, LoopOrder, Qty};
+        use crate::mapping::UnitMap;
+        use crate::partition::PartitionScheme;
+
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        for li in [0usize, 2, 4] {
+            let l = &net.layers[li];
+            let part = PartitionScheme { region: (4, 4), pk: 4, pn: 4, ..PartitionScheme::single() };
+            if !part.is_valid(l, 16) {
+                continue;
+            }
+            let unit = UnitMap::build(&arch, part.node_shape(l, 16));
+            let s = crate::directives::LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock {
+                    qty: Qty::new(1, 1, 2),
+                    order: LoopOrder([Grp::B, Grp::K, Grp::C]),
+                },
+                gbuf: LevelBlock {
+                    qty: unit.align_block(Qty::new(1, 8, 8)),
+                    order: LoopOrder([Grp::B, Grp::C, Grp::K]),
+                },
+            };
+            let sim = crate::sim::evaluate_layer(&arch, &s, false);
+            let est = layer_lower_bound(
+                &arch,
+                l,
+                &LayerCtx {
+                    nodes: 16,
+                    round_batch: 16,
+                    rounds: 1,
+                    ifm_on_chip: false,
+                    ofm_on_chip: false,
+                    dram_hops: part.dram_hops(),
+                },
+            );
+            assert!(
+                est.energy_pj <= sim.energy.total() * 1.001,
+                "layer {li}: est {} > sim {}",
+                est.energy_pj,
+                sim.energy.total()
+            );
+        }
+    }
+
+    #[test]
+    fn segment_estimate_accumulates() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let seg1 = Segment::single(0, &arch);
+        let e1 = segment_lower_bound(&arch, &net, 64, &seg1);
+        assert!(e1.energy_pj > 0.0 && e1.latency_cycles > 0.0);
+
+        let seg2 = Segment {
+            layers: vec![2, 3],
+            regions: vec![(8, 16), (8, 16)],
+            spatial: true,
+            rounds: 8,
+        };
+        let e2 = segment_lower_bound(&arch, &net, 64, &seg2);
+        assert!(e2.energy_pj > 0.0);
+    }
+
+    #[test]
+    fn features_roundtrip_formula() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let l = &net.layers[0];
+        let c = ctx(64, 4);
+        let f = features(&arch, l, &c);
+        let via_features = cost_from_features(&arch, &f);
+        let direct = layer_lower_bound(&arch, l, &c);
+        assert_eq!(via_features, direct);
+        assert_eq!(f.len(), NUM_FEATURES);
+    }
+
+    #[test]
+    fn score_orders_by_energy() {
+        let a = CostEstimate { energy_pj: 1.0, latency_cycles: 1e9 };
+        let b = CostEstimate { energy_pj: 2.0, latency_cycles: 1.0 };
+        assert!(a.score() < b.score());
+    }
+}

@@ -1,0 +1,247 @@
+//! Emission of the Listing-1-style directive text from a `LayerScheme`.
+//!
+//! The emitted program is the paper's user-facing representation: per
+//! memory level, the resident `tensor`s, the spatial `stack`s and the
+//! temporal `update`s, constructed from the inside out. `parse.rs` reads
+//! the same format back; round-trip equality is tested.
+
+use super::scheme::LayerScheme;
+use super::{Grp, Qty};
+use crate::arch::PeDataflow;
+use crate::workloads::LayerKind;
+use std::fmt::Write as _;
+
+/// Emit the full directive program of one layer.
+pub fn emit_layer(name: &str, s: &LayerScheme) -> String {
+    let mut out = String::new();
+    let kind = match s.unit.shape.kind {
+        LayerKind::Conv => "CONV",
+        LayerKind::DWConv => "DWCONV",
+        LayerKind::Fc => "FC",
+        LayerKind::Pool => "POOL",
+        LayerKind::Eltwise => "ELTWISE",
+        LayerKind::ConvBwWeight => "CONVBW",
+    };
+    let _ = writeln!(out, "{kind} {name}:");
+    emit_regf(&mut out, name, s);
+    emit_gbuf(&mut out, name, s);
+    out
+}
+
+fn tensor_line(
+    out: &mut String,
+    tag: &str,
+    dims: &[(&str, u64)],
+    shr: u64,
+) {
+    let body: Vec<String> = dims.iter().map(|(d, v)| format!("{d}={v}")).collect();
+    if shr > 1 {
+        let _ = writeln!(out, "    tensor{{{tag}}}({}, shr={shr})", body.join(", "));
+    } else {
+        let _ = writeln!(out, "    tensor{{{tag}}}({})", body.join(", "));
+    }
+}
+
+fn update_line(out: &mut String, steps: &[(Grp, u64)], comment: &str) {
+    let body: Vec<String> =
+        steps.iter().map(|(g, v)| format!("{}+={v}", g.name())).collect();
+    let _ = writeln!(out, "    update({}) % {comment}", body.join(", "));
+}
+
+/// REGF-level directives: per-PE unit tensors, the PE-array stacks fixed by
+/// the hardware dataflow, and the REGF-level update nest.
+fn emit_regf(out: &mut String, name: &str, s: &LayerScheme) {
+    let _ = writeln!(out, "  REGF:");
+    let sh = &s.unit.shape;
+    let q = s.regf.qty;
+    let (ci, ki) = chan_view(s, q);
+    match s.unit.dataflow {
+        PeDataflow::RowStationary => {
+            tensor_line(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.r), ("Yi", 1)], 1);
+            if s.unit.wgt_node_words(Qty::UNIT) > 0 {
+                tensor_line(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", 1)], 1);
+            }
+            tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", 1), ("Yo", 1)], 1);
+            let cols = s.unit.array.0.min(sh.yo);
+            let rows = s.unit.array.1.min(sh.s);
+            let _ = writeln!(out, "    stack(Yi+=1, Yo+=1, {cols}) % PE columns");
+            let _ = writeln!(out, "    stack(S+=1, Yi+=1, {rows}) % PE rows");
+            let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % 1D conv", sh.stride);
+            if sh.yo > cols {
+                let _ = writeln!(out, "    update(Yi+={c}, Yo+={c}) % folding", c = cols);
+            }
+        }
+        PeDataflow::Systolic => {
+            tensor_line(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.xi()), ("Yi", sh.s)], 1);
+            if s.unit.wgt_node_words(Qty::UNIT) > 0 {
+                tensor_line(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)], 1);
+            }
+            tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", 1)], 1);
+            let rows = (s.unit.granule.c * sh.r * sh.s).min(s.unit.array.1);
+            let cols = s.unit.granule.k.min(s.unit.array.0);
+            let _ = writeln!(out, "    stack(C+=1, {rows}) % systolic rows (reduction)");
+            let _ = writeln!(out, "    stack(K+=1, {cols}) % systolic cols");
+            let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % pixel stream", sh.stride);
+        }
+    }
+    emit_updates(out, s.regf_trips(), s.regf.order, s.regf.qty, s);
+}
+
+/// GBUF-level directives: per-node tensors (with shr), the node-level
+/// partition stacks, and the DRAM-iterating update nest.
+fn emit_gbuf(out: &mut String, name: &str, s: &LayerScheme) {
+    let _ = writeln!(out, "  GBUF:");
+    let sh = &s.unit.shape;
+    let q = s.gbuf.qty;
+    let (ci, ki) = chan_view(s, q);
+    let (ifm_y, ofm_y) = match s.unit.dataflow {
+        PeDataflow::RowStationary => (sh.yi(), sh.yo),
+        PeDataflow::Systolic => (sh.s, 1),
+    };
+    tensor_line(
+        out,
+        &format!("{name}_i"),
+        &[("N", q.b), ("C", ci), ("Xi", sh.xi()), ("Yi", ifm_y)],
+        s.part.ifm_shr(),
+    );
+    if s.unit.wgt_node_words(Qty::UNIT) > 0 {
+        tensor_line(
+            out,
+            &format!("{name}_w"),
+            &[("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)],
+            s.part.wgt_shr(),
+        );
+    }
+    tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", ofm_y)], 1);
+    // Node-level stacks, one per partitioned dim (declared order applies
+    // recursively, paper §III-B).
+    let p = &s.part;
+    for (dim, shift, repl) in [
+        ("K", ki, p.pk),
+        ("N", q.b, p.pn),
+        ("C", ci, p.pc),
+        ("Xo", sh.xo, p.px),
+        ("Yo", ofm_y, p.py),
+    ] {
+        if repl > 1 {
+            let _ = writeln!(out, "    stack({dim}+={shift}, {repl}) % node parallel");
+        }
+    }
+    emit_updates(out, s.gbuf_trips(), s.gbuf.order, s.gbuf.qty, s);
+}
+
+/// One `update` per loop group with trips > 1, outermost first in loop
+/// order; the step equals the resident block quantity per group.
+fn emit_updates(out: &mut String, trips: Qty, order: super::LoopOrder, block: Qty, s: &LayerScheme) {
+    for g in order.0.iter().rev() {
+        // innermost emitted first: directives list updates inside-out
+        if trips.get(*g) > 1 {
+            let step = block.get(*g);
+            let dim = group_dim_name(*g, s);
+            update_line(out, &[(*g, step)], &format!("{} loop x{}", dim, trips.get(*g)));
+        }
+    }
+}
+
+fn group_dim_name(g: Grp, s: &LayerScheme) -> &'static str {
+    match (g, s.unit.dataflow) {
+        (Grp::B, PeDataflow::RowStationary) => "N",
+        (Grp::B, PeDataflow::Systolic) => "N*Yo",
+        (Grp::C, _) => "C",
+        (Grp::K, _) => "K",
+    }
+}
+
+/// Channel view of a block: DW-family layers carry channels in K.
+fn chan_view(s: &LayerScheme, q: Qty) -> (u64, u64) {
+    match s.unit.shape.kind {
+        LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => (q.k, q.k),
+        _ => (q.c, q.k),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::directives::{LevelBlock, LoopOrder};
+    use crate::mapping::UnitMap;
+    use crate::partition::PartitionScheme;
+    use crate::workloads::Layer;
+
+    fn sample() -> LayerScheme {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("conv2", 96, 256, 27, 5, 1);
+        let part = PartitionScheme {
+            region: (4, 4),
+            pk: 4,
+            pn: 4,
+            share_ifm: true,
+            ..PartitionScheme::single()
+        };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 64));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 3), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(4, 24, 16), order: LoopOrder([Grp::C, Grp::B, Grp::K]) },
+        }
+    }
+
+    #[test]
+    fn emits_both_levels() {
+        let text = emit_layer("conv2", &sample());
+        assert!(text.contains("CONV conv2:"));
+        assert!(text.contains("REGF:"));
+        assert!(text.contains("GBUF:"));
+    }
+
+    #[test]
+    fn emits_sharing_factor() {
+        let text = emit_layer("conv2", &sample());
+        assert!(text.contains("shr=4"), "{text}");
+    }
+
+    #[test]
+    fn emits_node_stacks() {
+        let text = emit_layer("conv2", &sample());
+        let stacks: Vec<&str> = text.lines().filter(|l| l.contains("node parallel")).collect();
+        assert_eq!(stacks.len(), 2, "{text}"); // pk and pn
+        assert!(stacks[0].contains("K+="));
+        assert!(stacks[1].contains("N+="));
+    }
+
+    #[test]
+    fn emits_rowstationary_pe_stacks() {
+        let text = emit_layer("conv2", &sample());
+        assert!(text.contains("PE columns"));
+        assert!(text.contains("PE rows"));
+        assert!(text.contains("1D conv"));
+    }
+
+    #[test]
+    fn systolic_emission_differs() {
+        let arch = presets::edge_tpu();
+        let l = Layer::fc("fc6", 1024, 512);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 1));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 16, 16), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 256, 64), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        };
+        let text = emit_layer("fc6", &s);
+        assert!(text.contains("systolic rows"));
+        assert!(text.contains("systolic cols"));
+        assert!(text.contains("FC fc6:"));
+    }
+
+    #[test]
+    fn update_lines_reflect_trips() {
+        let s = sample();
+        let text = emit_layer("conv2", &s);
+        // gbuf trips: b: ceil(16/4)=4, c: ceil(96/24)=4, k: ceil(64/16)=4
+        assert!(text.contains("x4"), "{text}");
+    }
+}

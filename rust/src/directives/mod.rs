@@ -1,0 +1,390 @@
+//! Tensor-centric dataflow directives (paper §III-B).
+//!
+//! The representation treats the *tensors buffered at each memory level* as
+//! first-class citizens. A scheme is described per level by
+//!
+//! * `tensor{..}(dim=size, ..[, shr])` — the (sub)tensor resident in each
+//!   buffer instance at this level;
+//! * `stack(dim+=shift, .., repl)` — spatial parallelization across `repl`
+//!   sibling buffers;
+//! * `update(dim+=step, ..)` — ordered temporal iteration that advances all
+//!   resident tensors.
+//!
+//! From these, *data sizes per buffer* (validity) and *access volumes
+//! across buffers* (efficiency) fall out by inspection — the property that
+//! makes the representation pragmatic for solvers (§III-B "Advantages").
+//!
+//! This module holds the core calculus shared by the fast cost model and
+//! the detailed simulator: loop groups, loop orders, and the refetch-factor
+//! rule that converts `update` nests into access counts.
+
+pub mod emit;
+pub mod parse;
+pub mod scheme;
+
+pub use scheme::{LayerScheme, LevelBlock};
+
+/// Tensor dimensions (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    N,
+    C,
+    K,
+    Xo,
+    Yo,
+    Xi,
+    Yi,
+    R,
+    S,
+}
+
+impl Dim {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dim::N => "N",
+            Dim::C => "C",
+            Dim::K => "K",
+            Dim::Xo => "Xo",
+            Dim::Yo => "Yo",
+            Dim::Xi => "Xi",
+            Dim::Yi => "Yi",
+            Dim::R => "R",
+            Dim::S => "S",
+        }
+    }
+}
+
+/// The three tensors of a CONV/FC layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    Ifm,
+    Ofm,
+    Wgt,
+}
+
+impl TensorKind {
+    pub const ALL: [TensorKind; 3] = [TensorKind::Ifm, TensorKind::Ofm, TensorKind::Wgt];
+
+    /// The temporal loop group this tensor is *invariant* to ("miss group"):
+    /// ifm has no K, ofm no C, wgt no B.
+    pub fn miss_group(&self) -> Grp {
+        match self {
+            TensorKind::Ifm => Grp::K,
+            TensorKind::Ofm => Grp::C,
+            TensorKind::Wgt => Grp::B,
+        }
+    }
+
+    /// The two groups the tensor depends on.
+    pub fn member_groups(&self) -> [Grp; 2] {
+        match self {
+            TensorKind::Ifm => [Grp::B, Grp::C],
+            TensorKind::Ofm => [Grp::B, Grp::K],
+            TensorKind::Wgt => [Grp::C, Grp::K],
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TensorKind::Ifm => "ifm",
+            TensorKind::Ofm => "ofm",
+            TensorKind::Wgt => "wgt",
+        }
+    }
+}
+
+/// Temporal loop groups used for blocking across the memory hierarchy:
+/// B = batch-like trips (N, plus fmap rows for streaming mappings),
+/// C = input channels, K = output channels (paper §III-A: loop blocking
+/// over the nested dims; fmap X/Y are absorbed by the PE mapping and node
+/// partitioning, as in nn-dataflow [16], [17]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Grp {
+    B,
+    C,
+    K,
+}
+
+impl Grp {
+    pub const ALL: [Grp; 3] = [Grp::B, Grp::C, Grp::K];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Grp::B => "B",
+            Grp::C => "C",
+            Grp::K => "K",
+        }
+    }
+}
+
+/// A per-group quantity (sizes, trip counts, blocking factors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Qty {
+    pub b: u64,
+    pub c: u64,
+    pub k: u64,
+}
+
+impl Qty {
+    pub const UNIT: Qty = Qty { b: 1, c: 1, k: 1 };
+
+    pub fn new(b: u64, c: u64, k: u64) -> Qty {
+        Qty { b, c, k }
+    }
+
+    pub fn get(&self, g: Grp) -> u64 {
+        match g {
+            Grp::B => self.b,
+            Grp::C => self.c,
+            Grp::K => self.k,
+        }
+    }
+
+    pub fn set(&mut self, g: Grp, v: u64) {
+        match g {
+            Grp::B => self.b = v,
+            Grp::C => self.c = v,
+            Grp::K => self.k = v,
+        }
+    }
+
+    pub fn product(&self) -> u64 {
+        self.b * self.c * self.k
+    }
+
+    /// Per-group ceiling trips of `self` blocks covering `total`.
+    pub fn trips_over(&self, total: Qty) -> Qty {
+        Qty {
+            b: crate::util::ceil_div(total.b, self.b),
+            c: crate::util::ceil_div(total.c, self.c),
+            k: crate::util::ceil_div(total.k, self.k),
+        }
+    }
+
+    /// Component-wise min.
+    pub fn min(&self, other: Qty) -> Qty {
+        Qty { b: self.b.min(other.b), c: self.c.min(other.c), k: self.k.min(other.k) }
+    }
+
+    /// True if every component of self is <= the other's.
+    pub fn fits_in(&self, other: Qty) -> bool {
+        self.b <= other.b && self.c <= other.c && self.k <= other.k
+    }
+}
+
+/// A loop order at one memory level: permutation of the three groups,
+/// outermost first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LoopOrder(pub [Grp; 3]);
+
+impl LoopOrder {
+    /// All 6 permutations.
+    pub fn all() -> [LoopOrder; 6] {
+        use Grp::*;
+        [
+            LoopOrder([B, C, K]),
+            LoopOrder([B, K, C]),
+            LoopOrder([C, B, K]),
+            LoopOrder([C, K, B]),
+            LoopOrder([K, B, C]),
+            LoopOrder([K, C, B]),
+        ]
+    }
+
+    pub fn innermost(&self) -> Grp {
+        self.0[2]
+    }
+
+    pub fn outermost(&self) -> Grp {
+        self.0[0]
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}{}{}", self.0[0].name(), self.0[1].name(), self.0[2].name())
+    }
+}
+
+/// Member/miss groups of a tensor for a given layer kind. CONV/FC follow
+/// `TensorKind::member_groups`; depthwise/pool/eltwise layers carry their
+/// channels in the K group with a trivial C group, so their input fmap
+/// follows (B, K) instead of (B, C).
+pub fn tensor_groups(
+    tensor: TensorKind,
+    kind: crate::workloads::LayerKind,
+) -> ([Grp; 2], Grp) {
+    use crate::workloads::LayerKind::*;
+    match (kind, tensor) {
+        (DWConv | Pool | Eltwise, TensorKind::Ifm) => ([Grp::B, Grp::K], Grp::C),
+        // Back-weight pass: "wgt" is the streamed dY (varies with batch),
+        // "ofm" is dW, accumulated over the batch (misses B).
+        (ConvBwWeight, TensorKind::Wgt) => ([Grp::B, Grp::K], Grp::C),
+        (ConvBwWeight, TensorKind::Ofm) => ([Grp::C, Grp::K], Grp::B),
+        _ => (tensor.member_groups(), tensor.miss_group()),
+    }
+}
+
+/// The accumulation (revisit) group of the output tensor: the group the
+/// ofm is invariant to (C for forward convs, B for the back-weight pass).
+pub fn ofm_accum_group(kind: crate::workloads::LayerKind) -> Grp {
+    tensor_groups(TensorKind::Ofm, kind).1
+}
+
+/// `ofm_revisits` generalized over the accumulation group.
+pub fn ofm_revisits_for(trips: Qty, order: LoopOrder, accum: Grp) -> u64 {
+    if order.innermost() == accum {
+        1
+    } else {
+        trips.get(accum)
+    }
+}
+
+/// Generalized refetch rule over explicit member/miss groups.
+pub fn refetch_factor_groups(trips: Qty, order: LoopOrder, members: [Grp; 2], miss: Grp) -> u64 {
+    let m = trips.get(members[0]) * trips.get(members[1]);
+    let miss_f = if order.innermost() == miss || trips.get(miss) == 1 { 1 } else { trips.get(miss) };
+    m * miss_f
+}
+
+/// How many times a tensor's lower-level block must be (re)fetched from this
+/// level, given this level's per-group trip counts and loop order.
+///
+/// Derivation (paper §III-B "Calculating ... data movement statistics"):
+/// the tensor's block index advances whenever a loop over one of its member
+/// groups advances; a loop over its miss group forces a refetch of the same
+/// blocks unless it is the innermost loop (in which case the resident block
+/// is reused across its iterations).
+pub fn refetch_factor(trips: Qty, order: LoopOrder, tensor: TensorKind) -> u64 {
+    refetch_factor_groups(trips, order, tensor.member_groups(), tensor.miss_group())
+}
+
+/// Number of times each *unique* output block is revisited for partial-sum
+/// accumulation: the C-group trips unless C is innermost.
+pub fn ofm_revisits(trips: Qty, order: LoopOrder) -> u64 {
+    if order.innermost() == Grp::C {
+        1
+    } else {
+        trips.c
+    }
+}
+
+/// Read+write access amplification for the output tensor given `v`
+/// accumulation revisits: each revisit writes the block and all but the
+/// first also read the partial sums back (2v - 1).
+pub fn ofm_rw_factor(v: u64) -> u64 {
+    2 * v - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qty_accessors() {
+        let mut q = Qty::new(2, 3, 4);
+        assert_eq!(q.get(Grp::B), 2);
+        assert_eq!(q.product(), 24);
+        q.set(Grp::C, 5);
+        assert_eq!(q.c, 5);
+        assert_eq!(Qty::UNIT.product(), 1);
+    }
+
+    #[test]
+    fn trips_over_uses_ceiling() {
+        let blk = Qty::new(2, 3, 4);
+        let tot = Qty::new(5, 9, 4);
+        assert_eq!(blk.trips_over(tot), Qty::new(3, 3, 1));
+    }
+
+    #[test]
+    fn all_orders_are_permutations() {
+        let orders = LoopOrder::all();
+        assert_eq!(orders.len(), 6);
+        for o in orders {
+            let mut seen = [false; 3];
+            for g in o.0 {
+                seen[g as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+        for i in 0..6 {
+            for j in i + 1..6 {
+                assert_ne!(orders[i].0, orders[j].0);
+            }
+        }
+    }
+
+    #[test]
+    fn refetch_miss_innermost_reuses() {
+        // ifm misses K; with K innermost the ifm block is reused across K.
+        let trips = Qty::new(4, 3, 5);
+        let o = LoopOrder([Grp::B, Grp::C, Grp::K]);
+        assert_eq!(refetch_factor(trips, o, TensorKind::Ifm), 4 * 3);
+    }
+
+    #[test]
+    fn refetch_miss_outer_forces_reload() {
+        let trips = Qty::new(4, 3, 5);
+        // K outermost: every k iteration re-walks all ifm blocks.
+        let o = LoopOrder([Grp::K, Grp::B, Grp::C]);
+        assert_eq!(refetch_factor(trips, o, TensorKind::Ifm), 4 * 3 * 5);
+        // K in the middle: same.
+        let o = LoopOrder([Grp::B, Grp::K, Grp::C]);
+        assert_eq!(refetch_factor(trips, o, TensorKind::Ifm), 4 * 3 * 5);
+    }
+
+    #[test]
+    fn refetch_single_trip_miss_is_free() {
+        let trips = Qty::new(4, 3, 1);
+        for o in LoopOrder::all() {
+            assert_eq!(refetch_factor(trips, o, TensorKind::Ifm), 12, "order {}", o.name());
+        }
+    }
+
+    #[test]
+    fn wgt_misses_batch() {
+        let trips = Qty::new(7, 2, 3);
+        let inner_b = LoopOrder([Grp::C, Grp::K, Grp::B]);
+        assert_eq!(refetch_factor(trips, inner_b, TensorKind::Wgt), 6);
+        let outer_b = LoopOrder([Grp::B, Grp::C, Grp::K]);
+        assert_eq!(refetch_factor(trips, outer_b, TensorKind::Wgt), 42);
+    }
+
+    #[test]
+    fn ofm_revisit_rule() {
+        let trips = Qty::new(2, 6, 3);
+        assert_eq!(ofm_revisits(trips, LoopOrder([Grp::B, Grp::K, Grp::C])), 1);
+        assert_eq!(ofm_revisits(trips, LoopOrder([Grp::C, Grp::B, Grp::K])), 6);
+        assert_eq!(ofm_rw_factor(1), 1);
+        assert_eq!(ofm_rw_factor(6), 11);
+    }
+
+    #[test]
+    fn refetch_lower_bound_is_member_product() {
+        // Property: refetch factor is always >= product of member trips and
+        // <= product of all trips.
+        let mut rng = crate::util::SplitMix64::new(3);
+        for _ in 0..500 {
+            let trips = Qty::new(1 + rng.below(16), 1 + rng.below(16), 1 + rng.below(16));
+            for o in LoopOrder::all() {
+                for t in TensorKind::ALL {
+                    let f = refetch_factor(trips, o, t);
+                    let [g1, g2] = t.member_groups();
+                    let members = trips.get(g1) * trips.get(g2);
+                    assert!(f >= members);
+                    assert!(f <= trips.product());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn best_order_minimizes_most_accessed_tensor() {
+        // With huge C trips, orders ending in C minimize ofm refetches.
+        let trips = Qty::new(2, 64, 2);
+        let best = LoopOrder::all()
+            .into_iter()
+            .min_by_key(|o| ofm_rw_factor(ofm_revisits(trips, *o)))
+            .unwrap();
+        assert_eq!(best.innermost(), Grp::C);
+    }
+}

@@ -1,0 +1,282 @@
+//! Parser for the directive text format emitted by `emit.rs`.
+//!
+//! The parsed form is a lightweight syntax tree; it exists so the emitted
+//! representation is a real interchange format (round-trip tested), and so
+//! the CLI can validate externally-authored directive programs the way the
+//! paper's Listing 1 presents them.
+
+/// One parsed directive line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Directive {
+    /// tensor{tag}(dim=size, ..[, shr=n])
+    Tensor { tag: String, dims: Vec<(String, u64)>, shr: u64 },
+    /// stack(dim+=shift, .., repl)
+    Stack { shifts: Vec<(String, u64)>, repl: u64 },
+    /// update(dim+=step, ..)
+    Update { steps: Vec<(String, u64)> },
+}
+
+/// A memory level section: name (REGF/GBUF/...) plus its directives.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelSection {
+    pub level: String,
+    pub directives: Vec<Directive>,
+}
+
+/// A parsed layer program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProgram {
+    pub kind: String,
+    pub name: String,
+    pub levels: Vec<LevelSection>,
+}
+
+impl LayerProgram {
+    /// Total words declared resident at a level (sum of tensor sizes with
+    /// shr divisors applied) — the validity statistic the representation
+    /// exposes "by inspection" (paper §III-B Advantages).
+    pub fn resident_words(&self, level: &str) -> Option<u64> {
+        let sec = self.levels.iter().find(|s| s.level == level)?;
+        let mut total = 0u64;
+        for d in &sec.directives {
+            if let Directive::Tensor { dims, shr, .. } = d {
+                let size: u64 = dims.iter().map(|(_, v)| *v).product();
+                total += size.div_ceil(*shr);
+            }
+        }
+        Some(total)
+    }
+
+    /// Total spatial replication at a level (product of stack repls).
+    pub fn parallelism(&self, level: &str) -> Option<u64> {
+        let sec = self.levels.iter().find(|s| s.level == level)?;
+        Some(
+            sec.directives
+                .iter()
+                .filter_map(|d| match d {
+                    Directive::Stack { repl, .. } => Some(*repl),
+                    _ => None,
+                })
+                .product(),
+        )
+    }
+}
+
+/// Parse a directive program (one or more layers).
+pub fn parse(text: &str) -> Result<Vec<LayerProgram>, String> {
+    let mut layers: Vec<LayerProgram> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| format!("line {}: {m}: {raw}", lineno + 1);
+        if let Some(rest) = line.strip_suffix(':') {
+            let rest = rest.trim();
+            if rest.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit()) && !rest.contains(' ')
+            {
+                // memory level header
+                let layer = layers.last_mut().ok_or_else(|| err("level before layer"))?;
+                layer.levels.push(LevelSection { level: rest.to_string(), directives: Vec::new() });
+            } else {
+                // layer header: "KIND name"
+                let mut it = rest.split_whitespace();
+                let kind = it.next().ok_or_else(|| err("missing kind"))?.to_string();
+                let name = it.next().ok_or_else(|| err("missing layer name"))?.to_string();
+                layers.push(LayerProgram { kind, name, levels: Vec::new() });
+            }
+            continue;
+        }
+        let layer = layers.last_mut().ok_or_else(|| err("directive before layer"))?;
+        let level = layer.levels.last_mut().ok_or_else(|| err("directive before level"))?;
+        level.directives.push(parse_directive(&line).map_err(|m| err(&m))?);
+    }
+    Ok(layers)
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('%') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_directive(line: &str) -> Result<Directive, String> {
+    if let Some(rest) = line.strip_prefix("tensor") {
+        let (tag, args) = split_tag_args(rest)?;
+        let mut dims = Vec::new();
+        let mut shr = 1;
+        for part in args {
+            let (k, v) = split_kv(&part, '=')?;
+            if k == "shr" {
+                shr = v;
+            } else {
+                dims.push((k, v));
+            }
+        }
+        Ok(Directive::Tensor { tag, dims, shr })
+    } else if let Some(rest) = line.strip_prefix("stack") {
+        let args = paren_args(rest)?;
+        let mut shifts = Vec::new();
+        let mut repl = None;
+        for part in &args {
+            if part.contains("+=") {
+                let (k, v) = split_kv2(part)?;
+                shifts.push((k, v));
+            } else {
+                repl = Some(part.trim().parse::<u64>().map_err(|e| e.to_string())?);
+            }
+        }
+        Ok(Directive::Stack { shifts, repl: repl.ok_or("stack missing repl")? })
+    } else if let Some(rest) = line.strip_prefix("update") {
+        let args = paren_args(rest)?;
+        let mut steps = Vec::new();
+        for part in &args {
+            let (k, v) = split_kv2(part)?;
+            steps.push((k, v));
+        }
+        Ok(Directive::Update { steps })
+    } else {
+        Err(format!("unknown directive: {line}"))
+    }
+}
+
+fn split_tag_args(rest: &str) -> Result<(String, Vec<String>), String> {
+    let rest = rest.trim();
+    let rest = rest.strip_prefix('{').ok_or("expected '{'")?;
+    let close = rest.find('}').ok_or("expected '}'")?;
+    let tag = rest[..close].to_string();
+    let args = paren_args(&rest[close + 1..])?;
+    Ok((tag, args))
+}
+
+fn paren_args(rest: &str) -> Result<Vec<String>, String> {
+    let rest = rest.trim();
+    let rest = rest.strip_prefix('(').ok_or("expected '('")?;
+    let close = rest.rfind(')').ok_or("expected ')'")?;
+    Ok(rest[..close].split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+}
+
+fn split_kv(part: &str, sep: char) -> Result<(String, u64), String> {
+    let mut it = part.splitn(2, sep);
+    let k = it.next().ok_or("missing key")?.trim().to_string();
+    let v = it.next().ok_or("missing value")?.trim().parse::<u64>().map_err(|e| e.to_string())?;
+    Ok((k, v))
+}
+
+fn split_kv2(part: &str) -> Result<(String, u64), String> {
+    let mut it = part.splitn(2, "+=");
+    let k = it.next().ok_or("missing key")?.trim().to_string();
+    let v = it.next().ok_or("missing value")?.trim().parse::<u64>().map_err(|e| e.to_string())?;
+    Ok((k, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LISTING: &str = r#"
+CONV conv1:
+  REGF:
+    tensor{i0}(N=1, C=2, Xi=5, Yi=1)
+    tensor{w1}(C=2, K=3, R=5, S=1)
+    tensor{o1}(N=1, K=3, Xo=1, Yo=1)
+    stack(Yi+=1, Yo+=1, 8) % PE columns
+    stack(S+=1, Yi+=1, 5) % PE rows
+    update(Xi+=1, Xo+=1) % 1D conv
+    update(N+=1)
+    update(C+=2)
+    update(K+=3)
+  GBUF:
+    tensor{i0}(N=4, C=4, Xi=19, Yi=19, shr=4)
+    tensor{w1}(C=4, K=6, R=5, S=5)
+    tensor{o1}(N=4, K=6, Xo=15, Yo=15)
+    stack(K+=6, 4) % output node parallel
+    stack(N+=4, 16) % batch node parallel
+    update(C+=4)
+    update(K+=24)
+    update(N+=64)
+"#;
+
+    #[test]
+    fn parses_paper_listing() {
+        let progs = parse(LISTING).unwrap();
+        assert_eq!(progs.len(), 1);
+        let p = &progs[0];
+        assert_eq!(p.kind, "CONV");
+        assert_eq!(p.name, "conv1");
+        assert_eq!(p.levels.len(), 2);
+        assert_eq!(p.levels[0].level, "REGF");
+        assert_eq!(p.levels[1].level, "GBUF");
+    }
+
+    #[test]
+    fn tensor_sizes_by_inspection() {
+        let progs = parse(LISTING).unwrap();
+        let p = &progs[0];
+        // REGF: 1*2*5*1 + 2*3*5*1 + 1*3*1*1 = 10 + 30 + 3 = 43 words
+        assert_eq!(p.resident_words("REGF"), Some(43));
+        // GBUF: ifm shared by 4: ceil(4*4*19*19/4)=1444; w: 4*6*25=600;
+        // o: 4*6*225=5400
+        assert_eq!(p.resident_words("GBUF"), Some(1444 + 600 + 5400));
+    }
+
+    #[test]
+    fn parallelism_by_inspection() {
+        let progs = parse(LISTING).unwrap();
+        let p = &progs[0];
+        assert_eq!(p.parallelism("REGF"), Some(40)); // 8 x 5 PEs
+        assert_eq!(p.parallelism("GBUF"), Some(64)); // 4 x 16 nodes
+    }
+
+    #[test]
+    fn stack_shifts_parsed() {
+        let progs = parse(LISTING).unwrap();
+        let regf = &progs[0].levels[0];
+        let stack = regf
+            .directives
+            .iter()
+            .find_map(|d| match d {
+                Directive::Stack { shifts, repl } if *repl == 5 => Some(shifts.clone()),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(stack, vec![("S".to_string(), 1), ("Yi".to_string(), 1)]);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = parse("CONV x:\n  REGF:\n    bogus(1)\n").unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        let err = parse("    update(N+=1)\n").unwrap_err();
+        assert!(err.contains("before layer"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_with_emitter() {
+        use crate::arch::presets;
+        use crate::directives::{Grp, LevelBlock, LoopOrder, Qty};
+        use crate::mapping::UnitMap;
+        use crate::partition::PartitionScheme;
+        use crate::workloads::Layer;
+
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("conv2", 96, 256, 27, 5, 1);
+        let part = PartitionScheme { region: (4, 4), pk: 4, pn: 4, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 64));
+        let s = crate::directives::LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 3), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(4, 24, 16), order: LoopOrder([Grp::C, Grp::B, Grp::K]) },
+        };
+        let text = crate::directives::emit::emit_layer("conv2", &s);
+        let progs = parse(&text).unwrap();
+        assert_eq!(progs.len(), 1);
+        assert_eq!(progs[0].name, "conv2");
+        // Node parallelism visible by inspection equals the partition's.
+        assert_eq!(progs[0].parallelism("GBUF"), Some(16));
+        // GBUF resident words match the scheme's own accounting.
+        assert_eq!(progs[0].resident_words("GBUF"), Some(s.gbuf_words_per_node()));
+    }
+}

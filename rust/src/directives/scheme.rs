@@ -1,0 +1,393 @@
+//! A complete intra-layer dataflow scheme and its directive-level
+//! statistics: buffered data sizes (validity) and access volumes across the
+//! memory hierarchy (efficiency). Paper §III-B.
+//!
+//! A `LayerScheme` composes, from the inside out (the directives'
+//! construction order):
+//!
+//! * the PE-level unit mapping (`mapping::UnitMap`, fixed by hardware);
+//! * the REGF-level block: how many unit tensors are cached per PE array,
+//!   plus the REGF loop order (`update` nest between GBUF and REGF);
+//! * the GBUF-level block and loop order (`update` nest between DRAM and
+//!   GBUF);
+//! * the node-level partition (`partition::PartitionScheme`, the GBUF-level
+//!   `stack` directives).
+
+use crate::arch::ArchConfig;
+use crate::directives::{ofm_accum_group, ofm_revisits_for, ofm_rw_factor, refetch_factor_groups, tensor_groups, LoopOrder, Qty, TensorKind};
+use crate::mapping::UnitMap;
+use crate::partition::PartitionScheme;
+use crate::workloads::LayerKind;
+
+/// Temporal blocking at one memory level: the resident block quantities and
+/// the loop order iterating blocks at this level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LevelBlock {
+    pub qty: Qty,
+    pub order: LoopOrder,
+}
+
+/// A full intra-layer scheme for one layer on one node region.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerScheme {
+    pub part: PartitionScheme,
+    pub unit: UnitMap,
+    pub regf: LevelBlock,
+    pub gbuf: LevelBlock,
+}
+
+/// Access volumes implied by a scheme (whole layer, all nodes), in words.
+/// These are the statistics the paper's directives expose "by inspection".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccessCounts {
+    /// DRAM traffic per tensor [ifm, ofm, wgt].
+    pub dram: [u64; 3],
+    /// GBUF port traffic per tensor [ifm, ofm, wgt] (fills + drains to both
+    /// sides of the buffer).
+    pub gbuf: [u64; 3],
+    /// REGF-side share of the GBUF traffic (rides the intra-node PE bus).
+    pub gbuf_regf_side: u64,
+    /// REGF traffic (operand reads/writes at the PEs + refills).
+    pub regf: u64,
+    /// NoC traffic in word-hops (DRAM distribution, rotation, reduction).
+    pub noc_word_hops: f64,
+    /// Total MAC operations.
+    pub macs: u64,
+}
+
+impl AccessCounts {
+    pub fn dram_total(&self) -> u64 {
+        self.dram.iter().sum()
+    }
+    pub fn gbuf_total(&self) -> u64 {
+        self.gbuf.iter().sum()
+    }
+}
+
+impl LayerScheme {
+    /// GBUF words resident per node (with buffer-sharing divisors applied).
+    pub fn gbuf_words_per_node(&self) -> u64 {
+        let q = self.gbuf.qty;
+        let ifm = self.unit.ifm_node_words(q).div_ceil(self.part.ifm_shr());
+        let wgt = self.unit.wgt_node_words(q).div_ceil(self.part.wgt_shr());
+        let ofm = self.unit.ofm_node_words(q);
+        ifm + wgt + ofm
+    }
+
+    /// REGF words resident per PE.
+    pub fn regf_words_per_pe(&self) -> u64 {
+        self.unit.regf_pe_words(self.regf.qty)
+    }
+
+    /// Validity check: every tensor fits its buffer, and block nesting is
+    /// consistent (paper: "quickly determine whether a scheme satisfies all
+    /// constraints").
+    pub fn validate(&self, arch: &ArchConfig) -> Result<(), String> {
+        let granule = self.unit.granule;
+        let totals = self.unit.totals;
+        if !granule.fits_in(self.regf.qty) {
+            return Err(format!("REGF block {:?} below granule {granule:?}", self.regf.qty));
+        }
+        if !self.regf.qty.fits_in(self.gbuf.qty) {
+            return Err(format!(
+                "REGF block {:?} exceeds GBUF block {:?}",
+                self.regf.qty, self.gbuf.qty
+            ));
+        }
+        if !self.gbuf.qty.fits_in(totals) {
+            return Err(format!("GBUF block {:?} exceeds totals {totals:?}", self.gbuf.qty));
+        }
+        let rw = self.regf_words_per_pe();
+        if rw > arch.regf_words() {
+            return Err(format!("REGF overflow: {rw} > {} words", arch.regf_words()));
+        }
+        let gw = self.gbuf_words_per_node();
+        if gw > arch.gbuf_words() {
+            return Err(format!("GBUF overflow: {gw} > {} words", arch.gbuf_words()));
+        }
+        Ok(())
+    }
+
+    /// GBUF-level trip counts (DRAM-iterating loops).
+    pub fn gbuf_trips(&self) -> Qty {
+        self.gbuf.qty.trips_over(self.unit.totals)
+    }
+
+    /// REGF-level trip counts (GBUF-iterating loops).
+    pub fn regf_trips(&self) -> Qty {
+        self.regf.qty.trips_over(self.gbuf.qty)
+    }
+
+    /// Compute the access counts implied by the directives. `ifm_on_chip`
+    /// marks layers whose input is forwarded from a producer in the same
+    /// pipelined segment (traffic moves from DRAM to the NoC).
+    pub fn access_counts(&self, ifm_on_chip: bool) -> AccessCounts {
+        let kind = self.unit.shape.kind;
+        let nodes = self.part.used_nodes();
+        let tg = self.gbuf_trips();
+        let tr = self.regf_trips();
+
+        // --- DRAM <-> GBUF, per node -----------------------------------
+        let g = self.gbuf.qty;
+        let (i_mem, i_miss) = split_groups(TensorKind::Ifm, kind);
+        let (w_mem, w_miss) = split_groups(TensorKind::Wgt, kind);
+        let ifm_per_node =
+            self.unit.ifm_node_words(g) * refetch_factor_groups(tg, self.gbuf.order, i_mem, i_miss);
+        let wgt_per_node =
+            self.unit.wgt_node_words(g) * refetch_factor_groups(tg, self.gbuf.order, w_mem, w_miss);
+        let accum = ofm_accum_group(kind);
+        let (o_mem, _) = split_groups(TensorKind::Ofm, kind);
+        let ofm_unique_per_node =
+            self.unit.ofm_node_words(g) * tg.get(o_mem[0]) * tg.get(o_mem[1]);
+        let v = ofm_revisits_for(tg, self.gbuf.order, accum);
+        let ofm_per_node = ofm_unique_per_node * ofm_rw_factor(v);
+
+        // --- replication / sharing across nodes -------------------------
+        // Replicated tensors: every replica group fetches the same data.
+        // With buffer sharing, DRAM sees one copy; the rest moves as NoC
+        // rotation among the shr sibling buffers.
+        let ifm_shr = self.part.ifm_shr();
+        let wgt_shr = self.part.wgt_shr_for(kind);
+        let mut dram_ifm = ifm_per_node * nodes / ifm_shr;
+        let dram_wgt = wgt_per_node * nodes / wgt_shr;
+        // Cross-node partial-sum reduction: only one reduced copy reaches
+        // DRAM (pc for forward convs; batch/fmap parallel nodes for the
+        // back-weight pass, whose output reduces over B).
+        let red = self.part.ofm_reduction_for(kind);
+        let dram_ofm = ofm_per_node * nodes / red;
+
+        let mut noc = 0.0;
+        // Rotation traffic for shared tensors: each node still *consumes*
+        // its full per-node access stream; the (shr-1)/shr remote fraction
+        // rides the NoC ring.
+        if ifm_shr > 1 {
+            noc += (ifm_per_node * nodes) as f64 * (ifm_shr - 1) as f64 / ifm_shr as f64
+                * self.part.neighbor_hops();
+        }
+        if wgt_shr > 1 {
+            noc += (wgt_per_node * nodes) as f64 * (wgt_shr - 1) as f64 / wgt_shr as f64
+                * self.part.neighbor_hops();
+        }
+        if red > 1 {
+            noc += (ofm_unique_per_node * nodes) as f64 * (red - 1) as f64 / red as f64
+                * self.part.neighbor_hops();
+        }
+        // DRAM words travel the mesh to/from edge memory controllers.
+        let dram_distr_hops = self.part.dram_hops();
+        if ifm_on_chip {
+            // Producer forwards through the NoC instead of DRAM (layer
+            // pipelining): same volume, neighbour-region distance.
+            noc += dram_ifm as f64 * self.part.neighbor_hops();
+            dram_ifm = 0;
+        } else {
+            noc += dram_ifm as f64 * dram_distr_hops;
+        }
+        noc += (dram_wgt + dram_ofm) as f64 * dram_distr_hops;
+
+        // --- GBUF <-> REGF, per node ------------------------------------
+        let rq = self.regf.qty;
+        let gbuf_iters = tg.product();
+        let ifm_g = self.unit.ifm_node_words(rq)
+            * refetch_factor_groups(tr, self.regf.order, i_mem, i_miss)
+            * gbuf_iters;
+        let wgt_g = self.unit.wgt_node_words(rq)
+            * refetch_factor_groups(tr, self.regf.order, w_mem, w_miss)
+            * gbuf_iters;
+        let vr = ofm_revisits_for(tr, self.regf.order, accum);
+        let ofm_g = self.unit.ofm_node_words(rq)
+            * tr.get(o_mem[0])
+            * tr.get(o_mem[1])
+            * ofm_rw_factor(vr)
+            * gbuf_iters;
+
+        // GBUF port sees both the DRAM-side fills and the REGF-side drains.
+        let gbuf_ifm = (ifm_g + ifm_per_node) * nodes;
+        let gbuf_wgt = (wgt_g + wgt_per_node) * nodes;
+        let gbuf_ofm = (ofm_g + ofm_per_node) * nodes;
+
+        // --- REGF traffic -------------------------------------------------
+        let macs = self.unit.node_macs() * nodes;
+        // Per MAC: ifm read, wgt read, psum read + write; plus refills.
+        let regf = 4 * macs + (ifm_g + wgt_g + ofm_g) * nodes;
+
+        AccessCounts {
+            dram: [dram_ifm, dram_ofm, dram_wgt],
+            gbuf: [gbuf_ifm, gbuf_ofm, gbuf_wgt],
+            gbuf_regf_side: (ifm_g + wgt_g + ofm_g) * nodes,
+            regf,
+            noc_word_hops: noc,
+            macs,
+        }
+    }
+}
+
+fn split_groups(t: TensorKind, kind: LayerKind) -> ([crate::directives::Grp; 2], crate::directives::Grp) {
+    tensor_groups(t, kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapping::LayerShape;
+    use crate::workloads::Layer;
+    use crate::directives::Grp;
+
+    fn scheme(layer: &Layer, batch: u64) -> LayerScheme {
+        let arch = presets::multi_node_eyeriss();
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(&arch, part.node_shape(layer, batch));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        }
+    }
+
+    #[test]
+    fn valid_scheme_passes() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        scheme(&l, 4).validate(&arch).unwrap();
+    }
+
+    #[test]
+    fn regf_overflow_detected() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let mut s = scheme(&l, 4);
+        s.regf.qty = Qty::new(1, 8, 8);
+        s.gbuf.qty = Qty::new(1, 8, 8);
+        let err = s.validate(&arch).unwrap_err();
+        assert!(err.contains("REGF overflow"), "{err}");
+    }
+
+    #[test]
+    fn gbuf_overflow_detected() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 512, 512, 56, 3, 1);
+        let mut s = scheme(&l, 8);
+        s.gbuf.qty = Qty::new(8, 512, 512);
+        let err = s.validate(&arch).unwrap_err();
+        assert!(err.contains("GBUF overflow"), "{err}");
+    }
+
+    #[test]
+    fn nesting_violation_detected() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let mut s = scheme(&l, 4);
+        s.regf.qty = Qty::new(4, 16, 32);
+        s.gbuf.qty = Qty::new(1, 8, 8);
+        assert!(s.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn dram_traffic_at_least_compulsory() {
+        // DRAM traffic >= one pass over each tensor (compulsory misses).
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let s = scheme(&l, 4);
+        let a = s.access_counts(false);
+        let shape = LayerShape::full(&l, 4);
+        assert!(a.dram[0] >= 4 * 16 * shape.xi() * shape.yi());
+        assert!(a.dram[1] >= 4 * 32 * 14 * 14);
+        assert!(a.dram[2] >= 32 * 16 * 9);
+    }
+
+    #[test]
+    fn bigger_gbuf_block_reduces_dram_traffic() {
+        let l = Layer::conv("c", 64, 64, 28, 3, 1);
+        let mut s1 = scheme(&l, 8);
+        s1.gbuf.qty = Qty::new(1, 8, 8);
+        let mut s2 = scheme(&l, 8);
+        s2.gbuf.qty = Qty::new(2, 32, 32);
+        let d1 = s1.access_counts(false).dram_total();
+        let d2 = s2.access_counts(false).dram_total();
+        assert!(d2 < d1, "{d2} !< {d1}");
+    }
+
+    #[test]
+    fn pipelined_ifm_moves_to_noc() {
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let s = scheme(&l, 4);
+        let off = s.access_counts(false);
+        let on = s.access_counts(true);
+        assert_eq!(on.dram[0], 0);
+        assert!(on.dram_total() < off.dram_total());
+        // NoC picks up the forwarded volume but at shorter distance.
+        assert!(on.noc_word_hops > 0.0);
+    }
+
+    #[test]
+    fn macs_invariant_to_blocking() {
+        let l = Layer::conv("c", 32, 32, 28, 3, 1);
+        let mut s1 = scheme(&l, 4);
+        let mut s2 = scheme(&l, 4);
+        s1.gbuf.qty = Qty::new(1, 4, 4);
+        s2.gbuf.qty = Qty::new(4, 32, 32);
+        assert_eq!(s1.access_counts(false).macs, s2.access_counts(false).macs);
+        assert_eq!(s1.access_counts(false).macs, l.macs(4));
+    }
+
+    #[test]
+    fn buffer_sharing_cuts_dram_adds_noc() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 64, 64, 28, 3, 1);
+        let batch = 8;
+        let mk = |share: bool| {
+            let part = PartitionScheme {
+                region: (2, 2),
+                pk: 4,
+                share_ifm: share,
+                ..PartitionScheme::single()
+            };
+            let unit = UnitMap::build(&arch, part.node_shape(&l, batch));
+            LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+                gbuf: LevelBlock { qty: Qty::new(2, 16, 16), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            }
+        };
+        let plain = mk(false).access_counts(false);
+        let shared = mk(true).access_counts(false);
+        assert!(shared.dram[0] < plain.dram[0]);
+        assert!(shared.noc_word_hops > plain.noc_word_hops * 0.5);
+        // Sharing also shrinks the per-node GBUF footprint.
+        assert!(mk(true).gbuf_words_per_node() < mk(false).gbuf_words_per_node());
+    }
+
+    #[test]
+    fn reduction_partition_reduces_dram_ofm() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 256, 64, 14, 3, 1);
+        let batch = 4;
+        let mk = |pc: u64, pk: u64| {
+            let part = PartitionScheme { region: (2, 2), pc, pk, ..PartitionScheme::single() };
+            let unit = UnitMap::build(&arch, part.node_shape(&l, batch));
+            LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+                gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            }
+        };
+        let with_red = mk(4, 1).access_counts(false);
+        // reduction adds NoC traffic
+        assert!(with_red.noc_word_hops > 0.0);
+        // and its DRAM ofm volume is the reduced single copy
+        let no_red = mk(1, 4).access_counts(false);
+        assert!(with_red.dram[1] <= no_red.dram[1] * 4);
+    }
+
+    #[test]
+    fn gbuf_sees_both_sides() {
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let s = scheme(&l, 4);
+        let a = s.access_counts(false);
+        // GBUF traffic >= DRAM traffic (everything passes through) and
+        // >= the REGF-side drain volume alone.
+        assert!(a.gbuf_total() >= a.dram_total());
+    }
+}

@@ -1,0 +1,179 @@
+//! Dynamic-programming segment-chain search (paper §IV-B).
+//!
+//! Layers are processed in DAG topological order; step `i` finds the best
+//! segment chains *ending at* layer `i` by combining each candidate segment
+//! `[j..=i]` with the best chains ending at `j-1`. To tolerate estimation
+//! error, the top `k_S` candidate chains are kept per layer (default 4,
+//! studied in the paper's Fig. 11).
+
+use super::prune::{prune_and_rank, PruneStats, RankedSegment};
+use super::{candidate_spans, enumerate_segment_schemes, Segment};
+use crate::arch::ArchConfig;
+use crate::workloads::Network;
+
+/// Tuning knobs of the inter-layer search.
+#[derive(Debug, Clone, Copy)]
+pub struct DpConfig {
+    /// Chains kept per layer (k_S).
+    pub ks: usize,
+    /// Maximum layers per pipelined segment.
+    pub max_seg_len: usize,
+    /// Cap on pipelining rounds explored.
+    pub max_rounds: u64,
+    /// Ranked inter-layer schemes retained per span after pruning.
+    pub top_per_span: usize,
+}
+
+impl Default for DpConfig {
+    fn default() -> Self {
+        DpConfig { ks: 4, max_seg_len: 4, max_rounds: 64, top_per_span: 2 }
+    }
+}
+
+/// A complete segment chain (covers layers 0..=end) with its estimated
+/// cost.
+#[derive(Debug, Clone)]
+pub struct ChainCand {
+    pub cost: f64,
+    pub segments: Vec<Segment>,
+}
+
+#[derive(Clone)]
+struct Node {
+    cost: f64,
+    seg: Segment,
+    /// (previous layer index, rank within its candidate list)
+    parent: Option<(usize, usize)>,
+}
+
+/// Run the DP and return the top `ks` complete chains, plus aggregate
+/// pruning statistics (for Table VI-style reporting).
+pub fn best_chains(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    cfg: &DpConfig,
+) -> (Vec<ChainCand>, PruneStats) {
+    let n = net.len();
+    let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
+    let mut stats = PruneStats::default();
+
+    for i in 0..n {
+        let mut cands: Vec<Node> = Vec::new();
+        for span in candidate_spans(i, cfg.max_seg_len) {
+            let start = span[0];
+            let schemes = enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds);
+            let (ranked, st) = prune_and_rank(arch, net, batch, schemes);
+            stats.total += st.total;
+            stats.after_validity += st.after_validity;
+            stats.after_pareto += st.after_pareto;
+            for RankedSegment { seg, est } in ranked.into_iter().take(cfg.top_per_span) {
+                if start == 0 {
+                    cands.push(Node { cost: est.score(), seg, parent: None });
+                } else {
+                    for (rank, prev) in table[start - 1].iter().enumerate() {
+                        cands.push(Node {
+                            cost: est.score() + prev.cost,
+                            seg: seg.clone(),
+                            parent: Some((start - 1, rank)),
+                        });
+                    }
+                }
+            }
+        }
+        cands.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+        cands.truncate(cfg.ks.max(1));
+        assert!(!cands.is_empty(), "no valid segment chain ends at layer {i}");
+        table.push(cands);
+    }
+
+    // Reconstruct the top-ks chains ending at the last layer.
+    let last = n - 1;
+    let mut out = Vec::new();
+    for rank in 0..table[last].len() {
+        let mut segments = Vec::new();
+        let mut cur = Some((last, rank));
+        while let Some((li, r)) = cur {
+            let node = &table[li][r];
+            segments.push(node.seg.clone());
+            cur = node.parent;
+        }
+        segments.reverse();
+        out.push(ChainCand { cost: table[last][rank].cost, segments });
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workloads::nets;
+
+    fn check_chain_covers(net_len: usize, chain: &ChainCand) {
+        let mut covered = Vec::new();
+        for seg in &chain.segments {
+            covered.extend(seg.layers.iter().copied());
+        }
+        let expect: Vec<usize> = (0..net_len).collect();
+        assert_eq!(covered, expect, "chain must cover each layer exactly once, in order");
+    }
+
+    #[test]
+    fn chains_cover_alexnet() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let (chains, stats) = best_chains(&arch, &net, 64, &DpConfig::default());
+        assert!(!chains.is_empty() && chains.len() <= 4);
+        for ch in &chains {
+            check_chain_covers(net.len(), ch);
+        }
+        assert!(stats.total > 0);
+        assert!(stats.after_pareto <= stats.total);
+        // chains sorted by cost
+        for w in chains.windows(2) {
+            assert!(w[0].cost <= w[1].cost);
+        }
+    }
+
+    #[test]
+    fn ks1_returns_single_chain() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::mlp();
+        let cfg = DpConfig { ks: 1, ..DpConfig::default() };
+        let (chains, _) = best_chains(&arch, &net, 64, &cfg);
+        assert_eq!(chains.len(), 1);
+        check_chain_covers(net.len(), &chains[0]);
+    }
+
+    #[test]
+    fn bigger_ks_never_worse() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::mlp();
+        let c1 = best_chains(&arch, &net, 64, &DpConfig { ks: 1, ..DpConfig::default() }).0;
+        let c8 = best_chains(&arch, &net, 64, &DpConfig { ks: 8, ..DpConfig::default() }).0;
+        assert!(c8[0].cost <= c1[0].cost + 1e-9);
+    }
+
+    #[test]
+    fn edge_arch_gets_singleton_segments() {
+        let arch = presets::edge_tpu();
+        let net = nets::alexnet();
+        let (chains, _) = best_chains(&arch, &net, 1, &DpConfig::default());
+        for seg in &chains[0].segments {
+            assert_eq!(seg.len(), 1);
+        }
+    }
+
+    #[test]
+    fn multilayer_segments_chosen_when_beneficial() {
+        // On the big mesh with pipelining enabled, at least one chain
+        // should use a multi-layer segment for conv-heavy nets.
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let (chains, _) = best_chains(&arch, &net, 64, &DpConfig::default());
+        let any_multi =
+            chains.iter().any(|ch| ch.segments.iter().any(|s| s.len() > 1));
+        assert!(any_multi, "expected some pipelined segment in top chains");
+    }
+}

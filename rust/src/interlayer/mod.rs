@@ -1,0 +1,264 @@
+//! Inter-layer scheduling structures (paper §III-A, §IV-B): segment
+//! slicing (temporal) and layer pipelining (spatial), plus the enumeration
+//! of inter-layer schemes for a segment.
+//!
+//! A *segment* is a group of consecutive layers (in DAG topological order)
+//! that execute together: single-layer segments time-share the whole
+//! accelerator; multi-layer segments pipeline spatially across disjoint
+//! node regions, forwarding intermediate fmaps on-chip at a per-round
+//! granularity (`rounds` batch slices).
+
+pub mod dp;
+pub mod matching;
+pub mod prune;
+
+use crate::arch::ArchConfig;
+use crate::directives::LayerScheme;
+use crate::util::divisors;
+use crate::workloads::{Network, PrevRef};
+
+/// One segment with its inter-layer scheme decided: layer span, per-layer
+/// node regions, and the pipelining granularity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segment {
+    /// Layer indices, contiguous in topological order.
+    pub layers: Vec<usize>,
+    /// Node region (w, h) per layer. For single-layer segments this is the
+    /// whole mesh.
+    pub regions: Vec<(u64, u64)>,
+    /// Spatial pipelining on (multi-layer segments only).
+    pub spatial: bool,
+    /// Number of batch rounds forwarded through the pipeline (the
+    /// granularity/timing choice of Fig. 2 (2)).
+    pub rounds: u64,
+}
+
+impl Segment {
+    /// Single layer occupying the full mesh, no pipelining.
+    pub fn single(layer: usize, arch: &ArchConfig) -> Segment {
+        Segment { layers: vec![layer], regions: vec![arch.nodes], spatial: false, rounds: 1 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Per-round batch for intra-layer scheduling within this segment.
+    pub fn round_batch(&self, batch: u64) -> u64 {
+        crate::util::ceil_div(batch, self.rounds)
+    }
+
+    /// Is layer `li`'s input fmap produced inside this segment (and thus
+    /// forwarded on-chip when pipelining)?
+    pub fn ifm_on_chip(&self, net: &Network, li: usize) -> bool {
+        if !self.spatial {
+            return false;
+        }
+        net.prevs[li].iter().all(|p| match p {
+            PrevRef::Input => false,
+            PrevRef::Layer(j) => self.layers.contains(j),
+        })
+    }
+
+    /// Is layer `li`'s output consumed entirely inside the segment (so its
+    /// ofm never goes to DRAM)? The network's final layers always spill.
+    pub fn ofm_on_chip(&self, net: &Network, li: usize) -> bool {
+        if !self.spatial {
+            return false;
+        }
+        let nexts = net.nexts();
+        !nexts[li].is_empty() && nexts[li].iter().all(|j| self.layers.contains(j))
+    }
+}
+
+/// A complete network schedule: an ordered chain of segments covering every
+/// layer exactly once, with the chosen intra-layer scheme per layer.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub segments: Vec<(Segment, Vec<LayerScheme>)>,
+}
+
+impl Schedule {
+    pub fn num_layers(&self) -> usize {
+        self.segments.iter().map(|(s, _)| s.len()).sum()
+    }
+}
+
+/// Enumerate the candidate inter-layer schemes of the segment spanning
+/// `layers` (already known to be a contiguous topo range): every column
+/// split of the mesh into one strip per layer (the spatial-allocation
+/// axis) x every pipelining-rounds divisor of the batch (the
+/// granularity/timing axis). On the paper's 16x16 mesh this yields
+/// *hundreds* of schemes per segment (Table VI: AlexNet 700), which is
+/// exactly what makes the inter-layer space expensive for exhaustive
+/// solvers and cheap for KAPLA's conservative pruning.
+pub fn enumerate_segment_schemes(
+    net: &Network,
+    arch: &ArchConfig,
+    batch: u64,
+    layers: &[usize],
+    max_rounds: u64,
+) -> Vec<Segment> {
+    let _ = net;
+    let mut out = Vec::new();
+    if layers.len() == 1 {
+        out.push(Segment::single(layers[0], arch));
+        return out;
+    }
+    if !arch.spatial_layer_pipe {
+        return out; // multi-layer segments need spatial pipelining support
+    }
+    let (mesh_w, mesh_h) = arch.nodes;
+    if (layers.len() as u64) > mesh_w {
+        return out; // cannot give each layer a column strip
+    }
+    let rounds_opts: Vec<u64> =
+        divisors(batch).into_iter().filter(|&r| r <= max_rounds).collect();
+    for widths in compositions(mesh_w, layers.len()) {
+        let regions: Vec<(u64, u64)> = widths.iter().map(|&w| (w, mesh_h)).collect();
+        for &rounds in &rounds_opts {
+            out.push(Segment {
+                layers: layers.to_vec(),
+                regions: regions.clone(),
+                spatial: true,
+                rounds,
+            });
+        }
+    }
+    out
+}
+
+/// All ordered compositions of `total` into `parts` positive integers.
+fn compositions(total: u64, parts: usize) -> Vec<Vec<u64>> {
+    assert!(parts >= 1);
+    if parts == 1 {
+        return vec![vec![total]];
+    }
+    let mut out = Vec::new();
+    for first in 1..=(total - (parts as u64 - 1)) {
+        for mut rest in compositions(total - first, parts - 1) {
+            let mut v = Vec::with_capacity(parts);
+            v.push(first);
+            v.append(&mut rest);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Enumerate contiguous candidate segment spans ending at layer `end`
+/// (inclusive), up to `max_len` layers.
+pub fn candidate_spans(end: usize, max_len: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for len in 1..=max_len.min(end + 1) {
+        let start = end + 1 - len;
+        out.push((start..=end).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workloads::nets;
+
+    #[test]
+    fn single_segment_basics() {
+        let arch = presets::multi_node_eyeriss();
+        let s = Segment::single(3, &arch);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.regions[0], (16, 16));
+        assert!(!s.spatial);
+        assert_eq!(s.round_batch(64), 64);
+    }
+
+    #[test]
+    fn candidate_spans_contiguous() {
+        let spans = candidate_spans(4, 3);
+        assert_eq!(spans, vec![vec![4], vec![3, 4], vec![2, 3, 4]]);
+        assert_eq!(candidate_spans(0, 8), vec![vec![0]]);
+    }
+
+    #[test]
+    fn enumerate_generates_policy_x_rounds() {
+        let net = nets::alexnet();
+        let arch = presets::multi_node_eyeriss();
+        let schemes = enumerate_segment_schemes(&net, &arch, 64, &[2, 3, 4], 64);
+        assert!(!schemes.is_empty());
+        // rounds are divisors of 64
+        for s in &schemes {
+            assert!(64 % s.rounds == 0);
+            assert!(s.spatial);
+            assert_eq!(s.regions.len(), 3);
+            let total_w: u64 = s.regions.iter().map(|r| r.0).sum();
+            assert_eq!(total_w, 16);
+        }
+    }
+
+    #[test]
+    fn allocation_axis_enumerates_all_splits() {
+        let net = nets::alexnet();
+        let arch = presets::multi_node_eyeriss();
+        let schemes = enumerate_segment_schemes(&net, &arch, 64, &[1, 2], 64);
+        // 15 column splits of a 16-wide mesh into 2 strips x 7 round
+        // divisors of 64 = 105 candidate schemes ("hundreds" per paper).
+        assert_eq!(schemes.len(), 15 * 7);
+        assert!(schemes.iter().any(|s| s.regions[1].0 > s.regions[0].0));
+        assert!(schemes.iter().any(|s| s.regions[1].0 < s.regions[0].0));
+    }
+
+    #[test]
+    fn compositions_count_and_sum() {
+        let cs = compositions(6, 3);
+        assert_eq!(cs.len(), 10); // C(5,2)
+        for c in &cs {
+            assert_eq!(c.iter().sum::<u64>(), 6);
+            assert!(c.iter().all(|&x| x >= 1));
+        }
+    }
+
+    #[test]
+    fn edge_arch_refuses_multilayer() {
+        let net = nets::alexnet();
+        let arch = presets::edge_tpu();
+        assert!(enumerate_segment_schemes(&net, &arch, 1, &[1, 2], 8).is_empty());
+        assert_eq!(enumerate_segment_schemes(&net, &arch, 1, &[1], 8).len(), 1);
+    }
+
+    #[test]
+    fn ifm_on_chip_requires_in_segment_producer() {
+        let net = nets::alexnet();
+        let arch = presets::multi_node_eyeriss();
+        let schemes = enumerate_segment_schemes(&net, &arch, 64, &[2, 3], 64);
+        let seg = &schemes[0];
+        // layer 2's producer (1) is outside; layer 3's producer (2) inside.
+        assert!(!seg.ifm_on_chip(&net, 2));
+        assert!(seg.ifm_on_chip(&net, 3));
+        // layer 2's output feeds 3 (inside): stays on chip.
+        assert!(seg.ofm_on_chip(&net, 2));
+        assert!(!seg.ofm_on_chip(&net, 3));
+    }
+
+    #[test]
+    fn round_batch_ceils() {
+        let arch = presets::multi_node_eyeriss();
+        let mut s = Segment::single(0, &arch);
+        s.rounds = 8;
+        assert_eq!(s.round_batch(64), 8);
+        s.rounds = 3;
+        assert_eq!(s.round_batch(64), 22);
+    }
+
+    #[test]
+    fn too_many_layers_for_mesh_rejected() {
+        let net = nets::vggnet();
+        let arch = presets::bench_multi_node(); // 4x4 mesh
+        let span: Vec<usize> = (0..6).collect();
+        assert!(enumerate_segment_schemes(&net, &arch, 64, &span, 64).is_empty());
+    }
+}

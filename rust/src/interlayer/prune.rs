@@ -1,0 +1,188 @@
+//! Inter-layer conservative validity pruning and Pareto filtering
+//! (paper §IV-B, Table VI).
+//!
+//! Validity is checked *without* exploring intra-layer schemes: a layer is
+//! guaranteed infeasible if even its raw per-round data cannot fit the
+//! aggregated GBUF capacity of the nodes allocated to it. The check is
+//! conservative (never rejects a segment some intra-layer scheme could
+//! realize), so pruning preserves optimality while removing most
+//! candidates in practice.
+
+use super::Segment;
+use crate::arch::ArchConfig;
+use crate::cost::{segment_lower_bound, CostEstimate};
+use crate::workloads::Network;
+
+/// Conservative validity: for every pipelined layer, the per-round working
+/// set (input slice + output slice + resident weights) must fit in the
+/// aggregated GBUF capacity of its node region. Single-layer segments
+/// stream from DRAM and are always valid.
+pub fn conservative_valid(arch: &ArchConfig, net: &Network, batch: u64, seg: &Segment) -> bool {
+    if !seg.spatial {
+        return true;
+    }
+    let rb = seg.round_batch(batch);
+    for (pos, &li) in seg.layers.iter().enumerate() {
+        let l = &net.layers[li];
+        let nodes = seg.regions[pos].0 * seg.regions[pos].1;
+        let agg_words = nodes * arch.gbuf_words();
+        let (inp, out, wgt) = l.role_volumes(rb);
+        let need = inp + out + wgt;
+        if need > agg_words {
+            return false;
+        }
+    }
+    true
+}
+
+/// A pruned, prioritized inter-layer candidate.
+#[derive(Debug, Clone)]
+pub struct RankedSegment {
+    pub seg: Segment,
+    pub est: CostEstimate,
+}
+
+/// Statistics for Table VI.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PruneStats {
+    pub total: usize,
+    pub after_validity: usize,
+    pub after_pareto: usize,
+}
+
+/// Apply conservative validity pruning then Pareto filtering on
+/// (energy, latency) estimates, returning survivors sorted by score.
+pub fn prune_and_rank(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    candidates: Vec<Segment>,
+) -> (Vec<RankedSegment>, PruneStats) {
+    let mut stats = PruneStats { total: candidates.len(), ..Default::default() };
+    let mut ranked: Vec<RankedSegment> = candidates
+        .into_iter()
+        .filter(|seg| conservative_valid(arch, net, batch, seg))
+        .map(|seg| {
+            let est = segment_lower_bound(arch, net, batch, &seg);
+            RankedSegment { seg, est }
+        })
+        .collect();
+    stats.after_validity = ranked.len();
+
+    // Pareto prune on (energy, latency): drop candidates dominated by
+    // another candidate in both objectives (paper §IV-B: "skipping the
+    // schemes with non-Pareto-optimal access counts").
+    let mut keep = vec![true; ranked.len()];
+    for i in 0..ranked.len() {
+        if !keep[i] {
+            continue;
+        }
+        for j in 0..ranked.len() {
+            if i == j || !keep[i] {
+                break;
+            }
+            if dominates(&ranked[j].est, &ranked[i].est) {
+                keep[i] = false;
+            }
+        }
+    }
+    let mut it = keep.iter();
+    ranked.retain(|_| *it.next().unwrap());
+    stats.after_pareto = ranked.len();
+
+    ranked.sort_by(|a, b| a.est.score().partial_cmp(&b.est.score()).unwrap());
+    (ranked, stats)
+}
+
+fn dominates(a: &CostEstimate, b: &CostEstimate) -> bool {
+    (a.energy_pj < b.energy_pj && a.latency_cycles <= b.latency_cycles)
+        || (a.energy_pj <= b.energy_pj && a.latency_cycles < b.latency_cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::interlayer::enumerate_segment_schemes;
+    use crate::workloads::nets;
+
+    #[test]
+    fn single_layer_always_valid() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::vggnet();
+        for i in 0..net.len() {
+            let seg = Segment::single(i, &arch);
+            assert!(conservative_valid(&arch, &net, 64, &seg), "layer {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_pipeline_round_rejected() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::vggnet();
+        // conv1_1/conv1_2 at 224x224 x 64ch x batch-64 rounds=1 cannot fit
+        // on-chip: 64*224*224*64 words >> 8MB.
+        let seg = Segment {
+            layers: vec![0, 1],
+            regions: vec![(8, 16), (8, 16)],
+            spatial: true,
+            rounds: 1,
+        };
+        assert!(!conservative_valid(&arch, &net, 64, &seg));
+        // Finer granularity (one image per round) can fit... or at least
+        // prunes strictly less.
+        let seg64 = Segment { rounds: 64, ..seg.clone() };
+        let v64 = conservative_valid(&arch, &net, 64, &seg64);
+        let v1 = conservative_valid(&arch, &net, 64, &seg);
+        assert!(v64 as u8 >= v1 as u8);
+    }
+
+    #[test]
+    fn pruning_reduces_candidates() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let cands = enumerate_segment_schemes(&net, &arch, 64, &[2, 3, 4], 64);
+        let total = cands.len();
+        let (ranked, stats) = prune_and_rank(&arch, &net, 64, cands);
+        assert_eq!(stats.total, total);
+        assert!(stats.after_validity <= stats.total);
+        assert!(stats.after_pareto <= stats.after_validity);
+        assert!(!ranked.is_empty());
+        // sorted by score
+        for w in ranked.windows(2) {
+            assert!(w[0].est.score() <= w[1].est.score());
+        }
+    }
+
+    #[test]
+    fn pareto_drops_dominated() {
+        let a = CostEstimate { energy_pj: 1.0, latency_cycles: 1.0 };
+        let b = CostEstimate { energy_pj: 2.0, latency_cycles: 2.0 };
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        let c = CostEstimate { energy_pj: 0.5, latency_cycles: 3.0 };
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+    }
+
+    #[test]
+    fn validity_never_rejects_what_finer_rounds_accept_more_of() {
+        // Monotonicity property: increasing rounds (finer slices) never
+        // turns a valid segment invalid.
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        for span in [vec![2usize, 3], vec![4, 5, 6]] {
+            let mk = |rounds: u64| Segment {
+                layers: span.clone(),
+                regions: span.iter().map(|_| (4u64, 16u64)).collect(),
+                spatial: true,
+                rounds,
+            };
+            let mut prev = false;
+            for rounds in [1u64, 2, 4, 8, 16, 32, 64] {
+                let v = conservative_valid(&arch, &net, 64, &mk(rounds));
+                assert!(v || !prev, "validity regressed at rounds={rounds}");
+                prev = v;
+            }
+        }
+    }
+}

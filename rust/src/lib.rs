@@ -1,0 +1,32 @@
+//! KAPLA — pragmatic representation and fast solving of scalable NN
+//! accelerator dataflow (Li & Gao, 2023).
+//!
+//! This crate reproduces the paper's full system as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the scheduling coordinator: tensor-centric
+//!   dataflow directives, hardware templates, the KAPLA solver (inter-layer
+//!   pruning + DP prioritization, intra-layer bottom-up cost descending),
+//!   baseline solvers (exhaustive, random, ML/simulated annealing), and an
+//!   nn-dataflow-style detailed simulator used as the evaluation oracle.
+//! * **Layer 2 (python/compile/model.py)** — a JAX surrogate cost model
+//!   (MLP fwd/bwd training step) and a batched analytical cost evaluator,
+//!   AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (blocked matmul
+//!   and batched cost evaluation) called from the Layer-2 graphs.
+//!
+//! Python never runs on the scheduling path: the Rust binary loads the AOT
+//! artifacts through PJRT (`runtime` module) and is self-contained.
+
+pub mod arch;
+pub mod coordinator;
+pub mod cost;
+pub mod directives;
+pub mod interlayer;
+pub mod mapping;
+pub mod partition;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod solvers;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,247 @@
+//! `kapla` — CLI front end for the KAPLA dataflow scheduler.
+//!
+//! Subcommands:
+//!   schedule   Solve one network and print the resulting schedule.
+//!   compare    Run several solvers on one network, paper-style table.
+//!   directives Emit the tensor-centric directive program of a schedule.
+//!   validate   Parse + inspect an externally-authored directive file.
+//!   serve      Request-loop service mode (stdin/stdout).
+//!   info       Show hardware presets and network zoo.
+//!
+//! Argument parsing is hand-rolled (no clap in the offline registry);
+//! flags are `--key value` pairs.
+
+use kapla::arch::{presets, ArchConfig};
+use kapla::coordinator::{self, service, Job, SolverKind};
+use kapla::directives::emit::emit_layer;
+use kapla::interlayer::dp::DpConfig;
+use kapla::report::{eng, Table};
+use kapla::solvers::Objective;
+use kapla::util::stats::fmt_duration;
+use kapla::workloads;
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        usage();
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(rest);
+    match cmd.as_str() {
+        "schedule" => cmd_schedule(&flags, false),
+        "directives" => cmd_schedule(&flags, true),
+        "compare" => cmd_compare(&flags),
+        "validate" => cmd_validate(rest),
+        "serve" => {
+            service::serve(&arch_of(&flags));
+            ExitCode::SUCCESS
+        }
+        "info" => cmd_info(),
+        _ => {
+            usage();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "kapla <schedule|directives|compare|validate|serve|info> \
+         [--net NAME] [--batch N] [--arch multi|edge|bench] \
+         [--solver k|b|s|r[:p]|m[:rounds]] [--objective energy|latency] [--train]"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            out.insert(key.to_string(), val);
+        }
+    }
+    out
+}
+
+fn arch_of(flags: &HashMap<String, String>) -> ArchConfig {
+    match flags.get("arch").map(|s| s.as_str()).unwrap_or("multi") {
+        "edge" => presets::edge_tpu(),
+        "bench" => presets::bench_multi_node(),
+        _ => presets::multi_node_eyeriss(),
+    }
+}
+
+fn net_of(flags: &HashMap<String, String>) -> Option<(kapla::workloads::Network, u64)> {
+    let name = flags.get("net").map(|s| s.as_str()).unwrap_or("alexnet");
+    let fwd = workloads::by_name(name)?;
+    let train = flags.contains_key("train");
+    let batch: u64 = flags.get("batch").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let net = if train { workloads::training_graph(&fwd) } else { fwd };
+    Some((net, batch))
+}
+
+fn objective_of(flags: &HashMap<String, String>) -> Objective {
+    match flags.get("objective").map(|s| s.as_str()) {
+        Some("latency") => Objective::Latency,
+        _ => Objective::Energy,
+    }
+}
+
+fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
+    let arch = arch_of(flags);
+    let Some((net, batch)) = net_of(flags) else {
+        eprintln!("unknown network");
+        return ExitCode::FAILURE;
+    };
+    let solver =
+        flags.get("solver").and_then(|s| SolverKind::parse(s)).unwrap_or(SolverKind::Kapla);
+    let job = Job { net, batch, objective: objective_of(flags), solver, dp: DpConfig::default() };
+    println!(
+        "scheduling {} (batch {batch}) on {} with {}...",
+        job.net.name,
+        arch.name,
+        solver.letter()
+    );
+    let r = coordinator::run_job(&arch, &job);
+
+    println!(
+        "energy {} | latency {} cycles ({:.3} ms) | solved in {}",
+        eng(r.eval.energy.total(), "pJ"),
+        eng(r.eval.latency_cycles, ""),
+        r.eval.latency_s(&arch) * 1e3,
+        fmt_duration(r.solve_s)
+    );
+    let b = &r.eval.energy;
+    println!(
+        "breakdown: alu {} | regf {} | bus {} | gbuf {} | noc {} | dram {}",
+        eng(b.alu_pj, "pJ"),
+        eng(b.regf_pj, "pJ"),
+        eng(b.bus_pj, "pJ"),
+        eng(b.gbuf_pj, "pJ"),
+        eng(b.noc_pj, "pJ"),
+        eng(b.dram_pj, "pJ"),
+    );
+    for (si, (seg, schemes)) in r.schedule.segments.iter().enumerate() {
+        let names: Vec<&str> =
+            seg.layers.iter().map(|&i| job.net.layers[i].name.as_str()).collect();
+        println!(
+            "segment {si}: [{}] {} rounds={} regions={:?}",
+            names.join(", "),
+            if seg.spatial { "pipelined" } else { "time-shared" },
+            seg.rounds,
+            seg.regions
+        );
+        if emit {
+            for (pos, s) in schemes.iter().enumerate() {
+                println!("{}", emit_layer(names[pos], s));
+            }
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
+    let arch = arch_of(flags);
+    let Some((net, batch)) = net_of(flags) else {
+        eprintln!("unknown network");
+        return ExitCode::FAILURE;
+    };
+    let solvers: Vec<SolverKind> = flags
+        .get("solvers")
+        .map(|s| s.as_str())
+        .unwrap_or("k,r,m")
+        .split(',')
+        .filter_map(SolverKind::parse)
+        .collect();
+    let obj = objective_of(flags);
+    let jobs: Vec<Job> = solvers
+        .iter()
+        .map(|&solver| Job { net: net.clone(), batch, objective: obj, solver, dp: DpConfig::default() })
+        .collect();
+    let results = coordinator::run_jobs(&arch, &jobs, coordinator::default_threads());
+    let base = results[0].eval.energy.total();
+    let mut t = Table::new(
+        &format!("{} batch={batch} on {}", net.name, arch.name),
+        &["solver", "energy", "normalized", "latency cycles", "solve time"],
+    );
+    for (s, r) in solvers.iter().zip(&results) {
+        t.row(vec![
+            s.letter().into(),
+            eng(r.eval.energy.total(), "pJ"),
+            format!("{:.3}", r.eval.energy.total() / base),
+            eng(r.eval.latency_cycles, ""),
+            fmt_duration(r.solve_s),
+        ]);
+    }
+    println!("{}", t.render());
+    ExitCode::SUCCESS
+}
+
+fn cmd_validate(args: &[String]) -> ExitCode {
+    let Some(path) = args.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!("validate: missing directive file");
+        return ExitCode::FAILURE;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match kapla::directives::parse::parse(&text) {
+        Ok(progs) => {
+            for p in &progs {
+                println!("{} {}:", p.kind, p.name);
+                for lvl in &p.levels {
+                    println!(
+                        "  {}: {} words resident, {}x parallel",
+                        lvl.level,
+                        p.resident_words(&lvl.level).unwrap_or(0),
+                        p.parallelism(&lvl.level).unwrap_or(1)
+                    );
+                }
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("parse error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_info() -> ExitCode {
+    let mut t =
+        Table::new("hardware presets", &["name", "nodes", "PEs/node", "REGF", "GBUF", "dataflow"]);
+    for a in [presets::multi_node_eyeriss(), presets::bench_multi_node(), presets::edge_tpu()] {
+        t.row(vec![
+            a.name.into(),
+            format!("{}x{}", a.nodes.0, a.nodes.1),
+            format!("{}x{}", a.pes.0, a.pes.1),
+            format!("{} B", a.regf.bytes),
+            format!("{} kB", a.gbuf.bytes / 1024),
+            format!("{:?}", a.pe_dataflow),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new("network zoo", &["name", "layers", "MACs (batch 1)", "weights"]);
+    for net in workloads::all_networks() {
+        t.row(vec![
+            net.name.clone(),
+            net.len().to_string(),
+            eng(net.total_macs(1) as f64, ""),
+            eng(net.total_weights() as f64, ""),
+        ]);
+    }
+    println!("{}", t.render());
+    ExitCode::SUCCESS
+}

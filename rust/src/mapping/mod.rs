@@ -1,0 +1,430 @@
+//! PE-level unit mappings (paper §III-A "PE mapping", §III-C).
+//!
+//! The lowest-level REGF dataflow is fixed by the hardware template: the
+//! Eyeriss-like row-stationary scheme [8] or the TPU-like weight-stationary
+//! systolic flow [25]. A `UnitMap` captures everything the upper levels need
+//! to know about the PE array:
+//!
+//! * the *unit tensors* — the per-group granules the bottom-up solver
+//!   starts from (paper §IV-C);
+//! * the per-node *totals* of each temporal loop group that remain after
+//!   the array absorbs its spatial dims;
+//! * tensor word-count functions at node scope (for GBUF residency and
+//!   traffic) and per-PE REGF footprint functions (for REGF validity);
+//! * the spatial utilization of the array after folding.
+
+use crate::arch::{ArchConfig, PeDataflow};
+use crate::directives::Qty;
+use crate::workloads::{Layer, LayerKind};
+
+/// Per-node view of a layer after node-level partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerShape {
+    pub kind: LayerKind,
+    /// Per-node batch.
+    pub n: u64,
+    pub c: u64,
+    pub k: u64,
+    pub xo: u64,
+    pub yo: u64,
+    pub r: u64,
+    pub s: u64,
+    pub stride: u64,
+}
+
+impl LayerShape {
+    /// Whole-layer shape for batch `n` (no partitioning).
+    pub fn full(layer: &Layer, n: u64) -> LayerShape {
+        LayerShape {
+            kind: layer.kind,
+            n: layer.batch(n),
+            c: layer.c,
+            k: layer.k,
+            xo: layer.xo,
+            yo: layer.yo,
+            r: layer.r,
+            s: layer.s,
+            stride: layer.stride,
+        }
+    }
+
+    pub fn xi(&self) -> u64 {
+        (self.xo - 1) * self.stride + self.r
+    }
+
+    pub fn yi(&self) -> u64 {
+        (self.yo - 1) * self.stride + self.s
+    }
+
+    /// MACs for this (per-node) shape.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwWeight => {
+                self.n * self.k * self.c * self.xo * self.yo * self.r * self.s
+            }
+            LayerKind::DWConv | LayerKind::Pool => self.n * self.k * self.xo * self.yo * self.r * self.s,
+            LayerKind::Eltwise => self.n * self.k * self.xo * self.yo,
+        }
+    }
+
+    fn has_weights(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv | LayerKind::Fc | LayerKind::DWConv | LayerKind::ConvBwWeight
+        )
+    }
+}
+
+/// Effective C-group extent of a shape: depthwise/pool/eltwise layers carry
+/// their channels in the K group, so their C group is trivial.
+fn chan_c(shape: LayerShape) -> u64 {
+    match shape.kind {
+        LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => 1,
+        _ => shape.c,
+    }
+}
+
+/// The PE-array mapping of one layer on one node.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitMap {
+    pub dataflow: PeDataflow,
+    /// Per-node layer shape this map was built for.
+    pub shape: LayerShape,
+    /// PE array dims (cols, rows).
+    pub array: (u64, u64),
+    /// Temporal loop-group totals per node that remain above the PE array.
+    /// B counts images (row-stationary) or output rows (systolic);
+    /// C and K count channels.
+    pub totals: Qty,
+    /// Unit tensor granules per group (the starting block of the bottom-up
+    /// solver). Blocks are grown in multiples of these.
+    pub granule: Qty,
+    /// Fraction of PEs doing useful work (spatial folding efficiency).
+    pub utilization: f64,
+    /// Row-stationary only: the 1D-conv window chunk held per PE. Filter
+    /// rows longer than the REGF allows are folded temporally in chunks
+    /// with psum accumulation (Eyeriss handles large filters the same
+    /// way); training back-weight layers have filter rows of 27+ taps.
+    pub rs_chunk: u64,
+}
+
+impl UnitMap {
+    /// Build the unit mapping for a per-node shape under the arch's fixed
+    /// PE dataflow.
+    pub fn build(arch: &ArchConfig, shape: LayerShape) -> UnitMap {
+        let array = arch.pes; // (x = cols, y = rows)
+        match arch.pe_dataflow {
+            PeDataflow::RowStationary => Self::row_stationary(array, shape, arch.regf_words()),
+            PeDataflow::Systolic => Self::systolic(array, shape),
+        }
+    }
+
+    /// Eyeriss row stationary [8]: filter rows (S) across array rows, output
+    /// rows (Yo) across array columns, 1D convolution inside each PE. The
+    /// whole 2D conv plane of one (n, c, k) triple is one unit pass; fmap
+    /// and filter dims are fully absorbed, so the temporal groups above the
+    /// array are exactly (N, C, K).
+    fn row_stationary(array: (u64, u64), shape: LayerShape, regf_words: u64) -> UnitMap {
+        // Largest per-PE window chunk the REGF can hold at the unit block
+        // (ifm chunk + wgt chunk + 1 psum <= capacity).
+        let rs_chunk = shape.r.min(((regf_words.saturating_sub(1)) / 2).max(1));
+        let (cols, rows) = array;
+        let used_rows = shape.s.min(rows);
+        let used_cols = shape.yo.min(cols);
+        // Folding: larger S or Yo time-multiplexes onto the same PEs
+        // (Listing 1 line 9, "folding"); utilization counts the active
+        // fraction of the array during a unit pass.
+        let fold_s = crate::util::ceil_div(shape.s, rows);
+        let fold_y = crate::util::ceil_div(shape.yo, cols);
+        let full_passes = fold_s * fold_y;
+        let active = {
+            // average active PEs over folded passes
+            let total_work = shape.s * shape.yo;
+            total_work as f64 / (full_passes as f64 * (rows * cols) as f64)
+        };
+        UnitMap {
+            dataflow: PeDataflow::RowStationary,
+            shape,
+            array,
+            totals: Qty::new(shape.n, chan_c(shape), shape.k),
+            granule: Qty::UNIT,
+            utilization: active.min(1.0) * (used_rows * used_cols > 0) as u64 as f64,
+            rs_chunk,
+        }
+    }
+
+    /// TPU-like weight-stationary systolic array [25]: the C*R*S reduction
+    /// spreads across array rows and K across columns; output pixels stream
+    /// through. One unit pass computes one output *row* (Xo pixels) for the
+    /// resident (C-slice, K-slice) weight tile, so the B group counts
+    /// n * yo output rows.
+    fn systolic(array: (u64, u64), shape: LayerShape) -> UnitMap {
+        let (cols, rows) = array;
+        let red = shape.r * shape.s; // reduction elems per channel
+        let tot_c = chan_c(shape);
+        // Channels per weight-tile row-fill: how many C channels fit down
+        // the rows at once.
+        let c_gran = (rows / red).max(1).min(tot_c);
+        let k_gran = cols.min(shape.k);
+        let used_rows = (tot_c.min(c_gran) * red).min(rows);
+        let used_cols = k_gran;
+        let utilization = (used_rows * used_cols) as f64 / (rows * cols) as f64;
+        UnitMap {
+            dataflow: PeDataflow::Systolic,
+            shape,
+            array,
+            totals: Qty::new(shape.n * shape.yo, tot_c, shape.k),
+            granule: Qty::new(1, c_gran, k_gran),
+            utilization,
+            rs_chunk: 0,
+        }
+    }
+
+    /// Words of the input fmap covering quantity block `q` at node scope.
+    pub fn ifm_node_words(&self, q: Qty) -> u64 {
+        let s = &self.shape;
+        let chan = match s.kind {
+            // DW/pool/eltwise track channels in K (see directives::tensor_groups).
+            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => q.k,
+            _ => q.c,
+        };
+        match self.dataflow {
+            // b counts images; a block holds full (xi x yi) planes.
+            PeDataflow::RowStationary => q.b * chan * s.xi() * s.yi(),
+            // b counts output rows; each needs an (xi x s) input stripe.
+            PeDataflow::Systolic => q.b * chan * s.xi() * s.s,
+        }
+    }
+
+    /// Words of the output fmap for quantity block `q` at node scope.
+    pub fn ofm_node_words(&self, q: Qty) -> u64 {
+        let s = &self.shape;
+        if s.kind == LayerKind::ConvBwWeight {
+            // Output is dW (C x K x R x S), batch-invariant.
+            return q.c * q.k * s.r * s.s;
+        }
+        match self.dataflow {
+            PeDataflow::RowStationary => q.b * q.k * s.xo * s.yo,
+            PeDataflow::Systolic => q.b * q.k * s.xo,
+        }
+    }
+
+    /// Words of the weight-role tensor for quantity block `q` (0 if
+    /// unweighted). For the back-weight pass this is the streamed dY.
+    pub fn wgt_node_words(&self, q: Qty) -> u64 {
+        let s = &self.shape;
+        if !s.has_weights() {
+            return 0;
+        }
+        match s.kind {
+            LayerKind::DWConv => q.k * s.r * s.s,
+            LayerKind::ConvBwWeight => match self.dataflow {
+                PeDataflow::RowStationary => q.b * q.k * s.xo * s.yo,
+                PeDataflow::Systolic => q.b * q.k * s.xo,
+            },
+            _ => q.c * q.k * s.r * s.s,
+        }
+    }
+
+    /// Total words of all three tensors for block `q` at node scope.
+    pub fn node_words(&self, q: Qty) -> u64 {
+        self.ifm_node_words(q) + self.ofm_node_words(q) + self.wgt_node_words(q)
+    }
+
+    /// Per-PE REGF footprint in words when the REGF-resident block is `q`.
+    pub fn regf_pe_words(&self, q: Qty) -> u64 {
+        let s = &self.shape;
+        match self.dataflow {
+            PeDataflow::RowStationary => {
+                // Per PE: ifm sliding window + filter-row chunk (rows
+                // longer than the REGF fold temporally in `rs_chunk`-tap
+                // chunks, accumulating psums) + psum accumulator.
+                let w = self.rs_chunk.min(s.r).max(1);
+                let chan_i = match s.kind {
+                    LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => q.k,
+                    _ => q.c,
+                };
+                let wgt = if s.has_weights() {
+                    match s.kind {
+                        LayerKind::DWConv => q.k * w,
+                        LayerKind::ConvBwWeight => q.b * q.k * w,
+                        _ => q.c * q.k * w,
+                    }
+                } else {
+                    0
+                };
+                let psum = if s.kind == LayerKind::ConvBwWeight { q.c * q.k } else { q.b * q.k };
+                q.b * chan_i * w + wgt + psum
+            }
+            PeDataflow::Systolic => {
+                // Per PE: its share of the resident weight tile (double
+                // buffered) + streaming input/psum registers.
+                let (cols, rows) = self.array;
+                let wgt_share = if s.has_weights() {
+                    let welems = match s.kind {
+                        LayerKind::DWConv => q.k * s.r * s.s,
+                        LayerKind::ConvBwWeight => q.b * q.k * s.xo,
+                        _ => q.c * q.k * s.r * s.s,
+                    };
+                    2 * crate::util::ceil_div(welems, rows * cols)
+                } else {
+                    0
+                };
+                wgt_share + 4
+            }
+        }
+    }
+
+    /// Clamp a desired block to the per-node totals and align it to granule
+    /// multiples (rounding down, min one granule).
+    pub fn align_block(&self, q: Qty) -> Qty {
+        let mut out = Qty::UNIT;
+        for g in crate::directives::Grp::ALL {
+            let gran = self.granule.get(g);
+            let tot = self.totals.get(g);
+            let v = q.get(g).min(tot);
+            let aligned = (v / gran).max(1) * gran;
+            out.set(g, aligned.min(tot.max(gran)));
+        }
+        out
+    }
+
+    /// MACs per node for this layer shape.
+    pub fn node_macs(&self) -> u64 {
+        self.shape.macs()
+    }
+
+    /// Compute cycles for the whole per-node workload, given the array size
+    /// and utilization (roofline compute term).
+    pub fn compute_cycles(&self) -> f64 {
+        let peak = (self.array.0 * self.array.1) as f64;
+        self.shape.macs() as f64 / (peak * self.utilization.max(1e-6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workloads::Layer;
+
+    fn conv_shape() -> LayerShape {
+        LayerShape::full(&Layer::conv("c", 16, 32, 14, 3, 1), 4)
+    }
+
+    #[test]
+    fn rs_totals_are_nck() {
+        let arch = presets::multi_node_eyeriss();
+        let m = UnitMap::build(&arch, conv_shape());
+        assert_eq!(m.totals, Qty::new(4, 16, 32));
+        assert_eq!(m.granule, Qty::UNIT);
+    }
+
+    #[test]
+    fn rs_utilization_folding() {
+        let arch = presets::multi_node_eyeriss(); // 8x8 array
+        // s=3 uses 3 of 8 rows; yo=14 folds over 8 cols: 2 passes covering
+        // 14 columns-worth -> util = (3*14)/(2*64)
+        let m = UnitMap::build(&arch, conv_shape());
+        let expect = (3.0 * 14.0) / (2.0 * 64.0);
+        assert!((m.utilization - expect).abs() < 1e-12, "{}", m.utilization);
+    }
+
+    #[test]
+    fn rs_word_functions() {
+        let arch = presets::multi_node_eyeriss();
+        let m = UnitMap::build(&arch, conv_shape());
+        let q = Qty::new(2, 4, 8);
+        assert_eq!(m.ifm_node_words(q), 2 * 4 * 16 * 16);
+        assert_eq!(m.ofm_node_words(q), 2 * 8 * 14 * 14);
+        assert_eq!(m.wgt_node_words(q), 4 * 8 * 9);
+        assert_eq!(m.node_words(q), m.ifm_node_words(q) + m.ofm_node_words(q) + m.wgt_node_words(q));
+    }
+
+    #[test]
+    fn rs_regf_footprint_grows_monotonically() {
+        let arch = presets::multi_node_eyeriss();
+        let m = UnitMap::build(&arch, conv_shape());
+        let small = m.regf_pe_words(Qty::UNIT);
+        let big = m.regf_pe_words(Qty::new(1, 2, 3));
+        assert!(small < big);
+        // unit footprint: ifm r + wgt r + psum 1 = 3+3+1
+        assert_eq!(small, 7);
+    }
+
+    #[test]
+    fn systolic_granules_pack_reduction() {
+        let arch = presets::edge_tpu(); // 16x16 array
+        let l = Layer::conv("c", 64, 64, 28, 3, 1);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 1));
+        // r*s = 9; 16 rows fit 1 channel (9 <= 16 < 18)
+        assert_eq!(m.granule.c, 1);
+        assert_eq!(m.granule.k, 16);
+        // B counts output rows: n * yo = 28
+        assert_eq!(m.totals.b, 28);
+    }
+
+    #[test]
+    fn systolic_fc_uses_full_rows() {
+        let arch = presets::edge_tpu();
+        let l = Layer::fc("f", 1024, 256);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 1));
+        // r*s = 1: 16 channels per row-fill
+        assert_eq!(m.granule.c, 16);
+        assert_eq!(m.totals, Qty::new(1, 1024, 256));
+        assert!((m.utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn systolic_regf_holds_weight_share() {
+        let arch = presets::edge_tpu();
+        let l = Layer::fc("f", 1024, 256);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 1));
+        // block of (c=256, k=64): welems = 16384 over 256 PEs = 64 each,
+        // double buffered = 128 + 4 streaming.
+        let q = Qty::new(1, 256, 64);
+        assert_eq!(m.regf_pe_words(q), 2 * 64 + 4);
+    }
+
+    #[test]
+    fn align_block_respects_granule_and_totals() {
+        let arch = presets::edge_tpu();
+        let l = Layer::fc("f", 100, 40);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 2));
+        let a = m.align_block(Qty::new(9, 37, 1000));
+        assert_eq!(a.b, 2); // clamped to totals
+        assert_eq!(a.c % m.granule.c, 0); // granule multiple
+        assert!(a.k <= 40);
+    }
+
+    #[test]
+    fn dwconv_ifm_tracks_k() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::dwconv("dw", 32, 14, 3, 1);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 1));
+        let q = Qty::new(1, 1, 8);
+        // ifm words follow K (channels), not the trivial C group.
+        assert_eq!(m.ifm_node_words(q), 8 * 16 * 16);
+        assert_eq!(m.wgt_node_words(q), 8 * 9);
+    }
+
+    #[test]
+    fn eltwise_has_no_weights() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::eltwise("e", 64, 28);
+        let m = UnitMap::build(&arch, LayerShape::full(&l, 2));
+        assert_eq!(m.wgt_node_words(Qty::new(2, 1, 64)), 0);
+    }
+
+    #[test]
+    fn compute_cycles_scale_with_macs() {
+        let arch = presets::multi_node_eyeriss();
+        let m = UnitMap::build(&arch, conv_shape());
+        let c = m.compute_cycles();
+        assert!(c > 0.0);
+        // cycles * active PEs ~= macs
+        let active = 64.0 * m.utilization;
+        let rel = (c * active - m.shape.macs() as f64).abs() / (m.shape.macs() as f64);
+        assert!(rel < 1e-9);
+    }
+}

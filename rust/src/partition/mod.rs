@@ -1,0 +1,340 @@
+//! Node-level parallelization (paper §III-A "Node parallelization").
+//!
+//! A layer assigned to a rectangular region of the node mesh is partitioned
+//! in a hybrid way along batch (N), output channels (K), input channels (C)
+//! and the 2D output fmap (Xo, Yo) [16], [24], [47]. Tensors containing a
+//! partitioned dim shrink per node; the others are replicated — unless
+//! *buffer sharing* [17] stores a single copy across the sibling buffers
+//! and rotates shares (expressed by the `shr` parameter of the `tensor`
+//! directive).
+
+use crate::mapping::LayerShape;
+use crate::util::{ceil_div, divisors};
+use crate::workloads::{Layer, LayerKind};
+
+/// A node-level partition scheme on a rectangular mesh region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PartitionScheme {
+    /// Node region (width, height) allocated to the layer.
+    pub region: (u64, u64),
+    /// Partition factors; their product must not exceed region nodes.
+    pub pn: u64,
+    pub pk: u64,
+    pub pc: u64,
+    pub px: u64,
+    pub py: u64,
+    /// Buffer-share the input fmap across the `pk` output-parallel nodes
+    /// instead of replicating it (paper Listing 1 line 14, `shr=4`).
+    pub share_ifm: bool,
+    /// Buffer-share the weights across the `pn*px*py` batch/fmap-parallel
+    /// nodes instead of replicating them.
+    pub share_wgt: bool,
+}
+
+impl PartitionScheme {
+    /// Trivial scheme: single node, no partitioning.
+    pub fn single() -> PartitionScheme {
+        PartitionScheme {
+            region: (1, 1),
+            pn: 1,
+            pk: 1,
+            pc: 1,
+            px: 1,
+            py: 1,
+            share_ifm: false,
+            share_wgt: false,
+        }
+    }
+
+    pub fn nodes(&self) -> u64 {
+        self.region.0 * self.region.1
+    }
+
+    pub fn used_nodes(&self) -> u64 {
+        self.pn * self.pk * self.pc * self.px * self.py
+    }
+
+    /// Per-node layer shape after partitioning (ceiling split).
+    pub fn node_shape(&self, layer: &Layer, batch: u64) -> LayerShape {
+        let full = LayerShape::full(layer, batch);
+        // DW/pool/eltwise carry channels in K: a pk-partition splits both
+        // c and k (they are the same physical dim); pc must be 1.
+        let chan_split = self.pk;
+        let (c, k) = match layer.kind {
+            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => {
+                (ceil_div(full.c, chan_split), ceil_div(full.k, chan_split))
+            }
+            _ => (ceil_div(full.c, self.pc), ceil_div(full.k, self.pk)),
+        };
+        LayerShape {
+            kind: full.kind,
+            n: ceil_div(full.n, self.pn),
+            c,
+            k,
+            xo: ceil_div(full.xo, self.px),
+            yo: ceil_div(full.yo, self.py),
+            r: full.r,
+            s: full.s,
+            stride: full.stride,
+        }
+    }
+
+    /// Replication factor of the input fmap across nodes (how many nodes
+    /// hold the same ifm data), and the sharing divisor when buffer
+    /// sharing is on.
+    pub fn ifm_replication(&self) -> u64 {
+        // ifm does not contain K; K-parallel nodes need the same ifm.
+        self.pk
+    }
+
+    pub fn ifm_shr(&self) -> u64 {
+        if self.share_ifm {
+            self.pk
+        } else {
+            1
+        }
+    }
+
+    /// Replication of the weights (no N, Xo, Yo dims).
+    pub fn wgt_replication(&self) -> u64 {
+        self.pn * self.px * self.py
+    }
+
+    pub fn wgt_shr(&self) -> u64 {
+        if self.share_wgt {
+            self.wgt_replication()
+        } else {
+            1
+        }
+    }
+
+    /// Number of nodes that accumulate partial sums of the same output
+    /// (input-channel parallelism needs a cross-node reduction).
+    pub fn ofm_reduction(&self) -> u64 {
+        self.pc
+    }
+
+    /// Kind-aware reduction: the back-weight pass reduces its output (dW)
+    /// over batch and fmap, so those parallel nodes must combine.
+    pub fn ofm_reduction_for(&self, kind: LayerKind) -> u64 {
+        match kind {
+            LayerKind::ConvBwWeight => self.pn * self.px * self.py,
+            _ => self.pc,
+        }
+    }
+
+    /// Kind-aware weight-slot sharing: the back-weight "wgt" tensor is the
+    /// streamed dY (replicated across C-parallel nodes, not shareable the
+    /// same way); disable the static sharing divisor there.
+    pub fn wgt_shr_for(&self, kind: LayerKind) -> u64 {
+        match kind {
+            LayerKind::ConvBwWeight => 1,
+            _ => self.wgt_shr(),
+        }
+    }
+
+    /// Average NoC hop count for DRAM<->node traffic: half the mesh
+    /// perimeter distance from edge memory controllers (paper Fig. 1:
+    /// off-chip memories on the mesh boundary).
+    pub fn dram_hops(&self) -> f64 {
+        ((self.region.0 + self.region.1) as f64 / 4.0).max(1.0)
+    }
+
+    /// Average hop count for neighbour rotation (buffer sharing) and
+    /// cross-node reduction: ring neighbours.
+    pub fn neighbor_hops(&self) -> f64 {
+        1.0
+    }
+
+    /// Validity: factors fit the region and the layer dims.
+    pub fn is_valid(&self, layer: &Layer, batch: u64) -> bool {
+        if self.used_nodes() > self.nodes() {
+            return false;
+        }
+        let full = LayerShape::full(layer, batch);
+        if self.pn > full.n || self.pk > full.k || self.pc > full.c {
+            return false;
+        }
+        if self.px > full.xo || self.py > full.yo {
+            return false;
+        }
+        match layer.kind {
+            // Channel-paired kinds cannot split C independently.
+            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => self.pc == 1,
+            LayerKind::Fc => self.px == 1 && self.py == 1,
+            LayerKind::Conv | LayerKind::ConvBwWeight => true,
+        }
+    }
+}
+
+/// Enumerate all partition schemes of `layer` over a `region`, optionally
+/// with buffer-sharing variants. This is the node-level *stack* space the
+/// solvers explore.
+pub fn enumerate_partitions(
+    layer: &Layer,
+    batch: u64,
+    region: (u64, u64),
+    with_sharing: bool,
+) -> Vec<PartitionScheme> {
+    let area = region.0 * region.1;
+    let mut out = Vec::new();
+    // Factor the full region area into the five dims (ordered factorization
+    // of every divisor chain). Under-filled regions waste nodes, so we only
+    // use the full area; fragmented dims are handled by ceiling splits.
+    for pn in divisors(area) {
+        let a1 = area / pn;
+        for pk in divisors(a1) {
+            let a2 = a1 / pk;
+            for pc in divisors(a2) {
+                let a3 = a2 / pc;
+                for px in divisors(a3) {
+                    let py = a3 / px;
+                    let base = PartitionScheme {
+                        region,
+                        pn,
+                        pk,
+                        pc,
+                        px,
+                        py,
+                        share_ifm: false,
+                        share_wgt: false,
+                    };
+                    if !base.is_valid(layer, batch) {
+                        continue;
+                    }
+                    out.push(base);
+                    if with_sharing {
+                        if base.pk > 1 {
+                            let mut s = base;
+                            s.share_ifm = true;
+                            out.push(s);
+                        }
+                        if base.wgt_replication() > 1 && layer.has_weights() {
+                            let mut s = base;
+                            s.share_wgt = true;
+                            out.push(s);
+                            if base.pk > 1 {
+                                let mut s2 = s;
+                                s2.share_ifm = true;
+                                out.push(s2);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Layer;
+
+    fn conv() -> Layer {
+        Layer::conv("c", 64, 128, 28, 3, 1)
+    }
+
+    #[test]
+    fn single_is_identity() {
+        let p = PartitionScheme::single();
+        let s = p.node_shape(&conv(), 16);
+        assert_eq!((s.n, s.c, s.k, s.xo), (16, 64, 128, 28));
+        assert!(p.is_valid(&conv(), 16));
+    }
+
+    #[test]
+    fn node_shape_splits_ceiling() {
+        let p = PartitionScheme { pn: 4, pk: 2, px: 2, ..PartitionScheme::single() };
+        let p = PartitionScheme { region: (4, 4), ..p };
+        assert!(p.is_valid(&conv(), 16));
+        let s = p.node_shape(&conv(), 16);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.k, 64);
+        assert_eq!(s.xo, 14);
+        assert_eq!(s.c, 64); // unsplit
+    }
+
+    #[test]
+    fn enumerate_covers_area_exactly() {
+        let ps = enumerate_partitions(&conv(), 16, (2, 2), false);
+        assert!(!ps.is_empty());
+        for p in &ps {
+            assert_eq!(p.used_nodes(), 4, "{p:?}");
+            assert!(p.is_valid(&conv(), 16));
+        }
+        // Hybrid schemes present: some partition two different dims.
+        assert!(ps.iter().any(|p| p.pn > 1 && p.pk > 1));
+    }
+
+    #[test]
+    fn sharing_variants_added() {
+        let ps = enumerate_partitions(&conv(), 16, (2, 2), true);
+        assert!(ps.iter().any(|p| p.share_ifm));
+        assert!(ps.iter().any(|p| p.share_wgt));
+        let ps0 = enumerate_partitions(&conv(), 16, (2, 2), false);
+        assert!(ps.len() > ps0.len());
+    }
+
+    #[test]
+    fn fc_never_partitions_fmap() {
+        let fc = Layer::fc("f", 512, 512);
+        for p in enumerate_partitions(&fc, 16, (4, 4), true) {
+            assert_eq!((p.px, p.py), (1, 1));
+        }
+    }
+
+    #[test]
+    fn dwconv_never_partitions_c() {
+        let dw = Layer::dwconv("d", 64, 28, 3, 1);
+        let ps = enumerate_partitions(&dw, 16, (2, 2), false);
+        assert!(!ps.is_empty());
+        for p in &ps {
+            assert_eq!(p.pc, 1);
+        }
+        // channel split halves both c and k
+        let p = ps.iter().find(|p| p.pk == 4).unwrap();
+        let s = p.node_shape(&dw, 16);
+        assert_eq!((s.c, s.k), (16, 16));
+    }
+
+    #[test]
+    fn batch1_limits_pn() {
+        for p in enumerate_partitions(&conv(), 1, (4, 4), false) {
+            assert_eq!(p.pn, 1);
+        }
+    }
+
+    #[test]
+    fn replication_and_sharing_factors() {
+        let p = PartitionScheme {
+            region: (4, 4),
+            pn: 2,
+            pk: 4,
+            pc: 1,
+            px: 2,
+            py: 1,
+            share_ifm: true,
+            share_wgt: false,
+        };
+        assert_eq!(p.ifm_replication(), 4);
+        assert_eq!(p.ifm_shr(), 4);
+        assert_eq!(p.wgt_replication(), 4);
+        assert_eq!(p.wgt_shr(), 1);
+        assert_eq!(p.ofm_reduction(), 1);
+    }
+
+    #[test]
+    fn invalid_when_overcommitted() {
+        let p = PartitionScheme { region: (2, 2), pn: 8, ..PartitionScheme::single() };
+        assert!(!p.is_valid(&conv(), 4)); // pn > batch and > nodes
+    }
+
+    #[test]
+    fn dram_hops_grow_with_region() {
+        let small = PartitionScheme { region: (2, 2), ..PartitionScheme::single() };
+        let big = PartitionScheme { region: (16, 16), ..PartitionScheme::single() };
+        assert!(big.dram_hops() > small.dram_hops());
+    }
+}

@@ -1,0 +1,157 @@
+//! Table/figure emission: aligned text tables for the terminal plus CSV
+//! files under `reports/` so the paper's tables and figures can be
+//! regenerated and post-processed.
+
+pub mod benchkit;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table builder.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}  ", c, w = width[i]);
+            }
+            out.pop();
+            out.pop();
+            out.push('\n');
+        };
+        line(&mut out, &self.header);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    /// CSV rendering (quoted only when needed).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write the CSV under `reports/<name>.csv` and return the rendered
+    /// text table.
+    pub fn save_and_render(&self, name: &str) -> String {
+        let dir = Path::new("reports");
+        let _ = std::fs::create_dir_all(dir);
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), self.to_csv());
+        self.render()
+    }
+}
+
+/// Format a ratio as the paper does (normalized energy, "1.022" etc).
+pub fn ratio(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a percentage overhead ("+2.2%").
+pub fn pct(x: f64) -> String {
+    format!("{:+.1}%", x * 100.0)
+}
+
+/// Format engineering values (1.25e9 -> "1.25 GJ"-style with unit).
+pub fn eng(x: f64, unit: &str) -> String {
+    let (v, p) = if x.abs() >= 1e12 {
+        (x / 1e12, "T")
+    } else if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2} {p}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["net", "K", "B"]);
+        t.row(vec!["alexnet".into(), "1.022".into(), "1.000".into()]);
+        t.row(vec!["mlp".into(), "1.100".into(), "1.000".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + rule + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // columns aligned: "K" column starts at same offset in both rows
+        let off = lines[3].find("1.022").unwrap();
+        assert_eq!(lines[4].find("1.100").unwrap(), off);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["v,1".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"v,1\",plain"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(ratio(1.0223), "1.022");
+        assert_eq!(pct(0.022), "+2.2%");
+        assert_eq!(eng(1.25e9, "pJ"), "1.25 GpJ");
+        assert_eq!(eng(512.0, "B"), "512.00 B");
+    }
+}

@@ -1,0 +1,468 @@
+//! The KAPLA solver (paper §IV).
+//!
+//! Intra-layer: *bottom-up cost descending* (Algorithm 1). Starting from
+//! the PE mapping's unit tensors, each memory level is solved in turn —
+//! a greedy *stacking* pass chooses node-parallel dims (hill-climbing over
+//! partition moves), then a *caching* pass enlarges the resident block one
+//! divisor step at a time, always growing a dimension that relieves the
+//! currently most-accessed tensor, until the buffer capacity is used up.
+//! Validity holds *by construction* at every step, eliminating the
+//! capacity-check churn of top-down factorization.
+//!
+//! Inter-layer: the decoupled fast DP of `interlayer::dp` prunes and
+//! prioritizes segment chains on the optimistic cost model; only the top
+//! k_S chains get their intra-layer schemes solved and are then scored on
+//! the detailed model.
+
+use crate::arch::ArchConfig;
+use crate::directives::{refetch_factor_groups, tensor_groups, Grp, LevelBlock, LayerScheme, LoopOrder, Qty, TensorKind};
+use crate::interlayer::dp::{best_chains, DpConfig};
+use crate::interlayer::prune::PruneStats;
+use crate::interlayer::Schedule;
+use crate::mapping::UnitMap;
+use crate::partition::PartitionScheme;
+use crate::sim::evaluate_layer;
+use crate::sim::pipeline::evaluate_schedule;
+use crate::util::next_divisor;
+use crate::workloads::{Layer, Network};
+
+use super::{IntraCtx, IntraSolver, Objective, SolveResult};
+
+/// The KAPLA intra-layer solver.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KaplaIntra;
+
+impl IntraSolver for KaplaIntra {
+    fn name(&self) -> &'static str {
+        "kapla"
+    }
+
+    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
+        solve_intra(arch, layer, ctx)
+    }
+}
+
+/// Bottom-up solve of one layer in one context.
+pub fn solve_intra(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
+    let mut best: Option<(f64, LayerScheme)> = None;
+    for part in stacking_candidates(arch, layer, ctx) {
+        let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+        // Level 1: REGF caching per order. The REGF block must stay
+        // GBUF-feasible too (the next level's block contains it).
+        for ro in LoopOrder::all() {
+            let rq = descend(&unit, unit.granule, unit.totals, ro, |q| {
+                unit.regf_pe_words(q) <= arch.regf_words() && gbuf_fits(arch, &unit, &part, q)
+            });
+            if unit.regf_pe_words(rq) > arch.regf_words()
+                || !gbuf_fits(arch, &unit, &part, rq)
+            {
+                continue; // even the unit tensors overflow the buffers
+            }
+            // Level 2: GBUF caching per order, starting from the REGF block.
+            for go in LoopOrder::all() {
+                let gq = descend(
+                    &unit,
+                    rq,
+                    unit.totals,
+                    go,
+                    |q| gbuf_fits(arch, &unit, &part, q),
+                );
+                let s = LayerScheme {
+                    part,
+                    unit,
+                    regf: LevelBlock { qty: rq, order: ro },
+                    gbuf: LevelBlock { qty: gq, order: go },
+                };
+                if s.validate(arch).is_err() {
+                    continue;
+                }
+                let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
+                let cost = match ctx.objective {
+                    Objective::Energy => ev.energy.total(),
+                    Objective::Latency => ev.latency_cycles,
+                };
+                if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+                    best = Some((cost, s));
+                }
+            }
+        }
+    }
+    best.map(|(_, s)| s)
+}
+
+fn gbuf_fits(arch: &ArchConfig, unit: &UnitMap, part: &PartitionScheme, q: Qty) -> bool {
+    let ifm = unit.ifm_node_words(q).div_ceil(part.ifm_shr());
+    let wgt = unit.wgt_node_words(q).div_ceil(part.wgt_shr());
+    ifm + wgt + unit.ofm_node_words(q) <= arch.gbuf_words()
+}
+
+/// Total next-level access volume (words) of all three tensors under block
+/// `q` — the cost the caching pass descends.
+fn level_accesses(unit: &UnitMap, q: Qty, totals: Qty, order: LoopOrder) -> u64 {
+    let kind = unit.shape.kind;
+    let trips = q.trips_over(totals);
+    TensorKind::ALL
+        .iter()
+        .map(|&t| {
+            let (mem, miss) = tensor_groups(t, kind);
+            let words = match t {
+                TensorKind::Ifm => unit.ifm_node_words(q),
+                TensorKind::Ofm => unit.ofm_node_words(q),
+                TensorKind::Wgt => unit.wgt_node_words(q),
+            };
+            words * refetch_factor_groups(trips, order, mem, miss)
+        })
+        .sum()
+}
+
+/// The greedy caching pass of Algorithm 1: enlarge `q` one divisor step at
+/// a time along the dimension whose growth most reduces the total access
+/// volume to the next level (the paper picks the dim helping the
+/// most-accessed tensor; evaluating all three one-step candidates and
+/// keeping the best descent is the same cost-descending rule with exact
+/// tie-breaking). Stops when the buffer capacity is exhausted or no step
+/// descends. Runs in O(steps x 3) with pure arithmetic.
+fn descend(
+    unit: &UnitMap,
+    start: Qty,
+    totals: Qty,
+    order: LoopOrder,
+    fits: impl Fn(Qty) -> bool,
+) -> Qty {
+    let mut q = start;
+    let mut cur = level_accesses(unit, q, totals, order);
+    loop {
+        let mut best: Option<(u64, Qty)> = None;
+        for g in Grp::ALL {
+            if let Some(next) = grow(q, g, totals, unit.granule) {
+                if !fits(next) {
+                    continue;
+                }
+                let acc = level_accesses(unit, next, totals, order);
+                if best.as_ref().map(|(b, _)| acc < *b).unwrap_or(true) {
+                    best = Some((acc, next));
+                }
+            }
+        }
+        match best {
+            // Accept equal-cost growth too: filling spare capacity never
+            // hurts and can unlock further descent (ceil-trip plateaus).
+            Some((acc, next)) if acc <= cur => {
+                q = next;
+                cur = acc;
+            }
+            _ => break,
+        }
+    }
+    q
+}
+
+/// Enlarge group `g` of `q` to its next blocked size (next divisor of the
+/// granule-unit count), or `None` if already at the total.
+fn grow(q: Qty, g: Grp, totals: Qty, granule: Qty) -> Option<Qty> {
+    let gran = granule.get(g);
+    let units_total = crate::util::ceil_div(totals.get(g), gran);
+    let units_cur = crate::util::ceil_div(q.get(g), gran);
+    let next_units = next_divisor(units_total, units_cur)?;
+    let mut out = q;
+    out.set(g, (next_units * gran).min(totals.get(g)));
+    if out == q {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// The stacking pass: greedy hill-climbing over node-partition moves from
+/// several seeds (pure batch / output / fmap splits and the unit
+/// partition), scored by a one-shot descend + evaluate probe. Returns the
+/// distinct partitions encountered on the best paths.
+fn stacking_candidates(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Vec<PartitionScheme> {
+    let region = ctx.region;
+    let area = region.0 * region.1;
+    let mut seen: Vec<PartitionScheme> = Vec::new();
+    let mut keep: Vec<PartitionScheme> = Vec::new();
+
+    let seeds = seed_partitions(layer, ctx.rb, region);
+    for seed in seeds {
+        let mut cur = seed;
+        let mut cur_cost = probe_cost(arch, layer, ctx, &cur);
+        if !seen.contains(&cur) {
+            seen.push(cur);
+        }
+        loop {
+            let mut improved = false;
+            for next in partition_moves(&cur, layer, ctx.rb, area) {
+                let cost = probe_cost(arch, layer, ctx, &next);
+                if cost < cur_cost {
+                    cur = next;
+                    cur_cost = cost;
+                    improved = true;
+                }
+            }
+            if !seen.contains(&cur) {
+                seen.push(cur);
+            }
+            if !improved {
+                break;
+            }
+        }
+        if !keep.contains(&cur) {
+            keep.push(cur);
+        }
+    }
+    // Also keep the plain unit partition as a safety net.
+    let unitp = PartitionScheme { region, ..PartitionScheme::single() };
+    if !keep.contains(&unitp) {
+        keep.push(unitp);
+    }
+    keep
+}
+
+/// Starting points for the hill climb: split fully along each single dim
+/// that can absorb the region, plus the trivial partition.
+fn seed_partitions(layer: &Layer, rb: u64, region: (u64, u64)) -> Vec<PartitionScheme> {
+    let area = region.0 * region.1;
+    let base = PartitionScheme { region, ..PartitionScheme::single() };
+    let mut seeds = vec![base];
+    for (setter, cap) in [
+        ((|p: &mut PartitionScheme, v: u64| p.pn = v) as fn(&mut PartitionScheme, u64), rb),
+        (|p, v| p.pk = v, layer.k),
+        (|p, v| p.pc = v, layer.c),
+        (|p, v| p.py = v, layer.yo),
+    ] {
+        let mut p = base;
+        let f = largest_pow2_divisor(area).min(cap.next_power_of_two() / 2).max(1);
+        setter(&mut p, f);
+        if p.is_valid(layer, rb) && !seeds.contains(&p) {
+            seeds.push(p);
+        }
+    }
+    seeds
+}
+
+fn largest_pow2_divisor(n: u64) -> u64 {
+    n & n.wrapping_neg()
+}
+
+/// Neighbour moves: double one partition dim (if it still fits the region
+/// and the layer), halve one (to escape over-splits), toggle sharing.
+fn partition_moves(cur: &PartitionScheme, layer: &Layer, rb: u64, area: u64) -> Vec<PartitionScheme> {
+    let mut out = Vec::new();
+    type Fld = (fn(&PartitionScheme) -> u64, fn(&mut PartitionScheme, u64));
+    let fields: [Fld; 5] = [
+        (|p| p.pn, |p, v| p.pn = v),
+        (|p| p.pk, |p, v| p.pk = v),
+        (|p| p.pc, |p, v| p.pc = v),
+        (|p| p.px, |p, v| p.px = v),
+        (|p| p.py, |p, v| p.py = v),
+    ];
+    for (get, set) in fields {
+        let v = get(cur);
+        if cur.used_nodes() / v * (v * 2) <= area {
+            let mut p = *cur;
+            set(&mut p, v * 2);
+            if p.is_valid(layer, rb) {
+                out.push(p);
+            }
+        }
+        if v > 1 && v % 2 == 0 {
+            let mut p = *cur;
+            set(&mut p, v / 2);
+            if p.is_valid(layer, rb) {
+                out.push(p);
+            }
+        }
+    }
+    for (flag, cond) in [(0, cur.pk > 1), (1, cur.wgt_replication() > 1 && layer.has_weights())] {
+        if cond {
+            let mut p = *cur;
+            if flag == 0 {
+                p.share_ifm = !p.share_ifm;
+            } else {
+                p.share_wgt = !p.share_wgt;
+            }
+            if p.is_valid(layer, rb) {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+/// One-shot probe: default orders, full descend, detailed eval. Infinity
+/// when no valid scheme exists under this partition.
+fn probe_cost(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx, part: &PartitionScheme) -> f64 {
+    let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+    let ro = LoopOrder([Grp::B, Grp::K, Grp::C]);
+    let go = LoopOrder([Grp::B, Grp::C, Grp::K]);
+    let rq = descend(&unit, unit.granule, unit.totals, ro, |q| {
+        unit.regf_pe_words(q) <= arch.regf_words() && gbuf_fits(arch, &unit, part, q)
+    });
+    if unit.regf_pe_words(rq) > arch.regf_words() || !gbuf_fits(arch, &unit, part, rq) {
+        return f64::INFINITY;
+    }
+    let gq = descend(&unit, rq, unit.totals, go, |q| gbuf_fits(arch, &unit, part, q));
+    let s = LayerScheme {
+        part: *part,
+        unit,
+        regf: LevelBlock { qty: rq, order: ro },
+        gbuf: LevelBlock { qty: gq, order: go },
+    };
+    if s.validate(arch).is_err() {
+        return f64::INFINITY;
+    }
+    let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
+    match ctx.objective {
+        Objective::Energy => ev.energy.total(),
+        Objective::Latency => ev.latency_cycles,
+    }
+}
+
+/// Full KAPLA network scheduling: fast inter-layer DP, then intra-layer
+/// solving of the top-k_S chains, final pick on the detailed model.
+pub fn kapla_schedule(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+) -> (SolveResult, PruneStats) {
+    let timer = crate::util::Timer::start();
+    let (chains, stats) = best_chains(arch, net, batch, cfg);
+    let intra = KaplaIntra;
+    let mut cache: super::IntraCache = std::collections::HashMap::new();
+
+    let mut best: Option<(f64, Schedule)> = None;
+    for chain in &chains {
+        let mut segments = Vec::with_capacity(chain.segments.len());
+        let mut ok = true;
+        for seg in &chain.segments {
+            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache) {
+                Some(schemes) => segments.push((seg.clone(), schemes)),
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let sched = Schedule { segments };
+        let ev = evaluate_schedule(arch, net, &sched);
+        let cost = match obj {
+            Objective::Energy => ev.energy.total(),
+            Objective::Latency => ev.latency_cycles,
+        };
+        if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+            best = Some((cost, sched));
+        }
+    }
+
+    // Fallback: all-singleton chain (always realizable).
+    let schedule = match best {
+        Some((_, s)) => s,
+        None => {
+            let mut segments = Vec::new();
+            for i in 0..net.len() {
+                let seg = crate::interlayer::Segment::single(i, arch);
+                let schemes =
+                    super::solve_segment_layers(arch, net, batch, &seg, &intra, obj, &mut cache)
+                        .expect("even singleton segment unschedulable");
+                segments.push((seg, schemes));
+            }
+            Schedule { segments }
+        }
+    };
+    let eval = evaluate_schedule(arch, net, &schedule);
+    (SolveResult { schedule, eval, solve_s: timer.elapsed_s() }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workloads::nets;
+
+    fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
+        IntraCtx { region, rb, ifm_on_chip: false, objective: Objective::Energy }
+    }
+
+    #[test]
+    fn intra_solves_every_alexnet_layer() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        for l in &net.layers {
+            let s = solve_intra(&arch, l, &ctx((16, 16), 64)).unwrap_or_else(|| panic!("{}", l.name));
+            s.validate(&arch).unwrap();
+        }
+    }
+
+    #[test]
+    fn intra_beats_minimal_scheme() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let l = &net.layers[2]; // conv2, heavy
+        let c = ctx((8, 8), 16);
+        let kapla = solve_intra(&arch, l, &c).unwrap();
+        let min = super::super::space::minimal_scheme(&arch, l, c.region, c.rb).unwrap();
+        let ek = evaluate_layer(&arch, &kapla, false).energy.total();
+        let em = evaluate_layer(&arch, &min, false).energy.total();
+        assert!(ek < em, "kapla {ek} !< minimal {em}");
+    }
+
+    #[test]
+    fn descend_respects_capacity_by_construction() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::vggnet();
+        for l in net.layers.iter().take(6) {
+            if let Some(s) = solve_intra(&arch, l, &ctx((4, 4), 8)) {
+                assert!(s.regf_words_per_pe() <= arch.regf_words());
+                assert!(s.gbuf_words_per_node() <= arch.gbuf_words());
+            }
+        }
+    }
+
+    #[test]
+    fn grow_walks_divisor_chain() {
+        let tot = Qty::new(12, 1, 1);
+        let mut q = Qty::UNIT;
+        let mut sizes = vec![1u64];
+        while let Some(n) = grow(q, Grp::B, tot, Qty::UNIT) {
+            q = n;
+            sizes.push(q.b);
+        }
+        assert_eq!(sizes, vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn edge_systolic_solvable() {
+        let arch = presets::edge_tpu();
+        let net = nets::mobilenet();
+        for l in &net.layers {
+            let s = solve_intra(&arch, l, &ctx((1, 1), 1)).unwrap_or_else(|| panic!("{}", l.name));
+            s.validate(&arch).unwrap();
+        }
+    }
+
+    #[test]
+    fn full_schedule_mlp() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let (r, stats) =
+            kapla_schedule(&arch, &net, 16, Objective::Energy, &DpConfig::default());
+        assert_eq!(r.schedule.num_layers(), net.len());
+        assert!(r.eval.energy.total() > 0.0);
+        assert!(stats.total > 0);
+    }
+
+    #[test]
+    fn latency_objective_not_slower() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let (re, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &DpConfig::default());
+        let (rl, _) = kapla_schedule(&arch, &net, 16, Objective::Latency, &DpConfig::default());
+        assert!(rl.eval.latency_cycles <= re.eval.latency_cycles * 1.25);
+    }
+}

@@ -1,0 +1,407 @@
+//! ML-based baseline M (paper §V): AutoTVM-style [6] simulated annealing
+//! guided by an online-trained cost surrogate, applied to intra-layer
+//! scheduling while inter-layer options are explored exhaustively (through
+//! the shared exact DP).
+//!
+//! The paper's baseline trains an XGBoost ranker; following Mind Mappings
+//! [20] (the same baseline family) we substitute an MLP surrogate. The
+//! surrogate is a 16-64-1 ReLU MLP over structural "knob" features
+//! (`cost::scheme_features`); its forward and SGD-step computations exist
+//! twice: a native Rust implementation (reference, always available) and
+//! the AOT-compiled JAX/Pallas artifacts executed through PJRT
+//! (`runtime::Surrogate`) — bit-compatible by construction and
+//! cross-checked in tests.
+
+use crate::arch::ArchConfig;
+use crate::cost::{scheme_features, SCHEME_FEATURES};
+use crate::directives::{LevelBlock, LayerScheme, LoopOrder};
+use crate::interlayer::dp::DpConfig;
+use crate::mapping::UnitMap;
+use crate::partition::enumerate_partitions;
+use crate::sim::evaluate_layer;
+use crate::util::SplitMix64;
+use crate::workloads::{Layer, Network};
+use std::cell::RefCell;
+
+use super::space::qty_candidates;
+use super::{exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+
+/// A trainable cost predictor over scheme features.
+pub trait CostPredictor {
+    /// Predict (log-)costs for a batch of feature vectors.
+    fn predict(&mut self, feats: &[[f64; SCHEME_FEATURES]]) -> Vec<f64>;
+    /// One SGD step on (features, log-cost) pairs; returns the batch loss.
+    fn train_step(&mut self, feats: &[[f64; SCHEME_FEATURES]], targets: &[f64]) -> f64;
+}
+
+/// MLP hyperparameters shared by the native and PJRT implementations and
+/// by `python/compile/model.py` (keep in sync!).
+pub const HIDDEN: usize = 64;
+pub const LEARNING_RATE: f64 = 1e-2;
+
+/// Native-Rust reference implementation of the surrogate MLP
+/// (16 -> 64 ReLU -> 1), trained with plain SGD on squared error.
+pub struct NativeMlp {
+    pub w1: Vec<f64>, // HIDDEN x F
+    pub b1: Vec<f64>, // HIDDEN
+    pub w2: Vec<f64>, // HIDDEN
+    pub b2: f64,
+    pub lr: f64,
+}
+
+impl NativeMlp {
+    /// Deterministic init shared with the PJRT-side parameter buffers.
+    pub fn new(seed: u64) -> NativeMlp {
+        let mut rng = SplitMix64::new(seed);
+        let f = SCHEME_FEATURES;
+        let scale1 = (2.0 / f as f64).sqrt();
+        let scale2 = (2.0 / HIDDEN as f64).sqrt();
+        NativeMlp {
+            w1: (0..HIDDEN * f).map(|_| rng.normal() * scale1).collect(),
+            b1: vec![0.0; HIDDEN],
+            w2: (0..HIDDEN).map(|_| rng.normal() * scale2).collect(),
+            b2: 0.0,
+            lr: LEARNING_RATE,
+        }
+    }
+
+    fn forward_one(&self, x: &[f64; SCHEME_FEATURES]) -> (Vec<f64>, f64) {
+        let f = SCHEME_FEATURES;
+        let mut h = vec![0.0; HIDDEN];
+        for j in 0..HIDDEN {
+            let mut acc = self.b1[j];
+            for (i, &xi) in x.iter().enumerate() {
+                acc += self.w1[j * f + i] * xi;
+            }
+            h[j] = acc.max(0.0);
+        }
+        let y = h.iter().zip(&self.w2).map(|(a, b)| a * b).sum::<f64>() + self.b2;
+        (h, y)
+    }
+}
+
+impl CostPredictor for NativeMlp {
+    fn predict(&mut self, feats: &[[f64; SCHEME_FEATURES]]) -> Vec<f64> {
+        feats.iter().map(|x| self.forward_one(x).1).collect()
+    }
+
+    fn train_step(&mut self, feats: &[[f64; SCHEME_FEATURES]], targets: &[f64]) -> f64 {
+        assert_eq!(feats.len(), targets.len());
+        let n = feats.len().max(1) as f64;
+        let f = SCHEME_FEATURES;
+        let mut gw1 = vec![0.0; HIDDEN * f];
+        let mut gb1 = vec![0.0; HIDDEN];
+        let mut gw2 = vec![0.0; HIDDEN];
+        let mut gb2 = 0.0;
+        let mut loss = 0.0;
+        for (x, &t) in feats.iter().zip(targets) {
+            let (h, y) = self.forward_one(x);
+            let e = y - t;
+            loss += e * e;
+            let g = 2.0 * e / n;
+            gb2 += g;
+            for j in 0..HIDDEN {
+                gw2[j] += g * h[j];
+                if h[j] > 0.0 {
+                    let gh = g * self.w2[j];
+                    gb1[j] += gh;
+                    for (i, &xi) in x.iter().enumerate() {
+                        gw1[j * f + i] += gh * xi;
+                    }
+                }
+            }
+        }
+        for (w, g) in self.w1.iter_mut().zip(&gw1) {
+            *w -= self.lr * g;
+        }
+        for (w, g) in self.b1.iter_mut().zip(&gb1) {
+            *w -= self.lr * g;
+        }
+        for (w, g) in self.w2.iter_mut().zip(&gw2) {
+            *w -= self.lr * g;
+        }
+        self.b2 -= self.lr * gb2;
+        loss / n
+    }
+}
+
+/// Simulated-annealing + surrogate intra-layer solver.
+pub struct MlIntra<P: CostPredictor> {
+    pub rounds: usize,
+    pub batch: usize,
+    pub evals_per_round: usize,
+    state: RefCell<MlState<P>>,
+}
+
+struct MlState<P> {
+    rng: SplitMix64,
+    predictor: P,
+}
+
+unsafe impl<P: CostPredictor> Sync for MlIntra<P> {}
+
+impl MlIntra<NativeMlp> {
+    /// Default configuration with the native surrogate.
+    pub fn native(seed: u64, rounds: usize, batch: usize) -> MlIntra<NativeMlp> {
+        MlIntra::with_predictor(NativeMlp::new(seed ^ 0x5eed), seed, rounds, batch)
+    }
+}
+
+impl<P: CostPredictor> MlIntra<P> {
+    pub fn with_predictor(predictor: P, seed: u64, rounds: usize, batch: usize) -> MlIntra<P> {
+        MlIntra {
+            rounds,
+            batch,
+            evals_per_round: (batch / 4).max(4),
+            state: RefCell::new(MlState { rng: SplitMix64::new(seed), predictor }),
+        }
+    }
+}
+
+/// The mutable candidate space of one layer context.
+struct Space {
+    parts: Vec<crate::partition::PartitionScheme>,
+}
+
+impl Space {
+    fn random_scheme(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        ctx: &IntraCtx,
+        rng: &mut SplitMix64,
+    ) -> Option<LayerScheme> {
+        for _ in 0..32 {
+            let part = *rng.choose(&self.parts);
+            let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+            let gqs = qty_candidates(unit.totals, unit.granule);
+            let gq = *rng.choose(&gqs);
+            let rqs = qty_candidates(gq, unit.granule);
+            let rq = *rng.choose(&rqs);
+            let s = LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock { qty: rq, order: *rng.choose(&LoopOrder::all()) },
+                gbuf: LevelBlock { qty: gq, order: *rng.choose(&LoopOrder::all()) },
+            };
+            if s.validate(arch).is_ok() {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// Mutate one knob of a scheme.
+    fn mutate(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        ctx: &IntraCtx,
+        s: &LayerScheme,
+        rng: &mut SplitMix64,
+    ) -> Option<LayerScheme> {
+        for _ in 0..16 {
+            let mut out = *s;
+            match rng.below(4) {
+                0 => {
+                    let part = *rng.choose(&self.parts);
+                    out.part = part;
+                    out.unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+                    out.gbuf.qty = out.unit.align_block(out.gbuf.qty);
+                    out.regf.qty = out.unit.align_block(out.regf.qty.min(out.gbuf.qty));
+                }
+                1 => {
+                    let gqs = qty_candidates(out.unit.totals, out.unit.granule);
+                    out.gbuf.qty = *rng.choose(&gqs);
+                    out.regf.qty = out.regf.qty.min(out.gbuf.qty);
+                }
+                2 => {
+                    let rqs = qty_candidates(out.gbuf.qty, out.unit.granule);
+                    out.regf.qty = *rng.choose(&rqs);
+                }
+                _ => {
+                    if rng.chance(0.5) {
+                        out.gbuf.order = *rng.choose(&LoopOrder::all());
+                    } else {
+                        out.regf.order = *rng.choose(&LoopOrder::all());
+                    }
+                }
+            }
+            if out.validate(arch).is_ok() {
+                return Some(out);
+            }
+        }
+        None
+    }
+}
+
+impl<P: CostPredictor> IntraSolver for MlIntra<P> {
+    fn name(&self) -> &'static str {
+        "ml-annealing(M)"
+    }
+
+    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
+        let st = &mut *self.state.borrow_mut();
+        let space = Space { parts: enumerate_partitions(layer, ctx.rb, ctx.region, false) };
+        if space.parts.is_empty() {
+            return super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb);
+        }
+
+        let real_cost = |s: &LayerScheme| -> f64 {
+            let ev = evaluate_layer(arch, s, ctx.ifm_on_chip);
+            match ctx.objective {
+                Objective::Energy => ev.energy.total(),
+                Objective::Latency => ev.latency_cycles,
+            }
+        };
+
+        // Seed population.
+        let mut pop: Vec<LayerScheme> = (0..self.evals_per_round)
+            .filter_map(|_| space.random_scheme(arch, layer, ctx, &mut st.rng))
+            .collect();
+        if pop.is_empty() {
+            return super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb);
+        }
+        let mut best: Option<(f64, LayerScheme)> = None;
+        let mut dataset: Vec<([f64; SCHEME_FEATURES], f64)> = Vec::new();
+        for s in &pop {
+            let c = real_cost(s);
+            dataset.push((scheme_features(s), c.max(1.0).ln()));
+            if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                best = Some((c, *s));
+            }
+        }
+
+        let mut temp: f64 = 1.0;
+        for _round in 0..self.rounds {
+            // Propose a batch of mutations.
+            let mut proposals: Vec<LayerScheme> = Vec::with_capacity(self.batch);
+            while proposals.len() < self.batch {
+                let parent = pop[st.rng.below(pop.len() as u64) as usize];
+                match space.mutate(arch, layer, ctx, &parent, &mut st.rng) {
+                    Some(m) => proposals.push(m),
+                    None => break,
+                }
+            }
+            if proposals.is_empty() {
+                break;
+            }
+            // Rank by surrogate prediction; evaluate the top few for real.
+            let feats: Vec<[f64; SCHEME_FEATURES]> =
+                proposals.iter().map(scheme_features).collect();
+            let preds = st.predictor.predict(&feats);
+            let mut idx: Vec<usize> = (0..proposals.len()).collect();
+            idx.sort_by(|&a, &b| preds[a].partial_cmp(&preds[b]).unwrap());
+
+            let mut next_pop = Vec::with_capacity(self.evals_per_round);
+            for &i in idx.iter().take(self.evals_per_round) {
+                let c = real_cost(&proposals[i]);
+                dataset.push((feats[i], c.max(1.0).ln()));
+                let (bc, _) = best.as_ref().copied().unwrap();
+                let accept = c < bc || st.rng.chance((-(c / bc).ln().max(0.0) / temp).exp());
+                if c < bc {
+                    best = Some((c, proposals[i]));
+                }
+                if accept {
+                    next_pop.push(proposals[i]);
+                }
+            }
+            if !next_pop.is_empty() {
+                pop = next_pop;
+            }
+            temp *= 0.85;
+
+            // Online-train the surrogate on everything seen so far (one
+            // epoch over a bounded replay window).
+            let window = dataset.len().min(512);
+            let start = dataset.len() - window;
+            let fs: Vec<[f64; SCHEME_FEATURES]> =
+                dataset[start..].iter().map(|(f, _)| *f).collect();
+            let ts: Vec<f64> = dataset[start..].iter().map(|(_, t)| *t).collect();
+            st.predictor.train_step(&fs, &ts);
+        }
+
+        best.map(|(_, s)| s).or_else(|| super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb))
+    }
+}
+
+/// Schedule a network with the ML baseline (native surrogate).
+pub fn ml_schedule(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    seed: u64,
+    rounds: usize,
+    sa_batch: usize,
+) -> SolveResult {
+    let intra = MlIntra::native(seed, rounds, sa_batch);
+    exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::solvers::exhaustive::ExhaustiveIntra;
+
+    fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
+        IntraCtx { region, rb, ifm_on_chip: false, objective: Objective::Energy }
+    }
+
+    #[test]
+    fn native_mlp_learns_linear_target() {
+        let mut mlp = NativeMlp::new(3);
+        let mut rng = SplitMix64::new(4);
+        let gen = |rng: &mut SplitMix64| {
+            let mut x = [0.0; SCHEME_FEATURES];
+            for v in x.iter_mut() {
+                *v = rng.f64();
+            }
+            let t = 2.0 * x[0] + 0.5 * x[3] + 1.0;
+            (x, t)
+        };
+        let data: Vec<_> = (0..256).map(|_| gen(&mut rng)).collect();
+        let fs: Vec<_> = data.iter().map(|(f, _)| *f).collect();
+        let ts: Vec<_> = data.iter().map(|(_, t)| *t).collect();
+        let first = mlp.train_step(&fs, &ts);
+        let mut last = first;
+        for _ in 0..400 {
+            last = mlp.train_step(&fs, &ts);
+        }
+        assert!(last < first * 0.1, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn ml_solver_finds_valid_scheme() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let intra = MlIntra::native(11, 8, 32);
+        let s = intra.solve(&arch, &l, &ctx((2, 2), 4)).unwrap();
+        s.validate(&arch).unwrap();
+    }
+
+    #[test]
+    fn ml_between_random_worstcase_and_exhaustive() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
+        let c = ctx((4, 4), 8);
+        let ex = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c).unwrap();
+        let ee = evaluate_layer(&arch, &ex, false).energy.total();
+        let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c).unwrap();
+        let em = evaluate_layer(&arch, &m, false).energy.total();
+        assert!(em + 1e-9 >= ee);
+        assert!(em <= ee * 2.5, "ML {em} vs optimal {ee}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let c = ctx((2, 2), 4);
+        let a = MlIntra::native(9, 6, 16).solve(&arch, &l, &c).unwrap();
+        let b = MlIntra::native(9, 6, 16).solve(&arch, &l, &c).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Random-search baseline R (paper §V): "evaluates candidates at each
+//! level with a given probability" (Timeloop-style [39]). Each design-space
+//! level — node partition, GBUF block, GBUF order, REGF block, REGF order —
+//! is independently subsampled with probability `p`; the surviving cross
+//! product is evaluated exactly. If the sample contains no valid scheme the
+//! layer retries with a fresh sample (the paper found p < 0.1 fails to
+//! produce valid schemes; the edge config even needs p = 0.85).
+
+use crate::arch::ArchConfig;
+use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
+use crate::interlayer::dp::DpConfig;
+use crate::mapping::UnitMap;
+use crate::partition::enumerate_partitions;
+use crate::sim::evaluate_layer;
+use crate::util::SplitMix64;
+use crate::workloads::{Layer, Network};
+use std::cell::RefCell;
+
+use super::space::qty_candidates;
+use super::{exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+
+/// Random-sampling intra-layer solver.
+pub struct RandomIntra {
+    /// Per-level keep probability.
+    pub p: f64,
+    /// Retry budget when a sample has no valid scheme.
+    pub retries: usize,
+    rng: RefCell<SplitMix64>,
+}
+
+impl RandomIntra {
+    pub fn new(p: f64, seed: u64) -> RandomIntra {
+        RandomIntra { p, retries: 8, rng: RefCell::new(SplitMix64::new(seed)) }
+    }
+}
+
+// The solver trait requires Sync; the RNG cell is only touched from the
+// owning thread (each solver instance is used by one scheduling run).
+unsafe impl Sync for RandomIntra {}
+
+fn sample<'a, T>(rng: &mut SplitMix64, xs: &'a [T], p: f64) -> Vec<&'a T> {
+    let kept: Vec<&T> = xs.iter().filter(|_| rng.chance(p)).collect();
+    if kept.is_empty() && !xs.is_empty() {
+        // Always keep at least one candidate so a retry can make progress.
+        vec![&xs[rng.below(xs.len() as u64) as usize]]
+    } else {
+        kept
+    }
+}
+
+impl IntraSolver for RandomIntra {
+    fn name(&self) -> &'static str {
+        "random(R)"
+    }
+
+    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
+        let rng = &mut *self.rng.borrow_mut();
+        let parts = enumerate_partitions(layer, ctx.rb, ctx.region, false);
+        let orders = LoopOrder::all();
+
+        for _ in 0..self.retries.max(1) {
+            let mut best: Option<(f64, LayerScheme)> = None;
+            for &part in sample(rng, &parts, self.p) {
+                let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+                let gqs: Vec<Qty> = qty_candidates(unit.totals, unit.granule);
+                for &gq in sample(rng, &gqs, self.p) {
+                    let rqs: Vec<Qty> = qty_candidates(gq, unit.granule);
+                    for &rq in sample(rng, &rqs, self.p) {
+                        for &go in sample(rng, &orders, self.p) {
+                            for &ro in sample(rng, &orders, self.p) {
+                                let s = LayerScheme {
+                                    part,
+                                    unit,
+                                    regf: LevelBlock { qty: rq, order: ro },
+                                    gbuf: LevelBlock { qty: gq, order: go },
+                                };
+                                if s.validate(arch).is_err() {
+                                    continue;
+                                }
+                                let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
+                                let cost = match ctx.objective {
+                                    Objective::Energy => ev.energy.total(),
+                                    Objective::Latency => ev.latency_cycles,
+                                };
+                                if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+                                    best = Some((cost, s));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if best.is_some() {
+                return best.map(|(_, s)| s);
+            }
+        }
+        // Final fallback: deterministic minimal scheme.
+        super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
+    }
+}
+
+/// Schedule a network with random search at probability `p`.
+pub fn random_schedule(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    p: f64,
+    seed: u64,
+) -> SolveResult {
+    let intra = RandomIntra::new(p, seed);
+    exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::solvers::exhaustive::ExhaustiveIntra;
+    use crate::workloads::nets;
+
+    fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
+        IntraCtx { region, rb, ifm_on_chip: false, objective: Objective::Energy }
+    }
+
+    #[test]
+    fn random_always_returns_valid() {
+        let arch = presets::bench_multi_node();
+        let net = nets::alexnet();
+        let solver = RandomIntra::new(0.1, 42);
+        for l in net.layers.iter().take(6) {
+            let s = solver.solve(&arch, l, &ctx((2, 2), 4)).unwrap();
+            s.validate(&arch).unwrap();
+        }
+    }
+
+    #[test]
+    fn random_no_better_than_exhaustive() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let c = ctx((2, 2), 4);
+        let ex = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c).unwrap();
+        let ee = evaluate_layer(&arch, &ex, false).energy.total();
+        for seed in [1u64, 2, 3] {
+            let r = RandomIntra::new(0.1, seed).solve(&arch, &l, &c).unwrap();
+            let er = evaluate_layer(&arch, &r, false).energy.total();
+            assert!(er + 1e-9 >= ee, "seed {seed}: random {er} beat exhaustive {ee}");
+        }
+    }
+
+    #[test]
+    fn higher_p_no_worse_on_average() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
+        let c = ctx((4, 4), 8);
+        let avg = |p: f64| {
+            let mut tot = 0.0;
+            for seed in 0..5u64 {
+                let s = RandomIntra::new(p, seed).solve(&arch, &l, &c).unwrap();
+                tot += evaluate_layer(&arch, &s, false).energy.total();
+            }
+            tot / 5.0
+        };
+        let lo = avg(0.05);
+        let hi = avg(0.5);
+        assert!(hi <= lo * 1.05, "p=0.5 avg {hi} much worse than p=0.05 avg {lo}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let c = ctx((2, 2), 4);
+        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c).unwrap();
+        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Intra-layer design-space enumeration shared by the exhaustive, random
+//! and ML solvers (paper §III-A "loop blocking and reordering" plus node
+//! partitioning; KAPLA itself avoids this enumeration via bottom-up cost
+//! descent).
+
+use crate::arch::ArchConfig;
+use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
+use crate::mapping::UnitMap;
+use crate::partition::{enumerate_partitions, PartitionScheme};
+use crate::util::divisors;
+use crate::workloads::Layer;
+
+/// Candidate resident-block quantities for one group: granule multiples
+/// whose unit counts divide the total unit count (the divisor-chain
+/// blocking space of [39], [58]).
+pub fn block_candidates(total: u64, granule: u64) -> Vec<u64> {
+    let units = crate::util::ceil_div(total, granule);
+    divisors(units).into_iter().map(|d| (d * granule).min(total)).collect()
+}
+
+/// All block quantities (triples) for a level, given per-group totals and
+/// granules.
+pub fn qty_candidates(totals: Qty, granule: Qty) -> Vec<Qty> {
+    let bs = block_candidates(totals.b, granule.b);
+    let cs = block_candidates(totals.c, granule.c);
+    let ks = block_candidates(totals.k, granule.k);
+    let mut out = Vec::with_capacity(bs.len() * cs.len() * ks.len());
+    for &b in &bs {
+        for &c in &cs {
+            for &k in &ks {
+                out.push(Qty::new(b, c, k));
+            }
+        }
+    }
+    out
+}
+
+/// Visit every valid intra-layer scheme of `layer` on `region` at batch
+/// `rb`. The caller's visitor returns `true` to continue enumeration.
+/// `with_sharing` widens the partition space with buffer-sharing variants
+/// (the extra expressiveness of the directive space, solver "S").
+pub fn visit_schemes(
+    arch: &ArchConfig,
+    layer: &Layer,
+    region: (u64, u64),
+    rb: u64,
+    with_sharing: bool,
+    mut visit: impl FnMut(&LayerScheme) -> bool,
+) {
+    let parts = enumerate_partitions(layer, rb, region, with_sharing);
+    for part in parts {
+        let unit = UnitMap::build(arch, part.node_shape(layer, rb));
+        'gbuf: for gq in qty_candidates(unit.totals, unit.granule) {
+            // Capacity pre-check before spawning the inner loops.
+            let probe = LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock { qty: unit.granule, order: LoopOrder::all()[0] },
+                gbuf: LevelBlock { qty: gq, order: LoopOrder::all()[0] },
+            };
+            if probe.gbuf_words_per_node() > arch.gbuf_words() {
+                continue 'gbuf;
+            }
+            for rq in qty_candidates(gq, unit.granule) {
+                let probe2 = LayerScheme {
+                    regf: LevelBlock { qty: rq, order: LoopOrder::all()[0] },
+                    ..probe
+                };
+                if probe2.regf_words_per_pe() > arch.regf_words() {
+                    continue;
+                }
+                for go in LoopOrder::all() {
+                    for ro in LoopOrder::all() {
+                        let s = LayerScheme {
+                            part,
+                            unit,
+                            regf: LevelBlock { qty: rq, order: ro },
+                            gbuf: LevelBlock { qty: gq, order: go },
+                        };
+                        if s.validate(arch).is_ok() && !visit(&s) {
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Count the schemes `visit_schemes` would enumerate (used by the search
+/// speed analysis and Table VI style reporting).
+pub fn count_schemes(
+    arch: &ArchConfig,
+    layer: &Layer,
+    region: (u64, u64),
+    rb: u64,
+    with_sharing: bool,
+) -> u64 {
+    let mut n = 0u64;
+    visit_schemes(arch, layer, region, rb, with_sharing, |_| {
+        n += 1;
+        true
+    });
+    n
+}
+
+/// A fallback scheme that is always valid if one exists at all: the
+/// smallest blocks everywhere, on the best-effort partition. Returns `None`
+/// when even the unit tensors overflow the buffers.
+pub fn minimal_scheme(
+    arch: &ArchConfig,
+    layer: &Layer,
+    region: (u64, u64),
+    rb: u64,
+) -> Option<LayerScheme> {
+    let mut best: Option<LayerScheme> = None;
+    for part in enumerate_partitions(layer, rb, region, true) {
+        let unit = UnitMap::build(arch, part.node_shape(layer, rb));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: unit.granule, order: LoopOrder::all()[0] },
+            gbuf: LevelBlock { qty: unit.granule, order: LoopOrder::all()[0] },
+        };
+        if s.validate(arch).is_ok() {
+            best = Some(s);
+            break;
+        }
+    }
+    best.or_else(|| {
+        // Fall back to a single-node mapping (region underuse).
+        let part = PartitionScheme { region, ..PartitionScheme::single() };
+        let unit = UnitMap::build(arch, part.node_shape(layer, rb));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: unit.granule, order: LoopOrder::all()[0] },
+            gbuf: LevelBlock { qty: unit.granule, order: LoopOrder::all()[0] },
+        };
+        s.validate(arch).ok().map(|_| s)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn block_candidates_cover_range() {
+        let c = block_candidates(12, 1);
+        assert_eq!(c, vec![1, 2, 3, 4, 6, 12]);
+        let c = block_candidates(32, 8);
+        assert_eq!(c, vec![8, 16, 32]);
+        // non-dividing granule clamps to total
+        let c = block_candidates(10, 4);
+        assert!(c.contains(&10));
+        assert!(c.iter().all(|&x| x <= 10));
+    }
+
+    #[test]
+    fn qty_candidates_cartesian() {
+        let q = qty_candidates(Qty::new(2, 4, 1), Qty::UNIT);
+        assert_eq!(q.len(), 2 * 3 * 1);
+    }
+
+    #[test]
+    fn visit_yields_only_valid() {
+        let arch = presets::bench_multi_node();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let mut n = 0;
+        visit_schemes(&arch, &l, (2, 2), 4, false, |s| {
+            s.validate(&arch).unwrap();
+            n += 1;
+            true
+        });
+        assert!(n > 100, "space too small: {n}");
+    }
+
+    #[test]
+    fn sharing_widens_space() {
+        let arch = presets::bench_multi_node();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let plain = count_schemes(&arch, &l, (2, 2), 4, false);
+        let wide = count_schemes(&arch, &l, (2, 2), 4, true);
+        assert!(wide > plain, "{wide} !> {plain}");
+    }
+
+    #[test]
+    fn early_stop_respected() {
+        let arch = presets::bench_multi_node();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let mut n = 0;
+        visit_schemes(&arch, &l, (2, 2), 4, false, |_| {
+            n += 1;
+            n < 10
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn minimal_scheme_exists_for_all_nets() {
+        let arch = presets::multi_node_eyeriss();
+        for net in crate::workloads::all_networks() {
+            for l in &net.layers {
+                assert!(
+                    minimal_scheme(&arch, l, (4, 4), 4).is_some(),
+                    "{}: {}",
+                    net.name,
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn minimal_scheme_on_edge_device() {
+        let arch = presets::edge_tpu();
+        for net in crate::workloads::all_networks() {
+            for l in &net.layers {
+                assert!(
+                    minimal_scheme(&arch, l, (1, 1), 1).is_some(),
+                    "{}: {}",
+                    net.name,
+                    l.name
+                );
+            }
+        }
+    }
+}

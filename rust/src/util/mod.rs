@@ -1,0 +1,156 @@
+//! Small self-contained utilities: deterministic PRNG, integer factorization
+//! helpers used by the blocking-factor enumerators, lightweight statistics,
+//! and a JSON writer for report emission.
+//!
+//! The vendored crate set does not include `rand`, `serde` or `proptest`, so
+//! the pieces we need are implemented here (deterministic and tested).
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use prng::SplitMix64;
+
+/// All divisors of `n`, ascending. `n >= 1`.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n >= 1, "divisors of zero requested");
+    let mut lo = Vec::new();
+    let mut hi = Vec::new();
+    let mut d = 1u64;
+    while d * d <= n {
+        if n % d == 0 {
+            lo.push(d);
+            if d != n / d {
+                hi.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    hi.reverse();
+    lo.extend(hi);
+    lo
+}
+
+/// All ordered pairs `(a, b)` with `a * b == n`.
+pub fn factor_pairs(n: u64) -> Vec<(u64, u64)> {
+    divisors(n).into_iter().map(|a| (a, n / a)).collect()
+}
+
+/// All ordered triples `(a, b, c)` with `a * b * c == n`.
+pub fn factor_triples(n: u64) -> Vec<(u64, u64, u64)> {
+    let mut out = Vec::new();
+    for a in divisors(n) {
+        let m = n / a;
+        for b in divisors(m) {
+            out.push((a, b, m / b));
+        }
+    }
+    out
+}
+
+/// Ceiling division for u64.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// The smallest divisor of `total` that is strictly greater than `cur`,
+/// or `None` if `cur >= total`. Used by the caching pass to enlarge a
+/// dimension to its "next smallest blocked size" (paper §IV-C).
+pub fn next_divisor(total: u64, cur: u64) -> Option<u64> {
+    if cur >= total {
+        return None;
+    }
+    divisors(total).into_iter().find(|&d| d > cur)
+}
+
+/// Round `x` up to a multiple of `m`.
+#[inline]
+pub fn round_up(x: u64, m: u64) -> u64 {
+    ceil_div(x, m) * m
+}
+
+/// Wall-clock timer with millisecond reporting, used by the scheduling-time
+/// benches (Table IV).
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: std::time::Instant::now() }
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(13), vec![1, 13]);
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+    }
+
+    #[test]
+    fn divisors_are_sorted_and_divide() {
+        for n in 1..500u64 {
+            let ds = divisors(n);
+            assert!(ds.windows(2).all(|w| w[0] < w[1]), "sorted for {n}");
+            assert!(ds.iter().all(|d| n % d == 0), "divide for {n}");
+            assert_eq!(*ds.first().unwrap(), 1);
+            assert_eq!(*ds.last().unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn factor_pairs_product() {
+        for n in 1..200u64 {
+            for (a, b) in factor_pairs(n) {
+                assert_eq!(a * b, n);
+            }
+        }
+    }
+
+    #[test]
+    fn factor_triples_product_and_count() {
+        for n in [1u64, 2, 6, 12, 64, 96] {
+            let ts = factor_triples(n);
+            assert!(ts.iter().all(|&(a, b, c)| a * b * c == n));
+            if n == 12 {
+                // d_3(12) = 18
+                assert_eq!(ts.len(), 18);
+            }
+        }
+    }
+
+    #[test]
+    fn next_divisor_walks_the_chain() {
+        // chain over 12: 1 -> 2 -> 3 -> 4 -> 6 -> 12 -> None
+        let mut cur = 1;
+        let mut chain = vec![1u64];
+        while let Some(nxt) = next_divisor(12, cur) {
+            chain.push(nxt);
+            cur = nxt;
+        }
+        assert_eq!(chain, vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(next_divisor(12, 12), None);
+    }
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+    }
+}

@@ -1,0 +1,267 @@
+//! Layer DAG (paper §II-A: an NN is a DAG of layers; training extends the
+//! DAG with error-propagation and weight-update layers).
+//!
+//! Each layer's output is a named fmap tensor. A layer's input is the
+//! concatenation (along C) of its predecessors' outputs — this models
+//! GoogLeNet inception concat without a dedicated concat op. Eltwise layers
+//! instead require all predecessors to produce identically-shaped tensors.
+
+use super::layer::{Layer, LayerKind};
+
+/// Reference to a producer of a layer's input fmap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrevRef {
+    /// The network's external input image/features.
+    Input,
+    /// Output of layer `i` in `Network::layers`.
+    Layer(usize),
+}
+
+/// A whole network: layers in topological order plus predecessor edges.
+#[derive(Debug)]
+pub struct Network {
+    pub name: String,
+    /// External input: (channels, width, height).
+    pub input: (u64, u64, u64),
+    pub layers: Vec<Layer>,
+    /// `prevs[i]` lists the producers of layer i's input fmap(s).
+    pub prevs: Vec<Vec<PrevRef>>,
+    /// Lazily-built successor lists (perf: the schedulers query
+    /// `ofm_on_chip` in their inner loops; rebuilding adjacency per query
+    /// dominated the inter-layer DP before this cache — see
+    /// EXPERIMENTS.md §Perf).
+    nexts_cache: std::sync::OnceLock<Vec<Vec<usize>>>,
+}
+
+impl Clone for Network {
+    fn clone(&self) -> Network {
+        Network {
+            name: self.name.clone(),
+            input: self.input,
+            layers: self.layers.clone(),
+            prevs: self.prevs.clone(),
+            nexts_cache: std::sync::OnceLock::new(),
+        }
+    }
+}
+
+impl Network {
+    pub fn new(name: &str, in_c: u64, in_x: u64, in_y: u64) -> Network {
+        Network {
+            name: name.into(),
+            input: (in_c, in_x, in_y),
+            layers: Vec::new(),
+            prevs: Vec::new(),
+            nexts_cache: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Append a layer whose input comes from the given producers. Returns
+    /// the layer index. Panics on structural inconsistency (wrong channel
+    /// sum) — networks are static, so this is a programming error.
+    pub fn add(&mut self, layer: Layer, prevs: &[PrevRef]) -> usize {
+        layer.validate().unwrap_or_else(|e| panic!("{e}"));
+        assert!(!prevs.is_empty(), "layer {} has no inputs", layer.name);
+        for p in prevs {
+            if let PrevRef::Layer(i) = p {
+                assert!(*i < self.layers.len(), "layer {} references future layer {i}", layer.name);
+            }
+        }
+        if layer.kind == LayerKind::Eltwise {
+            for p in prevs {
+                let (k, xo, yo) = self.out_shape(*p);
+                assert_eq!(
+                    (k, xo, yo),
+                    (layer.c, layer.xo, layer.yo),
+                    "eltwise {} operand shape mismatch",
+                    layer.name
+                );
+            }
+        } else {
+            // FC consumers flatten the producer fmap: channels x Xo x Yo.
+            let flat = layer.kind == LayerKind::Fc;
+            let c_sum: u64 = prevs
+                .iter()
+                .map(|p| {
+                    let (k, xo, yo) = self.out_shape(*p);
+                    if flat {
+                        k * xo * yo
+                    } else {
+                        k
+                    }
+                })
+                .sum();
+            assert_eq!(
+                c_sum, layer.c,
+                "layer {}: input channels {} != sum of producer channels {}",
+                layer.name, layer.c, c_sum
+            );
+        }
+        self.layers.push(layer);
+        self.prevs.push(prevs.to_vec());
+        self.nexts_cache = std::sync::OnceLock::new(); // invalidate
+        self.layers.len() - 1
+    }
+
+    /// Convenience: append a layer consuming the single previous layer
+    /// (or the network input if this is the first layer).
+    pub fn chain(&mut self, layer: Layer) -> usize {
+        let prev =
+            if self.layers.is_empty() { PrevRef::Input } else { PrevRef::Layer(self.layers.len() - 1) };
+        self.add(layer, &[prev])
+    }
+
+    /// Output shape (channels, x, y) of a producer.
+    pub fn out_shape(&self, p: PrevRef) -> (u64, u64, u64) {
+        match p {
+            PrevRef::Input => self.input,
+            PrevRef::Layer(i) => {
+                let l = &self.layers[i];
+                (l.k, l.xo, l.yo)
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Successor lists (derived from `prevs`), cached after first use.
+    /// Mutating builders (`add`/`chain`) invalidate by construction: they
+    /// are only used before scheduling starts.
+    pub fn nexts(&self) -> &[Vec<usize>] {
+        self.nexts_cache.get_or_init(|| {
+            let mut out = vec![Vec::new(); self.layers.len()];
+            for (i, ps) in self.prevs.iter().enumerate() {
+                for p in ps {
+                    if let PrevRef::Layer(j) = p {
+                        out[*j].push(i);
+                    }
+                }
+            }
+            out
+        })
+    }
+
+    /// Drop the cached successor lists (builders call this on mutation).
+    pub(crate) fn invalidate_nexts(&mut self) {
+        self.nexts_cache = std::sync::OnceLock::new();
+    }
+
+    /// Total MACs over all layers at batch `n`.
+    pub fn total_macs(&self, n: u64) -> u64 {
+        self.layers.iter().map(|l| l.macs(n)).sum()
+    }
+
+    /// Total weight elements.
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_elems()).sum()
+    }
+
+    /// Structural validation of the whole DAG (used by tests over every
+    /// network in the zoo).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.len() != self.prevs.len() {
+            return Err("layers/prevs length mismatch".into());
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            l.validate()?;
+            for p in &self.prevs[i] {
+                if let PrevRef::Layer(j) = p {
+                    if *j >= i {
+                        return Err(format!("layer {} has non-topological edge {j}->{i}", l.name));
+                    }
+                }
+            }
+            // Spatial compatibility: every producer fmap must be at least as
+            // large as the consumer's input window (crop/pad tolerated).
+            for p in &self.prevs[i] {
+                let (_, px, py) = self.out_shape(*p);
+                // Allow modest padding: producer may be up to R-1 smaller.
+                if px + l.r <= l.xi() - l.stride || py + l.s <= l.yi() - l.stride {
+                    return Err(format!(
+                        "layer {}: producer fmap {}x{} too small for input {}x{}",
+                        l.name,
+                        px,
+                        py,
+                        l.xi(),
+                        l.yi()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        let mut n = Network::new("tiny", 3, 32, 32);
+        n.chain(Layer::conv("c1", 3, 8, 32, 3, 1));
+        n.chain(Layer::pool("p1", 8, 16, 2, 2));
+        n.chain(Layer::conv("c2", 8, 16, 16, 3, 1));
+        n
+    }
+
+    #[test]
+    fn chain_builds_linear_dag() {
+        let n = tiny();
+        assert_eq!(n.len(), 3);
+        assert_eq!(n.prevs[0], vec![PrevRef::Input]);
+        assert_eq!(n.prevs[2], vec![PrevRef::Layer(1)]);
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn nexts_inverts_prevs() {
+        let n = tiny();
+        let nx = n.nexts();
+        assert_eq!(nx[0], vec![1]);
+        assert_eq!(nx[1], vec![2]);
+        assert!(nx[2].is_empty());
+    }
+
+    #[test]
+    fn concat_channels_sum() {
+        let mut n = Network::new("cat", 3, 16, 16);
+        let a = n.chain(Layer::conv("a", 3, 8, 16, 1, 1));
+        let b = n.add(Layer::conv("b", 3, 24, 16, 1, 1), &[PrevRef::Input]);
+        // consumer of concat(a, b) => c = 32
+        n.add(Layer::conv("c", 32, 16, 16, 3, 1), &[PrevRef::Layer(a), PrevRef::Layer(b)]);
+        n.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "input channels")]
+    fn concat_channel_mismatch_panics() {
+        let mut n = Network::new("cat", 3, 16, 16);
+        let a = n.chain(Layer::conv("a", 3, 8, 16, 1, 1));
+        n.add(Layer::conv("c", 99, 16, 16, 3, 1), &[PrevRef::Layer(a)]);
+    }
+
+    #[test]
+    fn eltwise_requires_matching_shapes() {
+        let mut n = Network::new("res", 8, 16, 16);
+        let a = n.chain(Layer::conv("a", 8, 8, 16, 3, 1));
+        let b = n.add(Layer::conv("b", 8, 8, 16, 1, 1), &[PrevRef::Input]);
+        n.add(Layer::eltwise("add", 8, 16), &[PrevRef::Layer(a), PrevRef::Layer(b)]);
+        n.validate().unwrap();
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let n = tiny();
+        assert_eq!(
+            n.total_macs(2),
+            n.layers[0].macs(2) + n.layers[1].macs(2) + n.layers[2].macs(2)
+        );
+        assert_eq!(n.total_weights(), 8 * 3 * 9 + 16 * 8 * 9);
+    }
+}

@@ -1,0 +1,306 @@
+//! NN layer specifications (paper Table I notation).
+//!
+//! All tensors are 4D: input fmaps (N, C, Xi, Yi), output fmaps
+//! (N, K, Xo, Yo), filter weights (K, C, R, S). FC layers are CONVs with
+//! Xo = Yo = R = S = 1. Backward (training) layers are modeled as CONVs
+//! with transformed dimensions (paper §II-A, [46], [48]) — see
+//! `workloads::training`.
+
+/// Layer operator kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Dense convolution.
+    Conv,
+    /// Depthwise convolution: C == K, one filter per channel (paper
+    /// Listing 1 DWCONV example).
+    DWConv,
+    /// Fully connected / matrix multiplication.
+    Fc,
+    /// Pooling (max/avg): no weights, K == C.
+    Pool,
+    /// Element-wise add (ResNet shortcut, LSTM cell ops): no weights,
+    /// K == C, R == S == 1.
+    Eltwise,
+    /// Training back-weight pass dW = X (*) dY (paper §II-A, [46], [48]).
+    /// Carries the *forward* layer's dimensions but reassigns the dataflow
+    /// roles: the streamed "filter" is dY (N,K,Xo,Yo), the stationary
+    /// output is dW (K,C,R,S) accumulated over the batch, and the input
+    /// fmap is the stashed activation X (N,C,Xi,Yi).
+    ConvBwWeight,
+}
+
+/// A single layer. Batch size N is a property of the scheduling run, not
+/// the layer (paper evaluates the same nets at batch 64 and batch 1).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input channels C.
+    pub c: u64,
+    /// Output channels K.
+    pub k: u64,
+    /// Output fmap width/height.
+    pub xo: u64,
+    pub yo: u64,
+    /// Filter width/height.
+    pub r: u64,
+    pub s: u64,
+    /// Convolution stride (same both axes).
+    pub stride: u64,
+    /// True for layers whose work does not scale with batch (weight-update
+    /// layers in training graphs).
+    pub no_batch: bool,
+}
+
+impl Layer {
+    pub fn conv(name: &str, c: u64, k: u64, xo: u64, r: u64, stride: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            c,
+            k,
+            xo,
+            yo: xo,
+            r,
+            s: r,
+            stride,
+            no_batch: false,
+        }
+    }
+
+    pub fn dwconv(name: &str, c: u64, xo: u64, r: u64, stride: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::DWConv,
+            c,
+            k: c,
+            xo,
+            yo: xo,
+            r,
+            s: r,
+            stride,
+            no_batch: false,
+        }
+    }
+
+    pub fn fc(name: &str, c: u64, k: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            c,
+            k,
+            xo: 1,
+            yo: 1,
+            r: 1,
+            s: 1,
+            stride: 1,
+            no_batch: false,
+        }
+    }
+
+    pub fn pool(name: &str, c: u64, xo: u64, r: u64, stride: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Pool,
+            c,
+            k: c,
+            xo,
+            yo: xo,
+            r,
+            s: r,
+            stride,
+            no_batch: false,
+        }
+    }
+
+    pub fn eltwise(name: &str, c: u64, xo: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Eltwise,
+            c,
+            k: c,
+            xo,
+            yo: xo,
+            r: 1,
+            s: 1,
+            stride: 1,
+            no_batch: false,
+        }
+    }
+
+    /// Input fmap width Xi = (Xo - 1) * stride + R.
+    pub fn xi(&self) -> u64 {
+        (self.xo - 1) * self.stride + self.r
+    }
+
+    /// Input fmap height Yi.
+    pub fn yi(&self) -> u64 {
+        (self.yo - 1) * self.stride + self.s
+    }
+
+    /// Whether this layer owns a *persistent* weight tensor (resident
+    /// across batch rounds). Back-weight layers stream dY instead.
+    pub fn has_weights(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv | LayerKind::DWConv | LayerKind::Fc)
+    }
+
+    /// Number of input operands (Eltwise takes two fmaps).
+    pub fn num_inputs(&self) -> usize {
+        if self.kind == LayerKind::Eltwise {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Weight tensor element count (0 for unweighted layers).
+    pub fn weight_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc => self.k * self.c * self.r * self.s,
+            LayerKind::DWConv => self.c * self.r * self.s,
+            LayerKind::Pool | LayerKind::Eltwise | LayerKind::ConvBwWeight => 0,
+        }
+    }
+
+    /// Input fmap element count for batch `n` (a single operand).
+    pub fn ifm_elems(&self, n: u64) -> u64 {
+        self.batch(n) * self.c * self.xi() * self.yi()
+    }
+
+    /// Output fmap element count for batch `n`.
+    pub fn ofm_elems(&self, n: u64) -> u64 {
+        self.batch(n) * self.k * self.xo * self.yo
+    }
+
+    /// Effective batch (1 for batch-independent layers).
+    pub fn batch(&self, n: u64) -> u64 {
+        if self.no_batch {
+            1
+        } else {
+            n
+        }
+    }
+
+    /// MAC (or op) count for batch `n`.
+    pub fn macs(&self, n: u64) -> u64 {
+        let n = self.batch(n);
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwWeight => {
+                n * self.k * self.c * self.xo * self.yo * self.r * self.s
+            }
+            LayerKind::DWConv => n * self.c * self.xo * self.yo * self.r * self.s,
+            LayerKind::Pool => n * self.c * self.xo * self.yo * self.r * self.s,
+            LayerKind::Eltwise => n * self.c * self.xo * self.yo,
+        }
+    }
+
+    /// The reduction size per output element (C*R*S for conv).
+    pub fn reduction_per_output(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv | LayerKind::Fc => self.c * self.r * self.s,
+            LayerKind::DWConv | LayerKind::Pool => self.r * self.s,
+            LayerKind::Eltwise => self.num_inputs() as u64,
+            // dW accumulates over the batch and the output fmap.
+            LayerKind::ConvBwWeight => self.xo * self.yo,
+        }
+    }
+
+    /// Tensor volumes by *dataflow role*: (streamed input words incl. any
+    /// per-batch second operand, output words, persistent weight words).
+    /// For ordinary layers this is (ifm, ofm, weights); the back-weight
+    /// pass streams X and dY and emits the batch-reduced dW.
+    pub fn role_volumes(&self, n: u64) -> (u64, u64, u64) {
+        match self.kind {
+            LayerKind::ConvBwWeight => (
+                self.ifm_elems(n) + self.batch(n) * self.k * self.xo * self.yo,
+                self.k * self.c * self.r * self.s,
+                0,
+            ),
+            _ => (self.ifm_elems(n), self.ofm_elems(n), self.weight_elems()),
+        }
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, v) in
+            [("c", self.c), ("k", self.k), ("xo", self.xo), ("yo", self.yo), ("r", self.r), ("s", self.s), ("stride", self.stride)]
+        {
+            if v == 0 {
+                return Err(format!("layer {}: {what} == 0", self.name));
+            }
+        }
+        match self.kind {
+            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise if self.c != self.k => {
+                Err(format!("layer {}: {:?} requires C == K", self.name, self.kind))
+            }
+            LayerKind::Fc if self.xo != 1 || self.yo != 1 || self.r != 1 || self.s != 1 => {
+                Err(format!("layer {}: FC requires Xo=Yo=R=S=1", self.name))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_dims() {
+        // AlexNet conv1: 3 -> 96, 55x55 out, 11x11 filter, stride 4.
+        let l = Layer::conv("conv1", 3, 96, 55, 11, 4);
+        assert_eq!(l.xi(), 227);
+        assert_eq!(l.yi(), 227);
+        assert_eq!(l.weight_elems(), 96 * 3 * 11 * 11);
+        assert_eq!(l.macs(1), 96 * 3 * 55 * 55 * 11 * 11);
+        assert_eq!(l.macs(64), 64 * 96 * 3 * 55 * 55 * 11 * 11);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn fc_is_1x1_conv() {
+        let l = Layer::fc("fc6", 9216, 4096);
+        assert_eq!(l.xi(), 1);
+        assert_eq!(l.macs(2), 2 * 9216 * 4096);
+        assert_eq!(l.weight_elems(), 9216 * 4096);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn dwconv_channels_match() {
+        let l = Layer::dwconv("dw1", 32, 112, 3, 1);
+        assert_eq!(l.k, 32);
+        assert_eq!(l.macs(1), 32 * 112 * 112 * 9);
+        assert_eq!(l.weight_elems(), 32 * 9);
+        l.validate().unwrap();
+
+        let mut bad = l.clone();
+        bad.k = 64;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pool_and_eltwise_have_no_weights() {
+        let p = Layer::pool("p", 96, 27, 3, 2);
+        assert_eq!(p.weight_elems(), 0);
+        assert!(!p.has_weights());
+        let e = Layer::eltwise("e", 256, 56);
+        assert_eq!(e.num_inputs(), 2);
+        assert_eq!(e.macs(4), 4 * 256 * 56 * 56);
+    }
+
+    #[test]
+    fn no_batch_layer_ignores_n() {
+        let mut l = Layer::fc("wu", 100, 100);
+        l.no_batch = true;
+        assert_eq!(l.macs(64), l.macs(1));
+        assert_eq!(l.ifm_elems(64), l.ifm_elems(1));
+    }
+
+    #[test]
+    fn zero_dim_rejected() {
+        let mut l = Layer::conv("c", 3, 8, 10, 3, 1);
+        l.xo = 0;
+        assert!(l.validate().is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload substrate: layer specifications, layer DAGs, the evaluated
+//! network zoo, and the training-graph extension (paper §II-A, §V).
+
+pub mod dag;
+pub mod layer;
+pub mod nets;
+pub mod training;
+
+pub use dag::{Network, PrevRef};
+pub use layer::{Layer, LayerKind};
+pub use nets::{all_networks, by_name};
+pub use training::training_graph;

@@ -1,0 +1,364 @@
+//! The network zoo evaluated by the paper (§V): AlexNet, MobileNet-v1,
+//! VGG-16, GoogLeNet-v1, ResNet-50, a PRIME-style MLP, and a seq2seq-style
+//! LSTM. Dimensions follow the original publications; grouped convolutions
+//! (AlexNet) are modeled dense, as nn-dataflow does.
+
+use super::dag::{Network, PrevRef};
+use super::layer::Layer;
+
+/// AlexNet [27]: 5 convs + 3 pools + 3 FCs on 3x224(227)x224 input.
+pub fn alexnet() -> Network {
+    let mut n = Network::new("alexnet", 3, 227, 227);
+    n.chain(Layer::conv("conv1", 3, 96, 55, 11, 4));
+    n.chain(Layer::pool("pool1", 96, 27, 3, 2));
+    n.chain(Layer::conv("conv2", 96, 256, 27, 5, 1));
+    n.chain(Layer::pool("pool2", 256, 13, 3, 2));
+    n.chain(Layer::conv("conv3", 256, 384, 13, 3, 1));
+    n.chain(Layer::conv("conv4", 384, 384, 13, 3, 1));
+    n.chain(Layer::conv("conv5", 384, 256, 13, 3, 1));
+    n.chain(Layer::pool("pool5", 256, 6, 3, 2));
+    n.chain(Layer::fc("fc6", 256 * 6 * 6, 4096));
+    n.chain(Layer::fc("fc7", 4096, 4096));
+    n.chain(Layer::fc("fc8", 4096, 1000));
+    n
+}
+
+/// VGG-16 [45]: 13 convs (all 3x3) + 5 pools + 3 FCs.
+pub fn vggnet() -> Network {
+    let mut n = Network::new("vggnet", 3, 224, 224);
+    let cfg: &[(&str, u64, u64, u64)] = &[
+        // (name, c, k, xo)
+        ("conv1_1", 3, 64, 224),
+        ("conv1_2", 64, 64, 224),
+    ];
+    for &(name, c, k, xo) in cfg {
+        n.chain(Layer::conv(name, c, k, xo, 3, 1));
+    }
+    n.chain(Layer::pool("pool1", 64, 112, 2, 2));
+    n.chain(Layer::conv("conv2_1", 64, 128, 112, 3, 1));
+    n.chain(Layer::conv("conv2_2", 128, 128, 112, 3, 1));
+    n.chain(Layer::pool("pool2", 128, 56, 2, 2));
+    n.chain(Layer::conv("conv3_1", 128, 256, 56, 3, 1));
+    n.chain(Layer::conv("conv3_2", 256, 256, 56, 3, 1));
+    n.chain(Layer::conv("conv3_3", 256, 256, 56, 3, 1));
+    n.chain(Layer::pool("pool3", 256, 28, 2, 2));
+    n.chain(Layer::conv("conv4_1", 256, 512, 28, 3, 1));
+    n.chain(Layer::conv("conv4_2", 512, 512, 28, 3, 1));
+    n.chain(Layer::conv("conv4_3", 512, 512, 28, 3, 1));
+    n.chain(Layer::pool("pool4", 512, 14, 2, 2));
+    n.chain(Layer::conv("conv5_1", 512, 512, 14, 3, 1));
+    n.chain(Layer::conv("conv5_2", 512, 512, 14, 3, 1));
+    n.chain(Layer::conv("conv5_3", 512, 512, 14, 3, 1));
+    n.chain(Layer::pool("pool5", 512, 7, 2, 2));
+    n.chain(Layer::fc("fc6", 512 * 7 * 7, 4096));
+    n.chain(Layer::fc("fc7", 4096, 4096));
+    n.chain(Layer::fc("fc8", 4096, 1000));
+    n
+}
+
+/// One GoogLeNet inception module: 4 branches concatenated along C.
+/// Returns the indices of the four branch-output layers.
+#[allow(clippy::too_many_arguments)]
+fn inception(
+    n: &mut Network,
+    name: &str,
+    prevs: &[PrevRef],
+    c_in: u64,
+    xo: u64,
+    k1: u64,
+    k3r: u64,
+    k3: u64,
+    k5r: u64,
+    k5: u64,
+    kp: u64,
+) -> Vec<PrevRef> {
+    let b1 = n.add(Layer::conv(&format!("{name}_1x1"), c_in, k1, xo, 1, 1), prevs);
+    let r3 = n.add(Layer::conv(&format!("{name}_3x3r"), c_in, k3r, xo, 1, 1), prevs);
+    let b3 = n.add(Layer::conv(&format!("{name}_3x3"), k3r, k3, xo, 3, 1), &[PrevRef::Layer(r3)]);
+    let r5 = n.add(Layer::conv(&format!("{name}_5x5r"), c_in, k5r, xo, 1, 1), prevs);
+    let b5 = n.add(Layer::conv(&format!("{name}_5x5"), k5r, k5, xo, 5, 1), &[PrevRef::Layer(r5)]);
+    let pp = n.add(Layer::pool(&format!("{name}_pool"), c_in, xo, 3, 1), prevs);
+    let bp = n.add(Layer::conv(&format!("{name}_poolproj"), c_in, kp, xo, 1, 1), &[PrevRef::Layer(pp)]);
+    vec![PrevRef::Layer(b1), PrevRef::Layer(b3), PrevRef::Layer(b5), PrevRef::Layer(bp)]
+}
+
+/// GoogLeNet-v1 [50]: stem + 9 inception modules + FC.
+pub fn googlenet() -> Network {
+    let mut n = Network::new("googlenet", 3, 224, 224);
+    n.chain(Layer::conv("conv1", 3, 64, 112, 7, 2));
+    n.chain(Layer::pool("pool1", 64, 56, 3, 2));
+    n.chain(Layer::conv("conv2r", 64, 64, 56, 1, 1));
+    n.chain(Layer::conv("conv2", 64, 192, 56, 3, 1));
+    let p2 = n.chain(Layer::pool("pool2", 192, 28, 3, 2));
+
+    let mut prevs = vec![PrevRef::Layer(p2)];
+    // (name, k1, k3r, k3, k5r, k5, kp) per the GoogLeNet table.
+    let m3a = inception(&mut n, "inc3a", &prevs, 192, 28, 64, 96, 128, 16, 32, 32);
+    prevs = m3a;
+    let m3b = inception(&mut n, "inc3b", &prevs, 256, 28, 128, 128, 192, 32, 96, 64);
+    // pool between 3b and 4a; concat first via a pool over the concat:
+    // model the pool as consuming the concatenated 480 channels.
+    let p3 = n.add(Layer::pool("pool3", 480, 14, 3, 2), &m3b);
+    prevs = vec![PrevRef::Layer(p3)];
+    let m4a = inception(&mut n, "inc4a", &prevs, 480, 14, 192, 96, 208, 16, 48, 64);
+    let m4b = inception(&mut n, "inc4b", &m4a, 512, 14, 160, 112, 224, 24, 64, 64);
+    let m4c = inception(&mut n, "inc4c", &m4b, 512, 14, 128, 128, 256, 24, 64, 64);
+    let m4d = inception(&mut n, "inc4d", &m4c, 512, 14, 112, 144, 288, 32, 64, 64);
+    let m4e = inception(&mut n, "inc4e", &m4d, 528, 14, 256, 160, 320, 32, 128, 128);
+    let p4 = n.add(Layer::pool("pool4", 832, 7, 3, 2), &m4e);
+    let m5a = inception(&mut n, "inc5a", &[PrevRef::Layer(p4)], 832, 7, 256, 160, 320, 32, 128, 128);
+    let m5b = inception(&mut n, "inc5b", &m5a, 832, 7, 384, 192, 384, 48, 128, 128);
+    let p5 = n.add(Layer::pool("pool5", 1024, 1, 7, 7), &m5b);
+    n.add(Layer::fc("fc", 1024, 1000), &[PrevRef::Layer(p5)]);
+    n
+}
+
+/// One ResNet bottleneck: 1x1 down, 3x3, 1x1 up, eltwise add with shortcut.
+fn bottleneck(
+    n: &mut Network,
+    name: &str,
+    prev: PrevRef,
+    c_in: u64,
+    mid: u64,
+    out: u64,
+    xo: u64,
+    stride: u64,
+    project: bool,
+) -> PrevRef {
+    let a = n.add(Layer::conv(&format!("{name}_a"), c_in, mid, xo, 1, stride), &[prev]);
+    let b = n.add(Layer::conv(&format!("{name}_b"), mid, mid, xo, 3, 1), &[PrevRef::Layer(a)]);
+    let c = n.add(Layer::conv(&format!("{name}_c"), mid, out, xo, 1, 1), &[PrevRef::Layer(b)]);
+    let sc = if project {
+        PrevRef::Layer(n.add(Layer::conv(&format!("{name}_sc"), c_in, out, xo, 1, stride), &[prev]))
+    } else {
+        prev
+    };
+    PrevRef::Layer(n.add(Layer::eltwise(&format!("{name}_add"), out, xo), &[PrevRef::Layer(c), sc]))
+}
+
+/// ResNet-50 [19]: conv1 + 4 stages of [3,4,6,3] bottlenecks + FC.
+pub fn resnet() -> Network {
+    let mut n = Network::new("resnet50", 3, 224, 224);
+    n.chain(Layer::conv("conv1", 3, 64, 112, 7, 2));
+    let p1 = n.chain(Layer::pool("pool1", 64, 56, 3, 2));
+    let mut prev = PrevRef::Layer(p1);
+    let stages: [(u64, u64, u64, u64, usize); 4] = [
+        // (mid, out, xo, first-stride, blocks)
+        (64, 256, 56, 1, 3),
+        (128, 512, 28, 2, 4),
+        (256, 1024, 14, 2, 6),
+        (512, 2048, 7, 2, 3),
+    ];
+    let mut c_in = 64u64;
+    for (si, &(mid, out, xo, stride0, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let name = format!("res{}{}", si + 2, (b'a' + b as u8) as char);
+            prev = bottleneck(&mut n, &name, prev, c_in, mid, out, xo, stride, b == 0);
+            c_in = out;
+        }
+    }
+    let pf = n.add(Layer::pool("pool5", 2048, 1, 7, 7), &[prev]);
+    n.add(Layer::fc("fc", 2048, 1000), &[PrevRef::Layer(pf)]);
+    n
+}
+
+/// MobileNet-v1 [22]: 3x3 conv + 13 depthwise-separable blocks + FC.
+pub fn mobilenet() -> Network {
+    let mut n = Network::new("mobilenet", 3, 224, 224);
+    n.chain(Layer::conv("conv1", 3, 32, 112, 3, 2));
+    // (c_in, k_out, xo_out, dw stride)
+    let blocks: [(u64, u64, u64, u64); 13] = [
+        (32, 64, 112, 1),
+        (64, 128, 56, 2),
+        (128, 128, 56, 1),
+        (128, 256, 28, 2),
+        (256, 256, 28, 1),
+        (256, 512, 14, 2),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 512, 14, 1),
+        (512, 1024, 7, 2),
+        (1024, 1024, 7, 1),
+    ];
+    for (i, &(c, k, xo, stride)) in blocks.iter().enumerate() {
+        n.chain(Layer::dwconv(&format!("dw{}", i + 1), c, xo, 3, stride));
+        n.chain(Layer::conv(&format!("pw{}", i + 1), c, k, xo, 1, 1));
+    }
+    n.chain(Layer::pool("avgpool", 1024, 1, 7, 7));
+    n.chain(Layer::fc("fc", 1024, 1000));
+    n
+}
+
+/// PRIME-style MLP [12]: 784-1500-1000-500-10.
+pub fn mlp() -> Network {
+    let mut n = Network::new("mlp", 784, 1, 1);
+    n.chain(Layer::fc("fc1", 784, 1500));
+    n.chain(Layer::fc("fc2", 1500, 1000));
+    n.chain(Layer::fc("fc3", 1000, 500));
+    n.chain(Layer::fc("fc4", 500, 10));
+    n
+}
+
+/// Seq2seq-style LSTM [49]: 2 stacked cells, hidden 512, unrolled 8 steps.
+/// Each cell step is four gate FCs (2H -> H for i/f/g/o over [x; h]) plus
+/// the eltwise state-update chain c' = f*c + i*g, h' = o*tanh(c').
+pub fn lstm() -> Network {
+    let hidden = 512u64;
+    let steps = 8usize;
+    let cells = 2usize;
+    let mut n = Network::new("lstm", hidden, 1, 1);
+    // Step-0 h/c states stream from DRAM: use the network input as their
+    // stand-in producer, matching nn-dataflow's treatment of initial state.
+    let mut h_prev: Vec<PrevRef> = vec![PrevRef::Input; cells];
+    let mut c_prev: Vec<PrevRef> = vec![PrevRef::Input; cells];
+    for t in 0..steps {
+        // Input to cell 0 at step t comes from the embedding (external).
+        let mut x: PrevRef = PrevRef::Input;
+        for cell in 0..cells {
+            let tag = format!("t{t}c{cell}");
+            let xh = [x, h_prev[cell]];
+            let gi = n.add(Layer::fc(&format!("{tag}_i"), 2 * hidden, hidden), &xh);
+            let gf = n.add(Layer::fc(&format!("{tag}_f"), 2 * hidden, hidden), &xh);
+            let gg = n.add(Layer::fc(&format!("{tag}_g"), 2 * hidden, hidden), &xh);
+            let go = n.add(Layer::fc(&format!("{tag}_o"), 2 * hidden, hidden), &xh);
+            let ig = n.add(
+                Layer::eltwise(&format!("{tag}_ig"), hidden, 1),
+                &[PrevRef::Layer(gi), PrevRef::Layer(gg)],
+            );
+            let fc_ = n.add(
+                Layer::eltwise(&format!("{tag}_fc"), hidden, 1),
+                &[PrevRef::Layer(gf), c_prev[cell]],
+            );
+            let cn = n.add(
+                Layer::eltwise(&format!("{tag}_cell"), hidden, 1),
+                &[PrevRef::Layer(ig), PrevRef::Layer(fc_)],
+            );
+            let hn = n.add(
+                Layer::eltwise(&format!("{tag}_hid"), hidden, 1),
+                &[PrevRef::Layer(go), PrevRef::Layer(cn)],
+            );
+            c_prev[cell] = PrevRef::Layer(cn);
+            h_prev[cell] = PrevRef::Layer(hn);
+            x = PrevRef::Layer(hn);
+        }
+    }
+    n
+}
+
+/// The full zoo in the paper's presentation order.
+pub fn all_networks() -> Vec<Network> {
+    vec![alexnet(), mobilenet(), vggnet(), googlenet(), resnet(), mlp(), lstm()]
+}
+
+/// Look a network up by name (CLI entry point).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "mobilenet" => Some(mobilenet()),
+        "vggnet" | "vgg" | "vgg16" => Some(vggnet()),
+        "googlenet" => Some(googlenet()),
+        "resnet" | "resnet50" => Some(resnet()),
+        "mlp" => Some(mlp()),
+        "lstm" => Some(lstm()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_validate() {
+        for net in all_networks() {
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        }
+    }
+
+    #[test]
+    fn alexnet_macs_match_literature() {
+        // AlexNet (dense, no groups) forward MACs ~ 1.1-1.2 G for batch 1
+        // (grouped conv halves conv2/4/5; we model dense like nn-dataflow).
+        let m = alexnet().total_macs(1) as f64;
+        assert!(m > 0.9e9 && m < 1.6e9, "alexnet macs {m}");
+    }
+
+    #[test]
+    fn vgg_macs_match_literature() {
+        // VGG-16: ~15.5 GMACs per image.
+        let m = vggnet().total_macs(1) as f64;
+        assert!(m > 15.0e9 && m < 16.5e9, "vgg macs {m}");
+    }
+
+    #[test]
+    fn resnet_macs_match_literature() {
+        // ResNet-50: ~3.8-4.1 GMACs.
+        let m = resnet().total_macs(1) as f64;
+        assert!(m > 3.4e9 && m < 4.6e9, "resnet macs {m}");
+    }
+
+    #[test]
+    fn mobilenet_macs_match_literature() {
+        // MobileNet-v1: ~0.57 GMACs.
+        let m = mobilenet().total_macs(1) as f64;
+        assert!(m > 0.45e9 && m < 0.75e9, "mobilenet macs {m}");
+    }
+
+    #[test]
+    fn googlenet_macs_match_literature() {
+        // GoogLeNet-v1: ~1.4-1.6 GMACs.
+        let m = googlenet().total_macs(1) as f64;
+        assert!(m > 1.2e9 && m < 1.9e9, "googlenet macs {m}");
+    }
+
+    #[test]
+    fn googlenet_concat_channels() {
+        let net = googlenet();
+        // inc3a output concat = 64+128+32+32 = 256 -> consumed by inc3b 1x1.
+        let l = net.layers.iter().find(|l| l.name == "inc3b_1x1").unwrap();
+        assert_eq!(l.c, 256);
+        // final concat 384+384+128+128 = 1024 into the classifier.
+        let fc = net.layers.iter().find(|l| l.name == "fc").unwrap();
+        assert_eq!(fc.c, 1024);
+    }
+
+    #[test]
+    fn resnet_block_count() {
+        let net = resnet();
+        let adds = net.layers.iter().filter(|l| l.name.ends_with("_add")).count();
+        assert_eq!(adds, 16); // 3+4+6+3
+        let convs =
+            net.layers.iter().filter(|l| l.kind == super::super::layer::LayerKind::Conv).count();
+        assert_eq!(convs, 53); // 1 + 3*16 + 4 shortcuts
+    }
+
+    #[test]
+    fn mobilenet_alternates_dw_pw() {
+        let net = mobilenet();
+        let dw = net.layers.iter().filter(|l| l.kind == super::super::layer::LayerKind::DWConv).count();
+        assert_eq!(dw, 13);
+    }
+
+    #[test]
+    fn lstm_structure() {
+        let net = lstm();
+        let gates = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == super::super::layer::LayerKind::Fc)
+            .count();
+        assert_eq!(gates, 64); // 8 steps x 2 cells x 4 gates
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["alexnet", "mobilenet", "vggnet", "googlenet", "resnet", "mlp", "lstm"] {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

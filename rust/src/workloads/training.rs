@@ -1,0 +1,250 @@
+//! Training-graph extension (paper §II-A: "In training, the original DAGs
+//! are extended with more layers for error propagation and weight updates.
+//! The backward CONV/FC layers can be modeled similarly to the forward
+//! layers with different data layouts and computations [46], [48]").
+//!
+//! For each forward layer L we append, in reverse topological order:
+//!
+//! * **back-data** `L@bd` — dX = dY (*) W-transposed: a CONV with C and K
+//!   swapped and fmap dims equal to L's *input* fmap (full-size transposed
+//!   convolution; stride folded into the fmap size).
+//! * **back-weight** `L@bw` — dW = X (*) dY: a CONV whose "output fmap" is
+//!   the R x S filter grid and whose reduction runs over the batch and the
+//!   output fmap (same MAC count as the forward layer).
+//! * **weight-update** `L@wu` — dense eltwise over the weight tensor,
+//!   batch-independent.
+//!
+//! Unweighted layers (pool/eltwise) get a single backward eltwise-style
+//! layer propagating the error at the same fmap shape.
+
+use super::dag::{Network, PrevRef};
+use super::layer::{Layer, LayerKind};
+
+/// Extend a forward (inference) network into its training graph.
+pub fn training_graph(fwd: &Network) -> Network {
+    let mut net = fwd.clone();
+    net.name = format!("{}-train", fwd.name);
+    let n_fwd = fwd.len();
+    let nexts = fwd.nexts();
+
+    // grad_of[i] = index of the layer producing dY for forward layer i
+    // (its back-data output feeds the predecessors). Built in reverse topo
+    // order; layers with multiple consumers get an eltwise sum-join first.
+    let mut grad_of: Vec<Option<usize>> = vec![None; n_fwd];
+
+    for i in (0..n_fwd).rev() {
+        let l = fwd.layers[i].clone();
+
+        // Producers of dY for layer i: the back-data layers of each
+        // consumer. The loss layer feeds the DAG tail externally (Input).
+        let consumers = &nexts[i];
+        let dy: Vec<PrevRef> = if consumers.is_empty() {
+            vec![PrevRef::Input]
+        } else {
+            consumers
+                .iter()
+                .map(|&j| grad_of[j].map(PrevRef::Layer).unwrap_or(PrevRef::Input))
+                .collect()
+        };
+        // Multiple consumers: eltwise-sum their back-propagated errors.
+        // A single producer may also have the wrong channel count when the
+        // consumer consumed a concat; the sum-join layer renormalizes to
+        // this layer's K channels (data-layout move, eltwise cost).
+        let dy_ref = if dy.len() == 1 && fwd.prevs[consumers.first().copied().unwrap_or(0)].len() <= 1
+        {
+            dy[0]
+        } else {
+            let mut join = Layer::eltwise(&format!("{}@dj", l.name), l.k, l.xo);
+            join.yo = l.yo;
+            let ji = push_raw(&mut net, join, &dy);
+            PrevRef::Layer(ji)
+        };
+
+        match l.kind {
+            LayerKind::Conv | LayerKind::Fc | LayerKind::DWConv => {
+                // back-data: C <-> K, fmap = forward input fmap.
+                let mut bd = Layer {
+                    name: format!("{}@bd", l.name),
+                    kind: if l.kind == LayerKind::DWConv { LayerKind::DWConv } else { LayerKind::Conv },
+                    c: l.k,
+                    k: l.c,
+                    xo: l.xi(),
+                    yo: l.yi(),
+                    r: l.r,
+                    s: l.s,
+                    stride: 1,
+                    no_batch: false,
+                };
+                if l.kind == LayerKind::DWConv {
+                    bd.k = l.c;
+                    bd.c = l.c;
+                }
+                let bdi = push_raw(&mut net, bd, &[dy_ref]);
+                grad_of[i] = Some(bdi);
+
+                // back-weight: dW = X (*) dY, reduction over N * Xo * Yo.
+                // The dedicated ConvBwWeight kind reuses the forward
+                // layer's dimensions and reassigns tensor roles (streamed
+                // dY as the "filter", batch-reduced dW as the output);
+                // MACs match the forward layer exactly (asserted below).
+                let bw = Layer {
+                    name: format!("{}@bw", l.name),
+                    kind: LayerKind::ConvBwWeight,
+                    c: l.c,
+                    k: l.k,
+                    xo: l.xo,
+                    yo: l.yo,
+                    r: l.r,
+                    s: l.s,
+                    stride: l.stride,
+                    no_batch: false,
+                };
+                let x_ref = fwd.prevs[i].clone(); // stashed activations
+                let mut bw_prevs = x_ref;
+                bw_prevs.push(dy_ref);
+                let bwi = push_raw(&mut net, bw, &bw_prevs);
+
+                // weight update: W -= eta * dW, batch-independent eltwise
+                // over the weight tensor.
+                let wsz = l.weight_elems();
+                let mut wu = Layer::eltwise(&format!("{}@wu", l.name), wsz.max(1), 1);
+                wu.no_batch = true;
+                push_raw(&mut net, wu, &[PrevRef::Layer(bwi)]);
+            }
+            LayerKind::Pool => {
+                // Error upsampling through the pool window.
+                let bp = Layer {
+                    name: format!("{}@bp", l.name),
+                    kind: LayerKind::Pool,
+                    c: l.c,
+                    k: l.c,
+                    xo: l.xi(),
+                    yo: l.yi(),
+                    r: l.r,
+                    s: l.s,
+                    stride: 1,
+                    no_batch: false,
+                };
+                let bpi = push_raw(&mut net, bp, &[dy_ref]);
+                grad_of[i] = Some(bpi);
+            }
+            LayerKind::ConvBwWeight => {
+                unreachable!("training graphs are built from forward networks")
+            }
+            LayerKind::Eltwise => {
+                // d(add) passes through; keep an explicit layer so the
+                // scheduler sees the traffic.
+                let mut be = Layer::eltwise(&format!("{}@be", l.name), l.c, l.xo);
+                be.yo = l.yo;
+                let bei = push_raw(&mut net, be, &[dy_ref]);
+                grad_of[i] = Some(bei);
+            }
+        }
+    }
+    net
+}
+
+/// Append without the concat-channel bookkeeping of `Network::add`:
+/// backward layers legitimately mix operand shapes (e.g. back-weight reads
+/// the stashed X and dY). We still validate the layer itself.
+fn push_raw(net: &mut Network, layer: Layer, prevs: &[PrevRef]) -> usize {
+    layer.validate().unwrap_or_else(|e| panic!("{e}"));
+    net.layers.push(layer);
+    net.prevs.push(prevs.to_vec());
+    net.invalidate_nexts();
+    net.layers.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::nets;
+    use super::*;
+
+    #[test]
+    fn training_graph_is_larger() {
+        for f in nets::all_networks() {
+            let t = training_graph(&f);
+            assert!(t.len() > 2 * f.len() - f.len() / 2, "{}: {} vs {}", f.name, t.len(), f.len());
+            // Edges stay topological.
+            for (i, ps) in t.prevs.iter().enumerate() {
+                for p in ps {
+                    if let PrevRef::Layer(j) = p {
+                        assert!(*j < i, "{}: edge {j} -> {i}", t.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn back_weight_macs_match_forward() {
+        let f = nets::alexnet();
+        let t = training_graph(&f);
+        let fwd = t.layers.iter().find(|l| l.name == "conv3").unwrap();
+        let bw = t.layers.iter().find(|l| l.name == "conv3@bw").unwrap();
+        assert_eq!(fwd.macs(64), bw.macs(64));
+    }
+
+    #[test]
+    fn back_weight_roles() {
+        let f = nets::mobilenet();
+        let t = training_graph(&f);
+        let bw = t.layers.iter().find(|l| l.name == "pw1@bw").unwrap();
+        assert_eq!(bw.kind, LayerKind::ConvBwWeight);
+        // No persistent weights; output volume is dW; dY streams per batch.
+        assert_eq!(bw.weight_elems(), 0);
+        let (inp, out, wgt) = bw.role_volumes(4);
+        assert_eq!(out, bw.k * bw.c * bw.r * bw.s);
+        assert_eq!(wgt, 0);
+        assert!(inp > bw.ifm_elems(4)); // X plus dY
+    }
+
+    #[test]
+    fn back_data_dims_are_swapped() {
+        let f = nets::alexnet();
+        let t = training_graph(&f);
+        let fwd = t.layers.iter().find(|l| l.name == "conv2").unwrap();
+        let bd = t.layers.iter().find(|l| l.name == "conv2@bd").unwrap();
+        assert_eq!(bd.c, fwd.k);
+        assert_eq!(bd.k, fwd.c);
+        assert_eq!((bd.xo, bd.yo), (fwd.xi(), fwd.yi()));
+    }
+
+    #[test]
+    fn weight_update_is_batch_independent() {
+        let t = training_graph(&nets::mlp());
+        let wu = t.layers.iter().find(|l| l.name == "fc2@wu").unwrap();
+        assert!(wu.no_batch);
+        assert_eq!(wu.c, 1500 * 1000);
+        assert_eq!(wu.macs(64), wu.macs(1));
+    }
+
+    #[test]
+    fn training_macs_roughly_3x_forward() {
+        // fwd + back-data + back-weight ~= 3x forward compute for conv nets.
+        let f = nets::vggnet();
+        let t = training_graph(&f);
+        let ratio = t.total_macs(64) as f64 / f.total_macs(64) as f64;
+        assert!(ratio > 2.2 && ratio < 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn every_forward_layer_has_gradient_path() {
+        let f = nets::resnet();
+        let t = training_graph(&f);
+        for l in &f.layers {
+            if l.has_weights() {
+                assert!(
+                    t.layers.iter().any(|x| x.name == format!("{}@bw", l.name)),
+                    "missing bw for {}",
+                    l.name
+                );
+                assert!(
+                    t.layers.iter().any(|x| x.name == format!("{}@wu", l.name)),
+                    "missing wu for {}",
+                    l.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Property-based sweeps (seeded SplitMix64 stands in for proptest, which
+//! is not in the offline registry): randomized layers, partitions and
+//! blockings must uphold the core invariants of the directive calculus and
+//! the solvers.
+
+use kapla::arch::presets;
+use kapla::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
+use kapla::mapping::UnitMap;
+use kapla::partition::{enumerate_partitions, PartitionScheme};
+use kapla::sim::evaluate_layer;
+use kapla::solvers::kapla::solve_intra;
+use kapla::solvers::space::{qty_candidates, visit_schemes};
+use kapla::solvers::{IntraCtx, Objective};
+use kapla::util::SplitMix64;
+use kapla::workloads::Layer;
+
+/// Random but plausible conv/fc/dw layer.
+fn random_layer(rng: &mut SplitMix64) -> Layer {
+    let c = 1 + rng.below(96);
+    let k = 1 + rng.below(128);
+    let xo = 1 + rng.below(32);
+    let r = *rng.choose(&[1u64, 3, 5, 7]);
+    match rng.below(4) {
+        0 => Layer::fc("f", c, k),
+        1 => Layer::dwconv("d", c, xo.max(2), r, 1 + rng.below(2)),
+        _ => Layer::conv("c", c, k, xo.max(r), r, 1 + rng.below(2)),
+    }
+}
+
+fn random_scheme(rng: &mut SplitMix64, arch: &kapla::arch::ArchConfig, l: &Layer, rb: u64) -> Option<LayerScheme> {
+    let parts = enumerate_partitions(l, rb, (2, 2), true);
+    if parts.is_empty() {
+        return None;
+    }
+    let part = *rng.choose(&parts);
+    let unit = UnitMap::build(arch, part.node_shape(l, rb));
+    let gqs = qty_candidates(unit.totals, unit.granule);
+    let gq = *rng.choose(&gqs);
+    let rqs = qty_candidates(gq, unit.granule);
+    let rq = *rng.choose(&rqs);
+    let s = LayerScheme {
+        part,
+        unit,
+        regf: LevelBlock { qty: rq, order: *rng.choose(&LoopOrder::all()) },
+        gbuf: LevelBlock { qty: gq, order: *rng.choose(&LoopOrder::all()) },
+    };
+    s.validate(arch).ok().map(|_| s)
+}
+
+#[test]
+fn access_counts_at_least_compulsory() {
+    // DRAM traffic of any valid scheme covers each tensor at least once
+    // (per its replication/sharing structure).
+    let arch = presets::bench_multi_node();
+    let mut rng = SplitMix64::new(101);
+    let mut checked = 0;
+    while checked < 300 {
+        let l = random_layer(&mut rng);
+        let rb = 1 + rng.below(8);
+        let Some(s) = random_scheme(&mut rng, &arch, &l, rb) else { continue };
+        checked += 1;
+        let a = s.access_counts(false);
+        let ofm_floor = s.unit.ofm_node_words(s.unit.totals) * s.part.used_nodes()
+            / s.part.ofm_reduction_for(l.kind).max(1);
+        assert!(
+            a.dram[1] >= ofm_floor,
+            "{l:?}: ofm dram {} < floor {ofm_floor}",
+            a.dram[1]
+        );
+        assert!(a.gbuf_total() >= a.dram_total(), "GBUF port sees all DRAM traffic");
+        assert!(a.macs >= l.macs(rb), "macs under-counted");
+    }
+}
+
+#[test]
+fn macs_invariant_across_schemes() {
+    // Blocking and ordering change traffic, never compute volume
+    // (fragmentation may pad it upward via ceiling splits).
+    let arch = presets::bench_multi_node();
+    let mut rng = SplitMix64::new(202);
+    for _ in 0..60 {
+        let l = random_layer(&mut rng);
+        let rb = 1 + rng.below(4);
+        let mut macs = Vec::new();
+        for _ in 0..8 {
+            if let Some(s) = random_scheme(&mut rng, &arch, &l, rb) {
+                if s.part.used_nodes() == 4 && s.part.pn * s.part.pk * s.part.pc == 4 {
+                    macs.push(s.access_counts(false).macs);
+                }
+            }
+        }
+        // All full-channel/batch partitions of the same layer execute the
+        // same MACs up to ceiling-split padding (< 2x).
+        if let (Some(&min), Some(&max)) = (macs.iter().min(), macs.iter().max()) {
+            assert!(max < 2 * min.max(1), "{l:?}: macs spread {min}..{max}");
+        }
+    }
+}
+
+#[test]
+fn kapla_never_worse_than_every_random_scheme() {
+    // Cost-descent must at least beat the average random valid scheme and
+    // never lose to *all* of them.
+    let arch = presets::bench_multi_node();
+    let mut rng = SplitMix64::new(303);
+    for _ in 0..25 {
+        let l = random_layer(&mut rng);
+        let ctx = IntraCtx { region: (2, 2), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
+        let Some(k) = solve_intra(&arch, &l, &ctx) else { continue };
+        let ek = evaluate_layer(&arch, &k, false).energy.total();
+        let mut beats = 0;
+        let mut total = 0;
+        for _ in 0..20 {
+            if let Some(s) = random_scheme(&mut rng, &arch, &l, 4) {
+                total += 1;
+                if ek <= evaluate_layer(&arch, &s, false).energy.total() {
+                    beats += 1;
+                }
+            }
+        }
+        if total >= 5 {
+            assert!(
+                beats * 2 >= total,
+                "{l:?}: kapla beat only {beats}/{total} random schemes"
+            );
+        }
+    }
+}
+
+#[test]
+fn exhaustive_visit_only_yields_valid_schemes() {
+    let arch = presets::bench_multi_node();
+    let mut rng = SplitMix64::new(404);
+    for _ in 0..10 {
+        let l = random_layer(&mut rng);
+        let mut n = 0;
+        visit_schemes(&arch, &l, (2, 2), 2, true, |s| {
+            s.validate(&arch).unwrap_or_else(|e| panic!("{l:?}: {e}"));
+            n += 1;
+            n < 5000
+        });
+        assert!(n > 0, "{l:?}: empty space");
+    }
+}
+
+#[test]
+fn partition_node_shapes_cover_layer() {
+    // Ceil-split shapes must tile the full layer: shape * factor >= total.
+    let mut rng = SplitMix64::new(505);
+    for _ in 0..200 {
+        let l = random_layer(&mut rng);
+        for p in enumerate_partitions(&l, 8, (2, 2), false) {
+            let s = p.node_shape(&l, 8);
+            assert!(s.n * p.pn >= l.batch(8));
+            assert!(s.k * p.pk >= l.k);
+            assert!(s.xo * p.px >= l.xo);
+            assert!(s.yo * p.py >= l.yo);
+        }
+    }
+}
+
+#[test]
+fn descent_is_deterministic_and_capacity_safe() {
+    let arch = presets::edge_tpu();
+    let mut rng = SplitMix64::new(606);
+    for _ in 0..40 {
+        let l = random_layer(&mut rng);
+        let ctx = IntraCtx { region: (1, 1), rb: 1, ifm_on_chip: false, objective: Objective::Energy };
+        let a = solve_intra(&arch, &l, &ctx);
+        let b = solve_intra(&arch, &l, &ctx);
+        match (a, b) {
+            (Some(x), Some(y)) => {
+                assert_eq!(format!("{x:?}"), format!("{y:?}"), "{l:?}");
+                assert!(x.regf_words_per_pe() <= arch.regf_words());
+                assert!(x.gbuf_words_per_node() <= arch.gbuf_words());
+            }
+            (None, None) => {}
+            _ => panic!("{l:?}: nondeterministic solvability"),
+        }
+    }
+}
+
+#[test]
+fn single_partition_matches_full_shape() {
+    let mut rng = SplitMix64::new(707);
+    for _ in 0..100 {
+        let l = random_layer(&mut rng);
+        let p = PartitionScheme::single();
+        let s = p.node_shape(&l, 16);
+        assert_eq!(s.c, l.c);
+        assert_eq!(s.k, l.k);
+        assert_eq!(s.n, l.batch(16));
+    }
+}
