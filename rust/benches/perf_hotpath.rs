@@ -2,25 +2,28 @@
 //! the solver inner loops at each layer of the stack.
 //!
 //!   L3a  directive access-count calculus (the innermost arithmetic)
-//!   L3b  KAPLA bottom-up intra-layer solve (per layer-context)
-//!   L3c  exhaustive enumeration rate (schemes/s) — baseline B's inner loop
+//!   L3b  KAPLA bottom-up intra-layer solve (per layer-context), then the
+//!        batched context sweep: sequential/uncached vs the scoped worker
+//!        pool sharing one CostCache (identical results, measured speedup)
+//!   L3c  exhaustive enumeration rate (schemes/s) — baseline B's inner
+//!        loop — cold vs warm through the evaluation memo
 //!   L3d  inter-layer DP (per network)
 //!   L1   AOT batched cost kernel via PJRT vs native Rust loop
-//!        (the batch-size amortization curve)
+//!        (the batch-size amortization curve; PJRT needs `--features pjrt`)
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 
 use kapla::arch::presets;
-use kapla::cost::{cost_from_features, features, LayerCtx};
+use kapla::cost::{cost_from_features, features, CostCache, LayerCtx};
 use kapla::directives::{Grp, LevelBlock, LoopOrder, Qty};
 use kapla::interlayer::dp::{best_chains, DpConfig};
 use kapla::mapping::UnitMap;
 use kapla::partition::PartitionScheme;
 use kapla::report::benchkit as bk;
-use kapla::solvers::kapla::solve_intra;
+use kapla::solvers::kapla::{solve_intra, solve_intra_cached};
 use kapla::solvers::space::visit_schemes;
 use kapla::solvers::{IntraCtx, Objective};
-use kapla::util::Timer;
+use kapla::util::{available_threads, par_map, Timer};
 use kapla::workloads::nets;
 
 fn main() {
@@ -66,6 +69,55 @@ fn main() {
         lines.push(format!("L3b kapla solve_intra(conv2 @16x16,b64): {per:.2} ms/layer"));
     }
 
+    // L3b-par: the batched intra-layer context sweep — the sequential
+    // uncached path vs the scoped worker pool sharing one CostCache. The
+    // context list mimics the DP re-solving overlapping spans: each
+    // (layer, region) context recurs, as it does across top-k_S chains.
+    {
+        let layer_ids = [0usize, 2, 4, 5, 6]; // the alexnet convs
+        let regions = [(16u64, 16u64), (8, 16)];
+        let mut ctxs: Vec<(usize, IntraCtx)> = Vec::new();
+        for _rep in 0..3 {
+            for &li in &layer_ids {
+                for &region in &regions {
+                    let c = IntraCtx {
+                        region,
+                        rb: 16,
+                        ifm_on_chip: false,
+                        objective: Objective::Energy,
+                    };
+                    ctxs.push((li, c));
+                }
+            }
+        }
+        let t = Timer::start();
+        let seq: Vec<_> =
+            ctxs.iter().map(|(li, c)| solve_intra(&arch, &net.layers[*li], c)).collect();
+        let t_seq = t.elapsed_s();
+
+        let cache = CostCache::new();
+        let threads = available_threads();
+        let t = Timer::start();
+        let par = par_map(&ctxs, threads, |(li, c)| {
+            solve_intra_cached(&arch, &net.layers[*li], c, &cache)
+        });
+        let t_par = t.elapsed_s();
+        // Determinism invariant: the parallel/cached sweep returns the
+        // exact schemes of the sequential path.
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "parallel sweep diverged");
+        }
+        lines.push(format!(
+            "L3b parallel+cached sweep ({} ctxs, {threads} threads): {:.2} s -> {:.2} s \
+             ({:.1}x, cache hit rate {:.0}%)",
+            ctxs.len(),
+            t_seq,
+            t_par,
+            t_seq / t_par.max(1e-9),
+            100.0 * cache.hit_rate()
+        ));
+    }
+
     // L3c: exhaustive enumeration rate.
     {
         let t = Timer::start();
@@ -77,6 +129,30 @@ fn main() {
         });
         let rate = count as f64 / t.elapsed_s();
         lines.push(format!("L3c exhaustive enumeration: {:.2} M schemes/s ({count} visited)", rate / 1e6));
+    }
+
+    // L3c-cache: the evaluation memo on the exhaustive inner loop —
+    // identical scheme stream scored cold (computing) then warm (memo).
+    {
+        let cache = CostCache::new();
+        let run = || {
+            let t = Timer::start();
+            let mut n = 0u64;
+            visit_schemes(&arch, conv2, (4, 4), 16, true, |s| {
+                std::hint::black_box(cache.evaluate_layer(&arch, s, false));
+                n += 1;
+                n < 100_000
+            });
+            (n, t.elapsed_s())
+        };
+        let (n1, cold) = run();
+        let (_, warm) = run();
+        lines.push(format!(
+            "L3c cached evaluation ({n1} schemes): cold {:.2} M evals/s, warm {:.2} M evals/s ({:.1}x)",
+            n1 as f64 / cold.max(1e-9) / 1e6,
+            n1 as f64 / warm.max(1e-9) / 1e6,
+            cold / warm.max(1e-9)
+        ));
     }
 
     // L3d: inter-layer DP.
@@ -112,23 +188,32 @@ fn main() {
         let native_rate = (reps * feats.len()) as f64 / t.elapsed_s();
         lines.push(format!("L1 native cost formula: {:.1} M evals/s", native_rate / 1e6));
 
-        if kapla::runtime::artifacts_available() {
-            let rt = kapla::runtime::Runtime::cpu().expect("pjrt client");
-            let eval = rt.cost_evaluator().expect("cost artifact");
-            let params = kapla::runtime::cost_params(&arch);
-            for chunk in [256usize, 1024, 4096] {
-                let t = Timer::start();
-                let out = eval.eval(&feats[..chunk], params).unwrap();
-                std::hint::black_box(out);
-                let per_call = t.elapsed_ms();
-                let rate = chunk as f64 / t.elapsed_s();
-                lines.push(format!(
-                    "L1 PJRT cost kernel batch={chunk}: {per_call:.2} ms/call, {:.2} M evals/s",
-                    rate / 1e6
-                ));
+        #[cfg(feature = "pjrt")]
+        {
+            if kapla::runtime::artifacts_available() {
+                let rt = kapla::runtime::Runtime::cpu().expect("pjrt client");
+                let eval = rt.cost_evaluator().expect("cost artifact");
+                let params = kapla::runtime::cost_params(&arch);
+                for chunk in [256usize, 1024, 4096] {
+                    let t = Timer::start();
+                    let out = eval.eval(&feats[..chunk], params).unwrap();
+                    std::hint::black_box(out);
+                    let per_call = t.elapsed_ms();
+                    let rate = chunk as f64 / t.elapsed_s();
+                    lines.push(format!(
+                        "L1 PJRT cost kernel batch={chunk}: {per_call:.2} ms/call, {:.2} M evals/s",
+                        rate / 1e6
+                    ));
+                }
+            } else {
+                lines.push("L1 PJRT cost kernel: skipped (run `make artifacts`)".into());
             }
-        } else {
-            lines.push("L1 PJRT cost kernel: skipped (run `make artifacts`)".into());
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            lines.push(
+                "L1 PJRT cost kernel: skipped (build with --features pjrt + vendored xla)".into(),
+            );
         }
     }
 

@@ -80,7 +80,10 @@ pub struct Job {
     pub dp: DpConfig,
 }
 
-/// Run one scheduling job to completion.
+/// Run one scheduling job to completion. Within the job, independent
+/// per-layer/per-segment intra solves shard across `job.dp.solve_threads`
+/// scoped workers and share one `cost::CostCache`; the schedule is
+/// byte-identical for any thread count (tests/parallel_determinism.rs).
 pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
     match job.solver {
         SolverKind::Kapla => kapla_schedule(arch, &job.net, job.batch, job.objective, &job.dp).0,
@@ -98,32 +101,14 @@ pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
 }
 
 /// Run a batch of jobs over `threads` worker threads (work stealing via a
-/// shared atomic index). Results come back in job order.
+/// shared atomic index, `util::par_map`). Results come back in job order.
 pub fn run_jobs(arch: &ArchConfig, jobs: &[Job], threads: usize) -> Vec<SolveResult> {
-    let threads = threads.max(1).min(jobs.len().max(1));
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<SolveResult>>> =
-        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let r = run_job(arch, &jobs[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-
-    results.into_iter().map(|m| m.into_inner().unwrap().expect("job not run")).collect()
+    crate::util::par_map(jobs, threads, |job| run_job(arch, job))
 }
 
 /// Default worker-thread count (the paper used 8 parallel processes).
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(8)
+    crate::util::available_threads()
 }
 
 #[cfg(test)]

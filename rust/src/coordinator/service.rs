@@ -57,7 +57,10 @@ fn handle_schedule(arch: &ArchConfig, args: &[&str]) -> Json {
     };
     let net = if rest.contains(&"train") { workloads::training_graph(&fwd) } else { fwd };
 
-    let job = Job { net, batch, objective, solver, dp: DpConfig::default() };
+    // Service requests are latency-sensitive: saturate the host for the
+    // intra-layer sweep (results are identical for any thread count).
+    let dp = DpConfig { solve_threads: super::default_threads(), ..DpConfig::default() };
+    let job = Job { net, batch, objective, solver, dp };
     let r = run_job(arch, &job);
 
     let mut o = Json::obj();

@@ -1,0 +1,263 @@
+//! Memoized candidate evaluation: a thread-safe cache in front of the
+//! detailed simulator (`sim::evaluate_layer`).
+//!
+//! Every solver family evaluates large candidate sets on the detailed
+//! model, and the same (scheme, forwarding) pair recurs constantly: the
+//! KAPLA stacking pass re-probes partitions along its hill-climbing paths
+//! and the final solve re-scores the probe schemes; the inter-layer DP
+//! re-enumerates overlapping spans whose segments share layer contexts;
+//! the ML baseline proposes duplicate mutations. `evaluate_layer` is a
+//! pure function of (arch, scheme, ifm_on_chip), so one `CostCache` is
+//! shared per scheduling run — across `solvers::kapla::solve_intra`,
+//! `solvers::exhaustive`, `solvers::random`, `solvers::ml` and the worker
+//! threads of the parallel intra-layer sweep (MAESTRO-style analytical
+//! models get their speed from exactly this kind of cheap repeated query).
+//!
+//! The map is sharded under independent mutexes so the scoped worker pool
+//! (`util::par_map`) can hit it concurrently with little contention, and
+//! the key is built from the scheme's integer fields only (the f64 members
+//! of `UnitMap` are themselves pure functions of those fields), so lookups
+//! are exact — no float hashing, no collisions by construction.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::arch::{ArchConfig, PeDataflow};
+use crate::directives::{LayerScheme, LevelBlock};
+use crate::mapping::LayerShape;
+use crate::partition::PartitionScheme;
+use crate::sim::LayerEval;
+
+/// Exact identity of one detailed-model evaluation. `UnitMap`'s derived
+/// f64 fields (utilization) and derived quantities (granule, totals) are
+/// functions of (shape, array, dataflow, rs_chunk), so together with the
+/// arch fingerprint this integer tuple uniquely determines the result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SchemeKey {
+    arch_fp: u64,
+    shape: LayerShape,
+    array: (u64, u64),
+    dataflow: PeDataflow,
+    rs_chunk: u64,
+    part: PartitionScheme,
+    regf: LevelBlock,
+    gbuf: LevelBlock,
+    ifm_on_chip: bool,
+}
+
+impl SchemeKey {
+    fn of(arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> SchemeKey {
+        SchemeKey {
+            arch_fp: arch_fingerprint(arch),
+            shape: s.unit.shape,
+            array: s.unit.array,
+            dataflow: s.unit.dataflow,
+            rs_chunk: s.unit.rs_chunk,
+            part: s.part,
+            regf: s.regf,
+            gbuf: s.gbuf,
+            ifm_on_chip,
+        }
+    }
+}
+
+/// FNV fingerprint of every `ArchConfig` field the detailed model reads, so
+/// one cache shared across hardware configs (hw sweeps, a future cross-job
+/// cache) can never return an evaluation computed for another arch.
+///
+/// Recomputed per lookup on purpose: ~17 u64 mixes are noise next to the
+/// shard lock + map probe, and any memo keyed on `&ArchConfig` identity
+/// (address) could alias a reallocated config — the exact bug this
+/// fingerprint exists to prevent.
+fn arch_fingerprint(arch: &ArchConfig) -> u64 {
+    crate::util::fnv1a([
+        arch.nodes.0,
+        arch.nodes.1,
+        arch.pes.0,
+        arch.pes.1,
+        arch.regf.bytes,
+        arch.gbuf.bytes,
+        arch.word_bytes,
+        arch.mac_pj.to_bits(),
+        arch.regf.pj_per_word.to_bits(),
+        arch.gbuf.pj_per_word.to_bits(),
+        arch.gbuf.words_per_cycle.to_bits(),
+        arch.dram.pj_per_word.to_bits(),
+        arch.noc_pj_per_bit_hop.to_bits(),
+        arch.noc_words_per_cycle.to_bits(),
+        arch.dram_bw_bytes_per_s.to_bits(),
+        arch.freq_hz.to_bits(),
+        matches!(arch.pe_dataflow, PeDataflow::Systolic) as u64,
+    ])
+}
+
+const SHARDS: usize = 16;
+
+/// Sharded memo table for `sim::evaluate_layer` results.
+pub struct CostCache {
+    shards: Vec<Mutex<HashMap<SchemeKey, LayerEval>>>,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        CostCache::new()
+    }
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(key: &SchemeKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    /// Evaluate `s` on the detailed model, memoized. Concurrent misses on
+    /// the same key may both compute (the function is pure, so they agree);
+    /// the lock is never held across the evaluation itself.
+    pub fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval {
+        let key = SchemeKey::of(arch, s, ifm_on_chip);
+        let shard = &self.shards[Self::shard_of(&key)];
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        if let Some(ev) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *ev;
+        }
+        let ev = crate::sim::evaluate_layer(arch, s, ifm_on_chip);
+        shard.lock().unwrap().insert(key, ev);
+        ev
+    }
+
+    /// Total lookups served since construction.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Lookups answered from the memo table.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups answered from the memo table (0.0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / l as f64
+        }
+    }
+
+    /// Distinct evaluations currently memoized.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::directives::{Grp, LoopOrder, Qty};
+    use crate::mapping::UnitMap;
+    use crate::workloads::Layer;
+
+    fn scheme(arch: &ArchConfig, k: u64) -> LayerScheme {
+        let l = Layer::conv("c", 16, k, 14, 3, 1);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(arch, part.node_shape(&l, 4));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        }
+    }
+
+    #[test]
+    fn repeated_lookup_hits_and_matches_simulator() {
+        let arch = presets::multi_node_eyeriss();
+        let cache = CostCache::new();
+        let s = scheme(&arch, 32);
+        let a = cache.evaluate_layer(&arch, &s, false);
+        let b = cache.evaluate_layer(&arch, &s, false);
+        assert_eq!(cache.lookups(), 2);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        let direct = crate::sim::evaluate_layer(&arch, &s, false);
+        assert_eq!(a.energy.total(), direct.energy.total());
+        assert_eq!(b.latency_cycles, direct.latency_cycles);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forwarding_flag_is_part_of_the_key() {
+        let arch = presets::multi_node_eyeriss();
+        let cache = CostCache::new();
+        let s = scheme(&arch, 32);
+        let off = cache.evaluate_layer(&arch, &s, false);
+        let on = cache.evaluate_layer(&arch, &s, true);
+        assert_eq!(cache.hits(), 0, "distinct forwarding must not alias");
+        assert_eq!(cache.len(), 2);
+        assert!(on.energy.dram_pj < off.energy.dram_pj);
+    }
+
+    #[test]
+    fn distinct_schemes_do_not_alias() {
+        let arch = presets::multi_node_eyeriss();
+        let cache = CostCache::new();
+        let a = cache.evaluate_layer(&arch, &scheme(&arch, 32), false);
+        let b = cache.evaluate_layer(&arch, &scheme(&arch, 64), false);
+        assert_eq!(cache.hits(), 0);
+        assert!(b.energy.total() > a.energy.total());
+    }
+
+    #[test]
+    fn arch_is_part_of_the_key() {
+        // Two configs with identical node internals except GBUF capacity:
+        // the scheme structure (and thus the rest of the key) is identical,
+        // so only the arch fingerprint separates the entries.
+        let a1 = crate::arch::presets::eyeriss_like((4, 4), (8, 8), 64, 32 * 1024);
+        let a2 = crate::arch::presets::eyeriss_like((4, 4), (8, 8), 64, 64 * 1024);
+        let cache = CostCache::new();
+        let s = scheme(&a1, 32);
+        let e1 = cache.evaluate_layer(&a1, &s, false);
+        let e2 = cache.evaluate_layer(&a2, &s, false);
+        assert_eq!(cache.hits(), 0, "different arches must not alias");
+        assert_eq!(cache.len(), 2);
+        // Larger GBUF costs more per access (sqrt-capacity energy fit).
+        assert!(e2.energy.gbuf_pj > e1.energy.gbuf_pj);
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let arch = presets::multi_node_eyeriss();
+        let cache = CostCache::new();
+        let schemes: Vec<LayerScheme> =
+            (0..16).map(|i| scheme(&arch, 16 + 16 * (i % 4))).collect();
+        let evs = crate::util::par_map(&schemes, 4, |s| {
+            cache.evaluate_layer(&arch, s, false).energy.total()
+        });
+        for (s, e) in schemes.iter().zip(&evs) {
+            assert_eq!(*e, crate::sim::evaluate_layer(&arch, s, false).energy.total());
+        }
+        assert_eq!(cache.len(), 4, "four distinct K values");
+        assert_eq!(cache.lookups(), 16);
+    }
+}

@@ -12,6 +12,10 @@
 //! batched cost kernel (`python/compile/kernels/cost_batch.py`) that the
 //! runtime can invoke to score large candidate batches in one call.
 
+pub mod cache;
+
+pub use cache::CostCache;
+
 use crate::arch::{energy as earch, ArchConfig};
 use crate::interlayer::Segment;
 use crate::workloads::{Layer, Network};

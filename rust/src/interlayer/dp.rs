@@ -22,11 +22,17 @@ pub struct DpConfig {
     pub max_rounds: u64,
     /// Ranked inter-layer schemes retained per span after pruning.
     pub top_per_span: usize,
+    /// Worker threads for the independent intra-layer solves (the paper
+    /// measured 8 parallel processes, Table IV). Every solver is pure per
+    /// context, so the resulting schedule is byte-identical for any value;
+    /// 1 runs fully inline. Use `util::available_threads()` to saturate
+    /// the host.
+    pub solve_threads: usize,
 }
 
 impl Default for DpConfig {
     fn default() -> Self {
-        DpConfig { ks: 4, max_seg_len: 4, max_rounds: 64, top_per_span: 2 }
+        DpConfig { ks: 4, max_seg_len: 4, max_rounds: 64, top_per_span: 2, solve_threads: 1 }
     }
 }
 

@@ -52,6 +52,10 @@ pub struct PruneStats {
 
 /// Apply conservative validity pruning then Pareto filtering on
 /// (energy, latency) estimates, returning survivors sorted by score.
+///
+/// The estimates are pure per-candidate arithmetic, so large candidate
+/// sets are scored across the scoped worker pool; results keep candidate
+/// order, making the output independent of the thread count.
 pub fn prune_and_rank(
     arch: &ArchConfig,
     net: &Network,
@@ -59,30 +63,31 @@ pub fn prune_and_rank(
     candidates: Vec<Segment>,
 ) -> (Vec<RankedSegment>, PruneStats) {
     let mut stats = PruneStats { total: candidates.len(), ..Default::default() };
-    let mut ranked: Vec<RankedSegment> = candidates
-        .into_iter()
-        .filter(|seg| conservative_valid(arch, net, batch, seg))
-        .map(|seg| {
-            let est = segment_lower_bound(arch, net, batch, &seg);
-            RankedSegment { seg, est }
-        })
-        .collect();
-    stats.after_validity = ranked.len();
+    let valid: Vec<Segment> =
+        candidates.into_iter().filter(|seg| conservative_valid(arch, net, batch, seg)).collect();
+    stats.after_validity = valid.len();
+
+    // A lower-bound estimate costs ~1us; spawning the scoped pool costs
+    // ~100us. Only shard genuinely large candidate sets (full-scale meshes
+    // with long spans) — everything else runs inline.
+    let threads = if valid.len() >= 1024 { crate::util::available_threads() } else { 1 };
+    let ests =
+        crate::util::par_map(&valid, threads, |seg| segment_lower_bound(arch, net, batch, seg));
+    let mut ranked: Vec<RankedSegment> =
+        valid.into_iter().zip(ests).map(|(seg, est)| RankedSegment { seg, est }).collect();
 
     // Pareto prune on (energy, latency): drop candidates dominated by
-    // another candidate in both objectives (paper §IV-B: "skipping the
+    // *any* other candidate in both objectives (paper §IV-B: "skipping the
     // schemes with non-Pareto-optimal access counts").
     let mut keep = vec![true; ranked.len()];
     for i in 0..ranked.len() {
-        if !keep[i] {
-            continue;
-        }
         for j in 0..ranked.len() {
-            if i == j || !keep[i] {
-                break;
+            if i == j {
+                continue;
             }
             if dominates(&ranked[j].est, &ranked[i].est) {
                 keep[i] = false;
+                break;
             }
         }
     }
@@ -151,6 +156,27 @@ mod tests {
         // sorted by score
         for w in ranked.windows(2) {
             assert!(w[0].est.score() <= w[1].est.score());
+        }
+    }
+
+    #[test]
+    fn survivors_form_a_pareto_front() {
+        // No survivor may be dominated by any other — including by
+        // candidates enumerated *after* it (the seed's dominance loop
+        // stopped at j == i and only ever compared against earlier ones).
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let cands = enumerate_segment_schemes(&net, &arch, 64, &[2, 3], 64);
+        let (ranked, _) = prune_and_rank(&arch, &net, 64, cands);
+        for (i, a) in ranked.iter().enumerate() {
+            for (j, b) in ranked.iter().enumerate() {
+                if i != j {
+                    assert!(
+                        !dominates(&a.est, &b.est),
+                        "survivor {j} is dominated by survivor {i}"
+                    );
+                }
+            }
         }
     }
 

@@ -51,8 +51,19 @@ fn usage() {
     eprintln!(
         "kapla <schedule|directives|compare|validate|serve|info> \
          [--net NAME] [--batch N] [--arch multi|edge|bench] \
-         [--solver k|b|s|r[:p]|m[:rounds]] [--objective energy|latency] [--train]"
+         [--solver k|b|s|r[:p]|m[:rounds]] [--objective energy|latency] [--train] \
+         [--threads N]"
     );
+}
+
+/// DP knobs for CLI jobs: intra-layer solves use all available workers
+/// unless `--threads` overrides (results are identical either way).
+fn dp_of(flags: &HashMap<String, String>) -> DpConfig {
+    let threads = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(coordinator::default_threads);
+    DpConfig { solve_threads: threads, ..DpConfig::default() }
 }
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -102,7 +113,7 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
     };
     let solver =
         flags.get("solver").and_then(|s| SolverKind::parse(s)).unwrap_or(SolverKind::Kapla);
-    let job = Job { net, batch, objective: objective_of(flags), solver, dp: DpConfig::default() };
+    let job = Job { net, batch, objective: objective_of(flags), solver, dp: dp_of(flags) };
     println!(
         "scheduling {} (batch {batch}) on {} with {}...",
         job.net.name,
@@ -161,11 +172,18 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
         .filter_map(SolverKind::parse)
         .collect();
     let obj = objective_of(flags);
+    // Job-level parallelism already saturates the host here; keep each
+    // job's intra-layer sweep sequential so the pools don't multiply
+    // (`--threads` caps the outer job pool).
+    let threads = flags
+        .get("threads")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(coordinator::default_threads);
     let jobs: Vec<Job> = solvers
         .iter()
         .map(|&solver| Job { net: net.clone(), batch, objective: obj, solver, dp: DpConfig::default() })
         .collect();
-    let results = coordinator::run_jobs(&arch, &jobs, coordinator::default_threads());
+    let results = coordinator::run_jobs(&arch, &jobs, threads);
     let base = results[0].eval.energy.total();
     let mut t = Table::new(
         &format!("{} batch={batch} on {}", net.name, arch.name),

@@ -60,9 +60,15 @@ pub fn bench_batch() -> u64 {
 }
 
 /// The DP knobs for benches: paper defaults, with a rounds cap that keeps
-/// the scaled exhaustive space tractable.
+/// the scaled exhaustive space tractable. Intra-layer solves use the full
+/// worker pool, matching the paper's "8 parallel processes" methodology
+/// (results are identical to the sequential path by construction).
 pub fn bench_dp() -> DpConfig {
-    DpConfig { max_rounds: if full_scale() { 64 } else { 8 }, ..DpConfig::default() }
+    DpConfig {
+        max_rounds: if full_scale() { 64 } else { 8 },
+        solve_threads: crate::util::available_threads(),
+        ..DpConfig::default()
+    }
 }
 
 /// The five paper solvers in presentation order (B S R M K).

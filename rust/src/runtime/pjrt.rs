@@ -1,0 +1,333 @@
+//! PJRT-backed execution of the AOT artifacts (feature `pjrt`).
+//!
+//! This module is only compiled with `--features pjrt` and expects vendored
+//! `xla` (xla_extension bindings) and `anyhow` path dependencies to be
+//! added to `Cargo.toml` by the builder; the offline default tree ships
+//! neither, and the rest of the crate never requires them.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::{default_artifact_dir, COST_BATCH, INFER_BATCH, TRAIN_BATCH};
+use crate::cost::{CostEstimate, NUM_FEATURES, SCHEME_FEATURES};
+use crate::solvers::ml::{CostPredictor, NativeMlp, HIDDEN};
+
+fn load_executable(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Batched cost evaluation through the AOT kernel.
+pub struct BatchCostEvaluator {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BatchCostEvaluator {
+    pub fn load(client: &xla::PjRtClient, dir: &Path) -> Result<BatchCostEvaluator> {
+        Ok(BatchCostEvaluator { exe: load_executable(client, &dir.join("cost_batch.hlo.txt"))? })
+    }
+
+    /// Evaluate a batch of feature vectors; pads/chunks to the artifact's
+    /// static batch size.
+    pub fn eval(
+        &self,
+        feats: &[[f64; NUM_FEATURES]],
+        params: [f32; 5],
+    ) -> Result<Vec<CostEstimate>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(COST_BATCH) {
+            let mut buf = vec![0f32; COST_BATCH * NUM_FEATURES];
+            for (r, f) in chunk.iter().enumerate() {
+                for (c, &v) in f.iter().enumerate() {
+                    buf[r * NUM_FEATURES + c] = v as f32;
+                }
+            }
+            let x = xla::Literal::vec1(&buf).reshape(&[COST_BATCH as i64, NUM_FEATURES as i64])?;
+            let p = xla::Literal::vec1(&params);
+            let res = self.exe.execute::<xla::Literal>(&[x, p])?[0][0].to_literal_sync()?;
+            let tuple = res.to_tuple1()?;
+            let vals = tuple.to_vec::<f32>()?; // [COST_BATCH, 2] row major
+            for r in 0..chunk.len() {
+                out.push(CostEstimate {
+                    energy_pj: vals[r * 2] as f64,
+                    latency_cycles: vals[r * 2 + 1] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The surrogate MLP executed through PJRT. Parameter buffers are owned on
+/// the Rust side (initialized identically to `NativeMlp`), so the native
+/// and PJRT implementations are numerically comparable.
+pub struct PjrtSurrogate {
+    infer: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    // Parameters in python layout: w1 [F,H] row-major, b1 [H], w2 [H,1], b2 [1].
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl PjrtSurrogate {
+    pub fn load(client: &xla::PjRtClient, dir: &Path, seed: u64) -> Result<PjrtSurrogate> {
+        let native = NativeMlp::new(seed);
+        let mut s = PjrtSurrogate {
+            infer: load_executable(client, &dir.join("surrogate_infer.hlo.txt"))?,
+            train: load_executable(client, &dir.join("surrogate_train.hlo.txt"))?,
+            w1: vec![0.0; SCHEME_FEATURES * HIDDEN],
+            b1: vec![0.0; HIDDEN],
+            w2: vec![0.0; HIDDEN],
+            b2: vec![0.0; 1],
+        };
+        s.set_params_from_native(&native);
+        Ok(s)
+    }
+
+    /// Copy parameters from a native MLP (rust layout w1[j*F+i] ->
+    /// python layout w1[i*H+j]).
+    pub fn set_params_from_native(&mut self, m: &NativeMlp) {
+        let f = SCHEME_FEATURES;
+        for j in 0..HIDDEN {
+            for i in 0..f {
+                self.w1[i * HIDDEN + j] = m.w1[j * f + i] as f32;
+            }
+            self.b1[j] = m.b1[j] as f32;
+            self.w2[j] = m.w2[j] as f32;
+        }
+        self.b2[0] = m.b2 as f32;
+    }
+
+    fn param_literals(&self) -> Result<[xla::Literal; 4]> {
+        Ok([
+            xla::Literal::vec1(&self.w1).reshape(&[SCHEME_FEATURES as i64, HIDDEN as i64])?,
+            xla::Literal::vec1(&self.b1),
+            xla::Literal::vec1(&self.w2).reshape(&[HIDDEN as i64, 1])?,
+            xla::Literal::vec1(&self.b2),
+        ])
+    }
+
+    fn feats_literal(
+        &self,
+        feats: &[[f64; SCHEME_FEATURES]],
+        rows: usize,
+    ) -> Result<xla::Literal> {
+        let mut buf = vec![0f32; rows * SCHEME_FEATURES];
+        for r in 0..rows {
+            // Cyclic padding keeps batch statistics meaningful.
+            let src = &feats[r % feats.len()];
+            for (c, &v) in src.iter().enumerate() {
+                buf[r * SCHEME_FEATURES + c] = v as f32;
+            }
+        }
+        Ok(xla::Literal::vec1(&buf).reshape(&[rows as i64, SCHEME_FEATURES as i64])?)
+    }
+}
+
+impl CostPredictor for PjrtSurrogate {
+    fn predict(&mut self, feats: &[[f64; SCHEME_FEATURES]]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(INFER_BATCH) {
+            let run = || -> Result<Vec<f32>> {
+                let [w1, b1, w2, b2] = self.param_literals()?;
+                let x = self.feats_literal(chunk, INFER_BATCH)?;
+                let res = self.infer.execute::<xla::Literal>(&[w1, b1, w2, b2, x])?[0][0]
+                    .to_literal_sync()?;
+                Ok(res.to_tuple1()?.to_vec::<f32>()?)
+            };
+            let vals = run().expect("surrogate inference failed");
+            out.extend(vals.iter().take(chunk.len()).map(|&v| v as f64));
+        }
+        out
+    }
+
+    fn train_step(&mut self, feats: &[[f64; SCHEME_FEATURES]], targets: &[f64]) -> f64 {
+        assert_eq!(feats.len(), targets.len());
+        if feats.is_empty() {
+            return 0.0;
+        }
+        let mut run = || -> Result<f64> {
+            let [w1, b1, w2, b2] = self.param_literals()?;
+            let x = self.feats_literal(feats, TRAIN_BATCH)?;
+            let mut ybuf = vec![0f32; TRAIN_BATCH];
+            for (r, y) in ybuf.iter_mut().enumerate() {
+                *y = targets[r % targets.len()] as f32;
+            }
+            let y = xla::Literal::vec1(&ybuf);
+            let res = self.train.execute::<xla::Literal>(&[w1, b1, w2, b2, x, y])?[0][0]
+                .to_literal_sync()?;
+            let outs = res.to_tuple()?;
+            anyhow::ensure!(outs.len() == 5, "train step returned {} outputs", outs.len());
+            let mut it = outs.into_iter();
+            self.w1 = it.next().unwrap().to_vec::<f32>()?;
+            self.b1 = it.next().unwrap().to_vec::<f32>()?;
+            self.w2 = it.next().unwrap().to_vec::<f32>()?;
+            self.b2 = it.next().unwrap().to_vec::<f32>()?;
+            let loss = it.next().unwrap().to_vec::<f32>()?;
+            Ok(loss[0] as f64)
+        };
+        run().expect("surrogate train step failed")
+    }
+}
+
+/// Bundle of the PJRT client + artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client over the default artifact directory.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()?, dir: default_artifact_dir() })
+    }
+
+    pub fn cost_evaluator(&self) -> Result<BatchCostEvaluator> {
+        BatchCostEvaluator::load(&self.client, &self.dir)
+    }
+
+    pub fn surrogate(&self, seed: u64) -> Result<PjrtSurrogate> {
+        PjrtSurrogate::load(&self.client, &self.dir, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{cost_from_features, features, LayerCtx};
+    use crate::runtime::{artifacts_available, cost_params};
+    use crate::workloads::nets;
+
+    fn skip() -> bool {
+        if !artifacts_available() {
+            eprintln!("skipping runtime test: artifacts/ missing (run `make artifacts`)");
+            return true;
+        }
+        false
+    }
+
+    #[test]
+    fn cost_kernel_matches_rust_formula() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let eval = rt.cost_evaluator().unwrap();
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let mut feats = Vec::new();
+        let mut expect = Vec::new();
+        for (i, l) in net.layers.iter().enumerate() {
+            let ctx = LayerCtx {
+                nodes: 16 + i as u64,
+                round_batch: 4,
+                rounds: 2,
+                ifm_on_chip: i % 2 == 0,
+                ofm_on_chip: i % 3 == 0,
+                dram_hops: 2.0,
+            };
+            let f = features(&arch, l, &ctx);
+            expect.push(cost_from_features(&arch, &f));
+            feats.push(f);
+        }
+        let got = eval.eval(&feats, cost_params(&arch)).unwrap();
+        assert_eq!(got.len(), expect.len());
+        for (g, e) in got.iter().zip(&expect) {
+            let rel = (g.energy_pj - e.energy_pj).abs() / e.energy_pj.max(1.0);
+            assert!(rel < 1e-4, "energy {} vs {}", g.energy_pj, e.energy_pj);
+            let rel = (g.latency_cycles - e.latency_cycles).abs() / e.latency_cycles.max(1.0);
+            assert!(rel < 1e-4, "latency {} vs {}", g.latency_cycles, e.latency_cycles);
+        }
+    }
+
+    #[test]
+    fn surrogate_parity_with_native() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut pjrt = rt.surrogate(42).unwrap();
+        let mut native = NativeMlp::new(42);
+
+        let mut rng = crate::util::SplitMix64::new(9);
+        let feats: Vec<[f64; SCHEME_FEATURES]> = (0..INFER_BATCH)
+            .map(|_| {
+                let mut f = [0.0; SCHEME_FEATURES];
+                for v in f.iter_mut() {
+                    *v = rng.f64() * 4.0 - 2.0;
+                }
+                f
+            })
+            .collect();
+
+        let pn = native.predict(&feats);
+        let pp = pjrt.predict(&feats);
+        for (a, b) in pn.iter().zip(&pp) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "native {a} vs pjrt {b}");
+        }
+    }
+
+    #[test]
+    fn surrogate_train_step_parity() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut pjrt = rt.surrogate(7).unwrap();
+        let mut native = NativeMlp::new(7);
+
+        let mut rng = crate::util::SplitMix64::new(13);
+        let feats: Vec<[f64; SCHEME_FEATURES]> = (0..TRAIN_BATCH)
+            .map(|_| {
+                let mut f = [0.0; SCHEME_FEATURES];
+                for v in f.iter_mut() {
+                    *v = rng.f64();
+                }
+                f
+            })
+            .collect();
+        let targets: Vec<f64> = (0..TRAIN_BATCH).map(|_| rng.f64() * 2.0).collect();
+
+        let ln = native.train_step(&feats, &targets);
+        let lp = pjrt.train_step(&feats, &targets);
+        assert!((ln - lp).abs() < 1e-3 * (1.0 + ln.abs()), "loss native {ln} vs pjrt {lp}");
+
+        // Predictions after one step still agree.
+        let pn = native.predict(&feats);
+        let pp = pjrt.predict(&feats);
+        for (a, b) in pn.iter().zip(&pp).take(8) {
+            assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "post-step native {a} vs pjrt {b}");
+        }
+    }
+
+    #[test]
+    fn surrogate_learns_through_pjrt() {
+        if skip() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut s = rt.surrogate(3).unwrap();
+        let mut rng = crate::util::SplitMix64::new(5);
+        let feats: Vec<[f64; SCHEME_FEATURES]> = (0..TRAIN_BATCH)
+            .map(|_| {
+                let mut f = [0.0; SCHEME_FEATURES];
+                for v in f.iter_mut() {
+                    *v = rng.f64();
+                }
+                f
+            })
+            .collect();
+        let targets: Vec<f64> = feats.iter().map(|f| 2.0 * f[0] + 0.5 * f[3] + 1.0).collect();
+        let first = s.train_step(&feats, &targets);
+        let mut last = first;
+        for _ in 0..200 {
+            last = s.train_step(&feats, &targets);
+        }
+        assert!(last < first * 0.2, "PJRT training loss {first} -> {last}");
+    }
+}

@@ -15,13 +15,13 @@
 //! the detailed model.
 
 use crate::arch::ArchConfig;
+use crate::cost::CostCache;
 use crate::directives::{refetch_factor_groups, tensor_groups, Grp, LevelBlock, LayerScheme, LoopOrder, Qty, TensorKind};
 use crate::interlayer::dp::{best_chains, DpConfig};
 use crate::interlayer::prune::PruneStats;
 use crate::interlayer::Schedule;
 use crate::mapping::UnitMap;
 use crate::partition::PartitionScheme;
-use crate::sim::evaluate_layer;
 use crate::sim::pipeline::evaluate_schedule;
 use crate::util::next_divisor;
 use crate::workloads::{Layer, Network};
@@ -37,15 +37,36 @@ impl IntraSolver for KaplaIntra {
         "kapla"
     }
 
-    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
-        solve_intra(arch, layer, ctx)
+    fn solve(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        ctx: &IntraCtx,
+        cost: &CostCache,
+    ) -> Option<LayerScheme> {
+        solve_intra_cached(arch, layer, ctx, cost)
     }
 }
 
-/// Bottom-up solve of one layer in one context.
+/// Bottom-up solve of one layer in one context (uncached convenience
+/// wrapper: each call gets a private evaluation memo).
 pub fn solve_intra(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
+    solve_intra_cached(arch, layer, ctx, &CostCache::new())
+}
+
+/// Bottom-up solve of one layer in one context, with all detailed-model
+/// evaluations memoized through the shared run-wide `cost` cache. The
+/// stacking pass probes each partition with the default loop orders and
+/// the final sweep re-scores the same schemes, so even a single solve hits
+/// the cache; across overlapping segment contexts the reuse compounds.
+pub fn solve_intra_cached(
+    arch: &ArchConfig,
+    layer: &Layer,
+    ctx: &IntraCtx,
+    cost: &CostCache,
+) -> Option<LayerScheme> {
     let mut best: Option<(f64, LayerScheme)> = None;
-    for part in stacking_candidates(arch, layer, ctx) {
+    for part in stacking_candidates(arch, layer, ctx, cost) {
         let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
         // Level 1: REGF caching per order. The REGF block must stay
         // GBUF-feasible too (the next level's block contains it).
@@ -76,13 +97,13 @@ pub fn solve_intra(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<L
                 if s.validate(arch).is_err() {
                     continue;
                 }
-                let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
-                let cost = match ctx.objective {
+                let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
+                let c = match ctx.objective {
                     Objective::Energy => ev.energy.total(),
                     Objective::Latency => ev.latency_cycles,
                 };
-                if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
-                    best = Some((cost, s));
+                if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                    best = Some((c, s));
                 }
             }
         }
@@ -177,7 +198,12 @@ fn grow(q: Qty, g: Grp, totals: Qty, granule: Qty) -> Option<Qty> {
 /// several seeds (pure batch / output / fmap splits and the unit
 /// partition), scored by a one-shot descend + evaluate probe. Returns the
 /// distinct partitions encountered on the best paths.
-fn stacking_candidates(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Vec<PartitionScheme> {
+fn stacking_candidates(
+    arch: &ArchConfig,
+    layer: &Layer,
+    ctx: &IntraCtx,
+    cost: &CostCache,
+) -> Vec<PartitionScheme> {
     let region = ctx.region;
     let area = region.0 * region.1;
     let mut seen: Vec<PartitionScheme> = Vec::new();
@@ -186,17 +212,17 @@ fn stacking_candidates(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Vec<
     let seeds = seed_partitions(layer, ctx.rb, region);
     for seed in seeds {
         let mut cur = seed;
-        let mut cur_cost = probe_cost(arch, layer, ctx, &cur);
+        let mut cur_cost = probe_cost(arch, layer, ctx, &cur, cost);
         if !seen.contains(&cur) {
             seen.push(cur);
         }
         loop {
             let mut improved = false;
             for next in partition_moves(&cur, layer, ctx.rb, area) {
-                let cost = probe_cost(arch, layer, ctx, &next);
-                if cost < cur_cost {
+                let c = probe_cost(arch, layer, ctx, &next, cost);
+                if c < cur_cost {
                     cur = next;
-                    cur_cost = cost;
+                    cur_cost = c;
                     improved = true;
                 }
             }
@@ -290,9 +316,17 @@ fn partition_moves(cur: &PartitionScheme, layer: &Layer, rb: u64, area: u64) -> 
     out
 }
 
-/// One-shot probe: default orders, full descend, detailed eval. Infinity
-/// when no valid scheme exists under this partition.
-fn probe_cost(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx, part: &PartitionScheme) -> f64 {
+/// One-shot probe: default orders, full descend, detailed eval (memoized —
+/// the hill climb re-probes partitions along its paths and the final sweep
+/// re-scores the same schemes). Infinity when no valid scheme exists under
+/// this partition.
+fn probe_cost(
+    arch: &ArchConfig,
+    layer: &Layer,
+    ctx: &IntraCtx,
+    part: &PartitionScheme,
+    cost: &CostCache,
+) -> f64 {
     let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
     let ro = LoopOrder([Grp::B, Grp::K, Grp::C]);
     let go = LoopOrder([Grp::B, Grp::C, Grp::K]);
@@ -312,7 +346,7 @@ fn probe_cost(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx, part: &Partition
     if s.validate(arch).is_err() {
         return f64::INFINITY;
     }
-    let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
+    let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
     match ctx.objective {
         Objective::Energy => ev.energy.total(),
         Objective::Latency => ev.latency_cycles,
@@ -321,6 +355,11 @@ fn probe_cost(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx, part: &Partition
 
 /// Full KAPLA network scheduling: fast inter-layer DP, then intra-layer
 /// solving of the top-k_S chains, final pick on the detailed model.
+///
+/// With `cfg.solve_threads > 1` the distinct per-layer solve contexts of
+/// all top-k_S chains are solved first across the scoped worker pool; the
+/// chain assembly afterwards only reads the memo, so the schedule is
+/// identical to the sequential run for any thread count.
 pub fn kapla_schedule(
     arch: &ArchConfig,
     net: &Network,
@@ -332,13 +371,33 @@ pub fn kapla_schedule(
     let (chains, stats) = best_chains(arch, net, batch, cfg);
     let intra = KaplaIntra;
     let mut cache: super::IntraCache = std::collections::HashMap::new();
+    let cost = CostCache::new();
+
+    if cfg.solve_threads > 1 {
+        let keys = super::collect_intra_keys(
+            net,
+            batch,
+            chains.iter().flat_map(|c| c.segments.iter()),
+        );
+        super::presolve_contexts(
+            arch,
+            net,
+            keys,
+            &intra,
+            obj,
+            cfg.solve_threads,
+            &mut cache,
+            &cost,
+        );
+    }
 
     let mut best: Option<(f64, Schedule)> = None;
     for chain in &chains {
         let mut segments = Vec::with_capacity(chain.segments.len());
         let mut ok = true;
         for seg in &chain.segments {
-            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache) {
+            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache, &cost)
+            {
                 Some(schemes) => segments.push((seg.clone(), schemes)),
                 None => {
                     ok = false;
@@ -351,12 +410,12 @@ pub fn kapla_schedule(
         }
         let sched = Schedule { segments };
         let ev = evaluate_schedule(arch, net, &sched);
-        let cost = match obj {
+        let c = match obj {
             Objective::Energy => ev.energy.total(),
             Objective::Latency => ev.latency_cycles,
         };
-        if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
-            best = Some((cost, sched));
+        if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+            best = Some((c, sched));
         }
     }
 
@@ -367,9 +426,10 @@ pub fn kapla_schedule(
             let mut segments = Vec::new();
             for i in 0..net.len() {
                 let seg = crate::interlayer::Segment::single(i, arch);
-                let schemes =
-                    super::solve_segment_layers(arch, net, batch, &seg, &intra, obj, &mut cache)
-                        .expect("even singleton segment unschedulable");
+                let schemes = super::solve_segment_layers(
+                    arch, net, batch, &seg, &intra, obj, &mut cache, &cost,
+                )
+                .expect("even singleton segment unschedulable");
                 segments.push((seg, schemes));
             }
             Schedule { segments }
@@ -383,6 +443,7 @@ pub fn kapla_schedule(
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::sim::evaluate_layer;
     use crate::workloads::nets;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
@@ -444,6 +505,33 @@ mod tests {
             let s = solve_intra(&arch, l, &ctx((1, 1), 1)).unwrap_or_else(|| panic!("{}", l.name));
             s.validate(&arch).unwrap();
         }
+    }
+
+    #[test]
+    fn solve_intra_reuses_cached_evaluations() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let cache = CostCache::new();
+        let c = ctx((8, 8), 16);
+        let a = solve_intra_cached(&arch, &net.layers[2], &c, &cache).unwrap();
+        assert!(cache.hits() > 0, "probe/final sweep must share evaluations");
+        let (h1, l1) = (cache.hits(), cache.lookups());
+        let b = solve_intra_cached(&arch, &net.layers[2], &c, &cache).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        // A repeated identical solve answers every evaluation from the memo.
+        assert_eq!(cache.hits() - h1, cache.lookups() - l1);
+    }
+
+    #[test]
+    fn parallel_kapla_schedule_matches_sequential() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let seq_cfg = DpConfig { solve_threads: 1, ..DpConfig::default() };
+        let par_cfg = DpConfig { solve_threads: 4, ..DpConfig::default() };
+        let (seq, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &seq_cfg);
+        let (par, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &par_cfg);
+        assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
+        assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
     }
 
     #[test]

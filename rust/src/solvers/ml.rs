@@ -13,18 +13,16 @@
 //! cross-checked in tests.
 
 use crate::arch::ArchConfig;
-use crate::cost::{scheme_features, SCHEME_FEATURES};
+use crate::cost::{scheme_features, CostCache, SCHEME_FEATURES};
 use crate::directives::{LevelBlock, LayerScheme, LoopOrder};
 use crate::interlayer::dp::DpConfig;
 use crate::mapping::UnitMap;
 use crate::partition::enumerate_partitions;
-use crate::sim::evaluate_layer;
 use crate::util::SplitMix64;
 use crate::workloads::{Layer, Network};
-use std::cell::RefCell;
 
 use super::space::qty_candidates;
-use super::{exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{ctx_fingerprint, exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
 
 /// A trainable cost predictor over scheme features.
 pub trait CostPredictor {
@@ -125,36 +123,37 @@ impl CostPredictor for NativeMlp {
     }
 }
 
-/// Simulated-annealing + surrogate intra-layer solver.
+/// Simulated-annealing + surrogate intra-layer solver. Each (layer,
+/// context) solve gets its own RNG stream *and* its own freshly-initialized
+/// surrogate — both derived from `seed` folded with `ctx_fingerprint` — so
+/// results do not depend on the order contexts are solved in, and the
+/// parallel intra-layer sweep reproduces the sequential schedule exactly
+/// (one surrogate per layer context is also what AutoTVM does per task).
 pub struct MlIntra<P: CostPredictor> {
     pub rounds: usize,
     pub batch: usize,
     pub evals_per_round: usize,
-    state: RefCell<MlState<P>>,
+    seed: u64,
+    make_predictor: fn(u64) -> P,
 }
-
-struct MlState<P> {
-    rng: SplitMix64,
-    predictor: P,
-}
-
-unsafe impl<P: CostPredictor> Sync for MlIntra<P> {}
 
 impl MlIntra<NativeMlp> {
     /// Default configuration with the native surrogate.
     pub fn native(seed: u64, rounds: usize, batch: usize) -> MlIntra<NativeMlp> {
-        MlIntra::with_predictor(NativeMlp::new(seed ^ 0x5eed), seed, rounds, batch)
+        MlIntra::with_factory(NativeMlp::new, seed, rounds, batch)
     }
 }
 
 impl<P: CostPredictor> MlIntra<P> {
-    pub fn with_predictor(predictor: P, seed: u64, rounds: usize, batch: usize) -> MlIntra<P> {
-        MlIntra {
-            rounds,
-            batch,
-            evals_per_round: (batch / 4).max(4),
-            state: RefCell::new(MlState { rng: SplitMix64::new(seed), predictor }),
-        }
+    /// Build with a per-context predictor factory (`make(seed)` must be a
+    /// deterministic function of its seed).
+    pub fn with_factory(
+        make_predictor: fn(u64) -> P,
+        seed: u64,
+        rounds: usize,
+        batch: usize,
+    ) -> MlIntra<P> {
+        MlIntra { rounds, batch, evals_per_round: (batch / 4).max(4), seed, make_predictor }
     }
 }
 
@@ -240,15 +239,23 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         "ml-annealing(M)"
     }
 
-    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
-        let st = &mut *self.state.borrow_mut();
+    fn solve(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        ctx: &IntraCtx,
+        cost: &CostCache,
+    ) -> Option<LayerScheme> {
+        let fp = ctx_fingerprint(layer, ctx);
+        let mut rng = SplitMix64::new(self.seed ^ fp);
+        let mut predictor = (self.make_predictor)(self.seed ^ 0x5eed ^ fp);
         let space = Space { parts: enumerate_partitions(layer, ctx.rb, ctx.region, false) };
         if space.parts.is_empty() {
             return super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb);
         }
 
         let real_cost = |s: &LayerScheme| -> f64 {
-            let ev = evaluate_layer(arch, s, ctx.ifm_on_chip);
+            let ev = cost.evaluate_layer(arch, s, ctx.ifm_on_chip);
             match ctx.objective {
                 Objective::Energy => ev.energy.total(),
                 Objective::Latency => ev.latency_cycles,
@@ -257,7 +264,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
 
         // Seed population.
         let mut pop: Vec<LayerScheme> = (0..self.evals_per_round)
-            .filter_map(|_| space.random_scheme(arch, layer, ctx, &mut st.rng))
+            .filter_map(|_| space.random_scheme(arch, layer, ctx, &mut rng))
             .collect();
         if pop.is_empty() {
             return super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb);
@@ -277,8 +284,8 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
             // Propose a batch of mutations.
             let mut proposals: Vec<LayerScheme> = Vec::with_capacity(self.batch);
             while proposals.len() < self.batch {
-                let parent = pop[st.rng.below(pop.len() as u64) as usize];
-                match space.mutate(arch, layer, ctx, &parent, &mut st.rng) {
+                let parent = pop[rng.below(pop.len() as u64) as usize];
+                match space.mutate(arch, layer, ctx, &parent, &mut rng) {
                     Some(m) => proposals.push(m),
                     None => break,
                 }
@@ -289,7 +296,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
             // Rank by surrogate prediction; evaluate the top few for real.
             let feats: Vec<[f64; SCHEME_FEATURES]> =
                 proposals.iter().map(scheme_features).collect();
-            let preds = st.predictor.predict(&feats);
+            let preds = predictor.predict(&feats);
             let mut idx: Vec<usize> = (0..proposals.len()).collect();
             idx.sort_by(|&a, &b| preds[a].partial_cmp(&preds[b]).unwrap());
 
@@ -298,7 +305,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
                 let c = real_cost(&proposals[i]);
                 dataset.push((feats[i], c.max(1.0).ln()));
                 let (bc, _) = best.as_ref().copied().unwrap();
-                let accept = c < bc || st.rng.chance((-(c / bc).ln().max(0.0) / temp).exp());
+                let accept = c < bc || rng.chance((-(c / bc).ln().max(0.0) / temp).exp());
                 if c < bc {
                     best = Some((c, proposals[i]));
                 }
@@ -318,7 +325,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
             let fs: Vec<[f64; SCHEME_FEATURES]> =
                 dataset[start..].iter().map(|(f, _)| *f).collect();
             let ts: Vec<f64> = dataset[start..].iter().map(|(_, t)| *t).collect();
-            st.predictor.train_step(&fs, &ts);
+            predictor.train_step(&fs, &ts);
         }
 
         best.map(|(_, s)| s).or_else(|| super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb))
@@ -344,6 +351,7 @@ pub fn ml_schedule(
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
@@ -378,7 +386,7 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let intra = MlIntra::native(11, 8, 32);
-        let s = intra.solve(&arch, &l, &ctx((2, 2), 4)).unwrap();
+        let s = intra.solve(&arch, &l, &ctx((2, 2), 4), &CostCache::new()).unwrap();
         s.validate(&arch).unwrap();
     }
 
@@ -387,9 +395,10 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let c = ctx((4, 4), 8);
-        let ex = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c).unwrap();
+        let ex =
+            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &CostCache::new()).unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
-        let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c).unwrap();
+        let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c, &CostCache::new()).unwrap();
         let em = evaluate_layer(&arch, &m, false).energy.total();
         assert!(em + 1e-9 >= ee);
         assert!(em <= ee * 2.5, "ML {em} vs optimal {ee}");
@@ -400,8 +409,21 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let a = MlIntra::native(9, 6, 16).solve(&arch, &l, &c).unwrap();
-        let b = MlIntra::native(9, 6, 16).solve(&arch, &l, &c).unwrap();
+        let a = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let b = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &CostCache::new()).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn solve_order_does_not_change_results() {
+        let arch = presets::bench_multi_node();
+        let l1 = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let l2 = crate::workloads::Layer::fc("f", 256, 128);
+        let c = ctx((2, 2), 4);
+        let intra = MlIntra::native(13, 4, 16);
+        let a1 = intra.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        let _ = intra.solve(&arch, &l2, &c, &CostCache::new());
+        let b1 = intra.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        assert_eq!(format!("{a1:?}"), format!("{b1:?}"));
     }
 }

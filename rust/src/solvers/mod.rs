@@ -19,15 +19,16 @@ pub mod ml;
 pub mod random;
 pub mod space;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::arch::ArchConfig;
+use crate::cost::CostCache;
 use crate::directives::LayerScheme;
 use crate::interlayer::dp::DpConfig;
 use crate::interlayer::prune::conservative_valid;
 use crate::interlayer::{candidate_spans, enumerate_segment_schemes, Schedule, Segment};
 use crate::sim::pipeline::{evaluate_schedule, evaluate_segment, NetEval};
-use crate::workloads::Network;
+use crate::workloads::{Layer, Network};
 
 /// Optimization objective (the paper evaluates energy, Fig. 7/9/10, and
 /// performance, Fig. 8).
@@ -51,14 +52,43 @@ pub struct IntraCtx {
 
 /// An intra-layer solver: find a (near-)optimal `LayerScheme` for one layer
 /// in the given context, or `None` if no valid scheme exists.
+///
+/// Solvers are *pure* per call — all candidate evaluations go through the
+/// shared [`CostCache`] and any internal randomness is derived from the
+/// solver's seed plus [`ctx_fingerprint`] — so independent contexts can be
+/// solved concurrently with results identical to the sequential order.
 pub trait IntraSolver: Sync {
     fn name(&self) -> &'static str;
     fn solve(
         &self,
         arch: &ArchConfig,
-        layer: &crate::workloads::Layer,
+        layer: &Layer,
         ctx: &IntraCtx,
+        cost: &CostCache,
     ) -> Option<LayerScheme>;
+}
+
+/// Deterministic fingerprint of one (layer, context) solve. The stochastic
+/// solvers (R, M) fold this into their seeds so each context gets its own
+/// reproducible stream: solving order — and therefore parallelism — cannot
+/// change any result.
+pub fn ctx_fingerprint(layer: &Layer, ctx: &IntraCtx) -> u64 {
+    crate::util::fnv1a([
+        layer.kind as u64,
+        layer.c,
+        layer.k,
+        layer.xo,
+        layer.yo,
+        layer.r,
+        layer.s,
+        layer.stride,
+        layer.no_batch as u64,
+        ctx.region.0,
+        ctx.region.1,
+        ctx.rb,
+        ctx.ifm_on_chip as u64,
+        matches!(ctx.objective, Objective::Latency) as u64,
+    ])
 }
 
 /// Result of scheduling a whole network.
@@ -85,7 +115,10 @@ fn seg_objective(ev: &crate::sim::pipeline::SegmentEval, obj: Objective) -> f64 
     }
 }
 
-pub(crate) type IntraCache = HashMap<(usize, (u64, u64), u64, bool), Option<LayerScheme>>;
+/// Key of one intra-layer solve: (layer index, region, round batch,
+/// input-forwarded-on-chip).
+pub(crate) type IntraKey = (usize, (u64, u64), u64, bool);
+pub(crate) type IntraCache = HashMap<IntraKey, Option<LayerScheme>>;
 
 /// Solve every layer of a segment with the given intra-layer solver,
 /// memoizing per (layer, region, round-batch, forwarding) context.
@@ -97,6 +130,7 @@ pub(crate) fn solve_segment_layers(
     intra: &dyn IntraSolver,
     obj: Objective,
     cache: &mut IntraCache,
+    cost: &CostCache,
 ) -> Option<Vec<LayerScheme>> {
     let rb = seg.round_batch(batch);
     let mut out = Vec::with_capacity(seg.len());
@@ -106,7 +140,7 @@ pub(crate) fn solve_segment_layers(
         let entry = cache.entry(key).or_insert_with(|| {
             let ctx =
                 IntraCtx { region: seg.regions[pos], rb, ifm_on_chip: on_chip, objective: obj };
-            intra.solve(arch, &net.layers[li], &ctx)
+            intra.solve(arch, &net.layers[li], &ctx, cost)
         });
         match entry {
             Some(s) => out.push(*s),
@@ -116,11 +150,61 @@ pub(crate) fn solve_segment_layers(
     Some(out)
 }
 
+/// Collect the distinct intra-layer solve contexts of a set of candidate
+/// segments, in first-seen order (deterministic).
+pub(crate) fn collect_intra_keys<'a>(
+    net: &Network,
+    batch: u64,
+    segs: impl Iterator<Item = &'a Segment>,
+) -> Vec<IntraKey> {
+    let mut keys = Vec::new();
+    let mut seen: HashSet<IntraKey> = HashSet::new();
+    for seg in segs {
+        let rb = seg.round_batch(batch);
+        for (pos, &li) in seg.layers.iter().enumerate() {
+            let key = (li, seg.regions[pos], rb, seg.ifm_on_chip(net, li));
+            if seen.insert(key) {
+                keys.push(key);
+            }
+        }
+    }
+    keys
+}
+
+/// Solve a batch of independent intra-layer contexts across the scoped
+/// worker pool and deposit the results in `cache`. Because every solver is
+/// pure per context (see [`IntraSolver`]), the filled cache — and thus the
+/// schedule later assembled from it — is identical for any thread count.
+pub(crate) fn presolve_contexts(
+    arch: &ArchConfig,
+    net: &Network,
+    keys: Vec<IntraKey>,
+    intra: &dyn IntraSolver,
+    obj: Objective,
+    threads: usize,
+    cache: &mut IntraCache,
+    cost: &CostCache,
+) {
+    let solved = crate::util::par_map(&keys, threads, |&(li, region, rb, on_chip)| {
+        let ctx = IntraCtx { region, rb, ifm_on_chip: on_chip, objective: obj };
+        intra.solve(arch, &net.layers[li], &ctx, cost)
+    });
+    for (key, s) in keys.into_iter().zip(solved) {
+        cache.insert(key, s);
+    }
+}
+
 /// Exact dynamic program over segment chains: every candidate segment is
 /// fully intra-solved and simulator-evaluated (this is what makes the
 /// exhaustive/random/ML baselines slow and exact). Conservative validity
 /// pruning is safe for optimality and applied for all solvers, mirroring
 /// nn-dataflow's own buffering checks.
+///
+/// With `cfg.solve_threads > 1` the intra-layer solves — the dominant cost
+/// by orders of magnitude — run first, sharded across a scoped worker pool:
+/// the candidate segments (and hence solve contexts) do not depend on DP
+/// state, only the chain costs do, so the sequential DP afterwards is pure
+/// cache assembly and the result is identical to the single-threaded run.
 pub fn exact_dp_schedule(
     arch: &ArchConfig,
     net: &Network,
@@ -139,10 +223,39 @@ pub fn exact_dp_schedule(
     }
     let mut table: Vec<Option<Node>> = (0..n).map(|_| None).collect();
     let mut cache: IntraCache = HashMap::new();
+    let eval_cache = CostCache::new();
+
+    // Enumerate every candidate segment once, grouped per (end layer,
+    // span start). The enumeration is DP-state-independent, so the same
+    // list feeds both the parallel pre-solve and the DP proper. Holding
+    // all spans' candidates at once costs O(total segments) small structs
+    // (~100 MB at the most extreme full-scale settings, trivial at CI
+    // scale) and buys a single loop shape for both thread modes.
+    let mut spans_by_end: Vec<Vec<(usize, Vec<Segment>)>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut per_span = Vec::new();
+        for span in candidate_spans(i, cfg.max_seg_len) {
+            let segs: Vec<Segment> = enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds)
+                .into_iter()
+                .filter(|seg| conservative_valid(arch, net, batch, seg))
+                .collect();
+            per_span.push((span[0], segs));
+        }
+        spans_by_end.push(per_span);
+    }
+
+    if cfg.solve_threads > 1 {
+        let keys = collect_intra_keys(
+            net,
+            batch,
+            spans_by_end.iter().flatten().flat_map(|(_, segs)| segs.iter()),
+        );
+        presolve_contexts(arch, net, keys, intra, obj, cfg.solve_threads, &mut cache, &eval_cache);
+    }
 
     for i in 0..n {
-        for span in candidate_spans(i, cfg.max_seg_len) {
-            let start = span[0];
+        for (start, segs) in &spans_by_end[i] {
+            let start = *start;
             let prev_cost = if start == 0 {
                 0.0
             } else {
@@ -151,22 +264,19 @@ pub fn exact_dp_schedule(
                     None => continue,
                 }
             };
-            for seg in enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds) {
-                if !conservative_valid(arch, net, batch, &seg) {
-                    continue;
-                }
+            for seg in segs {
                 let Some(schemes) =
-                    solve_segment_layers(arch, net, batch, &seg, intra, obj, &mut cache)
+                    solve_segment_layers(arch, net, batch, seg, intra, obj, &mut cache, &eval_cache)
                 else {
                     continue;
                 };
-                let ev = evaluate_segment(arch, net, &seg, &schemes);
+                let ev = evaluate_segment(arch, net, seg, &schemes);
                 let cost = prev_cost + seg_objective(&ev, obj);
                 let better = table[i].as_ref().map(|nd| cost < nd.cost).unwrap_or(true);
                 if better {
                     table[i] = Some(Node {
                         cost,
-                        seg,
+                        seg: seg.clone(),
                         schemes,
                         parent: if start == 0 { None } else { Some(start - 1) },
                     });
@@ -211,6 +321,7 @@ mod tests {
             arch: &ArchConfig,
             layer: &Layer,
             ctx: &IntraCtx,
+            _cost: &CostCache,
         ) -> Option<LayerScheme> {
             space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
         }
@@ -263,5 +374,35 @@ mod tests {
         for (seg, _) in &r.schedule.segments {
             assert_eq!(seg.len(), 1); // single node: no pipelining
         }
+    }
+
+    #[test]
+    fn parallel_dp_matches_sequential_exactly() {
+        let arch = presets::bench_multi_node();
+        let net = small_net();
+        let seq_cfg = DpConfig { solve_threads: 1, ..DpConfig::default() };
+        let par_cfg = DpConfig { solve_threads: 4, ..DpConfig::default() };
+        let seq = exact_dp_schedule(&arch, &net, 4, Objective::Energy, &seq_cfg, &Minimal);
+        let par = exact_dp_schedule(&arch, &net, 4, Objective::Energy, &par_cfg, &Minimal);
+        assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
+        assert_eq!(seq.eval.latency_cycles, par.eval.latency_cycles);
+        assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
+    }
+
+    #[test]
+    fn ctx_fingerprint_distinguishes_contexts() {
+        let a = Layer::conv("a", 8, 16, 28, 3, 1);
+        let b = Layer::conv("b", 8, 16, 28, 3, 1); // same dims, same stream
+        let ctx = |rb| IntraCtx {
+            region: (2, 2),
+            rb,
+            ifm_on_chip: false,
+            objective: Objective::Energy,
+        };
+        assert_eq!(ctx_fingerprint(&a, &ctx(4)), ctx_fingerprint(&b, &ctx(4)));
+        assert_ne!(ctx_fingerprint(&a, &ctx(4)), ctx_fingerprint(&a, &ctx(8)));
+        let mut lat = ctx(4);
+        lat.objective = Objective::Latency;
+        assert_ne!(ctx_fingerprint(&a, &ctx(4)), ctx_fingerprint(&a, &lat));
     }
 }

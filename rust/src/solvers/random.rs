@@ -7,36 +7,34 @@
 //! produce valid schemes; the edge config even needs p = 0.85).
 
 use crate::arch::ArchConfig;
+use crate::cost::CostCache;
 use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
 use crate::interlayer::dp::DpConfig;
 use crate::mapping::UnitMap;
 use crate::partition::enumerate_partitions;
-use crate::sim::evaluate_layer;
 use crate::util::SplitMix64;
 use crate::workloads::{Layer, Network};
-use std::cell::RefCell;
 
 use super::space::qty_candidates;
-use super::{exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{ctx_fingerprint, exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
 
-/// Random-sampling intra-layer solver.
+/// Random-sampling intra-layer solver. Each (layer, context) solve draws
+/// from its own RNG stream — `seed` folded with `ctx_fingerprint` — so
+/// results do not depend on the order contexts are solved in, and the
+/// parallel intra-layer sweep reproduces the sequential schedule exactly.
 pub struct RandomIntra {
     /// Per-level keep probability.
     pub p: f64,
     /// Retry budget when a sample has no valid scheme.
     pub retries: usize,
-    rng: RefCell<SplitMix64>,
+    seed: u64,
 }
 
 impl RandomIntra {
     pub fn new(p: f64, seed: u64) -> RandomIntra {
-        RandomIntra { p, retries: 8, rng: RefCell::new(SplitMix64::new(seed)) }
+        RandomIntra { p, retries: 8, seed }
     }
 }
-
-// The solver trait requires Sync; the RNG cell is only touched from the
-// owning thread (each solver instance is used by one scheduling run).
-unsafe impl Sync for RandomIntra {}
 
 fn sample<'a, T>(rng: &mut SplitMix64, xs: &'a [T], p: f64) -> Vec<&'a T> {
     let kept: Vec<&T> = xs.iter().filter(|_| rng.chance(p)).collect();
@@ -53,8 +51,14 @@ impl IntraSolver for RandomIntra {
         "random(R)"
     }
 
-    fn solve(&self, arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
-        let rng = &mut *self.rng.borrow_mut();
+    fn solve(
+        &self,
+        arch: &ArchConfig,
+        layer: &Layer,
+        ctx: &IntraCtx,
+        cost: &CostCache,
+    ) -> Option<LayerScheme> {
+        let rng = &mut SplitMix64::new(self.seed ^ ctx_fingerprint(layer, ctx));
         let parts = enumerate_partitions(layer, ctx.rb, ctx.region, false);
         let orders = LoopOrder::all();
 
@@ -77,13 +81,13 @@ impl IntraSolver for RandomIntra {
                                 if s.validate(arch).is_err() {
                                     continue;
                                 }
-                                let ev = evaluate_layer(arch, &s, ctx.ifm_on_chip);
-                                let cost = match ctx.objective {
+                                let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
+                                let c = match ctx.objective {
                                     Objective::Energy => ev.energy.total(),
                                     Objective::Latency => ev.latency_cycles,
                                 };
-                                if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
-                                    best = Some((cost, s));
+                                if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                                    best = Some((c, s));
                                 }
                             }
                         }
@@ -117,6 +121,7 @@ pub fn random_schedule(
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
     use crate::workloads::nets;
 
@@ -129,8 +134,9 @@ mod tests {
         let arch = presets::bench_multi_node();
         let net = nets::alexnet();
         let solver = RandomIntra::new(0.1, 42);
+        let cache = CostCache::new();
         for l in net.layers.iter().take(6) {
-            let s = solver.solve(&arch, l, &ctx((2, 2), 4)).unwrap();
+            let s = solver.solve(&arch, l, &ctx((2, 2), 4), &cache).unwrap();
             s.validate(&arch).unwrap();
         }
     }
@@ -140,10 +146,11 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let ex = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c).unwrap();
+        let ex =
+            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &CostCache::new()).unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
         for seed in [1u64, 2, 3] {
-            let r = RandomIntra::new(0.1, seed).solve(&arch, &l, &c).unwrap();
+            let r = RandomIntra::new(0.1, seed).solve(&arch, &l, &c, &CostCache::new()).unwrap();
             let er = evaluate_layer(&arch, &r, false).energy.total();
             assert!(er + 1e-9 >= ee, "seed {seed}: random {er} beat exhaustive {ee}");
         }
@@ -157,7 +164,7 @@ mod tests {
         let avg = |p: f64| {
             let mut tot = 0.0;
             for seed in 0..5u64 {
-                let s = RandomIntra::new(p, seed).solve(&arch, &l, &c).unwrap();
+                let s = RandomIntra::new(p, seed).solve(&arch, &l, &c, &CostCache::new()).unwrap();
                 tot += evaluate_layer(&arch, &s, false).energy.total();
             }
             tot / 5.0
@@ -172,8 +179,26 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c).unwrap();
-        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c).unwrap();
+        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &CostCache::new()).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn solve_order_does_not_change_results() {
+        // Per-context RNG streams: solving (l1, l2) or (l2, l1) with the
+        // same solver instance yields the same schemes — the property the
+        // parallel sweep relies on.
+        let arch = presets::bench_multi_node();
+        let l1 = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let l2 = crate::workloads::Layer::conv("c", 16, 64, 28, 3, 1);
+        let c = ctx((2, 2), 4);
+        let solver = RandomIntra::new(0.2, 11);
+        let a1 = solver.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        let a2 = solver.solve(&arch, &l2, &c, &CostCache::new()).unwrap();
+        let b2 = solver.solve(&arch, &l2, &c, &CostCache::new()).unwrap();
+        let b1 = solver.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        assert_eq!(format!("{a1:?}"), format!("{b1:?}"));
+        assert_eq!(format!("{a2:?}"), format!("{b2:?}"));
     }
 }

@@ -71,6 +71,60 @@ pub fn round_up(x: u64, m: u64) -> u64 {
     ceil_div(x, m) * m
 }
 
+/// FNV-1a over a stream of u64 words — the crate's one tiny hash for
+/// deterministic fingerprints (per-context RNG seeds, arch identity in the
+/// evaluation cache). Not collision-hardened; callers feed short,
+/// structured field lists, not attacker-controlled data.
+pub fn fnv1a(values: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in values {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Worker-thread count available on this host, capped at 8 (the paper's
+/// Table IV measured 8 parallel processes).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(8)
+}
+
+/// Order-preserving parallel map over a slice on a scoped `std::thread`
+/// worker pool (the crate is dependency-free — no rayon). Work is stolen
+/// through a shared atomic index; results come back in item order, so for
+/// a *pure* `f` the output is byte-identical to the sequential map
+/// regardless of `threads` — the determinism invariant the solver stack
+/// relies on (tests/parallel_determinism.rs). `threads <= 1` runs inline
+/// with no pool at all.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots.into_iter().map(|m| m.into_inner().unwrap().expect("worker missed item")).collect()
+}
+
 /// Wall-clock timer with millisecond reporting, used by the scheduling-time
 /// benches (Table IV).
 pub struct Timer {
@@ -152,5 +206,38 @@ mod tests {
         assert_eq!(ceil_div(9, 3), 3);
         assert_eq!(round_up(10, 4), 12);
         assert_eq!(round_up(8, 4), 8);
+    }
+
+    #[test]
+    fn fnv1a_is_deterministic_and_order_sensitive() {
+        assert_eq!(fnv1a([1, 2, 3]), fnv1a([1, 2, 3]));
+        assert_ne!(fnv1a([1, 2, 3]), fnv1a([3, 2, 1]));
+        assert_ne!(fnv1a([0]), fnv1a([0, 0]));
+        // Empty stream yields the offset basis.
+        assert_eq!(fnv1a([]), 0xcbf29ce484222325);
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_values() {
+        let items: Vec<u64> = (0..1000).collect();
+        let seq = par_map(&items, 1, |&x| x * x + 1);
+        for threads in [2usize, 3, 8] {
+            let par = par_map(&items, threads, |&x| x * x + 1);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+        assert_eq!(seq[7], 50);
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let empty: Vec<u64> = Vec::new();
+        assert!(par_map(&empty, 4, |&x| x).is_empty());
+        assert_eq!(par_map(&[5u64], 4, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn available_threads_is_positive_and_capped() {
+        let t = available_threads();
+        assert!(t >= 1 && t <= 8);
     }
 }

@@ -1,0 +1,102 @@
+//! The parallel intra-layer sweep is an *optimization*, not a semantic
+//! change: for every solver family, `run_job` with a worker pool must
+//! produce byte-identical schedules and energy totals to the sequential
+//! path. These tests pin that invariant, plus the cache bookkeeping the
+//! speedup comes from.
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_job, Job, SolverKind};
+use kapla::cost::CostCache;
+use kapla::interlayer::dp::DpConfig;
+use kapla::solvers::kapla::solve_intra_cached;
+use kapla::solvers::{IntraCtx, Objective};
+use kapla::workloads::{Layer, Network};
+
+fn tiny_net() -> Network {
+    let mut n = Network::new("tiny", 8, 28, 28);
+    n.chain(Layer::conv("c1", 8, 16, 28, 3, 1));
+    n.chain(Layer::pool("p1", 16, 14, 2, 2));
+    n.chain(Layer::conv("c2", 16, 32, 14, 3, 1));
+    n.chain(Layer::fc("f1", 32 * 14 * 14, 64));
+    n
+}
+
+fn job(solver: SolverKind, threads: usize) -> Job {
+    Job {
+        net: tiny_net(),
+        batch: 8,
+        objective: Objective::Energy,
+        solver,
+        dp: DpConfig { max_rounds: 8, solve_threads: threads, ..DpConfig::default() },
+    }
+}
+
+#[test]
+fn parallel_run_job_is_byte_identical_for_every_solver() {
+    let arch = presets::bench_multi_node();
+    for solver in [
+        SolverKind::Baseline,
+        SolverKind::DirectiveExhaustive,
+        SolverKind::Random { p: 0.15, seed: 1 },
+        SolverKind::Ml { seed: 1, rounds: 4, batch: 16 },
+        SolverKind::Kapla,
+    ] {
+        let seq = run_job(&arch, &job(solver, 1));
+        let par = run_job(&arch, &job(solver, 4));
+        // Exact equality, not tolerance: the parallel path must assemble
+        // the same schemes in the same order from the same evaluations.
+        assert_eq!(
+            seq.eval.energy.total(),
+            par.eval.energy.total(),
+            "{solver:?}: energy diverged"
+        );
+        assert_eq!(
+            seq.eval.latency_cycles,
+            par.eval.latency_cycles,
+            "{solver:?}: latency diverged"
+        );
+        assert_eq!(
+            format!("{:?}", seq.schedule),
+            format!("{:?}", par.schedule),
+            "{solver:?}: schedule diverged"
+        );
+    }
+}
+
+#[test]
+fn thread_count_beyond_work_is_harmless() {
+    let arch = presets::bench_multi_node();
+    let seq = run_job(&arch, &job(SolverKind::Kapla, 1));
+    let wide = run_job(&arch, &job(SolverKind::Kapla, 64));
+    assert_eq!(seq.eval.energy.total(), wide.eval.energy.total());
+    assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", wide.schedule));
+}
+
+#[test]
+fn cost_cache_hit_rate_sanity() {
+    // A shared cache across repeated contexts answers the repeats from the
+    // memo: hit rate strictly grows with each repetition and the distinct
+    // entry count stays flat.
+    let arch = presets::bench_multi_node();
+    let net = tiny_net();
+    let cache = CostCache::new();
+    let ctx = IntraCtx { region: (4, 4), rb: 8, ifm_on_chip: false, objective: Objective::Energy };
+
+    let first = solve_intra_cached(&arch, &net.layers[0], &ctx, &cache).unwrap();
+    let (lookups1, len1) = (cache.lookups(), cache.len());
+    assert!(lookups1 > 0);
+    assert!(len1 > 0 && len1 <= lookups1 as usize);
+
+    let rate_after_one = cache.hit_rate();
+    let second = solve_intra_cached(&arch, &net.layers[0], &ctx, &cache).unwrap();
+    assert_eq!(format!("{first:?}"), format!("{second:?}"));
+    assert_eq!(cache.len(), len1, "identical solve must add no new entries");
+    assert!(
+        cache.hit_rate() > rate_after_one,
+        "hit rate must grow on repetition: {} -> {}",
+        rate_after_one,
+        cache.hit_rate()
+    );
+    // The second pass was answered entirely from the memo.
+    assert_eq!(cache.hits(), cache.lookups() - len1 as u64);
+}
