@@ -8,6 +8,9 @@
 //!   L3c  exhaustive enumeration rate (schemes/s) — baseline B's inner
 //!        loop — cold vs warm through the evaluation memo
 //!   L3d  inter-layer DP (per network)
+//!   L4   warm scheduling sessions: a sweep of near-identical jobs against
+//!        one shared (optionally budgeted) cost::SessionCache — the
+//!        cross-job reuse the coordinator's session subsystem provides
 //!   L1   AOT batched cost kernel via PJRT vs native Rust loop
 //!        (the batch-size amortization curve; PJRT needs `--features pjrt`)
 //!
@@ -165,6 +168,83 @@ fn main() {
             std::hint::black_box(c);
         }
         lines.push(format!("L3d inter-layer DP (alexnet, 16x16): {:.1} ms/net", t.elapsed_ms() / n as f64));
+    }
+
+    // L4: warm scheduling sessions — cross-job evaluation reuse. A sweep
+    // of near-identical jobs (NAS/service-style traffic) solved against
+    // one shared SessionCache: the first job warms the memo, the rest
+    // answer their detailed-model evaluations from it. Schedules must stay
+    // byte-identical to the cold (private-cache) runs.
+    {
+        use kapla::coordinator::{run_job, run_jobs_with, Job, SolverKind};
+        use kapla::cost::{CacheBudget, EvalCache as _, SessionCache};
+        use kapla::util::json::Json;
+
+        let sarch = presets::bench_multi_node();
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| Job {
+                net: nets::mlp(),
+                batch: 16,
+                objective: if i % 2 == 0 { Objective::Energy } else { Objective::Latency },
+                solver: SolverKind::Kapla,
+                dp: DpConfig { max_rounds: 8, solve_threads: 1, ..DpConfig::default() },
+            })
+            .collect();
+
+        let t = Timer::start();
+        let cold: Vec<_> = jobs.iter().map(|j| run_job(&sarch, j)).collect();
+        let t_cold = t.elapsed_s();
+
+        let session = SessionCache::unbounded();
+        let t = Timer::start();
+        let warm = run_jobs_with(&sarch, &jobs, 1, &session);
+        let t_warm = t.elapsed_s();
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(
+                format!("{:?}", a.schedule),
+                format!("{:?}", b.schedule),
+                "shared session diverged from cold runs"
+            );
+        }
+        let st = session.stats();
+        lines.push(format!(
+            "L4a warm session ({} jobs): cold {:.2} s -> shared {:.2} s \
+             ({:.1}x, hit rate {:.0}%, {} entries)",
+            jobs.len(),
+            t_cold,
+            t_warm,
+            t_cold / t_warm.max(1e-9),
+            100.0 * st.hit_rate(),
+            st.entries
+        ));
+
+        // A tiny budget forces clock-eviction churn; schedules must not
+        // change (purity makes eviction a perf knob, never a results one).
+        let bounded = SessionCache::new(CacheBudget::entries(256));
+        let t = Timer::start();
+        let bres = run_jobs_with(&sarch, &jobs, 1, &bounded);
+        let t_bounded = t.elapsed_s();
+        for (a, b) in cold.iter().zip(&bres) {
+            assert_eq!(
+                format!("{:?}", a.schedule),
+                format!("{:?}", b.schedule),
+                "bounded session diverged from cold runs"
+            );
+        }
+        let bst = bounded.stats();
+        lines.push(format!(
+            "L4b bounded session (256 entries): {:.2} s, hit rate {:.0}%, {} evictions",
+            t_bounded,
+            100.0 * bst.hit_rate(),
+            bst.evictions
+        ));
+
+        let rows: Vec<Json> = jobs
+            .iter()
+            .zip(&warm)
+            .map(|(j, r)| bk::result_json(&j.net.name, j.solver, r))
+            .collect();
+        bk::save_json("perf_hotpath_session", &Json::Arr(rows));
     }
 
     // L1: PJRT batched cost kernel vs native formula.

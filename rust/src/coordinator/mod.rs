@@ -1,22 +1,27 @@
-//! Scheduling coordinator: solver registry, parallel batch scheduling, and
-//! the request-loop service mode.
+//! Scheduling coordinator: solver registry, parallel batch scheduling,
+//! cross-job scheduling sessions, and the request-loop service mode.
 //!
 //! The paper measures scheduling time "with 8 parallel processes" (Table
 //! IV); the coordinator parallelizes scheduling jobs across OS threads
-//! (scoped, no external runtime dependency) and reuses solved results via
-//! the per-run intra-layer caches inside each solver. The service mode
-//! makes the binary a long-running scheduler: one line per request, JSON
-//! out — the "real-time interactive compilation" use the paper motivates
-//! (NAS, MLaaS).
+//! (scoped, no external runtime dependency). Beyond per-run memoization,
+//! *scheduling sessions* share one bounded `cost::SessionCache` of
+//! detailed-model evaluations across jobs — `run_jobs` sweeps (NAS-style
+//! traffic re-schedules near-identical layers job after job) and
+//! long-lived service connections both reuse it, and the cache key's arch
+//! fingerprint guarantees sharing never aliases across hardware configs.
+//! The service mode makes the binary a long-running scheduler: one line
+//! per request, JSON out — the "real-time interactive compilation" use the
+//! paper motivates (NAS, MLaaS).
 
 pub mod service;
 
 use crate::arch::ArchConfig;
+use crate::cost::{CacheBudget, CostCache, EvalCache, SessionCache};
 use crate::interlayer::dp::DpConfig;
-use crate::solvers::exhaustive::{baseline_schedule, directive_exhaustive_schedule};
-use crate::solvers::kapla::kapla_schedule;
-use crate::solvers::ml::ml_schedule;
-use crate::solvers::random::random_schedule;
+use crate::solvers::exhaustive::{baseline_schedule_with, directive_exhaustive_schedule_with};
+use crate::solvers::kapla::kapla_schedule_with;
+use crate::solvers::ml::ml_schedule_with;
+use crate::solvers::random::random_schedule_with;
 use crate::solvers::{Objective, SolveResult};
 use crate::workloads::Network;
 
@@ -46,7 +51,12 @@ impl SolverKind {
         }
     }
 
-    /// Parse a CLI name ("kapla", "b", "random:0.1", "ml", ...).
+    /// Parse a CLI/service name. Stochastic solvers take knobs after a
+    /// `:` — either the legacy bare number (`"random:0.1"`, `"ml:16"`) or
+    /// comma-separated `key=value` pairs (`"random:p=0.2,seed=9"`,
+    /// `"ml:rounds=8,batch=32,seed=5"`). Unknown names, unknown keys and
+    /// unparseable values all return `None`, so front ends can reject a
+    /// malformed request instead of silently falling back to defaults.
     pub fn parse(s: &str) -> Option<SolverKind> {
         let lower = s.to_ascii_lowercase();
         let (name, arg) = match lower.split_once(':') {
@@ -58,14 +68,98 @@ impl SolverKind {
             "b" | "baseline" | "nn-dataflow" => Some(SolverKind::Baseline),
             "s" | "exhaustive" => Some(SolverKind::DirectiveExhaustive),
             "r" | "random" => {
-                let p = arg.and_then(|a| a.parse().ok()).unwrap_or(0.1);
-                Some(SolverKind::Random { p, seed: 0xDA7AF10 })
+                let (mut p, mut seed) = (0.1, 0xDA7AF10);
+                for part in arg.into_iter().flat_map(|a| a.split(',')) {
+                    match part.split_once('=') {
+                        Some(("p", v)) => p = v.parse().ok()?,
+                        Some(("seed", v)) => seed = v.parse().ok()?,
+                        Some(_) => return None,
+                        None => p = part.parse().ok()?,
+                    }
+                }
+                Some(SolverKind::Random { p, seed })
             }
             "m" | "ml" => {
-                let rounds = arg.and_then(|a| a.parse().ok()).unwrap_or(16);
-                Some(SolverKind::Ml { seed: 0x5EED, rounds, batch: 64 })
+                let (mut seed, mut rounds, mut batch) = (0x5EED, 16, 64);
+                for part in arg.into_iter().flat_map(|a| a.split(',')) {
+                    match part.split_once('=') {
+                        Some(("rounds", v)) => rounds = v.parse().ok()?,
+                        Some(("batch", v)) => batch = v.parse().ok()?,
+                        Some(("seed", v)) => seed = v.parse().ok()?,
+                        Some(_) => return None,
+                        None => rounds = part.parse().ok()?,
+                    }
+                }
+                Some(SolverKind::Ml { seed, rounds, batch })
             }
             _ => None,
+        }
+    }
+}
+
+/// Per-request solver knobs parsed from `key=value` tokens — the service
+/// line protocol and the CLI share this so clients can set DP parameters
+/// per request instead of inheriting hardcoded defaults.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct JobKnobs {
+    pub threads: Option<usize>,
+    pub objective: Option<Objective>,
+    pub ks: Option<usize>,
+    pub max_seg_len: Option<usize>,
+    pub max_rounds: Option<u64>,
+    pub top_per_span: Option<usize>,
+}
+
+impl JobKnobs {
+    /// Consume one token. `Ok(false)`: not a `key=value` token (callers
+    /// treat it as positional). `Ok(true)`: recognized and recorded.
+    /// `Err`: a malformed knob — unknown key or bad value — that the
+    /// request must reject rather than silently default.
+    pub fn parse_token(&mut self, tok: &str) -> Result<bool, String> {
+        let Some((key, val)) = tok.split_once('=') else {
+            return Ok(false);
+        };
+        fn num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+            val.parse().map_err(|_| format!("bad value for knob {key}: {val:?}"))
+        }
+        // Every count knob must be >= 1: a zero would leave the DP with no
+        // candidate spans/chains and panic the solver — a malformed request
+        // must never crash a long-running service.
+        fn positive<T: std::str::FromStr + PartialOrd + From<u8>>(
+            key: &str,
+            val: &str,
+        ) -> Result<T, String> {
+            let v: T = num(key, val)?;
+            if v < T::from(1u8) {
+                return Err(format!("bad value for knob {key}: must be >= 1"));
+            }
+            Ok(v)
+        }
+        match key {
+            "threads" => self.threads = Some(positive(key, val)?),
+            "objective" => {
+                self.objective = Some(
+                    Objective::parse(val)
+                        .ok_or_else(|| format!("bad value for knob objective: {val:?}"))?,
+                );
+            }
+            "ks" => self.ks = Some(positive(key, val)?),
+            "max_seg_len" => self.max_seg_len = Some(positive(key, val)?),
+            "max_rounds" => self.max_rounds = Some(positive(key, val)?),
+            "top_per_span" => self.top_per_span = Some(positive(key, val)?),
+            _ => return Err(format!("unknown knob {key:?}")),
+        }
+        Ok(true)
+    }
+
+    /// Overlay the recorded knobs onto a base `DpConfig`.
+    pub fn apply(&self, base: DpConfig) -> DpConfig {
+        DpConfig {
+            ks: self.ks.unwrap_or(base.ks),
+            max_seg_len: self.max_seg_len.unwrap_or(base.max_seg_len),
+            max_rounds: self.max_rounds.unwrap_or(base.max_rounds),
+            top_per_span: self.top_per_span.unwrap_or(base.top_per_span),
+            solve_threads: self.threads.unwrap_or(base.solve_threads),
         }
     }
 }
@@ -80,30 +174,69 @@ pub struct Job {
     pub dp: DpConfig,
 }
 
-/// Run one scheduling job to completion. Within the job, independent
-/// per-layer/per-segment intra solves shard across `job.dp.solve_threads`
-/// scoped workers and share one `cost::CostCache`; the schedule is
-/// byte-identical for any thread count (tests/parallel_determinism.rs).
+/// Run one scheduling job to completion against a private per-run cache.
+/// Within the job, independent per-layer/per-segment intra solves shard
+/// across `job.dp.solve_threads` scoped workers and share one
+/// `cost::CostCache`; the schedule is byte-identical for any thread count
+/// (tests/parallel_determinism.rs).
 pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
+    run_job_with(arch, job, &CostCache::new())
+}
+
+/// Run one scheduling job against a caller-supplied evaluation cache —
+/// typically a shared `cost::SessionCache` so repeated or near-identical
+/// jobs reuse detailed-simulator evaluations across the whole session.
+/// Every solver is pure per context, so sharing (with any budget/eviction
+/// policy) yields schedules byte-identical to a solitary run.
+pub fn run_job_with(arch: &ArchConfig, job: &Job, cost: &dyn EvalCache) -> SolveResult {
     match job.solver {
-        SolverKind::Kapla => kapla_schedule(arch, &job.net, job.batch, job.objective, &job.dp).0,
-        SolverKind::Baseline => baseline_schedule(arch, &job.net, job.batch, job.objective, &job.dp),
+        SolverKind::Kapla => {
+            kapla_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost).0
+        }
+        SolverKind::Baseline => {
+            baseline_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost)
+        }
         SolverKind::DirectiveExhaustive => {
-            directive_exhaustive_schedule(arch, &job.net, job.batch, job.objective, &job.dp)
+            directive_exhaustive_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost)
         }
         SolverKind::Random { p, seed } => {
-            random_schedule(arch, &job.net, job.batch, job.objective, &job.dp, p, seed)
+            random_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, p, seed, cost)
         }
-        SolverKind::Ml { seed, rounds, batch } => {
-            ml_schedule(arch, &job.net, job.batch, job.objective, &job.dp, seed, rounds, batch)
-        }
+        SolverKind::Ml { seed, rounds, batch } => ml_schedule_with(
+            arch, &job.net, job.batch, job.objective, &job.dp, seed, rounds, batch, cost,
+        ),
     }
 }
 
+/// Default byte budget of the session `run_jobs` creates: large enough
+/// that realistic sweeps hit across jobs without eviction, bounded so a
+/// long NAS run cannot grow resident memory without limit (eviction is a
+/// perf knob only — schedules are identical for any budget).
+pub const DEFAULT_SESSION_BYTES: usize = 256 << 20;
+
 /// Run a batch of jobs over `threads` worker threads (work stealing via a
 /// shared atomic index, `util::par_map`). Results come back in job order.
+/// The whole batch runs as one scheduling session: a `SessionCache` with a
+/// [`DEFAULT_SESSION_BYTES`] budget is shared across the jobs, so sweeps
+/// over near-identical networks (NAS-style traffic) reuse each other's
+/// evaluations. Use [`run_jobs_with`] to supply a differently-budgeted or
+/// longer-lived session.
 pub fn run_jobs(arch: &ArchConfig, jobs: &[Job], threads: usize) -> Vec<SolveResult> {
-    crate::util::par_map(jobs, threads, |job| run_job(arch, job))
+    let session = SessionCache::new(CacheBudget::bytes(DEFAULT_SESSION_BYTES));
+    run_jobs_with(arch, jobs, threads, &session)
+}
+
+/// [`run_jobs`] against a caller-supplied session cache. Each result's
+/// `cache` field snapshots the session counters at that job's completion
+/// (session-cumulative; with `threads == 1` consecutive deltas isolate
+/// per-job reuse exactly).
+pub fn run_jobs_with(
+    arch: &ArchConfig,
+    jobs: &[Job],
+    threads: usize,
+    cost: &dyn EvalCache,
+) -> Vec<SolveResult> {
+    crate::util::par_map(jobs, threads, |job| run_job_with(arch, job, cost))
 }
 
 /// Default worker-thread count (the paper used 8 parallel processes).
@@ -125,6 +258,83 @@ mod tests {
         assert!(matches!(SolverKind::parse("random:0.5"), Some(SolverKind::Random { p, .. }) if p == 0.5));
         assert!(matches!(SolverKind::parse("ml:4"), Some(SolverKind::Ml { rounds: 4, .. })));
         assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn solver_kind_key_value_knobs() {
+        assert_eq!(
+            SolverKind::parse("random:p=0.25,seed=9"),
+            Some(SolverKind::Random { p: 0.25, seed: 9 })
+        );
+        assert_eq!(
+            SolverKind::parse("ml:rounds=8,batch=32,seed=5"),
+            Some(SolverKind::Ml { seed: 5, rounds: 8, batch: 32 })
+        );
+        // Bare-number legacy form still accepted.
+        assert!(matches!(SolverKind::parse("r:0.3"), Some(SolverKind::Random { p, .. }) if p == 0.3));
+        // Malformed knobs are rejected, not silently defaulted.
+        assert_eq!(SolverKind::parse("random:q=0.5"), None);
+        assert_eq!(SolverKind::parse("random:p=zero"), None);
+        assert_eq!(SolverKind::parse("ml:rounds=many"), None);
+    }
+
+    #[test]
+    fn job_knobs_parse_and_apply() {
+        let mut k = JobKnobs::default();
+        assert_eq!(k.parse_token("positional"), Ok(false));
+        assert_eq!(k.parse_token("threads=3"), Ok(true));
+        assert_eq!(k.parse_token("objective=latency"), Ok(true));
+        assert_eq!(k.parse_token("ks=2"), Ok(true));
+        assert_eq!(k.parse_token("max_rounds=16"), Ok(true));
+        let dp = k.apply(DpConfig::default());
+        assert_eq!(dp.solve_threads, 3);
+        assert_eq!(dp.ks, 2);
+        assert_eq!(dp.max_rounds, 16);
+        assert_eq!(dp.max_seg_len, DpConfig::default().max_seg_len);
+        assert_eq!(k.objective, Some(Objective::Latency));
+
+        assert!(JobKnobs::default().parse_token("threads=0").is_err());
+        assert!(JobKnobs::default().parse_token("threads=two").is_err());
+        assert!(JobKnobs::default().parse_token("objective=speed").is_err());
+        assert!(JobKnobs::default().parse_token("bogus=1").is_err());
+        // Zero count knobs would leave the DP without candidates and panic
+        // the solver: reject them all, not just threads.
+        for tok in ["ks=0", "max_seg_len=0", "max_rounds=0", "top_per_span=0"] {
+            assert!(JobKnobs::default().parse_token(tok).is_err(), "{tok} must be rejected");
+        }
+    }
+
+    #[test]
+    fn shared_session_reuses_across_jobs_without_changing_schedules() {
+        let arch = presets::bench_multi_node();
+        let job = Job {
+            net: nets::mlp(),
+            batch: 8,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        };
+        let solo = run_job(&arch, &job);
+
+        let session = SessionCache::unbounded();
+        let first = run_job_with(&arch, &job, &session);
+        let entries_after_first = session.stats().entries;
+        let (lookups1, hits1) = (session.stats().lookups, session.stats().hits);
+        let second = run_job_with(&arch, &job, &session);
+        let st = session.stats();
+
+        // Cross-job reuse: the repeat adds no entries and answers every
+        // one of its lookups from the memo.
+        assert_eq!(st.entries, entries_after_first);
+        assert!(st.lookups > lookups1);
+        assert_eq!(st.hits - hits1, st.lookups - lookups1, "warm job must fully hit");
+        // ... while the schedules stay byte-identical to the solitary run.
+        for r in [&first, &second] {
+            assert_eq!(r.eval.energy.total(), solo.eval.energy.total());
+            assert_eq!(format!("{:?}", r.schedule), format!("{:?}", solo.schedule));
+        }
+        // And the per-result snapshot exposes the reuse.
+        assert!(second.cache.hits > first.cache.hits);
     }
 
     #[test]

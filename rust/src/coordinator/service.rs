@@ -4,30 +4,69 @@
 //! stdout):
 //!
 //! ```text
-//! schedule <network> <batch> <solver> [energy|latency] [train]
+//! schedule <network> [batch] [solver] [energy|latency] [train] [key=value ...]
+//! stats
 //! quit
 //! ```
 //!
-//! This is the deployment shape the paper motivates for NAS and MLaaS
-//! use cases (§II-C): dataflow scheduling as an interactive service.
+//! Positional fields keep their legacy order; `key=value` knobs may appear
+//! anywhere after the network and set per-request solver parameters
+//! (`threads=4`, `objective=latency`, `ks=2`, `max_seg_len=3`,
+//! `max_rounds=16`, `top_per_span=1`). Malformed requests — unknown
+//! network/solver/knob, unparseable value — get a structured
+//! `{"ok":false,"error":...}` response instead of silently falling back to
+//! defaults.
+//!
+//! The connection is a *scheduling session*: every request solves against
+//! one shared, budgeted `cost::SessionCache`, so repeated or
+//! near-identical requests (the NAS/MLaaS traffic the paper motivates,
+//! §II-C) reuse detailed-simulator evaluations across requests. Each
+//! response reports the session's cache counters; `stats` reads them
+//! without scheduling anything.
 
 use std::io::{BufRead, Write};
 
 use crate::arch::ArchConfig;
+use crate::cost::{CacheBudget, EvalCache as _, SessionCache};
 use crate::interlayer::dp::DpConfig;
 use crate::solvers::Objective;
 use crate::util::json::Json;
 use crate::workloads;
 
-use super::{run_job, Job, SolverKind};
+use super::{run_job_with, Job, JobKnobs, SolverKind};
 
-/// Handle a single request line; `None` means "quit".
-pub fn handle_line(arch: &ArchConfig, line: &str) -> Option<Json> {
+/// Ceiling on the per-request `threads=` knob: schedules are identical for
+/// any thread count, so capping at the paper's 8-parallel-process budget
+/// only bounds resource use, never results — the one knob that is clamped
+/// silently rather than rejected.
+pub const MAX_REQUEST_THREADS: usize = 8;
+
+/// Ceilings on the untrusted DP work knobs. Unlike `threads=`, these change
+/// the explored schedule space, so an over-limit request is *rejected* with
+/// a structured error instead of silently clamped: a single line like
+/// `max_seg_len=1000000` would otherwise blow up the span enumeration
+/// combinatorially and hang or OOM the long-running serve loop.
+pub const MAX_REQUEST_SEG_LEN: usize = 8;
+pub const MAX_REQUEST_KS: usize = 64;
+pub const MAX_REQUEST_TOP_PER_SPAN: usize = 64;
+pub const MAX_REQUEST_ROUNDS: u64 = 4096;
+
+/// Handle a single request line against the connection's scheduling
+/// session; `None` means "quit".
+pub fn handle_line(arch: &ArchConfig, session: &SessionCache, line: &str) -> Option<Json> {
     let toks: Vec<&str> = line.split_whitespace().collect();
     match toks.as_slice() {
         [] => Some(err_json("empty request")),
         ["quit"] | ["exit"] => None,
-        ["schedule", rest @ ..] => Some(handle_schedule(arch, rest)),
+        ["stats"] => {
+            let mut o = Json::obj();
+            o.set("ok", true.into()).set("cache", session.stats().to_json());
+            Some(o)
+        }
+        ["schedule", rest @ ..] => Some(match handle_schedule(arch, session, rest) {
+            Ok(json) => json,
+            Err(msg) => err_json(&msg),
+        }),
         _ => Some(err_json(&format!("unknown request: {line}"))),
     }
 }
@@ -38,41 +77,103 @@ fn err_json(msg: &str) -> Json {
     o
 }
 
-fn handle_schedule(arch: &ArchConfig, args: &[&str]) -> Json {
-    let (&net_name, rest) = match args.split_first() {
-        Some(x) => x,
-        None => return err_json("schedule: missing network"),
-    };
-    let Some(fwd) = workloads::by_name(net_name) else {
-        return err_json(&format!("unknown network {net_name}"));
-    };
-    let batch: u64 = rest.first().and_then(|s| s.parse().ok()).unwrap_or(64);
-    let solver = rest
-        .get(1)
-        .and_then(|s| SolverKind::parse(s))
-        .unwrap_or(SolverKind::Kapla);
-    let objective = match rest.get(2) {
-        Some(&"latency") => Objective::Latency,
-        _ => Objective::Energy,
-    };
-    let net = if rest.contains(&"train") { workloads::training_graph(&fwd) } else { fwd };
+fn handle_schedule(
+    arch: &ArchConfig,
+    session: &SessionCache,
+    args: &[&str],
+) -> Result<Json, String> {
+    let (&net_name, rest) = args.split_first().ok_or("schedule: missing network")?;
+    let fwd = workloads::by_name(net_name).ok_or_else(|| format!("unknown network {net_name}"))?;
+
+    let mut batch: u64 = 64;
+    let mut solver = SolverKind::Kapla;
+    let mut objective = Objective::Energy;
+    let mut train = false;
+    let mut knobs = JobKnobs::default();
+    let mut pos = 0usize;
+    for tok in rest {
+        // Solver tokens may carry their own `key=value` knobs after a ':'
+        // ("random:p=0.3,seed=7"), so anything with a ':' is positional.
+        if !tok.contains(':') && knobs.parse_token(tok)? {
+            continue;
+        }
+        if *tok == "train" {
+            train = true;
+            continue;
+        }
+        match pos {
+            // Batch is optional: a non-numeric first positional is tried
+            // as the solver (legacy `schedule mlp kapla` form).
+            0 => match tok.parse::<u64>() {
+                Ok(0) => return Err("bad batch: must be >= 1".to_string()),
+                Ok(b) => {
+                    batch = b;
+                    pos = 1;
+                }
+                Err(_) => match SolverKind::parse(tok) {
+                    Some(k) => {
+                        solver = k;
+                        pos = 2;
+                    }
+                    None => return Err(format!("bad batch or unknown solver {tok:?}")),
+                },
+            },
+            1 => {
+                solver =
+                    SolverKind::parse(tok).ok_or_else(|| format!("unknown solver {tok:?}"))?;
+                pos = 2;
+            }
+            2 => {
+                objective =
+                    Objective::parse(tok).ok_or_else(|| format!("bad objective {tok:?}"))?;
+                pos = 3;
+            }
+            _ => return Err(format!("unexpected argument {tok:?}")),
+        }
+    }
+
+    // An untrusted client must not be able to force unbounded solver work.
+    for (name, val, max) in [
+        ("ks", knobs.ks, MAX_REQUEST_KS),
+        ("max_seg_len", knobs.max_seg_len, MAX_REQUEST_SEG_LEN),
+        ("top_per_span", knobs.top_per_span, MAX_REQUEST_TOP_PER_SPAN),
+    ] {
+        if let Some(v) = val {
+            if v > max {
+                return Err(format!("knob {name} too large: {v} (max {max})"));
+            }
+        }
+    }
+    if let Some(r) = knobs.max_rounds {
+        if r > MAX_REQUEST_ROUNDS {
+            return Err(format!("knob max_rounds too large: {r} (max {MAX_REQUEST_ROUNDS})"));
+        }
+    }
 
     // Service requests are latency-sensitive: saturate the host for the
-    // intra-layer sweep (results are identical for any thread count).
-    let dp = DpConfig { solve_threads: super::default_threads(), ..DpConfig::default() };
+    // intra-layer sweep unless the request caps it (results are identical
+    // for any thread count, so the thread ceiling clamps silently).
+    let mut dp =
+        knobs.apply(DpConfig { solve_threads: super::default_threads(), ..DpConfig::default() });
+    dp.solve_threads = dp.solve_threads.min(MAX_REQUEST_THREADS);
+    let objective = knobs.objective.unwrap_or(objective);
+    let net = if train { workloads::training_graph(&fwd) } else { fwd };
     let job = Job { net, batch, objective, solver, dp };
-    let r = run_job(arch, &job);
+    let r = run_job_with(arch, &job, session);
 
     let mut o = Json::obj();
     o.set("ok", true.into())
         .set("network", job.net.name.as_str().into())
         .set("batch", batch.into())
         .set("solver", solver.letter().into())
+        .set("objective", objective.name().into())
+        .set("threads", dp.solve_threads.into())
         .set("energy_pj", r.eval.energy.total().into())
         .set("latency_cycles", r.eval.latency_cycles.into())
         .set("latency_s", r.eval.latency_s(arch).into())
         .set("solve_s", r.solve_s.into())
-        .set("segments", r.schedule.segments.len().into());
+        .set("segments", r.schedule.segments.len().into())
+        .set("cache", r.cache.to_json());
     let segs: Vec<Json> = r
         .schedule
         .segments
@@ -94,20 +195,30 @@ fn handle_schedule(arch: &ArchConfig, args: &[&str]) -> Json {
         })
         .collect();
     o.set("chain", Json::Arr(segs));
-    o
+    Ok(o)
 }
 
-/// Run the blocking stdin/stdout service loop.
+/// Run the blocking stdin/stdout service loop with an unbounded session.
 pub fn serve(arch: &ArchConfig) {
+    serve_with(arch, CacheBudget::UNBOUNDED)
+}
+
+/// Run the blocking stdin/stdout service loop; all requests share one
+/// `SessionCache` under `budget` (CLI `--cache-budget`).
+pub fn serve_with(arch: &ArchConfig, budget: CacheBudget) {
+    let session = SessionCache::new(budget);
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();
-    eprintln!("kapla service ready (schedule <net> <batch> <solver> [objective] [train] | quit)");
+    eprintln!(
+        "kapla service ready (schedule <net> [batch] [solver] [objective] [train] \
+         [threads=N] [objective=...] [ks=N] ... | stats | quit)"
+    );
     for line in stdin.lock().lines() {
         let line = match line {
             Ok(l) => l,
             Err(_) => break,
         };
-        match handle_line(arch, &line) {
+        match handle_line(arch, &session, &line) {
             Some(resp) => {
                 let _ = writeln!(stdout, "{}", resp.to_string_compact());
                 let _ = stdout.flush();
@@ -125,35 +236,50 @@ mod tests {
     #[test]
     fn quit_ends_loop() {
         let arch = presets::bench_multi_node();
-        assert!(handle_line(&arch, "quit").is_none());
-        assert!(handle_line(&arch, "exit").is_none());
+        let s = SessionCache::unbounded();
+        assert!(handle_line(&arch, &s, "quit").is_none());
+        assert!(handle_line(&arch, &s, "exit").is_none());
     }
 
     #[test]
     fn bad_requests_report_errors() {
         let arch = presets::bench_multi_node();
-        let r = handle_line(&arch, "bogus").unwrap();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "bogus").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
-        let r = handle_line(&arch, "schedule nonexistent-net").unwrap();
+        let r = handle_line(&arch, &s, "schedule nonexistent-net").unwrap();
         assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown network"));
     }
 
     #[test]
     fn schedule_request_roundtrip() {
         let arch = presets::bench_multi_node();
-        let r = handle_line(&arch, "schedule mlp 8 kapla").unwrap();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "schedule mlp 8 kapla").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert!(r.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(r.get("solver").unwrap().as_str(), Some("K"));
-        let s = r.to_string_compact();
-        assert!(s.starts_with('{') && s.ends_with('}'));
+        assert_eq!(r.get("objective").unwrap().as_str(), Some("energy"));
+        assert!(r.get("cache").unwrap().get("lookups").unwrap().as_f64().unwrap() > 0.0);
+        let out = r.to_string_compact();
+        assert!(out.starts_with('{') && out.ends_with('}'));
     }
 
     #[test]
     fn training_request() {
         let arch = presets::bench_multi_node();
-        let r = handle_line(&arch, "schedule mlp 8 kapla energy train").unwrap();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "schedule mlp 8 kapla energy train").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert!(r.get("network").unwrap().as_str().unwrap().contains("train"));
+    }
+
+    #[test]
+    fn stats_request_reads_session() {
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "stats").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("cache").unwrap().get("lookups").unwrap().as_f64(), Some(0.0));
     }
 }

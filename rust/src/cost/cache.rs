@@ -35,8 +35,11 @@ use crate::sim::LayerEval;
 /// f64 fields (utilization) and derived quantities (granule, totals) are
 /// functions of (shape, array, dataflow, rs_chunk), so together with the
 /// arch fingerprint this integer tuple uniquely determines the result.
+/// Shared with the bounded cross-job [`super::SessionCache`], which reuses
+/// the exact same key (including `arch_fp`) so session sharing can never
+/// alias entries across hardware configs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct SchemeKey {
+pub(crate) struct SchemeKey {
     arch_fp: u64,
     shape: LayerShape,
     array: (u64, u64),
@@ -49,7 +52,7 @@ struct SchemeKey {
 }
 
 impl SchemeKey {
-    fn of(arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> SchemeKey {
+    pub(crate) fn of(arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> SchemeKey {
         SchemeKey {
             arch_fp: arch_fingerprint(arch),
             shape: s.unit.shape,
@@ -94,7 +97,76 @@ fn arch_fingerprint(arch: &ArchConfig) -> u64 {
     ])
 }
 
-const SHARDS: usize = 16;
+pub(crate) const SHARDS: usize = 16;
+
+/// Shard index of a key — one hash, shared by [`CostCache`] and the bounded
+/// [`super::SessionCache`] so both spread identically.
+pub(crate) fn shard_of(key: &SchemeKey) -> usize {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// Counter snapshot of an evaluation cache. `lookups`/`hits`/`evictions`
+/// are cumulative since the cache was constructed (so for a shared
+/// scheduling session they aggregate across jobs); `entries` is the number
+/// of evaluations resident right now.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Saturating on purpose: a snapshot taken while other threads are
+    /// mid-lookup can tear (the counters are independent relaxed atomics),
+    /// so a torn `hits > lookups` reads as 0 misses, never an underflow.
+    pub fn misses(&self) -> u64 {
+        self.lookups.saturating_sub(self.hits)
+    }
+
+    /// Fraction of lookups answered from the memo (0.0 when unused,
+    /// clamped to 1.0 against torn concurrent snapshots).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            (self.hits as f64 / self.lookups as f64).min(1.0)
+        }
+    }
+
+    /// Render the counters as a JSON object — the shape shared by service
+    /// responses, bench reports and CLI consumers.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("lookups", self.lookups.into())
+            .set("hits", self.hits.into())
+            .set("misses", self.misses().into())
+            .set("evictions", self.evictions.into())
+            .set("entries", self.entries.into())
+            .set("hit_rate", self.hit_rate().into());
+        o
+    }
+}
+
+/// A memoizing front end to `sim::evaluate_layer`. Implemented by the
+/// unbounded per-run [`CostCache`] and the budgeted cross-job
+/// [`super::SessionCache`]; every solver family evaluates candidates
+/// through this trait so one shared session can serve a whole job stream.
+///
+/// Implementations must be pure with respect to results: `evaluate_layer`
+/// always returns exactly what a fresh `sim::evaluate_layer` call would
+/// (caching and eviction may change *when* the simulator runs, never what
+/// the caller sees) — the determinism invariant the golden-schedule tests
+/// pin.
+pub trait EvalCache: Sync {
+    fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval;
+
+    /// Current counter snapshot.
+    fn stats(&self) -> CacheStats;
+}
 
 /// Sharded memo table for `sim::evaluate_layer` results.
 pub struct CostCache {
@@ -118,18 +190,12 @@ impl CostCache {
         }
     }
 
-    fn shard_of(key: &SchemeKey) -> usize {
-        let mut h = DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) % SHARDS
-    }
-
     /// Evaluate `s` on the detailed model, memoized. Concurrent misses on
     /// the same key may both compute (the function is pure, so they agree);
     /// the lock is never held across the evaluation itself.
     pub fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval {
         let key = SchemeKey::of(arch, s, ifm_on_chip);
-        let shard = &self.shards[Self::shard_of(&key)];
+        let shard = &self.shards[shard_of(&key)];
         self.lookups.fetch_add(1, Ordering::Relaxed);
         if let Some(ev) = shard.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -167,6 +233,20 @@ impl CostCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+impl EvalCache for CostCache {
+    fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval {
+        CostCache::evaluate_layer(self, arch, s, ifm_on_chip)
+    }
+
+    fn stats(&self) -> CacheStats {
+        // Hits read before lookups (each hit bumps lookups first) to make
+        // torn concurrent snapshots unlikely; relaxed atomics can still
+        // reorder, so misses()/hit_rate() clamp rather than trust this.
+        let hits = self.hits();
+        CacheStats { lookups: self.lookups(), hits, evictions: 0, entries: self.len() }
     }
 }
 

@@ -13,8 +13,10 @@
 //! runtime can invoke to score large candidate batches in one call.
 
 pub mod cache;
+pub mod session;
 
-pub use cache::CostCache;
+pub use cache::{CacheStats, CostCache, EvalCache};
+pub use session::{CacheBudget, SessionCache};
 
 use crate::arch::{energy as earch, ArchConfig};
 use crate::interlayer::Segment;

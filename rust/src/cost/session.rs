@@ -1,0 +1,461 @@
+//! Cross-job scheduling sessions: a *bounded* memo for detailed-model
+//! evaluations, shared across `coordinator::run_jobs` sweeps and long-lived
+//! `coordinator::service` connections.
+//!
+//! KAPLA's headline claim is search speed, and the traffic the coordinator
+//! serves (NAS sweeps, repeated service requests) re-schedules
+//! near-identical layers job after job. The per-run `CostCache` already
+//! memoizes within one solve; `SessionCache` extends the same exact-key
+//! memo (`SchemeKey`, arch fingerprint included, so sharing can never alias
+//! across hardware configs) *across* jobs, under a configurable byte/entry
+//! budget so a long-lived service cannot grow without bound.
+//!
+//! Eviction is sharded clock (second chance): each of the 16 shards keeps
+//! its entries in a ring with a reference bit, and a full cache replaces
+//! the first unreferenced entry past the shard's hand. The total entry
+//! count is tracked globally, so the budget holds *exactly* — after any
+//! operation sequence `len() <= budget` (property-tested) — while inserts
+//! only ever lock their own shard. Because `sim::evaluate_layer` is pure,
+//! eviction changes when the simulator runs, never what callers see:
+//! schedules are byte-identical for any budget (golden-schedule tests).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::arch::ArchConfig;
+use crate::directives::LayerScheme;
+use crate::sim::LayerEval;
+
+use super::cache::{shard_of, CacheStats, EvalCache, SchemeKey, SHARDS};
+
+/// Capacity budget of a [`SessionCache`], in resident entries. Byte budgets
+/// are converted via [`entry_bytes`] at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheBudget {
+    /// Maximum resident entries; `usize::MAX` means unbounded.
+    pub max_entries: usize,
+}
+
+/// Estimated resident bytes per cached evaluation: key + value stored in
+/// the clock ring, plus the key duplicated in the index map and amortized
+/// map/ring overhead (the factor of 2).
+pub fn entry_bytes() -> usize {
+    (std::mem::size_of::<SchemeKey>() + std::mem::size_of::<LayerEval>()) * 2
+}
+
+impl CacheBudget {
+    pub const UNBOUNDED: CacheBudget = CacheBudget { max_entries: usize::MAX };
+
+    /// Budget of at most `n` resident evaluations.
+    pub fn entries(n: usize) -> CacheBudget {
+        CacheBudget { max_entries: n }
+    }
+
+    /// Budget of at most `bytes` estimated resident bytes (at least one
+    /// entry, so a tiny byte budget degrades to a 1-entry cache rather
+    /// than disabling caching outright).
+    pub fn bytes(bytes: usize) -> CacheBudget {
+        CacheBudget { max_entries: (bytes / entry_bytes()).max(1) }
+    }
+
+    pub fn is_unbounded(&self) -> bool {
+        self.max_entries == usize::MAX
+    }
+
+    /// Parse a CLI/service budget spec: `"unbounded"`/`"none"`, a plain
+    /// entry count (`"50000"`), or a byte size with a `kb`/`mb`/`gb`
+    /// suffix (`"64mb"`; case-insensitive, optional `b`).
+    pub fn parse(s: &str) -> Result<CacheBudget, String> {
+        let t = s.trim().to_ascii_lowercase();
+        if t.is_empty() {
+            return Err("empty cache budget".to_string());
+        }
+        if t == "unbounded" || t == "none" {
+            return Ok(CacheBudget::UNBOUNDED);
+        }
+        let (digits, suffix) = match t.find(|c: char| !c.is_ascii_digit()) {
+            Some(pos) => t.split_at(pos),
+            None => (t.as_str(), ""),
+        };
+        let n: usize = digits
+            .parse()
+            .map_err(|_| format!("bad cache budget {s:?}: expected a number"))?;
+        match suffix {
+            "" => Ok(CacheBudget::entries(n)),
+            "k" | "kb" => Ok(CacheBudget::bytes(n.saturating_mul(1024))),
+            "m" | "mb" => Ok(CacheBudget::bytes(n.saturating_mul(1024 * 1024))),
+            "g" | "gb" => Ok(CacheBudget::bytes(n.saturating_mul(1024 * 1024 * 1024))),
+            _ => Err(format!("bad cache budget {s:?}: unknown suffix {suffix:?}")),
+        }
+    }
+}
+
+/// One resident evaluation in a shard's clock ring.
+struct ClockEntry {
+    key: SchemeKey,
+    eval: LayerEval,
+    /// Second-chance bit: set on hit, cleared as the hand sweeps past.
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    /// Key -> slot in `ring`.
+    index: HashMap<SchemeKey, usize>,
+    ring: Vec<ClockEntry>,
+    /// Clock hand: next slot the eviction sweep examines.
+    hand: usize,
+}
+
+impl Shard {
+    /// Advance the hand to the first unreferenced entry (clearing reference
+    /// bits on the way) and return its slot. Terminates: one full sweep
+    /// clears every bit. Must only be called on a non-empty ring.
+    fn clock_victim(&mut self) -> usize {
+        loop {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            if self.ring[self.hand].referenced {
+                self.ring[self.hand].referenced = false;
+                self.hand += 1;
+            } else {
+                let slot = self.hand;
+                self.hand += 1;
+                return slot;
+            }
+        }
+    }
+}
+
+/// Budgeted, sharded, clock-evicting memo for `sim::evaluate_layer` —
+/// the cross-job scheduling session cache. See the module docs for the
+/// design; the unbounded per-run [`super::CostCache`] remains the default
+/// for solitary jobs.
+pub struct SessionCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Entry budget (`usize::MAX` = unbounded).
+    cap: usize,
+    /// Total resident entries across shards (may transiently read high
+    /// during a contended insert, never low — so the budget is a hard
+    /// ceiling).
+    count: AtomicUsize,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl SessionCache {
+    pub fn new(budget: CacheBudget) -> SessionCache {
+        SessionCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            cap: budget.max_entries,
+            count: AtomicUsize::new(0),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn unbounded() -> SessionCache {
+        SessionCache::new(CacheBudget::UNBOUNDED)
+    }
+
+    /// The configured entry budget.
+    pub fn budget_entries(&self) -> usize {
+        self.cap
+    }
+
+    /// Distinct evaluations currently resident.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().ring.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        EvalCache::stats(self).hit_rate()
+    }
+
+    /// Insert a freshly computed evaluation, staying within the budget: a
+    /// full cache evicts a clock victim from the entry's own shard; if the
+    /// own shard is empty (budgets smaller than the shard count), a victim
+    /// is stolen from a non-empty peer shard — with no locks held across
+    /// shards — so even a 1-entry budget keeps caching instead of going
+    /// permanently cold for 15/16 of the keyspace.
+    fn insert(&self, si: usize, key: SchemeKey, eval: LayerEval) {
+        if self.cap == 0 {
+            return;
+        }
+        {
+            let mut sh = self.shards[si].lock().unwrap();
+            if let Some(&slot) = sh.index.get(&key) {
+                // Another thread computed the same key concurrently.
+                sh.ring[slot].referenced = true;
+                return;
+            }
+            if self.try_reserve_and_push(&mut sh, key, eval) {
+                return;
+            }
+            if !sh.ring.is_empty() {
+                let slot = sh.clock_victim();
+                let old = sh.ring[slot].key;
+                sh.index.remove(&old);
+                sh.ring[slot] = ClockEntry { key, eval, referenced: false };
+                sh.index.insert(key, slot);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        // Own shard empty but the cache is full: free a slot elsewhere,
+        // then retry one reservation. The own-shard lock is dropped first,
+        // so shard locks are only ever taken one at a time (no ordering
+        // deadlock); if a racing thread grabs the freed slot we simply
+        // skip caching this entry (still within budget).
+        if !self.steal_slot(si) {
+            return;
+        }
+        let mut sh = self.shards[si].lock().unwrap();
+        if !sh.index.contains_key(&key) {
+            self.try_reserve_and_push(&mut sh, key, eval);
+        }
+    }
+
+    /// Reserve one slot in the global budget and, on success, append the
+    /// entry to the shard's clock ring. fetch_add serializes reservations,
+    /// so at most `cap` succeed; losers give the slot back (the transient
+    /// overshoot makes peers conservative, never over-budget).
+    fn try_reserve_and_push(&self, sh: &mut Shard, key: SchemeKey, eval: LayerEval) -> bool {
+        let prev = self.count.fetch_add(1, Ordering::Relaxed);
+        if prev < self.cap {
+            let slot = sh.ring.len();
+            sh.ring.push(ClockEntry { key, eval, referenced: false });
+            sh.index.insert(key, slot);
+            true
+        } else {
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Clock-evict one entry from the first non-empty shard other than
+    /// `except`, returning whether a slot was freed. Called with no shard
+    /// lock held.
+    fn steal_slot(&self, except: usize) -> bool {
+        for sj in (0..self.shards.len()).filter(|&j| j != except) {
+            let mut sh = self.shards[sj].lock().unwrap();
+            if sh.ring.is_empty() {
+                continue;
+            }
+            let slot = sh.clock_victim();
+            let old = sh.ring[slot].key;
+            sh.index.remove(&old);
+            sh.ring.swap_remove(slot);
+            // swap_remove moved the tail entry into `slot`: fix its index
+            // and keep the hand in range.
+            if slot < sh.ring.len() {
+                let moved = sh.ring[slot].key;
+                sh.index.insert(moved, slot);
+            }
+            if sh.hand > sh.ring.len() {
+                sh.hand = 0;
+            }
+            self.count.fetch_sub(1, Ordering::Relaxed);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+}
+
+impl EvalCache for SessionCache {
+    /// Evaluate `s` on the detailed model, memoized under the budget.
+    /// Concurrent misses on the same key may both compute (the simulator
+    /// is pure, so they agree); no lock is held across the evaluation.
+    fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval {
+        let key = SchemeKey::of(arch, s, ifm_on_chip);
+        let si = shard_of(&key);
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut sh = self.shards[si].lock().unwrap();
+            if let Some(&slot) = sh.index.get(&key) {
+                sh.ring[slot].referenced = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return sh.ring[slot].eval;
+            }
+        }
+        let ev = crate::sim::evaluate_layer(arch, s, ifm_on_chip);
+        self.insert(si, key, ev);
+        ev
+    }
+
+    fn stats(&self) -> CacheStats {
+        // Hits read before lookups (each hit bumps lookups first) to make
+        // torn concurrent snapshots unlikely; relaxed atomics can still
+        // reorder, so misses()/hit_rate() clamp rather than trust this.
+        let hits = self.hits();
+        CacheStats {
+            lookups: self.lookups(),
+            hits,
+            evictions: self.evictions(),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::directives::{Grp, LevelBlock, LoopOrder, Qty};
+    use crate::mapping::UnitMap;
+    use crate::partition::PartitionScheme;
+    use crate::workloads::Layer;
+
+    fn scheme(arch: &ArchConfig, k: u64) -> LayerScheme {
+        let l = Layer::conv("c", 16, k, 14, 3, 1);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(arch, part.node_shape(&l, 4));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        }
+    }
+
+    #[test]
+    fn budget_parse_forms() {
+        assert_eq!(CacheBudget::parse("unbounded"), Ok(CacheBudget::UNBOUNDED));
+        assert_eq!(CacheBudget::parse("none"), Ok(CacheBudget::UNBOUNDED));
+        assert_eq!(CacheBudget::parse("5000"), Ok(CacheBudget::entries(5000)));
+        assert_eq!(CacheBudget::parse("64MB"), Ok(CacheBudget::bytes(64 * 1024 * 1024)));
+        assert_eq!(CacheBudget::parse("4kb"), Ok(CacheBudget::bytes(4 * 1024)));
+        assert!(CacheBudget::parse("").is_err());
+        assert!(CacheBudget::parse("12xb").is_err());
+        assert!(CacheBudget::parse("lots").is_err());
+        // Tiny byte budgets degrade to one entry, never zero.
+        assert!(CacheBudget::parse("1kb").unwrap().max_entries >= 1);
+    }
+
+    #[test]
+    fn warm_hits_match_simulator_and_count() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::unbounded();
+        let s = scheme(&arch, 32);
+        let a = sc.evaluate_layer(&arch, &s, false);
+        let b = sc.evaluate_layer(&arch, &s, false);
+        let direct = crate::sim::evaluate_layer(&arch, &s, false);
+        assert_eq!(format!("{a:?}"), format!("{direct:?}"));
+        assert_eq!(format!("{b:?}"), format!("{direct:?}"));
+        let st = EvalCache::stats(&sc);
+        assert_eq!((st.lookups, st.hits, st.evictions, st.entries), (2, 1, 0, 1));
+        assert_eq!(st.misses(), 1);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_is_a_hard_ceiling() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::new(CacheBudget::entries(3));
+        for k in [8u64, 16, 24, 32, 40, 48, 56, 64] {
+            sc.evaluate_layer(&arch, &scheme(&arch, k), false);
+            assert!(sc.len() <= 3, "len {} exceeds budget", sc.len());
+        }
+        assert!(sc.evictions() > 0 || sc.len() < 3, "churn must evict once full");
+        // Evicted or not, every lookup still returns the simulator's value.
+        for k in [8u64, 32, 64] {
+            let s = scheme(&arch, k);
+            let got = sc.evaluate_layer(&arch, &s, false);
+            let want = crate::sim::evaluate_layer(&arch, &s, false);
+            assert_eq!(format!("{got:?}"), format!("{want:?}"));
+            assert!(sc.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn zero_budget_never_caches_but_stays_correct() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::new(CacheBudget::entries(0));
+        let s = scheme(&arch, 32);
+        let a = sc.evaluate_layer(&arch, &s, false);
+        let b = sc.evaluate_layer(&arch, &s, false);
+        assert_eq!(sc.len(), 0);
+        assert_eq!(sc.hits(), 0);
+        let want = crate::sim::evaluate_layer(&arch, &s, false);
+        assert_eq!(format!("{a:?}"), format!("{want:?}"));
+        assert_eq!(format!("{b:?}"), format!("{want:?}"));
+    }
+
+    #[test]
+    fn clock_gives_hot_entries_a_second_chance() {
+        // Single-shard scenario is not guaranteed (keys hash across 16
+        // shards), so assert the behavioral consequence instead: with a
+        // budget of 2 and a hot key touched between insertions of cold
+        // keys, the hot key keeps hitting.
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::new(CacheBudget::entries(2));
+        let hot = scheme(&arch, 32);
+        sc.evaluate_layer(&arch, &hot, false);
+        let mut hot_hits = 0;
+        for k in [8u64, 16, 24, 40, 48] {
+            sc.evaluate_layer(&arch, &scheme(&arch, k), false);
+            let before = sc.hits();
+            sc.evaluate_layer(&arch, &hot, false);
+            hot_hits += (sc.hits() - before) as usize;
+            assert!(sc.len() <= 2);
+        }
+        // The reference bit must have saved the hot entry at least once.
+        assert!(hot_hits > 0, "hot key never survived eviction");
+    }
+
+    #[test]
+    fn different_arch_fingerprints_never_alias() {
+        let a1 = presets::eyeriss_like((4, 4), (8, 8), 64, 32 * 1024);
+        let a2 = presets::eyeriss_like((4, 4), (8, 8), 64, 64 * 1024);
+        let sc = SessionCache::unbounded();
+        let s = scheme(&a1, 32);
+        let e1 = sc.evaluate_layer(&a1, &s, false);
+        let e2 = sc.evaluate_layer(&a2, &s, false);
+        assert_eq!(sc.hits(), 0, "different arches must not alias");
+        assert_eq!(sc.len(), 2);
+        assert!(e2.energy.gbuf_pj > e1.energy.gbuf_pj);
+        // Warm lookups stay arch-exact.
+        let w1 = sc.evaluate_layer(&a1, &s, false);
+        let w2 = sc.evaluate_layer(&a2, &s, false);
+        assert_eq!(sc.hits(), 2);
+        assert_eq!(format!("{w1:?}"), format!("{e1:?}"));
+        assert_eq!(format!("{w2:?}"), format!("{e2:?}"));
+    }
+
+    #[test]
+    fn concurrent_bounded_access_is_consistent() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::new(CacheBudget::entries(4));
+        let schemes: Vec<LayerScheme> =
+            (0..32).map(|i| scheme(&arch, 8 + 8 * (i % 8))).collect();
+        let evs = crate::util::par_map(&schemes, 4, |s| {
+            sc.evaluate_layer(&arch, s, false).energy.total()
+        });
+        for (s, e) in schemes.iter().zip(&evs) {
+            assert_eq!(*e, crate::sim::evaluate_layer(&arch, s, false).energy.total());
+        }
+        assert!(sc.len() <= 4);
+        assert_eq!(sc.lookups(), 32);
+    }
+}

@@ -6,7 +6,7 @@
 //! error, the top `k_S` candidate chains are kept per layer (default 4,
 //! studied in the paper's Fig. 11).
 
-use super::prune::{prune_and_rank, PruneStats, RankedSegment};
+use super::prune::{prune_and_rank, prune_and_rank_threaded, PruneStats, RankedSegment};
 use super::{candidate_spans, enumerate_segment_schemes, Segment};
 use crate::arch::ArchConfig;
 use crate::workloads::Network;
@@ -54,6 +54,15 @@ struct Node {
 
 /// Run the DP and return the top `ks` complete chains, plus aggregate
 /// pruning statistics (for Table VI-style reporting).
+///
+/// The per-span work — enumerating a span's inter-layer schemes, validity
+/// pruning, lower-bound scoring, Pareto filtering — depends only on the
+/// span, never on DP state, so with `cfg.solve_threads > 1` every
+/// `(end layer, span)` candidate is scored up front across the scoped
+/// worker pool (each span ranking inline so pools don't nest); the
+/// sequential chain combination afterwards is pure table assembly.
+/// `par_map` preserves item order and the scoring is pure, so the chains
+/// are byte-identical for any thread count.
 pub fn best_chains(
     arch: &ArchConfig,
     net: &Network,
@@ -64,18 +73,38 @@ pub fn best_chains(
     let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
     let mut stats = PruneStats::default();
 
+    let span_jobs: Vec<(usize, Vec<usize>)> = (0..n)
+        .flat_map(|i| candidate_spans(i, cfg.max_seg_len).into_iter().map(move |s| (i, s)))
+        .collect();
+    let outer = cfg.solve_threads.max(1);
+    let ranked_jobs: Vec<(Vec<RankedSegment>, PruneStats)> =
+        crate::util::par_map(&span_jobs, outer, |(_, span)| {
+            let schemes = enumerate_segment_schemes(net, arch, batch, span, cfg.max_rounds);
+            let (mut ranked, st) = if outer > 1 {
+                prune_and_rank_threaded(arch, net, batch, schemes, 1)
+            } else {
+                prune_and_rank(arch, net, batch, schemes)
+            };
+            // Only the best `top_per_span` survivors are ever read; drop
+            // the rest here so holding all spans' results at once costs
+            // O(spans * top_per_span), not O(spans * survivors).
+            ranked.truncate(cfg.top_per_span);
+            (ranked, st)
+        });
+
+    let mut job = 0;
     for i in 0..n {
         let mut cands: Vec<Node> = Vec::new();
-        for span in candidate_spans(i, cfg.max_seg_len) {
-            let start = span[0];
-            let schemes = enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds);
-            let (ranked, st) = prune_and_rank(arch, net, batch, schemes);
+        while job < span_jobs.len() && span_jobs[job].0 == i {
+            let start = span_jobs[job].1[0];
+            let (ranked, st) = &ranked_jobs[job];
+            job += 1;
             stats.total += st.total;
             stats.after_validity += st.after_validity;
             stats.after_pareto += st.after_pareto;
-            for RankedSegment { seg, est } in ranked.into_iter().take(cfg.top_per_span) {
+            for RankedSegment { seg, est } in ranked.iter() {
                 if start == 0 {
-                    cands.push(Node { cost: est.score(), seg, parent: None });
+                    cands.push(Node { cost: est.score(), seg: seg.clone(), parent: None });
                 } else {
                     for (rank, prev) in table[start - 1].iter().enumerate() {
                         cands.push(Node {
@@ -169,6 +198,22 @@ mod tests {
         for seg in &chains[0].segments {
             assert_eq!(seg.len(), 1);
         }
+    }
+
+    #[test]
+    fn parallel_span_scoring_is_byte_identical() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let seq =
+            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 1, ..DpConfig::default() });
+        let par =
+            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 4, ..DpConfig::default() });
+        assert_eq!(seq.0.len(), par.0.len());
+        for (a, b) in seq.0.iter().zip(&par.0) {
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(format!("{:?}", a.segments), format!("{:?}", b.segments));
+        }
+        assert_eq!(format!("{:?}", seq.1), format!("{:?}", par.1));
     }
 
     #[test]

@@ -62,6 +62,20 @@ pub fn prune_and_rank(
     batch: u64,
     candidates: Vec<Segment>,
 ) -> (Vec<RankedSegment>, PruneStats) {
+    prune_and_rank_threaded(arch, net, batch, candidates, 0)
+}
+
+/// [`prune_and_rank`] with an explicit estimation thread count: `0` keeps
+/// the size-based auto heuristic, `1` forces inline scoring. Callers that
+/// already run on the scoped worker pool (the parallel inter-layer DP)
+/// pass `1` so the pools don't nest and multiply.
+pub fn prune_and_rank_threaded(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    candidates: Vec<Segment>,
+    threads: usize,
+) -> (Vec<RankedSegment>, PruneStats) {
     let mut stats = PruneStats { total: candidates.len(), ..Default::default() };
     let valid: Vec<Segment> =
         candidates.into_iter().filter(|seg| conservative_valid(arch, net, batch, seg)).collect();
@@ -70,7 +84,15 @@ pub fn prune_and_rank(
     // A lower-bound estimate costs ~1us; spawning the scoped pool costs
     // ~100us. Only shard genuinely large candidate sets (full-scale meshes
     // with long spans) — everything else runs inline.
-    let threads = if valid.len() >= 1024 { crate::util::available_threads() } else { 1 };
+    let threads = if threads == 0 {
+        if valid.len() >= 1024 {
+            crate::util::available_threads()
+        } else {
+            1
+        }
+    } else {
+        threads
+    };
     let ests =
         crate::util::par_map(&valid, threads, |seg| segment_lower_bound(arch, net, batch, seg));
     let mut ranked: Vec<RankedSegment> =

@@ -13,6 +13,7 @@
 
 use kapla::arch::{presets, ArchConfig};
 use kapla::coordinator::{self, service, Job, SolverKind};
+use kapla::cost::{CacheBudget, CacheStats, EvalCache as _, SessionCache};
 use kapla::directives::emit::emit_layer;
 use kapla::interlayer::dp::DpConfig;
 use kapla::report::{eng, Table};
@@ -36,7 +37,14 @@ fn main() -> ExitCode {
         "compare" => cmd_compare(&flags),
         "validate" => cmd_validate(rest),
         "serve" => {
-            service::serve(&arch_of(&flags));
+            let budget = match budget_of(&flags) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            service::serve_with(&arch_of(&flags), budget);
             ExitCode::SUCCESS
         }
         "info" => cmd_info(),
@@ -51,8 +59,29 @@ fn usage() {
     eprintln!(
         "kapla <schedule|directives|compare|validate|serve|info> \
          [--net NAME] [--batch N] [--arch multi|edge|bench] \
-         [--solver k|b|s|r[:p]|m[:rounds]] [--objective energy|latency] [--train] \
-         [--threads N]"
+         [--solver k|b|s|r[:p=P,seed=S]|m[:rounds=R,batch=B,seed=S]] \
+         [--objective energy|latency] [--train] \
+         [--threads N] [--cache-budget N|unbounded|64mb]"
+    );
+}
+
+/// Session-cache budget from `--cache-budget` (entries, `kb/mb/gb` byte
+/// sizes, or `unbounded`); the default is unbounded.
+fn budget_of(flags: &HashMap<String, String>) -> Result<CacheBudget, String> {
+    match flags.get("cache-budget") {
+        Some(s) => CacheBudget::parse(s),
+        None => Ok(CacheBudget::UNBOUNDED),
+    }
+}
+
+fn print_cache_stats(prefix: &str, st: &CacheStats) {
+    println!(
+        "{prefix}: {} lookups, {} hits ({:.0}%), {} evictions, {} entries resident",
+        st.lookups,
+        st.hits,
+        100.0 * st.hit_rate(),
+        st.evictions,
+        st.entries
     );
 }
 
@@ -98,10 +127,12 @@ fn net_of(flags: &HashMap<String, String>) -> Option<(kapla::workloads::Network,
     Some((net, batch))
 }
 
-fn objective_of(flags: &HashMap<String, String>) -> Objective {
-    match flags.get("objective").map(|s| s.as_str()) {
-        Some("latency") => Objective::Latency,
-        _ => Objective::Energy,
+/// `--objective`, strict: a present-but-misspelled value is an error, not
+/// a silent fall-back to energy.
+fn objective_of(flags: &HashMap<String, String>) -> Result<Objective, String> {
+    match flags.get("objective") {
+        Some(s) => Objective::parse(s).ok_or_else(|| format!("unknown objective {s:?}")),
+        None => Ok(Objective::Energy),
     }
 }
 
@@ -111,16 +142,40 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         eprintln!("unknown network");
         return ExitCode::FAILURE;
     };
-    let solver =
-        flags.get("solver").and_then(|s| SolverKind::parse(s)).unwrap_or(SolverKind::Kapla);
-    let job = Job { net, batch, objective: objective_of(flags), solver, dp: dp_of(flags) };
+    let solver = match flags.get("solver") {
+        Some(s) => match SolverKind::parse(s) {
+            Some(k) => k,
+            None => {
+                eprintln!("unknown solver {s:?}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => SolverKind::Kapla,
+    };
+    let budget = match budget_of(flags) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let objective = match objective_of(flags) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let job = Job { net, batch, objective, solver, dp: dp_of(flags) };
     println!(
         "scheduling {} (batch {batch}) on {} with {}...",
         job.net.name,
         arch.name,
         solver.letter()
     );
-    let r = coordinator::run_job(&arch, &job);
+    let session = SessionCache::new(budget);
+    let r = coordinator::run_job_with(&arch, &job, &session);
+    print_cache_stats("evaluation cache", &r.cache);
 
     println!(
         "energy {} | latency {} cycles ({:.3} ms) | solved in {}",
@@ -171,7 +226,13 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
         .split(',')
         .filter_map(SolverKind::parse)
         .collect();
-    let obj = objective_of(flags);
+    let obj = match objective_of(flags) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
     // Job-level parallelism already saturates the host here; keep each
     // job's intra-layer sweep sequential so the pools don't multiply
     // (`--threads` caps the outer job pool).
@@ -179,11 +240,22 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
         .get("threads")
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(coordinator::default_threads);
+    let budget = match budget_of(flags) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::FAILURE;
+        }
+    };
     let jobs: Vec<Job> = solvers
         .iter()
         .map(|&solver| Job { net: net.clone(), batch, objective: obj, solver, dp: DpConfig::default() })
         .collect();
-    let results = coordinator::run_jobs(&arch, &jobs, threads);
+    // One scheduling session for the whole comparison: solvers exploring
+    // overlapping candidate spaces (B ⊂ S, R/M ⊂ B) reuse each other's
+    // detailed-model evaluations.
+    let session = SessionCache::new(budget);
+    let results = coordinator::run_jobs_with(&arch, &jobs, threads, &session);
     let base = results[0].eval.energy.total();
     let mut t = Table::new(
         &format!("{} batch={batch} on {}", net.name, arch.name),
@@ -199,6 +271,7 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
         ]);
     }
     println!("{}", t.render());
+    print_cache_stats("session cache", &session.stats());
     ExitCode::SUCCESS
 }
 

@@ -13,6 +13,7 @@ use crate::arch::{presets, ArchConfig};
 use crate::coordinator::{run_job, Job, SolverKind};
 use crate::interlayer::dp::DpConfig;
 use crate::solvers::{Objective, SolveResult};
+use crate::util::json::Json;
 use crate::workloads::{self, Network};
 
 /// Full-scale mode toggle.
@@ -94,6 +95,27 @@ pub fn run_cell(
     run_job(arch, &job)
 }
 
+/// Machine-readable record of one solve: identity, quality, solve time,
+/// and the evaluation-cache counters (so warm-session reuse shows up in
+/// the uploaded bench artifacts).
+pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
+    let mut o = Json::obj();
+    o.set("net", net.into())
+        .set("solver", solver.letter().into())
+        .set("energy_pj", r.eval.energy.total().into())
+        .set("latency_cycles", r.eval.latency_cycles.into())
+        .set("solve_s", r.solve_s.into())
+        .set("cache", r.cache.to_json());
+    o
+}
+
+/// Write a JSON report under `reports/<name>.json` (pretty, so diffs in
+/// uploaded artifacts stay readable).
+pub fn save_json(name: &str, json: &Json) {
+    let _ = std::fs::create_dir_all("reports");
+    let _ = std::fs::write(format!("reports/{name}.json"), json.to_string_pretty());
+}
+
 /// Append a section to EXPERIMENTS-bench.log (raw capture for
 /// EXPERIMENTS.md curation).
 pub fn log_section(name: &str, body: &str) {
@@ -129,5 +151,25 @@ mod tests {
         if !full_scale() {
             assert_eq!(bench_arch().nodes, (4, 4));
         }
+    }
+
+    #[test]
+    fn result_json_carries_cache_stats() {
+        let arch = presets::bench_multi_node();
+        let net = workloads::by_name("mlp").unwrap();
+        let job = Job {
+            net: net.clone(),
+            batch: 4,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
+        };
+        let r = run_job(&arch, &job);
+        let j = result_json(&net.name, job.solver, &r);
+        assert_eq!(j.get("solver").unwrap().as_str(), Some("K"));
+        assert!(j.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);
+        let cache = j.get("cache").unwrap();
+        assert!(cache.get("lookups").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cache.get("hit_rate").unwrap().as_f64().is_some());
     }
 }

@@ -11,13 +11,15 @@
 //! Both plug into the exact segment-chain DP in `solvers::exact_dp_schedule`.
 
 use crate::arch::ArchConfig;
-use crate::cost::CostCache;
+use crate::cost::EvalCache;
 use crate::directives::LayerScheme;
 use crate::interlayer::dp::DpConfig;
 use crate::workloads::{Layer, Network};
 
 use super::space::visit_schemes;
-use super::{exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{
+    exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective, SolveResult,
+};
 
 /// Exhaustive intra-layer solver.
 #[derive(Debug, Clone, Copy)]
@@ -40,7 +42,7 @@ impl IntraSolver for ExhaustiveIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &CostCache,
+        cost: &dyn EvalCache,
     ) -> Option<LayerScheme> {
         let mut best: Option<(f64, LayerScheme)> = None;
         visit_schemes(arch, layer, ctx.region, ctx.rb, self.with_sharing, |s| {
@@ -69,6 +71,18 @@ pub fn baseline_schedule(
     exact_dp_schedule(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: false })
 }
 
+/// [`baseline_schedule`] against a caller-supplied (session) cache.
+pub fn baseline_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    cost: &dyn EvalCache,
+) -> SolveResult {
+    exact_dp_schedule_with(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: false }, cost)
+}
+
 /// Schedule a network with S (exhaustive over the directive space).
 pub fn directive_exhaustive_schedule(
     arch: &ArchConfig,
@@ -80,10 +94,24 @@ pub fn directive_exhaustive_schedule(
     exact_dp_schedule(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: true })
 }
 
+/// [`directive_exhaustive_schedule`] against a caller-supplied (session)
+/// cache.
+pub fn directive_exhaustive_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    cost: &dyn EvalCache,
+) -> SolveResult {
+    exact_dp_schedule_with(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: true }, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::CostCache;
     use crate::sim::evaluate_layer;
     use crate::solvers::kapla::solve_intra;
     use crate::workloads::nets;

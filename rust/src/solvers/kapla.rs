@@ -15,7 +15,7 @@
 //! the detailed model.
 
 use crate::arch::ArchConfig;
-use crate::cost::CostCache;
+use crate::cost::{CostCache, EvalCache};
 use crate::directives::{refetch_factor_groups, tensor_groups, Grp, LevelBlock, LayerScheme, LoopOrder, Qty, TensorKind};
 use crate::interlayer::dp::{best_chains, DpConfig};
 use crate::interlayer::prune::PruneStats;
@@ -42,7 +42,7 @@ impl IntraSolver for KaplaIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &CostCache,
+        cost: &dyn EvalCache,
     ) -> Option<LayerScheme> {
         solve_intra_cached(arch, layer, ctx, cost)
     }
@@ -55,15 +55,17 @@ pub fn solve_intra(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<L
 }
 
 /// Bottom-up solve of one layer in one context, with all detailed-model
-/// evaluations memoized through the shared run-wide `cost` cache. The
-/// stacking pass probes each partition with the default loop orders and
-/// the final sweep re-scores the same schemes, so even a single solve hits
-/// the cache; across overlapping segment contexts the reuse compounds.
+/// evaluations memoized through the shared `cost` cache (per-run
+/// `CostCache` or a cross-job `SessionCache`). The stacking pass probes
+/// each partition with the default loop orders and the final sweep
+/// re-scores the same schemes, so even a single solve hits the cache;
+/// across overlapping segment contexts — and across session jobs — the
+/// reuse compounds.
 pub fn solve_intra_cached(
     arch: &ArchConfig,
     layer: &Layer,
     ctx: &IntraCtx,
-    cost: &CostCache,
+    cost: &dyn EvalCache,
 ) -> Option<LayerScheme> {
     let mut best: Option<(f64, LayerScheme)> = None;
     for part in stacking_candidates(arch, layer, ctx, cost) {
@@ -202,7 +204,7 @@ fn stacking_candidates(
     arch: &ArchConfig,
     layer: &Layer,
     ctx: &IntraCtx,
-    cost: &CostCache,
+    cost: &dyn EvalCache,
 ) -> Vec<PartitionScheme> {
     let region = ctx.region;
     let area = region.0 * region.1;
@@ -325,7 +327,7 @@ fn probe_cost(
     layer: &Layer,
     ctx: &IntraCtx,
     part: &PartitionScheme,
-    cost: &CostCache,
+    cost: &dyn EvalCache,
 ) -> f64 {
     let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
     let ro = LoopOrder([Grp::B, Grp::K, Grp::C]);
@@ -367,11 +369,26 @@ pub fn kapla_schedule(
     obj: Objective,
     cfg: &DpConfig,
 ) -> (SolveResult, PruneStats) {
+    kapla_schedule_with(arch, net, batch, obj, cfg, &CostCache::new())
+}
+
+/// [`kapla_schedule`] against a caller-supplied evaluation cache — the
+/// entry point scheduling sessions use to reuse detailed-model evaluations
+/// across jobs. Because the solver is pure per context and the cache is
+/// exact-keyed, a shared (even bounded/evicting) session yields schedules
+/// byte-identical to a solitary run.
+pub fn kapla_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    cost: &dyn EvalCache,
+) -> (SolveResult, PruneStats) {
     let timer = crate::util::Timer::start();
     let (chains, stats) = best_chains(arch, net, batch, cfg);
     let intra = KaplaIntra;
     let mut cache: super::IntraCache = std::collections::HashMap::new();
-    let cost = CostCache::new();
 
     if cfg.solve_threads > 1 {
         let keys = super::collect_intra_keys(
@@ -387,7 +404,7 @@ pub fn kapla_schedule(
             obj,
             cfg.solve_threads,
             &mut cache,
-            &cost,
+            cost,
         );
     }
 
@@ -396,7 +413,7 @@ pub fn kapla_schedule(
         let mut segments = Vec::with_capacity(chain.segments.len());
         let mut ok = true;
         for seg in &chain.segments {
-            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache, &cost)
+            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache, cost)
             {
                 Some(schemes) => segments.push((seg.clone(), schemes)),
                 None => {
@@ -427,7 +444,7 @@ pub fn kapla_schedule(
             for i in 0..net.len() {
                 let seg = crate::interlayer::Segment::single(i, arch);
                 let schemes = super::solve_segment_layers(
-                    arch, net, batch, &seg, &intra, obj, &mut cache, &cost,
+                    arch, net, batch, &seg, &intra, obj, &mut cache, cost,
                 )
                 .expect("even singleton segment unschedulable");
                 segments.push((seg, schemes));
@@ -436,7 +453,7 @@ pub fn kapla_schedule(
         }
     };
     let eval = evaluate_schedule(arch, net, &schedule);
-    (SolveResult { schedule, eval, solve_s: timer.elapsed_s() }, stats)
+    (SolveResult { schedule, eval, solve_s: timer.elapsed_s(), cache: cost.stats() }, stats)
 }
 
 #[cfg(test)]

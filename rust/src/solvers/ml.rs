@@ -13,7 +13,7 @@
 //! cross-checked in tests.
 
 use crate::arch::ArchConfig;
-use crate::cost::{scheme_features, CostCache, SCHEME_FEATURES};
+use crate::cost::{scheme_features, EvalCache, SCHEME_FEATURES};
 use crate::directives::{LevelBlock, LayerScheme, LoopOrder};
 use crate::interlayer::dp::DpConfig;
 use crate::mapping::UnitMap;
@@ -22,7 +22,10 @@ use crate::util::SplitMix64;
 use crate::workloads::{Layer, Network};
 
 use super::space::qty_candidates;
-use super::{ctx_fingerprint, exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{
+    ctx_fingerprint, exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective,
+    SolveResult,
+};
 
 /// A trainable cost predictor over scheme features.
 pub trait CostPredictor {
@@ -244,7 +247,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &CostCache,
+        cost: &dyn EvalCache,
     ) -> Option<LayerScheme> {
         let fp = ctx_fingerprint(layer, ctx);
         let mut rng = SplitMix64::new(self.seed ^ fp);
@@ -347,10 +350,29 @@ pub fn ml_schedule(
     exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
 }
 
+/// [`ml_schedule`] against a caller-supplied (session) cache. Surrogates
+/// are freshly derived per context, so a shared session changes nothing
+/// but speed.
+pub fn ml_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    seed: u64,
+    rounds: usize,
+    sa_batch: usize,
+    cost: &dyn EvalCache,
+) -> SolveResult {
+    let intra = MlIntra::native(seed, rounds, sa_batch);
+    exact_dp_schedule_with(arch, net, batch, obj, cfg, &intra, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::CostCache;
     use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
 

@@ -22,7 +22,7 @@ pub mod space;
 use std::collections::{HashMap, HashSet};
 
 use crate::arch::ArchConfig;
-use crate::cost::CostCache;
+use crate::cost::{CacheStats, CostCache, EvalCache};
 use crate::directives::LayerScheme;
 use crate::interlayer::dp::DpConfig;
 use crate::interlayer::prune::conservative_valid;
@@ -36,6 +36,27 @@ use crate::workloads::{Layer, Network};
 pub enum Objective {
     Energy,
     Latency,
+}
+
+impl Objective {
+    /// Parse the CLI/service spelling — the one place the mapping lives,
+    /// shared by `--objective`, the service positional and the
+    /// `objective=` knob.
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "energy" => Some(Objective::Energy),
+            "latency" => Some(Objective::Latency),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling, round-tripping [`Objective::parse`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Latency => "latency",
+        }
+    }
 }
 
 /// Context handed to an intra-layer solver for one layer of one segment.
@@ -54,9 +75,11 @@ pub struct IntraCtx {
 /// in the given context, or `None` if no valid scheme exists.
 ///
 /// Solvers are *pure* per call — all candidate evaluations go through the
-/// shared [`CostCache`] and any internal randomness is derived from the
+/// shared [`EvalCache`] (the per-run [`CostCache`] or a cross-job
+/// `cost::SessionCache`) and any internal randomness is derived from the
 /// solver's seed plus [`ctx_fingerprint`] — so independent contexts can be
-/// solved concurrently with results identical to the sequential order.
+/// solved concurrently, and sessions shared across jobs, with results
+/// identical to a solitary sequential run.
 pub trait IntraSolver: Sync {
     fn name(&self) -> &'static str;
     fn solve(
@@ -64,7 +87,7 @@ pub trait IntraSolver: Sync {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &CostCache,
+        cost: &dyn EvalCache,
     ) -> Option<LayerScheme>;
 }
 
@@ -97,6 +120,11 @@ pub struct SolveResult {
     pub eval: NetEval,
     /// Wall-clock seconds spent solving.
     pub solve_s: f64,
+    /// Evaluation-cache counters at job completion. For a solitary job
+    /// this covers exactly that run; for a shared scheduling session the
+    /// counters are session-cumulative, so deltas between consecutive
+    /// results expose cross-job reuse.
+    pub cache: CacheStats,
 }
 
 impl SolveResult {
@@ -130,7 +158,7 @@ pub(crate) fn solve_segment_layers(
     intra: &dyn IntraSolver,
     obj: Objective,
     cache: &mut IntraCache,
-    cost: &CostCache,
+    cost: &dyn EvalCache,
 ) -> Option<Vec<LayerScheme>> {
     let rb = seg.round_batch(batch);
     let mut out = Vec::with_capacity(seg.len());
@@ -183,7 +211,7 @@ pub(crate) fn presolve_contexts(
     obj: Objective,
     threads: usize,
     cache: &mut IntraCache,
-    cost: &CostCache,
+    cost: &dyn EvalCache,
 ) {
     let solved = crate::util::par_map(&keys, threads, |&(li, region, rb, on_chip)| {
         let ctx = IntraCtx { region, rb, ifm_on_chip: on_chip, objective: obj };
@@ -213,6 +241,22 @@ pub fn exact_dp_schedule(
     cfg: &DpConfig,
     intra: &dyn IntraSolver,
 ) -> SolveResult {
+    exact_dp_schedule_with(arch, net, batch, obj, cfg, intra, &CostCache::new())
+}
+
+/// [`exact_dp_schedule`] against a caller-supplied evaluation cache — the
+/// entry point scheduling sessions use to reuse detailed-model evaluations
+/// across jobs (the cache key carries the arch fingerprint, so one session
+/// can serve jobs on different hardware configs without aliasing).
+pub fn exact_dp_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    intra: &dyn IntraSolver,
+    cost: &dyn EvalCache,
+) -> SolveResult {
     let timer = crate::util::Timer::start();
     let n = net.len();
     struct Node {
@@ -223,7 +267,6 @@ pub fn exact_dp_schedule(
     }
     let mut table: Vec<Option<Node>> = (0..n).map(|_| None).collect();
     let mut cache: IntraCache = HashMap::new();
-    let eval_cache = CostCache::new();
 
     // Enumerate every candidate segment once, grouped per (end layer,
     // span start). The enumeration is DP-state-independent, so the same
@@ -250,7 +293,7 @@ pub fn exact_dp_schedule(
             batch,
             spans_by_end.iter().flatten().flat_map(|(_, segs)| segs.iter()),
         );
-        presolve_contexts(arch, net, keys, intra, obj, cfg.solve_threads, &mut cache, &eval_cache);
+        presolve_contexts(arch, net, keys, intra, obj, cfg.solve_threads, &mut cache, cost);
     }
 
     for i in 0..n {
@@ -266,7 +309,7 @@ pub fn exact_dp_schedule(
             };
             for seg in segs {
                 let Some(schemes) =
-                    solve_segment_layers(arch, net, batch, seg, intra, obj, &mut cache, &eval_cache)
+                    solve_segment_layers(arch, net, batch, seg, intra, obj, &mut cache, cost)
                 else {
                     continue;
                 };
@@ -301,7 +344,7 @@ pub fn exact_dp_schedule(
     segments.reverse();
     let schedule = Schedule { segments };
     let eval = evaluate_schedule(arch, net, &schedule);
-    SolveResult { schedule, eval, solve_s: timer.elapsed_s() }
+    SolveResult { schedule, eval, solve_s: timer.elapsed_s(), cache: cost.stats() }
 }
 
 #[cfg(test)]
@@ -321,7 +364,7 @@ mod tests {
             arch: &ArchConfig,
             layer: &Layer,
             ctx: &IntraCtx,
-            _cost: &CostCache,
+            _cost: &dyn EvalCache,
         ) -> Option<LayerScheme> {
             space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
         }

@@ -7,7 +7,7 @@
 //! produce valid schemes; the edge config even needs p = 0.85).
 
 use crate::arch::ArchConfig;
-use crate::cost::CostCache;
+use crate::cost::EvalCache;
 use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
 use crate::interlayer::dp::DpConfig;
 use crate::mapping::UnitMap;
@@ -16,7 +16,10 @@ use crate::util::SplitMix64;
 use crate::workloads::{Layer, Network};
 
 use super::space::qty_candidates;
-use super::{ctx_fingerprint, exact_dp_schedule, IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{
+    ctx_fingerprint, exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective,
+    SolveResult,
+};
 
 /// Random-sampling intra-layer solver. Each (layer, context) solve draws
 /// from its own RNG stream — `seed` folded with `ctx_fingerprint` — so
@@ -56,7 +59,7 @@ impl IntraSolver for RandomIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &CostCache,
+        cost: &dyn EvalCache,
     ) -> Option<LayerScheme> {
         let rng = &mut SplitMix64::new(self.seed ^ ctx_fingerprint(layer, ctx));
         let parts = enumerate_partitions(layer, ctx.rb, ctx.region, false);
@@ -117,10 +120,28 @@ pub fn random_schedule(
     exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
 }
 
+/// [`random_schedule`] against a caller-supplied (session) cache. The
+/// per-context RNG streams make the solver order-independent, so a shared
+/// session changes nothing but speed.
+pub fn random_schedule_with(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    obj: Objective,
+    cfg: &DpConfig,
+    p: f64,
+    seed: u64,
+    cost: &dyn EvalCache,
+) -> SolveResult {
+    let intra = RandomIntra::new(p, seed);
+    exact_dp_schedule_with(arch, net, batch, obj, cfg, &intra, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::CostCache;
     use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
     use crate::workloads::nets;

@@ -1,16 +1,22 @@
-//! The parallel intra-layer sweep is an *optimization*, not a semantic
-//! change: for every solver family, `run_job` with a worker pool must
-//! produce byte-identical schedules and energy totals to the sequential
-//! path. These tests pin that invariant, plus the cache bookkeeping the
-//! speedup comes from.
+//! The parallel intra-layer sweep and the cross-job scheduling sessions
+//! are *optimizations*, not semantic changes: for every solver family,
+//! `run_job` with a worker pool — or against a shared, warm, or budgeted
+//! `SessionCache` — must produce byte-identical schedules and energy
+//! totals to a solitary sequential run. These tests pin that invariant
+//! (including a golden-schedule battery over the full emitted directive
+//! programs), plus the cache bookkeeping the speedup comes from.
 
 use kapla::arch::presets;
-use kapla::coordinator::{run_job, Job, SolverKind};
-use kapla::cost::CostCache;
+use kapla::coordinator::{run_job, run_job_with, Job, SolverKind};
+use kapla::cost::{CacheBudget, CostCache, EvalCache as _, SessionCache};
+use kapla::directives::emit::emit_layer;
 use kapla::interlayer::dp::DpConfig;
-use kapla::solvers::kapla::solve_intra_cached;
-use kapla::solvers::{IntraCtx, Objective};
-use kapla::workloads::{Layer, Network};
+use kapla::solvers::exhaustive::ExhaustiveIntra;
+use kapla::solvers::kapla::{solve_intra_cached, KaplaIntra};
+use kapla::solvers::ml::MlIntra;
+use kapla::solvers::random::RandomIntra;
+use kapla::solvers::{IntraCtx, IntraSolver, Objective, SolveResult};
+use kapla::workloads::{nets, Layer, Network};
 
 fn tiny_net() -> Network {
     let mut n = Network::new("tiny", 8, 28, 28);
@@ -99,4 +105,180 @@ fn cost_cache_hit_rate_sanity() {
     );
     // The second pass was answered entirely from the memo.
     assert_eq!(cache.hits(), cache.lookups() - len1 as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Golden-schedule battery: pin the full emitted directive programs + costs
+// for all five solvers on two small networks, and require the bytes to be
+// identical across cold cache, warm cache, shared session, bounded
+// (evicting) session, and 1-vs-N worker threads. A blessed snapshot file
+// (tests/golden/*.snap, written with KAPLA_BLESS=1) additionally pins the
+// bytes across commits when present.
+
+fn golden_solvers() -> Vec<SolverKind> {
+    vec![
+        SolverKind::Baseline,
+        SolverKind::DirectiveExhaustive,
+        SolverKind::Random { p: 0.15, seed: 1 },
+        SolverKind::Ml { seed: 1, rounds: 4, batch: 16 },
+        SolverKind::Kapla,
+    ]
+}
+
+fn golden_nets() -> Vec<(Network, u64)> {
+    vec![(nets::mlp(), 4), (tiny_net(), 4)]
+}
+
+fn golden_dp(threads: usize) -> DpConfig {
+    DpConfig { max_rounds: 4, max_seg_len: 3, solve_threads: threads, ..DpConfig::default() }
+}
+
+/// Render one solve as the exact bytes the battery pins: full-precision
+/// costs plus every emitted directive program, in schedule order.
+fn snapshot_result(net: &Network, solver: SolverKind, r: &SolveResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== {} on {} ===\n", solver.letter(), net.name));
+    out.push_str(&format!("energy_pj: {:?}\n", r.eval.energy.total()));
+    out.push_str(&format!("latency_cycles: {:?}\n", r.eval.latency_cycles));
+    for (si, (seg, schemes)) in r.schedule.segments.iter().enumerate() {
+        out.push_str(&format!(
+            "segment {si}: layers={:?} spatial={} rounds={} regions={:?}\n",
+            seg.layers, seg.spatial, seg.rounds, seg.regions
+        ));
+        for (pos, s) in schemes.iter().enumerate() {
+            out.push_str(&emit_layer(&net.layers[seg.layers[pos]].name, s));
+        }
+    }
+    out
+}
+
+/// Run the whole battery — every golden solver on every golden net — and
+/// concatenate the snapshots. `session: None` gives each job a private
+/// cold `CostCache` (the golden reference path).
+fn run_battery(session: Option<&SessionCache>, threads: usize) -> String {
+    let arch = presets::bench_multi_node();
+    let mut out = String::new();
+    for (net, batch) in golden_nets() {
+        for solver in golden_solvers() {
+            let job = Job {
+                net: net.clone(),
+                batch,
+                objective: Objective::Energy,
+                solver,
+                dp: golden_dp(threads),
+            };
+            let r = match session {
+                Some(s) => run_job_with(&arch, &job, s),
+                None => run_job(&arch, &job),
+            };
+            out.push_str(&snapshot_result(&net, solver, &r));
+        }
+    }
+    out
+}
+
+/// Compare against the blessed snapshot file when it exists; regenerate it
+/// with `KAPLA_BLESS=1 cargo test golden`.
+fn golden_file_check(name: &str, actual: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("{name}.snap"));
+    if std::env::var("KAPLA_BLESS").map(|v| v == "1").unwrap_or(false) {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        return;
+    }
+    if let Ok(want) = std::fs::read_to_string(&path) {
+        assert_eq!(
+            want,
+            actual,
+            "snapshot diverged from blessed {} (KAPLA_BLESS=1 regenerates after intentional changes)",
+            path.display()
+        );
+    }
+    // Without a blessed file the cross-mode byte-equality asserted by the
+    // caller is the pin.
+}
+
+#[test]
+fn golden_schedules_cold_warm_shared_bounded_and_threads() {
+    // Cold: private cache per job — the golden reference.
+    let golden = run_battery(None, 1);
+
+    // Shared session across all ten jobs (5 solvers x 2 nets).
+    let session = SessionCache::unbounded();
+    let shared = run_battery(Some(&session), 1);
+    assert_eq!(golden, shared, "shared-session schedules diverged from cold");
+    let st1 = session.stats();
+    assert!(st1.lookups > 0 && st1.entries > 0);
+
+    // Warm: the same battery again on the now-hot session.
+    let warm = run_battery(Some(&session), 1);
+    assert_eq!(golden, warm, "warm-cache schedules diverged from cold");
+    let st2 = session.stats();
+    assert_eq!(st1.entries, st2.entries, "warm pass must add no entries");
+    assert_eq!(
+        st2.hits - st1.hits,
+        st2.lookups - st1.lookups,
+        "warm pass must answer every evaluation from the memo"
+    );
+    assert!(st2.hits > st1.hits, "cross-job reuse must actually occur");
+
+    // N worker threads.
+    let par = run_battery(None, 4);
+    assert_eq!(golden, par, "1-vs-N-thread schedules diverged");
+
+    // Tiny bounded session: eviction churn is a perf knob, never a
+    // results one.
+    let bounded = SessionCache::new(CacheBudget::entries(64));
+    let b = run_battery(Some(&bounded), 1);
+    assert_eq!(golden, b, "bounded-session schedules diverged from cold");
+    assert!(bounded.len() <= 64);
+    assert!(bounded.stats().evictions > 0, "a 64-entry budget must churn");
+
+    golden_file_check("schedules", &golden);
+}
+
+#[test]
+fn golden_intra_layer_directives_for_all_solvers() {
+    // The two small zoo layers: alexnet's conv2 and mlp's fc1, solved by
+    // every intra-layer solver family in a fixed context — cold cache vs
+    // shared session must emit byte-identical directive programs.
+    let arch = presets::bench_multi_node();
+    let anet = nets::alexnet();
+    let mnet = nets::mlp();
+    let layers = [&anet.layers[2], &mnet.layers[0]];
+    let ctx = IntraCtx { region: (4, 4), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
+    let solvers: Vec<(&str, Box<dyn IntraSolver>)> = vec![
+        ("B", Box::new(ExhaustiveIntra { with_sharing: false })),
+        ("S", Box::new(ExhaustiveIntra { with_sharing: true })),
+        ("R", Box::new(RandomIntra::new(0.15, 1))),
+        ("M", Box::new(MlIntra::native(1, 4, 16))),
+        ("K", Box::new(KaplaIntra)),
+    ];
+    let session = SessionCache::unbounded();
+    let mut snap = String::new();
+    for (letter, solver) in &solvers {
+        for layer in layers {
+            let cold = solver
+                .solve(&arch, layer, &ctx, &CostCache::new())
+                .unwrap_or_else(|| panic!("{letter}: no scheme for {}", layer.name));
+            let shared = solver.solve(&arch, layer, &ctx, &session).unwrap();
+            assert_eq!(
+                format!("{cold:?}"),
+                format!("{shared:?}"),
+                "{letter}/{}: session changed the scheme",
+                layer.name
+            );
+            let ev = kapla::sim::evaluate_layer(&arch, &cold, false);
+            snap.push_str(&format!(
+                "=== {letter} {} ===\nenergy_pj: {:?}\n{}",
+                layer.name,
+                ev.energy.total(),
+                emit_layer(&layer.name, &cold)
+            ));
+        }
+    }
+    assert!(session.hits() > 0, "overlapping solver spaces must share evaluations");
+    golden_file_check("intra_directives", &snap);
 }

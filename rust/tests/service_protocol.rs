@@ -1,0 +1,156 @@
+//! End-to-end service-protocol tests: drive `coordinator::service::
+//! handle_line` exactly as a connected client would — request lines in,
+//! JSON out — covering knob plumbing (`threads=` / `objective=` / DP
+//! knobs), structured rejection of malformed requests, and the
+//! cross-request cache-hit accounting of the connection's scheduling
+//! session.
+
+use kapla::arch::presets;
+use kapla::coordinator::service::handle_line;
+use kapla::cost::{CacheBudget, SessionCache};
+use kapla::util::json::Json;
+
+/// Fetch a numeric field along a path of object keys.
+fn num(j: &Json, path: &[&str]) -> f64 {
+    let mut cur = j;
+    for key in path {
+        cur = cur.get(key).unwrap_or_else(|| panic!("missing {key} in {}", j.to_string_compact()));
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("non-numeric {path:?}"))
+}
+
+fn text<'j>(j: &'j Json, key: &str) -> &'j str {
+    j.get(key).and_then(|v| v.as_str()).unwrap_or_else(|| panic!("missing string {key}"))
+}
+
+fn ok(j: &Json) -> bool {
+    j.get("ok") == Some(&Json::Bool(true))
+}
+
+#[test]
+fn knobs_plumb_into_the_solve() {
+    let arch = presets::bench_multi_node();
+    let s = SessionCache::unbounded();
+    let r = handle_line(&arch, &s, "schedule mlp 8 kapla threads=2 max_rounds=4").unwrap();
+    assert!(ok(&r), "{}", r.to_string_compact());
+    assert_eq!(text(&r, "network"), "mlp");
+    assert_eq!(text(&r, "solver"), "K");
+    assert_eq!(text(&r, "objective"), "energy");
+    assert_eq!(num(&r, &["threads"]), 2.0);
+    assert_eq!(num(&r, &["batch"]), 8.0);
+    assert!(num(&r, &["energy_pj"]) > 0.0);
+    assert!(num(&r, &["segments"]) > 0.0);
+    assert!(num(&r, &["cache", "lookups"]) > 0.0);
+
+    // objective= knob overrides the positional default and is echoed back.
+    let r = handle_line(&arch, &s, "schedule mlp 8 kapla objective=latency threads=1").unwrap();
+    assert!(ok(&r));
+    assert_eq!(text(&r, "objective"), "latency");
+    assert_eq!(num(&r, &["threads"]), 1.0);
+
+    // Positional objective still accepted.
+    let r = handle_line(&arch, &s, "schedule mlp 8 kapla latency").unwrap();
+    assert!(ok(&r));
+    assert_eq!(text(&r, "objective"), "latency");
+
+    // Solver-level key=value knobs ride the solver token.
+    let r = handle_line(&arch, &s, "schedule mlp 8 random:p=0.3,seed=7 threads=1").unwrap();
+    assert!(ok(&r));
+    assert_eq!(text(&r, "solver"), "R");
+
+    // Batch is optional: a non-numeric first positional is the solver.
+    let r = handle_line(&arch, &s, "schedule mlp kapla threads=1 max_rounds=4").unwrap();
+    assert!(ok(&r), "{}", r.to_string_compact());
+    assert_eq!(text(&r, "solver"), "K");
+    assert_eq!(num(&r, &["batch"]), 64.0, "omitted batch defaults to 64");
+
+    // An untrusted request cannot force unbounded thread fan-out.
+    let r = handle_line(&arch, &s, "schedule mlp 8 kapla threads=100000 max_rounds=4").unwrap();
+    assert!(ok(&r));
+    assert!(num(&r, &["threads"]) <= 8.0, "threads knob must be clamped");
+}
+
+#[test]
+fn malformed_requests_get_structured_errors() {
+    let arch = presets::bench_multi_node();
+    let s = SessionCache::unbounded();
+    for (line, needle) in [
+        ("schedule mlp 8 kapla threads=0", "threads"),
+        ("schedule mlp 8 kapla threads=two", "threads"),
+        ("schedule mlp 8 kapla max_seg_len=0", "max_seg_len"),
+        ("schedule mlp 8 kapla top_per_span=0", "top_per_span"),
+        ("schedule mlp 8 kapla max_seg_len=1000000", "too large"),
+        ("schedule mlp 8 kapla ks=1000000", "too large"),
+        ("schedule mlp 8 kapla max_rounds=99999999", "too large"),
+        ("schedule mlp 8 kapla objective=speed", "objective"),
+        ("schedule mlp 8 kapla bogus=1", "unknown knob"),
+        ("schedule mlp 8 wat", "unknown solver"),
+        ("schedule mlp 8 random:q=1", "unknown solver"),
+        ("schedule mlp notanumber", "bad batch"),
+        ("schedule mlp 0 kapla", "bad batch"),
+        ("schedule mlp 8 kapla energy extra", "unexpected argument"),
+        ("schedule", "missing network"),
+        ("schedule nosuchnet 8", "unknown network"),
+    ] {
+        let r = handle_line(&arch, &s, line).unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)), "{line} should be rejected");
+        let err = text(&r, "error");
+        assert!(err.contains(needle), "{line}: error {err:?} should mention {needle:?}");
+    }
+    // Nothing was scheduled, so the session saw no evaluations.
+    let st = handle_line(&arch, &s, "stats").unwrap();
+    assert_eq!(num(&st, &["cache", "lookups"]), 0.0);
+}
+
+#[test]
+fn cross_request_cache_hits_accumulate() {
+    let arch = presets::bench_multi_node();
+    let s = SessionCache::unbounded();
+    let r1 = handle_line(&arch, &s, "schedule mlp 8 kapla threads=1 max_rounds=4").unwrap();
+    assert!(ok(&r1));
+    let (lookups1, hits1, entries1) = (
+        num(&r1, &["cache", "lookups"]),
+        num(&r1, &["cache", "hits"]),
+        num(&r1, &["cache", "entries"]),
+    );
+    assert!(lookups1 > 0.0 && entries1 > 0.0);
+
+    let r2 = handle_line(&arch, &s, "schedule mlp 8 kapla threads=1 max_rounds=4").unwrap();
+    assert!(ok(&r2));
+    let (lookups2, hits2, entries2) = (
+        num(&r2, &["cache", "lookups"]),
+        num(&r2, &["cache", "hits"]),
+        num(&r2, &["cache", "entries"]),
+    );
+    // The repeated request adds no entries and answers every evaluation
+    // from the session memo: pure cross-request reuse.
+    assert_eq!(entries2, entries1, "repeat request must add no entries");
+    assert!(lookups2 > lookups1);
+    assert_eq!(hits2 - hits1, lookups2 - lookups1, "repeat request must fully hit");
+
+    // `stats` reads the same session counters.
+    let st = handle_line(&arch, &s, "stats").unwrap();
+    assert!(ok(&st));
+    assert_eq!(num(&st, &["cache", "lookups"]), lookups2);
+    assert_eq!(num(&st, &["cache", "entries"]), entries2);
+}
+
+#[test]
+fn budgeted_session_serves_identical_schedules() {
+    let arch = presets::bench_multi_node();
+    let unbounded = SessionCache::unbounded();
+    let tiny = SessionCache::new(CacheBudget::entries(32));
+    let line = "schedule mlp 8 kapla threads=1 max_rounds=4";
+    let a = handle_line(&arch, &unbounded, line).unwrap();
+    let b = handle_line(&arch, &tiny, line).unwrap();
+    assert!(ok(&a) && ok(&b));
+    assert_eq!(num(&a, &["energy_pj"]), num(&b, &["energy_pj"]));
+    assert_eq!(num(&a, &["latency_cycles"]), num(&b, &["latency_cycles"]));
+    assert_eq!(
+        a.get("chain").unwrap().to_string_compact(),
+        b.get("chain").unwrap().to_string_compact(),
+        "eviction churn must not change the chain"
+    );
+    // The tiny session actually churned.
+    assert!(num(&b, &["cache", "evictions"]) > 0.0);
+}

@@ -1,0 +1,189 @@
+//! Property tests for the bounded cross-job `cost::SessionCache` (seeded
+//! SplitMix64 op-sequence generator stands in for proptest, which is not
+//! in the offline registry). The invariants:
+//!
+//! 1. the entry budget is a hard ceiling after *any* operation sequence;
+//! 2. every lookup — hit, miss, or post-eviction recompute — returns
+//!    exactly what a fresh `sim::evaluate_layer` call returns;
+//! 3. entries from different arch fingerprints never alias (the same
+//!    scheme under two hardware configs yields each config's own result).
+//!
+//! Plus the `cache_stress` target CI drives with a tiny
+//! `KAPLA_CACHE_BUDGET` to force eviction churn through a real solver run.
+
+use kapla::arch::{presets, ArchConfig};
+use kapla::coordinator::{run_job, run_job_with, Job, SolverKind};
+use kapla::cost::{CacheBudget, EvalCache as _, SessionCache};
+use kapla::directives::{Grp, LevelBlock, LayerScheme, LoopOrder, Qty};
+use kapla::interlayer::dp::DpConfig;
+use kapla::mapping::UnitMap;
+use kapla::partition::PartitionScheme;
+use kapla::solvers::Objective;
+use kapla::util::SplitMix64;
+use kapla::workloads::{nets, Layer};
+
+/// A structurally valid scheme keyed by (k, gq): enough distinct keys to
+/// stress every shard without touching solver machinery.
+fn scheme(arch: &ArchConfig, k: u64, gq: u64) -> LayerScheme {
+    let l = Layer::conv("c", 16, k, 14, 3, 1);
+    let part = PartitionScheme::single();
+    let unit = UnitMap::build(arch, part.node_shape(&l, 4));
+    LayerScheme {
+        part,
+        unit,
+        regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+        gbuf: LevelBlock { qty: Qty::new(1, gq, gq), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+    }
+}
+
+fn prop_archs() -> [ArchConfig; 2] {
+    [
+        presets::eyeriss_like((4, 4), (8, 8), 64, 32 * 1024),
+        presets::eyeriss_like((4, 4), (8, 8), 64, 64 * 1024),
+    ]
+}
+
+#[test]
+fn random_op_sequences_respect_budget_and_purity() {
+    let archs = prop_archs();
+    for (seed, budget) in [(1u64, 1usize), (2, 3), (3, 8), (4, 32), (5, usize::MAX)] {
+        let mut rng = SplitMix64::new(seed);
+        let sc = SessionCache::new(CacheBudget { max_entries: budget });
+        for op in 0..400 {
+            let arch = &archs[rng.below(2) as usize];
+            let k = 8 + 8 * rng.below(8);
+            let gq = [2u64, 4, 8][rng.below(3) as usize];
+            let flag = rng.chance(0.5);
+            let s = scheme(arch, k, gq);
+            let got = sc.evaluate_layer(arch, &s, flag);
+            let want = kapla::sim::evaluate_layer(arch, &s, flag);
+            assert_eq!(
+                format!("{got:?}"),
+                format!("{want:?}"),
+                "op {op} (budget {budget}): cached result must equal a fresh simulation"
+            );
+            if budget != usize::MAX {
+                assert!(
+                    sc.len() <= budget,
+                    "op {op}: {} entries exceed budget {budget}",
+                    sc.len()
+                );
+            }
+            let st = sc.stats();
+            assert!(st.hits <= st.lookups);
+            assert_eq!(st.entries, sc.len());
+        }
+        let st = sc.stats();
+        assert_eq!(st.lookups, 400);
+        if budget <= 8 {
+            assert!(st.evictions > 0, "budget {budget} must have churned by op 400");
+        }
+    }
+}
+
+#[test]
+fn hits_always_equal_fresh_simulation() {
+    let archs = prop_archs();
+    let sc = SessionCache::unbounded();
+    for arch in &archs {
+        for k in [8u64, 16, 32, 64] {
+            let s = scheme(arch, k, 4);
+            let cold = sc.evaluate_layer(arch, &s, false);
+            let before = sc.hits();
+            let hit = sc.evaluate_layer(arch, &s, false);
+            assert_eq!(sc.hits(), before + 1, "second lookup must hit");
+            let fresh = kapla::sim::evaluate_layer(arch, &s, false);
+            assert_eq!(format!("{hit:?}"), format!("{fresh:?}"));
+            assert_eq!(format!("{cold:?}"), format!("{fresh:?}"));
+        }
+    }
+}
+
+#[test]
+fn arch_fingerprints_never_alias_even_under_churn() {
+    let archs = prop_archs();
+    let sc = SessionCache::new(CacheBudget::entries(4));
+    for round in 0..3 {
+        for k in [8u64, 16, 24, 32, 40] {
+            let s = scheme(&archs[0], k, 4);
+            let e1 = sc.evaluate_layer(&archs[0], &s, false);
+            let e2 = sc.evaluate_layer(&archs[1], &s, false);
+            // Larger GBUF costs more per access; an aliased entry would
+            // report the wrong arch's number.
+            assert!(
+                e2.energy.gbuf_pj > e1.energy.gbuf_pj,
+                "round {round} k {k}: arch entries aliased"
+            );
+            assert!(sc.len() <= 4);
+        }
+    }
+}
+
+#[test]
+fn concurrent_churn_stays_correct_and_bounded() {
+    let archs = prop_archs();
+    let sc = SessionCache::new(CacheBudget::entries(6));
+    let keys: Vec<(usize, u64, u64, bool)> = {
+        let mut rng = SplitMix64::new(99);
+        (0..64)
+            .map(|_| {
+                (
+                    rng.below(2) as usize,
+                    8 + 8 * rng.below(8),
+                    [2u64, 4, 8][rng.below(3) as usize],
+                    rng.chance(0.5),
+                )
+            })
+            .collect()
+    };
+    let totals = kapla::util::par_map(&keys, 4, |&(ai, k, gq, flag)| {
+        let arch = &archs[ai];
+        let s = scheme(arch, k, gq);
+        sc.evaluate_layer(arch, &s, flag).energy.total()
+    });
+    for (&(ai, k, gq, flag), got) in keys.iter().zip(&totals) {
+        let arch = &archs[ai];
+        let want = kapla::sim::evaluate_layer(arch, &scheme(arch, k, gq), flag).energy.total();
+        assert_eq!(*got, want);
+    }
+    assert!(sc.len() <= 6, "concurrent inserts exceeded the budget: {}", sc.len());
+    assert_eq!(sc.lookups(), 64);
+}
+
+/// CI drives this with `KAPLA_CACHE_BUDGET=16` so a real solver run churns
+/// the cache hard; the schedule must not care.
+#[test]
+fn cache_stress() {
+    let budget: usize = std::env::var("KAPLA_CACHE_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+    let arch = presets::bench_multi_node();
+    let job = Job {
+        net: nets::mlp(),
+        batch: 8,
+        objective: Objective::Energy,
+        solver: SolverKind::Kapla,
+        dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+    };
+    let golden = run_job(&arch, &job);
+
+    let session = SessionCache::new(CacheBudget::entries(budget));
+    for pass in 0..2 {
+        let r = run_job_with(&arch, &job, &session);
+        assert_eq!(
+            format!("{:?}", r.schedule),
+            format!("{:?}", golden.schedule),
+            "pass {pass}: eviction churn changed the schedule"
+        );
+        assert_eq!(r.eval.energy.total(), golden.eval.energy.total());
+        assert!(session.len() <= budget, "budget breached: {}", session.len());
+    }
+    let st = session.stats();
+    assert!(
+        st.evictions > 0,
+        "budget {budget} should force eviction churn ({} lookups, {} entries)",
+        st.lookups,
+        st.entries
+    );
+}
