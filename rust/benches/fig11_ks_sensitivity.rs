@@ -9,8 +9,7 @@ use kapla::coordinator::SolverKind;
 use kapla::interlayer::dp::DpConfig;
 use kapla::report::benchkit as bk;
 use kapla::report::Table;
-use kapla::solvers::kapla::kapla_schedule;
-use kapla::solvers::Objective;
+use kapla::solvers::{Objective, SolveCtx};
 use kapla::util::stats::fmt_duration;
 use kapla::workloads::training_graph;
 
@@ -30,7 +29,7 @@ fn main() {
         let be = b.eval.energy.total();
         for ks in [1usize, 2, 4, 8] {
             let dp = DpConfig { ks, ..bk::bench_dp() };
-            let (r, _) = kapla_schedule(&arch, &net, batch, Objective::Energy, &dp);
+            let r = SolveCtx::new(&arch).dp(dp).run(&net, batch, SolverKind::Kapla);
             t.row(vec![
                 fwd.name.clone(),
                 ks.to_string(),

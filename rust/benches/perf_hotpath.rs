@@ -17,7 +17,7 @@
 //! Run: `cargo bench --bench perf_hotpath`
 
 use kapla::arch::presets;
-use kapla::cost::{cost_from_features, features, CostCache, LayerCtx};
+use kapla::cost::{cost_from_features, features, CostCache, LayerCtx, TieredCost};
 use kapla::directives::{Grp, LevelBlock, LoopOrder, Qty};
 use kapla::interlayer::dp::{best_chains, DpConfig};
 use kapla::mapping::UnitMap;
@@ -99,10 +99,11 @@ fn main() {
         let t_seq = t.elapsed_s();
 
         let cache = CostCache::new();
+        let model = TieredCost::over(&cache);
         let threads = available_threads();
         let t = Timer::start();
         let par = par_map(&ctxs, threads, |(li, c)| {
-            solve_intra_cached(&arch, &net.layers[*li], c, &cache)
+            solve_intra_cached(&arch, &net.layers[*li], c, &model)
         });
         let t_par = t.elapsed_s();
         // Determinism invariant: the parallel/cached sweep returns the
@@ -158,13 +159,14 @@ fn main() {
         ));
     }
 
-    // L3d: inter-layer DP.
+    // L3d: inter-layer DP (estimate tier of the cost model only).
     {
         let cfg = DpConfig::default();
+        let model = TieredCost::fresh();
         let t = Timer::start();
         let n = 20;
         for _ in 0..n {
-            let (c, _) = best_chains(&arch, &net, 64, &cfg);
+            let (c, _) = best_chains(&arch, &net, 64, &cfg, &model);
             std::hint::black_box(c);
         }
         lines.push(format!("L3d inter-layer DP (alexnet, 16x16): {:.1} ms/net", t.elapsed_ms() / n as f64));

@@ -7,8 +7,9 @@
 //! Run: `cargo bench --bench table6_pruning`
 
 use kapla::arch::presets;
-use kapla::interlayer::prune::prune_and_rank;
+use kapla::cost::TieredCost;
 use kapla::interlayer::enumerate_segment_schemes;
+use kapla::interlayer::prune::prune_and_rank;
 use kapla::report::benchkit as bk;
 use kapla::report::Table;
 use kapla::workloads::{all_networks, training_graph, LayerKind};
@@ -44,7 +45,7 @@ fn main() {
         let span = representative_span(&net);
         let cands = enumerate_segment_schemes(&net, &arch, batch, &span, 64);
         let total = cands.len();
-        let (_, stats) = prune_and_rank(&arch, &net, batch, cands);
+        let (_, stats) = prune_and_rank(&arch, &net, batch, cands, &TieredCost::fresh());
         let seg_name: Vec<&str> = span.iter().map(|&i| net.layers[i].name.as_str()).collect();
         t.row(vec![
             fwd.name.clone(),

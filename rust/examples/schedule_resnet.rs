@@ -6,10 +6,8 @@
 //! Run: `cargo run --release --example schedule_resnet`
 
 use kapla::arch::presets;
-use kapla::interlayer::dp::DpConfig;
 use kapla::report::eng;
-use kapla::solvers::kapla::kapla_schedule;
-use kapla::solvers::Objective;
+use kapla::solvers::{SolveCtx, SolverKind};
 use kapla::util::Timer;
 use kapla::workloads::nets;
 
@@ -20,7 +18,8 @@ fn main() {
     println!("scheduling {} ({} layers) batch={batch} on {}", net.name, net.len(), arch.name);
 
     let t = Timer::start();
-    let (result, stats) = kapla_schedule(&arch, &net, batch, Objective::Energy, &DpConfig::default());
+    let result = SolveCtx::new(&arch).run(&net, batch, SolverKind::Kapla);
+    let stats = result.prune.expect("the KAPLA path reports pruning stats");
     println!("\nKAPLA solved in {:.1} s", t.elapsed_s());
     println!(
         "inter-layer pruning: {} candidate schemes -> {} after validity -> {} after Pareto ({:.1}% pruned)",

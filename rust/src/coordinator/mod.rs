@@ -1,5 +1,6 @@
-//! Scheduling coordinator: solver registry, parallel batch scheduling,
-//! cross-job scheduling sessions, and the request-loop service mode.
+//! Scheduling coordinator: job plumbing over the [`SolveCtx`] engine,
+//! parallel batch scheduling, cross-job scheduling sessions, and the
+//! request-loop service mode.
 //!
 //! The paper measures scheduling time "with 8 parallel processes" (Table
 //! IV); the coordinator parallelizes scheduling jobs across OS threads
@@ -16,86 +17,12 @@
 pub mod service;
 
 use crate::arch::ArchConfig;
-use crate::cost::{CacheBudget, CostCache, EvalCache, SessionCache};
+use crate::cost::{CacheBudget, EvalCache, SessionCache};
 use crate::interlayer::dp::DpConfig;
-use crate::solvers::exhaustive::{baseline_schedule_with, directive_exhaustive_schedule_with};
-use crate::solvers::kapla::kapla_schedule_with;
-use crate::solvers::ml::ml_schedule_with;
-use crate::solvers::random::random_schedule_with;
-use crate::solvers::{Objective, SolveResult};
+use crate::solvers::{Objective, SolveCtx, SolveResult};
 use crate::workloads::Network;
 
-/// The five evaluated solvers (paper §V letters).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum SolverKind {
-    /// B — nn-dataflow exhaustive baseline.
-    Baseline,
-    /// S — exhaustive over the directive space.
-    DirectiveExhaustive,
-    /// R — random sampling with keep-probability `p`.
-    Random { p: f64, seed: u64 },
-    /// M — simulated annealing + surrogate.
-    Ml { seed: u64, rounds: usize, batch: usize },
-    /// K — KAPLA.
-    Kapla,
-}
-
-impl SolverKind {
-    pub fn letter(&self) -> &'static str {
-        match self {
-            SolverKind::Baseline => "B",
-            SolverKind::DirectiveExhaustive => "S",
-            SolverKind::Random { .. } => "R",
-            SolverKind::Ml { .. } => "M",
-            SolverKind::Kapla => "K",
-        }
-    }
-
-    /// Parse a CLI/service name. Stochastic solvers take knobs after a
-    /// `:` — either the legacy bare number (`"random:0.1"`, `"ml:16"`) or
-    /// comma-separated `key=value` pairs (`"random:p=0.2,seed=9"`,
-    /// `"ml:rounds=8,batch=32,seed=5"`). Unknown names, unknown keys and
-    /// unparseable values all return `None`, so front ends can reject a
-    /// malformed request instead of silently falling back to defaults.
-    pub fn parse(s: &str) -> Option<SolverKind> {
-        let lower = s.to_ascii_lowercase();
-        let (name, arg) = match lower.split_once(':') {
-            Some((n, a)) => (n, Some(a)),
-            None => (lower.as_str(), None),
-        };
-        match name {
-            "k" | "kapla" => Some(SolverKind::Kapla),
-            "b" | "baseline" | "nn-dataflow" => Some(SolverKind::Baseline),
-            "s" | "exhaustive" => Some(SolverKind::DirectiveExhaustive),
-            "r" | "random" => {
-                let (mut p, mut seed) = (0.1, 0xDA7AF10);
-                for part in arg.into_iter().flat_map(|a| a.split(',')) {
-                    match part.split_once('=') {
-                        Some(("p", v)) => p = v.parse().ok()?,
-                        Some(("seed", v)) => seed = v.parse().ok()?,
-                        Some(_) => return None,
-                        None => p = part.parse().ok()?,
-                    }
-                }
-                Some(SolverKind::Random { p, seed })
-            }
-            "m" | "ml" => {
-                let (mut seed, mut rounds, mut batch) = (0x5EED, 16, 64);
-                for part in arg.into_iter().flat_map(|a| a.split(',')) {
-                    match part.split_once('=') {
-                        Some(("rounds", v)) => rounds = v.parse().ok()?,
-                        Some(("batch", v)) => batch = v.parse().ok()?,
-                        Some(("seed", v)) => seed = v.parse().ok()?,
-                        Some(_) => return None,
-                        None => rounds = part.parse().ok()?,
-                    }
-                }
-                Some(SolverKind::Ml { seed, rounds, batch })
-            }
-            _ => None,
-        }
-    }
-}
+pub use crate::solvers::SolverKind;
 
 /// Per-request solver knobs parsed from `key=value` tokens — the service
 /// line protocol and the CLI share this so clients can set DP parameters
@@ -174,13 +101,21 @@ pub struct Job {
     pub dp: DpConfig,
 }
 
+impl Job {
+    /// The engine configured for this job over `arch` (private fresh
+    /// evaluation cache; chain `.session(...)` for cross-job reuse).
+    pub fn engine<'a>(&self, arch: &'a ArchConfig) -> SolveCtx<'a> {
+        SolveCtx::new(arch).objective(self.objective).dp(self.dp)
+    }
+}
+
 /// Run one scheduling job to completion against a private per-run cache.
 /// Within the job, independent per-layer/per-segment intra solves shard
-/// across `job.dp.solve_threads` scoped workers and share one
-/// `cost::CostCache`; the schedule is byte-identical for any thread count
+/// across `job.dp.solve_threads` scoped workers and share one evaluation
+/// memo; the schedule is byte-identical for any thread count
 /// (tests/parallel_determinism.rs).
 pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
-    run_job_with(arch, job, &CostCache::new())
+    job.engine(arch).run(&job.net, job.batch, job.solver)
 }
 
 /// Run one scheduling job against a caller-supplied evaluation cache —
@@ -189,23 +124,7 @@ pub fn run_job(arch: &ArchConfig, job: &Job) -> SolveResult {
 /// Every solver is pure per context, so sharing (with any budget/eviction
 /// policy) yields schedules byte-identical to a solitary run.
 pub fn run_job_with(arch: &ArchConfig, job: &Job, cost: &dyn EvalCache) -> SolveResult {
-    match job.solver {
-        SolverKind::Kapla => {
-            kapla_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost).0
-        }
-        SolverKind::Baseline => {
-            baseline_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost)
-        }
-        SolverKind::DirectiveExhaustive => {
-            directive_exhaustive_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, cost)
-        }
-        SolverKind::Random { p, seed } => {
-            random_schedule_with(arch, &job.net, job.batch, job.objective, &job.dp, p, seed, cost)
-        }
-        SolverKind::Ml { seed, rounds, batch } => ml_schedule_with(
-            arch, &job.net, job.batch, job.objective, &job.dp, seed, rounds, batch, cost,
-        ),
-    }
+    job.engine(arch).session(cost).run(&job.net, job.batch, job.solver)
 }
 
 /// Default byte budget of the session `run_jobs` creates: large enough
@@ -249,34 +168,6 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::workloads::nets;
-
-    #[test]
-    fn solver_kind_parsing() {
-        assert_eq!(SolverKind::parse("kapla"), Some(SolverKind::Kapla));
-        assert_eq!(SolverKind::parse("K"), Some(SolverKind::Kapla));
-        assert_eq!(SolverKind::parse("b"), Some(SolverKind::Baseline));
-        assert!(matches!(SolverKind::parse("random:0.5"), Some(SolverKind::Random { p, .. }) if p == 0.5));
-        assert!(matches!(SolverKind::parse("ml:4"), Some(SolverKind::Ml { rounds: 4, .. })));
-        assert_eq!(SolverKind::parse("nope"), None);
-    }
-
-    #[test]
-    fn solver_kind_key_value_knobs() {
-        assert_eq!(
-            SolverKind::parse("random:p=0.25,seed=9"),
-            Some(SolverKind::Random { p: 0.25, seed: 9 })
-        );
-        assert_eq!(
-            SolverKind::parse("ml:rounds=8,batch=32,seed=5"),
-            Some(SolverKind::Ml { seed: 5, rounds: 8, batch: 32 })
-        );
-        // Bare-number legacy form still accepted.
-        assert!(matches!(SolverKind::parse("r:0.3"), Some(SolverKind::Random { p, .. }) if p == 0.3));
-        // Malformed knobs are rejected, not silently defaulted.
-        assert_eq!(SolverKind::parse("random:q=0.5"), None);
-        assert_eq!(SolverKind::parse("random:p=zero"), None);
-        assert_eq!(SolverKind::parse("ml:rounds=many"), None);
-    }
 
     #[test]
     fn job_knobs_parse_and_apply() {
@@ -347,8 +238,11 @@ mod tests {
             solver,
             dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
         };
-        let jobs =
-            vec![mk(SolverKind::Kapla), mk(SolverKind::Random { p: 0.2, seed: 1 }), mk(SolverKind::Kapla)];
+        let jobs = vec![
+            mk(SolverKind::Kapla),
+            mk(SolverKind::Random { p: 0.2, seed: 1 }),
+            mk(SolverKind::Kapla),
+        ];
         let par = run_jobs(&arch, &jobs, 3);
         let ser: Vec<_> = jobs.iter().map(|j| run_job(&arch, j)).collect();
         assert_eq!(par.len(), 3);
@@ -357,14 +251,5 @@ mod tests {
         }
         // KAPLA deterministic: jobs 0 and 2 identical.
         assert!((par[0].eval.energy.total() - par[2].eval.energy.total()).abs() < 1e-6);
-    }
-
-    #[test]
-    fn letters_match_paper() {
-        assert_eq!(SolverKind::Kapla.letter(), "K");
-        assert_eq!(SolverKind::Baseline.letter(), "B");
-        assert_eq!(SolverKind::DirectiveExhaustive.letter(), "S");
-        assert_eq!(SolverKind::Random { p: 0.1, seed: 0 }.letter(), "R");
-        assert_eq!(SolverKind::Ml { seed: 0, rounds: 1, batch: 1 }.letter(), "M");
     }
 }

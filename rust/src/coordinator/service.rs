@@ -165,7 +165,9 @@ fn handle_schedule(
     o.set("ok", true.into())
         .set("network", job.net.name.as_str().into())
         .set("batch", batch.into())
-        .set("solver", solver.letter().into())
+        // The label (letter + non-default solver knobs) so rows from a
+        // `random:p=0.3,seed=7` sweep stay distinguishable in logs.
+        .set("solver", solver.label().into())
         .set("objective", objective.name().into())
         .set("threads", dp.solve_threads.into())
         .set("energy_pj", r.eval.energy.total().into())

@@ -13,9 +13,11 @@
 //! runtime can invoke to score large candidate batches in one call.
 
 pub mod cache;
+pub mod model;
 pub mod session;
 
 pub use cache::{CacheStats, CostCache, EvalCache};
+pub use model::{CostModel, TieredCost};
 pub use session::{CacheBudget, SessionCache};
 
 use crate::arch::{energy as earch, ArchConfig};

@@ -1,0 +1,186 @@
+//! The tiered cost model (paper §IV): one object that exposes *both*
+//! fidelity tiers the KAPLA design decouples —
+//!
+//! * **estimate** — the pure-arithmetic optimistic lower bounds
+//!   (`layer_lower_bound` / `segment_lower_bound`, §IV-B "Fast cost
+//!   estimation") the inter-layer search uses to prune and prioritize
+//!   cheaply, and
+//! * **evaluate** — the detailed simulator (`sim::evaluate_layer`),
+//!   reached through a memoizing [`EvalCache`], that scores the few
+//!   candidates the search actually realizes.
+//!
+//! Threading one `&dyn CostModel` through pruning, DP scoring and the
+//! intra-layer descent (instead of wiring free functions and caches into
+//! each solver separately) keeps the two tiers coherent — the
+//! admissibility invariant `estimate <= evaluate` becomes a property of
+//! the model object (`tests/cost_model_admissibility.rs`) — and makes a
+//! future backend (batched-PJRT kernel scoring, a persisted session) a
+//! drop-in `CostModel` impl rather than another solver-surface fork.
+
+use crate::arch::ArchConfig;
+use crate::directives::LayerScheme;
+use crate::interlayer::Segment;
+use crate::workloads::{Layer, Network};
+
+use super::cache::{CacheStats, CostCache, EvalCache};
+use super::{layer_lower_bound, segment_lower_bound, CostEstimate, LayerCtx};
+
+/// The two-tier cost model every solver stage draws from.
+///
+/// The estimate tier must be *admissible*: for any scheme realizable in
+/// the given context, `estimate_*` never exceeds what `evaluate` reports
+/// for it (the DP keeps top-k chains to absorb the remaining gap, paper
+/// §IV-B). The evaluate tier must be *pure*: repeated calls — through any
+/// cache, budget or eviction policy — return exactly what a fresh
+/// detailed simulation would.
+pub trait CostModel: Sync {
+    /// Fast tier: optimistic lower bound for one layer in a segment
+    /// context (pure arithmetic, no search state).
+    fn estimate_layer(&self, arch: &ArchConfig, layer: &Layer, ctx: &LayerCtx) -> CostEstimate {
+        layer_lower_bound(arch, layer, ctx)
+    }
+
+    /// Fast tier: optimistic lower bound for a whole segment scheme.
+    fn estimate_segment(
+        &self,
+        arch: &ArchConfig,
+        net: &Network,
+        batch: u64,
+        seg: &Segment,
+    ) -> CostEstimate {
+        segment_lower_bound(arch, net, batch, seg)
+    }
+
+    /// Detailed tier: evaluate one concrete intra-layer scheme on the
+    /// detailed model (cache-backed).
+    fn evaluate(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> CostEstimate;
+
+    /// Counter snapshot of the detailed tier's evaluation cache (zeros for
+    /// backends without one).
+    fn stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+enum Detail<'a> {
+    /// A private, unbounded per-run memo.
+    Owned(CostCache),
+    /// A caller-supplied cache — typically a cross-job `SessionCache`.
+    Shared(&'a dyn EvalCache),
+}
+
+/// The default [`CostModel`]: the in-tree lower-bound formulas for the
+/// estimate tier, composed with any [`EvalCache`] implementation for the
+/// detailed tier.
+pub struct TieredCost<'a> {
+    detail: Detail<'a>,
+}
+
+impl<'a> TieredCost<'a> {
+    /// A model with a private, fresh evaluation memo (solitary runs).
+    pub fn fresh() -> TieredCost<'static> {
+        TieredCost { detail: Detail::Owned(CostCache::new()) }
+    }
+
+    /// A model whose detailed tier runs through a shared cache — the way
+    /// scheduling sessions reuse evaluations across jobs.
+    pub fn over(cache: &'a dyn EvalCache) -> TieredCost<'a> {
+        TieredCost { detail: Detail::Shared(cache) }
+    }
+
+    fn cache(&self) -> &dyn EvalCache {
+        match &self.detail {
+            Detail::Owned(c) => c,
+            Detail::Shared(c) => *c,
+        }
+    }
+}
+
+impl CostModel for TieredCost<'_> {
+    fn evaluate(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> CostEstimate {
+        let ev = self.cache().evaluate_layer(arch, s, ifm_on_chip);
+        CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.cache().stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::SessionCache;
+    use crate::directives::{Grp, LevelBlock, LoopOrder, Qty};
+    use crate::mapping::UnitMap;
+    use crate::partition::PartitionScheme;
+    use crate::workloads::nets;
+
+    fn scheme(arch: &ArchConfig) -> LayerScheme {
+        let l = crate::workloads::Layer::conv("c", 16, 32, 14, 3, 1);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(arch, part.node_shape(&l, 4));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        }
+    }
+
+    #[test]
+    fn evaluate_matches_detailed_simulator() {
+        let arch = presets::multi_node_eyeriss();
+        let model = TieredCost::fresh();
+        let s = scheme(&arch);
+        let got = model.evaluate(&arch, &s, false);
+        let want = crate::sim::evaluate_layer(&arch, &s, false);
+        assert_eq!(got.energy_pj, want.energy.total());
+        assert_eq!(got.latency_cycles, want.latency_cycles);
+        // Repeats hit the owned memo.
+        model.evaluate(&arch, &s, false);
+        assert_eq!(model.stats().hits, 1);
+        assert_eq!(model.stats().lookups, 2);
+    }
+
+    #[test]
+    fn estimate_tier_matches_free_functions() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let model = TieredCost::fresh();
+        let ctx = LayerCtx {
+            nodes: 16,
+            round_batch: 4,
+            rounds: 1,
+            ifm_on_chip: false,
+            ofm_on_chip: false,
+            dram_hops: 2.0,
+        };
+        let a = model.estimate_layer(&arch, &net.layers[0], &ctx);
+        let b = layer_lower_bound(&arch, &net.layers[0], &ctx);
+        assert_eq!(a, b);
+        let seg = Segment::single(0, &arch);
+        let a = model.estimate_segment(&arch, &net, 16, &seg);
+        let b = segment_lower_bound(&arch, &net, 16, &seg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shared_model_reports_shared_stats() {
+        let arch = presets::multi_node_eyeriss();
+        let session = SessionCache::unbounded();
+        let s = scheme(&arch);
+        {
+            let model = TieredCost::over(&session);
+            model.evaluate(&arch, &s, false);
+            model.evaluate(&arch, &s, false);
+            assert_eq!(model.stats().hits, 1);
+        }
+        // The evaluations outlive the model: a second model over the same
+        // session answers from the shared memo.
+        let model = TieredCost::over(&session);
+        model.evaluate(&arch, &s, false);
+        assert_eq!(model.stats().hits, 2);
+    }
+}

@@ -9,6 +9,7 @@
 use super::prune::{prune_and_rank, prune_and_rank_threaded, PruneStats, RankedSegment};
 use super::{candidate_spans, enumerate_segment_schemes, Segment};
 use crate::arch::ArchConfig;
+use crate::cost::CostModel;
 use crate::workloads::Network;
 
 /// Tuning knobs of the inter-layer search.
@@ -68,6 +69,7 @@ pub fn best_chains(
     net: &Network,
     batch: u64,
     cfg: &DpConfig,
+    model: &dyn CostModel,
 ) -> (Vec<ChainCand>, PruneStats) {
     let n = net.len();
     let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
@@ -81,9 +83,9 @@ pub fn best_chains(
         crate::util::par_map(&span_jobs, outer, |(_, span)| {
             let schemes = enumerate_segment_schemes(net, arch, batch, span, cfg.max_rounds);
             let (mut ranked, st) = if outer > 1 {
-                prune_and_rank_threaded(arch, net, batch, schemes, 1)
+                prune_and_rank_threaded(arch, net, batch, schemes, 1, model)
             } else {
-                prune_and_rank(arch, net, batch, schemes)
+                prune_and_rank(arch, net, batch, schemes, model)
             };
             // Only the best `top_per_span` survivors are ever read; drop
             // the rest here so holding all spans' results at once costs
@@ -143,6 +145,7 @@ pub fn best_chains(
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::TieredCost;
     use crate::workloads::nets;
 
     fn check_chain_covers(net_len: usize, chain: &ChainCand) {
@@ -158,7 +161,7 @@ mod tests {
     fn chains_cover_alexnet() {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
-        let (chains, stats) = best_chains(&arch, &net, 64, &DpConfig::default());
+        let (chains, stats) = best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh());
         assert!(!chains.is_empty() && chains.len() <= 4);
         for ch in &chains {
             check_chain_covers(net.len(), ch);
@@ -176,7 +179,7 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::mlp();
         let cfg = DpConfig { ks: 1, ..DpConfig::default() };
-        let (chains, _) = best_chains(&arch, &net, 64, &cfg);
+        let (chains, _) = best_chains(&arch, &net, 64, &cfg, &TieredCost::fresh());
         assert_eq!(chains.len(), 1);
         check_chain_covers(net.len(), &chains[0]);
     }
@@ -185,8 +188,8 @@ mod tests {
     fn bigger_ks_never_worse() {
         let arch = presets::multi_node_eyeriss();
         let net = nets::mlp();
-        let c1 = best_chains(&arch, &net, 64, &DpConfig { ks: 1, ..DpConfig::default() }).0;
-        let c8 = best_chains(&arch, &net, 64, &DpConfig { ks: 8, ..DpConfig::default() }).0;
+        let c1 = best_chains(&arch, &net, 64, &DpConfig { ks: 1, ..DpConfig::default() }, &TieredCost::fresh()).0;
+        let c8 = best_chains(&arch, &net, 64, &DpConfig { ks: 8, ..DpConfig::default() }, &TieredCost::fresh()).0;
         assert!(c8[0].cost <= c1[0].cost + 1e-9);
     }
 
@@ -194,7 +197,7 @@ mod tests {
     fn edge_arch_gets_singleton_segments() {
         let arch = presets::edge_tpu();
         let net = nets::alexnet();
-        let (chains, _) = best_chains(&arch, &net, 1, &DpConfig::default());
+        let (chains, _) = best_chains(&arch, &net, 1, &DpConfig::default(), &TieredCost::fresh());
         for seg in &chains[0].segments {
             assert_eq!(seg.len(), 1);
         }
@@ -205,9 +208,9 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
         let seq =
-            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 1, ..DpConfig::default() });
+            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 1, ..DpConfig::default() }, &TieredCost::fresh());
         let par =
-            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 4, ..DpConfig::default() });
+            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 4, ..DpConfig::default() }, &TieredCost::fresh());
         assert_eq!(seq.0.len(), par.0.len());
         for (a, b) in seq.0.iter().zip(&par.0) {
             assert_eq!(a.cost, b.cost);
@@ -222,7 +225,7 @@ mod tests {
         // should use a multi-layer segment for conv-heavy nets.
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
-        let (chains, _) = best_chains(&arch, &net, 64, &DpConfig::default());
+        let (chains, _) = best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh());
         let any_multi =
             chains.iter().any(|ch| ch.segments.iter().any(|s| s.len() > 1));
         assert!(any_multi, "expected some pipelined segment in top chains");

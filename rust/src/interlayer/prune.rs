@@ -6,11 +6,13 @@
 //! aggregated GBUF capacity of the nodes allocated to it. The check is
 //! conservative (never rejects a segment some intra-layer scheme could
 //! realize), so pruning preserves optimality while removing most
-//! candidates in practice.
+//! candidates in practice. Candidate prioritization draws from the
+//! *estimate* tier of the shared [`CostModel`], so pruning, DP scoring and
+//! the intra-layer descent all score against one model object.
 
 use super::Segment;
 use crate::arch::ArchConfig;
-use crate::cost::{segment_lower_bound, CostEstimate};
+use crate::cost::{CostEstimate, CostModel};
 use crate::workloads::Network;
 
 /// Conservative validity: for every pipelined layer, the per-round working
@@ -50,8 +52,9 @@ pub struct PruneStats {
     pub after_pareto: usize,
 }
 
-/// Apply conservative validity pruning then Pareto filtering on
-/// (energy, latency) estimates, returning survivors sorted by score.
+/// Apply conservative validity pruning then Pareto filtering on the
+/// model's (energy, latency) estimates, returning survivors sorted by
+/// score.
 ///
 /// The estimates are pure per-candidate arithmetic, so large candidate
 /// sets are scored across the scoped worker pool; results keep candidate
@@ -61,8 +64,9 @@ pub fn prune_and_rank(
     net: &Network,
     batch: u64,
     candidates: Vec<Segment>,
+    model: &dyn CostModel,
 ) -> (Vec<RankedSegment>, PruneStats) {
-    prune_and_rank_threaded(arch, net, batch, candidates, 0)
+    prune_and_rank_threaded(arch, net, batch, candidates, 0, model)
 }
 
 /// [`prune_and_rank`] with an explicit estimation thread count: `0` keeps
@@ -75,6 +79,7 @@ pub fn prune_and_rank_threaded(
     batch: u64,
     candidates: Vec<Segment>,
     threads: usize,
+    model: &dyn CostModel,
 ) -> (Vec<RankedSegment>, PruneStats) {
     let mut stats = PruneStats { total: candidates.len(), ..Default::default() };
     let valid: Vec<Segment> =
@@ -94,7 +99,7 @@ pub fn prune_and_rank_threaded(
         threads
     };
     let ests =
-        crate::util::par_map(&valid, threads, |seg| segment_lower_bound(arch, net, batch, seg));
+        crate::util::par_map(&valid, threads, |seg| model.estimate_segment(arch, net, batch, seg));
     let mut ranked: Vec<RankedSegment> =
         valid.into_iter().zip(ests).map(|(seg, est)| RankedSegment { seg, est }).collect();
 
@@ -130,6 +135,7 @@ fn dominates(a: &CostEstimate, b: &CostEstimate) -> bool {
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::TieredCost;
     use crate::interlayer::enumerate_segment_schemes;
     use crate::workloads::nets;
 
@@ -170,7 +176,7 @@ mod tests {
         let net = nets::alexnet();
         let cands = enumerate_segment_schemes(&net, &arch, 64, &[2, 3, 4], 64);
         let total = cands.len();
-        let (ranked, stats) = prune_and_rank(&arch, &net, 64, cands);
+        let (ranked, stats) = prune_and_rank(&arch, &net, 64, cands, &TieredCost::fresh());
         assert_eq!(stats.total, total);
         assert!(stats.after_validity <= stats.total);
         assert!(stats.after_pareto <= stats.after_validity);
@@ -189,7 +195,7 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
         let cands = enumerate_segment_schemes(&net, &arch, 64, &[2, 3], 64);
-        let (ranked, _) = prune_and_rank(&arch, &net, 64, cands);
+        let (ranked, _) = prune_and_rank(&arch, &net, 64, cands, &TieredCost::fresh());
         for (i, a) in ranked.iter().enumerate() {
             for (j, b) in ranked.iter().enumerate() {
                 if i != j {

@@ -171,7 +171,7 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         "scheduling {} (batch {batch}) on {} with {}...",
         job.net.name,
         arch.name,
-        solver.letter()
+        solver.label()
     );
     let session = SessionCache::new(budget);
     let r = coordinator::run_job_with(&arch, &job, &session);
@@ -263,7 +263,7 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
     );
     for (s, r) in solvers.iter().zip(&results) {
         t.row(vec![
-            s.letter().into(),
+            s.label(),
             eng(r.eval.energy.total(), "pJ"),
             format!("{:.3}", r.eval.energy.total() / base),
             eng(r.eval.latency_cycles, ""),

@@ -97,11 +97,13 @@ pub fn run_cell(
 
 /// Machine-readable record of one solve: identity, quality, solve time,
 /// and the evaluation-cache counters (so warm-session reuse shows up in
-/// the uploaded bench artifacts).
+/// the uploaded bench artifacts). The solver field carries the *label*
+/// (letter + non-default knobs, `SolverKind::label`) so rows from a
+/// `random:p=0.3,seed=7` sweep stay distinguishable.
 pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
     let mut o = Json::obj();
     o.set("net", net.into())
-        .set("solver", solver.letter().into())
+        .set("solver", solver.label().into())
         .set("energy_pj", r.eval.energy.total().into())
         .set("latency_cycles", r.eval.latency_cycles.into())
         .set("solve_s", r.solve_s.into())
@@ -151,6 +153,22 @@ mod tests {
         if !full_scale() {
             assert_eq!(bench_arch().nodes, (4, 4));
         }
+    }
+
+    #[test]
+    fn result_json_labels_knobbed_solvers() {
+        let arch = presets::bench_multi_node();
+        let net = workloads::by_name("mlp").unwrap();
+        let job = Job {
+            net: net.clone(),
+            batch: 4,
+            objective: Objective::Energy,
+            solver: SolverKind::Random { p: 0.3, seed: 7 },
+            dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
+        };
+        let r = run_job(&arch, &job);
+        let j = result_json(&net.name, job.solver, &r);
+        assert_eq!(j.get("solver").unwrap().as_str(), Some("R:p=0.3,seed=7"));
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //!
 //! The PJRT execution path (loading HLO text, compiling through
 //! xla_extension, running the batched cost kernel and the surrogate MLP on
-//! device) lives in the `pjrt` submodule behind the `pjrt` cargo feature:
-//! it needs vendored `xla` + `anyhow` crates that are not part of this
-//! offline, dependency-free tree. The default build ships only the
-//! artifact/interchange metadata below; every consumer (the ML baseline,
-//! the benches) falls back to the bit-compatible native Rust
-//! implementations (`solvers::ml::NativeMlp`, `cost::cost_from_features`).
+//! device) lives in the `pjrt` submodule behind the `pjrt` cargo feature,
+//! compiled against the `xla` + `anyhow` path dependencies under
+//! `rust/vendor/` — API stubs as shipped (so `cargo check --features
+//! pjrt` gates the surface offline), real bindings when vendored in. The
+//! default build ships only the artifact/interchange metadata below;
+//! every consumer (the ML baseline, the benches) falls back to the
+//! bit-compatible native Rust implementations (`solvers::ml::NativeMlp`,
+//! `cost::cost_from_features`).
 //!
 //! Artifacts (see `python/compile/aot.py`):
 //! * `cost_batch.hlo.txt` — batched KAPLA cost model (Layer-1 Pallas kernel);

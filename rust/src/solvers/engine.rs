@@ -1,0 +1,487 @@
+//! The solver engine: one entry point for every solver family.
+//!
+//! [`SolveCtx`] owns the pieces every scheduling run needs — the hardware
+//! config, the DP knobs (including the scoped worker-pool width), the
+//! objective, and the tiered [`CostModel`] both search phases draw from —
+//! and exposes one generic [`SolveCtx::run`] that dispatches a
+//! [`SolverKind`]. RNG-stream derivation is owned here too: the engine
+//! builds each stochastic intra-layer solver from its kind's seed, and the
+//! solvers fold `ctx_fingerprint` into that seed per context, so schedules
+//! are byte-identical for any thread count or cache state.
+//!
+//! Two internal paths implement the paper's split:
+//!
+//! * `exact_dp` — the exact segment-chain DP with fully intra-solved,
+//!   simulator-evaluated segments (baselines B/S/R/M, paper §V);
+//! * `kapla` — the decoupled fast path (paper §IV-B): estimate-tier
+//!   pruning + DP prioritization first, detailed intra-layer solving only
+//!   for the top-k_S chains.
+
+use std::collections::HashMap;
+
+use crate::arch::ArchConfig;
+use crate::cost::{CostModel, EvalCache, TieredCost};
+use crate::directives::LayerScheme;
+use crate::interlayer::dp::{best_chains, DpConfig};
+use crate::interlayer::prune::conservative_valid;
+use crate::interlayer::{candidate_spans, enumerate_segment_schemes, Schedule, Segment};
+use crate::sim::pipeline::{evaluate_schedule, evaluate_segment};
+use crate::workloads::Network;
+
+use super::exhaustive::ExhaustiveIntra;
+use super::kapla::KaplaIntra;
+use super::ml::MlIntra;
+use super::random::RandomIntra;
+use super::{
+    collect_intra_keys, presolve_contexts, seg_objective, solve_segment_layers, IntraCache,
+    IntraSolver, Objective, SolveResult, SolverKind,
+};
+
+enum Model<'a> {
+    /// The default tiered model over a private or shared evaluation cache.
+    Tiered(TieredCost<'a>),
+    /// A caller-supplied model (e.g. a batched-backend implementation).
+    External(&'a dyn CostModel),
+}
+
+/// The engine object behind every solver entry. Construct with
+/// [`SolveCtx::new`], adjust with the builder methods, then call
+/// [`SolveCtx::run`] per scheduling job:
+///
+/// ```
+/// use kapla::arch::presets;
+/// use kapla::solvers::{SolveCtx, SolverKind};
+/// use kapla::workloads::nets;
+///
+/// let arch = presets::bench_multi_node();
+/// let r = SolveCtx::new(&arch).run(&nets::mlp(), 8, SolverKind::Kapla);
+/// assert_eq!(r.schedule.num_layers(), nets::mlp().len());
+/// ```
+pub struct SolveCtx<'a> {
+    arch: &'a ArchConfig,
+    objective: Objective,
+    dp: DpConfig,
+    model: Model<'a>,
+}
+
+impl<'a> SolveCtx<'a> {
+    /// An engine over `arch` with default DP knobs, the energy objective
+    /// and a private, fresh evaluation cache.
+    pub fn new(arch: &'a ArchConfig) -> SolveCtx<'a> {
+        SolveCtx {
+            arch,
+            objective: Objective::Energy,
+            dp: DpConfig::default(),
+            model: Model::Tiered(TieredCost::fresh()),
+        }
+    }
+
+    /// Set the optimization objective.
+    pub fn objective(mut self, obj: Objective) -> Self {
+        self.objective = obj;
+        self
+    }
+
+    /// Set the DP knobs (k_S, segment length, rounds cap, worker threads).
+    pub fn dp(mut self, dp: DpConfig) -> Self {
+        self.dp = dp;
+        self
+    }
+
+    /// Run the detailed tier through a shared evaluation cache — the hook
+    /// scheduling sessions use to reuse detailed-model evaluations across
+    /// jobs (the cache key carries the arch fingerprint, so one session
+    /// can serve jobs on different hardware configs without aliasing).
+    ///
+    /// Mutually exclusive with [`SolveCtx::model`]: each of the two
+    /// replaces the engine's whole cost model, so the *last* call wins.
+    /// A custom model that wants session reuse should compose the cache
+    /// itself (as [`TieredCost::over`] does) and be passed via `model`.
+    pub fn session(mut self, cache: &'a dyn EvalCache) -> Self {
+        self.model = Model::Tiered(TieredCost::over(cache));
+        self
+    }
+
+    /// Replace the whole cost model — both tiers — with a caller-supplied
+    /// implementation (a batched-kernel backend, a recording proxy, ...).
+    ///
+    /// Mutually exclusive with [`SolveCtx::session`] — the last call wins
+    /// (a later `.session(...)` would silently discard this backend, so
+    /// configure exactly one of the two).
+    pub fn model(mut self, model: &'a dyn CostModel) -> Self {
+        self.model = Model::External(model);
+        self
+    }
+
+    /// The cost model this engine scores candidates with.
+    pub fn cost_model(&self) -> &dyn CostModel {
+        match &self.model {
+            Model::Tiered(m) => m,
+            Model::External(m) => *m,
+        }
+    }
+
+    /// Solve one network under the given solver kind. Schedules are
+    /// byte-identical for any `dp.solve_threads` and any session/budget
+    /// state (the golden battery in `tests/parallel_determinism.rs`).
+    pub fn run(&self, net: &Network, batch: u64, kind: SolverKind) -> SolveResult {
+        match kind {
+            SolverKind::Kapla => self.kapla(net, batch),
+            SolverKind::Baseline => {
+                self.exact_dp(net, batch, &ExhaustiveIntra { with_sharing: false })
+            }
+            SolverKind::DirectiveExhaustive => {
+                self.exact_dp(net, batch, &ExhaustiveIntra { with_sharing: true })
+            }
+            SolverKind::Random { p, seed } => self.exact_dp(net, batch, &RandomIntra::new(p, seed)),
+            SolverKind::Ml { seed, rounds, batch: sa_batch } => {
+                self.exact_dp(net, batch, &MlIntra::native(seed, rounds, sa_batch))
+            }
+        }
+    }
+
+    /// Exact dynamic program over segment chains: every candidate segment
+    /// is fully intra-solved and simulator-evaluated (this is what makes
+    /// the exhaustive/random/ML baselines slow and exact). Conservative
+    /// validity pruning is safe for optimality and applied for all
+    /// solvers, mirroring nn-dataflow's own buffering checks.
+    ///
+    /// With `dp.solve_threads > 1` the intra-layer solves — the dominant
+    /// cost by orders of magnitude — run first, sharded across a scoped
+    /// worker pool: the candidate segments (and hence solve contexts) do
+    /// not depend on DP state, only the chain costs do, so the sequential
+    /// DP afterwards is pure cache assembly and the result is identical to
+    /// the single-threaded run.
+    pub fn exact_dp(&self, net: &Network, batch: u64, intra: &dyn IntraSolver) -> SolveResult {
+        let timer = crate::util::Timer::start();
+        let (arch, obj, cfg) = (self.arch, self.objective, &self.dp);
+        let model = self.cost_model();
+        let n = net.len();
+        struct Node {
+            cost: f64,
+            seg: Segment,
+            schemes: Vec<LayerScheme>,
+            parent: Option<usize>, // layer index of previous chain node
+        }
+        let mut table: Vec<Option<Node>> = (0..n).map(|_| None).collect();
+        let mut cache: IntraCache = HashMap::new();
+
+        // Enumerate every candidate segment once, grouped per (end layer,
+        // span start). The enumeration is DP-state-independent, so the
+        // same list feeds both the parallel pre-solve and the DP proper.
+        // Holding all spans' candidates at once costs O(total segments)
+        // small structs (~100 MB at the most extreme full-scale settings,
+        // trivial at CI scale) and buys a single loop shape for both
+        // thread modes.
+        let mut spans_by_end: Vec<Vec<(usize, Vec<Segment>)>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut per_span = Vec::new();
+            for span in candidate_spans(i, cfg.max_seg_len) {
+                let segs: Vec<Segment> =
+                    enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds)
+                        .into_iter()
+                        .filter(|seg| conservative_valid(arch, net, batch, seg))
+                        .collect();
+                per_span.push((span[0], segs));
+            }
+            spans_by_end.push(per_span);
+        }
+
+        if cfg.solve_threads > 1 {
+            let keys = collect_intra_keys(
+                net,
+                batch,
+                spans_by_end.iter().flatten().flat_map(|(_, segs)| segs.iter()),
+            );
+            presolve_contexts(arch, net, keys, intra, obj, cfg.solve_threads, &mut cache, model);
+        }
+
+        for i in 0..n {
+            for (start, segs) in &spans_by_end[i] {
+                let start = *start;
+                let prev_cost = if start == 0 {
+                    0.0
+                } else {
+                    match &table[start - 1] {
+                        Some(nd) => nd.cost,
+                        None => continue,
+                    }
+                };
+                for seg in segs {
+                    let Some(schemes) =
+                        solve_segment_layers(arch, net, batch, seg, intra, obj, &mut cache, model)
+                    else {
+                        continue;
+                    };
+                    let ev = evaluate_segment(arch, net, seg, &schemes);
+                    let cost = prev_cost + seg_objective(&ev, obj);
+                    let better = table[i].as_ref().map(|nd| cost < nd.cost).unwrap_or(true);
+                    if better {
+                        table[i] = Some(Node {
+                            cost,
+                            seg: seg.clone(),
+                            schemes,
+                            parent: if start == 0 { None } else { Some(start - 1) },
+                        });
+                    }
+                }
+            }
+            assert!(
+                table[i].is_some(),
+                "no valid schedule ends at layer {i} ({})",
+                net.layers[i].name
+            );
+        }
+
+        // Reconstruct.
+        let mut segments = Vec::new();
+        let mut cur = Some(n - 1);
+        while let Some(i) = cur {
+            let nd = table[i].as_ref().unwrap();
+            segments.push((nd.seg.clone(), nd.schemes.clone()));
+            cur = nd.parent;
+        }
+        segments.reverse();
+        let schedule = Schedule { segments };
+        let eval = evaluate_schedule(arch, net, &schedule);
+        SolveResult {
+            schedule,
+            eval,
+            solve_s: timer.elapsed_s(),
+            cache: model.stats(),
+            prune: None,
+        }
+    }
+
+    /// Full KAPLA network scheduling (paper §IV): estimate-tier inter-layer
+    /// DP, then intra-layer solving of the top-k_S chains, final pick on
+    /// the detailed tier. `SolveResult::prune` carries the pruning stats.
+    ///
+    /// With `dp.solve_threads > 1` the distinct per-layer solve contexts of
+    /// all top-k_S chains are solved first across the scoped worker pool;
+    /// the chain assembly afterwards only reads the memo, so the schedule
+    /// is identical to the sequential run for any thread count.
+    pub fn kapla(&self, net: &Network, batch: u64) -> SolveResult {
+        let timer = crate::util::Timer::start();
+        let (arch, obj, cfg) = (self.arch, self.objective, &self.dp);
+        let model = self.cost_model();
+        let (chains, stats) = best_chains(arch, net, batch, cfg, model);
+        let intra = KaplaIntra;
+        let mut cache: IntraCache = HashMap::new();
+
+        if cfg.solve_threads > 1 {
+            let keys =
+                collect_intra_keys(net, batch, chains.iter().flat_map(|c| c.segments.iter()));
+            presolve_contexts(arch, net, keys, &intra, obj, cfg.solve_threads, &mut cache, model);
+        }
+
+        let mut best: Option<(f64, Schedule)> = None;
+        for chain in &chains {
+            let mut segments = Vec::with_capacity(chain.segments.len());
+            let mut ok = true;
+            for seg in &chain.segments {
+                match solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache, model) {
+                    Some(schemes) => segments.push((seg.clone(), schemes)),
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let sched = Schedule { segments };
+            let ev = evaluate_schedule(arch, net, &sched);
+            let c = match obj {
+                Objective::Energy => ev.energy.total(),
+                Objective::Latency => ev.latency_cycles,
+            };
+            if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                best = Some((c, sched));
+            }
+        }
+
+        // Fallback: all-singleton chain (always realizable).
+        let schedule = match best {
+            Some((_, s)) => s,
+            None => {
+                let mut segments = Vec::new();
+                for i in 0..net.len() {
+                    let seg = Segment::single(i, arch);
+                    let schemes = solve_segment_layers(
+                        arch, net, batch, &seg, &intra, obj, &mut cache, model,
+                    )
+                    .expect("even singleton segment unschedulable");
+                    segments.push((seg, schemes));
+                }
+                Schedule { segments }
+            }
+        };
+        let eval = evaluate_schedule(arch, net, &schedule);
+        SolveResult {
+            schedule,
+            eval,
+            solve_s: timer.elapsed_s(),
+            cache: model.stats(),
+            prune: Some(stats),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{CostEstimate, SessionCache};
+    use crate::workloads::{nets, Layer, Network};
+
+    /// Minimal intra solver for tests: smallest valid scheme.
+    struct Minimal;
+    impl IntraSolver for Minimal {
+        fn name(&self) -> &'static str {
+            "minimal"
+        }
+        fn solve(
+            &self,
+            arch: &ArchConfig,
+            layer: &Layer,
+            ctx: &super::super::IntraCtx,
+            _model: &dyn CostModel,
+        ) -> Option<LayerScheme> {
+            super::super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
+        }
+    }
+
+    fn small_net() -> Network {
+        let mut n = Network::new("s", 8, 28, 28);
+        n.chain(Layer::conv("a", 8, 16, 28, 3, 1));
+        n.chain(Layer::conv("b", 16, 16, 28, 3, 1));
+        n.chain(Layer::fc("c", 16 * 28 * 28, 64));
+        n
+    }
+
+    #[test]
+    fn exact_dp_produces_full_coverage() {
+        let arch = presets::bench_multi_node();
+        let net = small_net();
+        let r = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal);
+        assert_eq!(r.schedule.num_layers(), net.len());
+        assert!(r.eval.energy.total() > 0.0);
+        assert!(r.prune.is_none());
+        let mut seen = Vec::new();
+        for (seg, schemes) in &r.schedule.segments {
+            assert_eq!(seg.len(), schemes.len());
+            seen.extend(seg.layers.iter().copied());
+        }
+        assert_eq!(seen, (0..net.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exact_dp_objective_latency_differs() {
+        let arch = presets::bench_multi_node();
+        let net = small_net();
+        let re = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal);
+        let rl = SolveCtx::new(&arch).objective(Objective::Latency).exact_dp(&net, 4, &Minimal);
+        // Latency-optimized schedule can't have worse latency than the
+        // energy-optimized one (same space, different objective).
+        assert!(rl.eval.latency_cycles <= re.eval.latency_cycles + 1e-6);
+    }
+
+    #[test]
+    fn works_on_mlp_at_edge() {
+        let arch = presets::edge_tpu();
+        let net = nets::mlp();
+        let r = SolveCtx::new(&arch).exact_dp(&net, 1, &Minimal);
+        assert_eq!(r.schedule.num_layers(), net.len());
+        for (seg, _) in &r.schedule.segments {
+            assert_eq!(seg.len(), 1); // single node: no pipelining
+        }
+    }
+
+    #[test]
+    fn parallel_dp_matches_sequential_exactly() {
+        let arch = presets::bench_multi_node();
+        let net = small_net();
+        let seq = SolveCtx::new(&arch)
+            .dp(DpConfig { solve_threads: 1, ..DpConfig::default() })
+            .exact_dp(&net, 4, &Minimal);
+        let par = SolveCtx::new(&arch)
+            .dp(DpConfig { solve_threads: 4, ..DpConfig::default() })
+            .exact_dp(&net, 4, &Minimal);
+        assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
+        assert_eq!(seq.eval.latency_cycles, par.eval.latency_cycles);
+        assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
+    }
+
+    #[test]
+    fn run_dispatches_every_solver_kind() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let ctx = SolveCtx::new(&arch).dp(DpConfig { max_rounds: 8, ..DpConfig::default() });
+        for kind in [
+            SolverKind::Baseline,
+            SolverKind::DirectiveExhaustive,
+            SolverKind::Random { p: 0.15, seed: 1 },
+            SolverKind::Ml { seed: 1, rounds: 4, batch: 16 },
+            SolverKind::Kapla,
+        ] {
+            let r = ctx.run(&net, 8, kind);
+            assert_eq!(r.schedule.num_layers(), net.len(), "{kind:?}");
+            assert!(r.eval.energy.total() > 0.0, "{kind:?}");
+            assert_eq!(r.prune.is_some(), kind == SolverKind::Kapla, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn session_engine_matches_solitary_engine() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let dp = DpConfig { max_rounds: 8, ..DpConfig::default() };
+        let solo = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla);
+        let session = SessionCache::unbounded();
+        let a = SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla);
+        let b = SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla);
+        for r in [&a, &b] {
+            assert_eq!(format!("{:?}", r.schedule), format!("{:?}", solo.schedule));
+            assert_eq!(r.eval.energy.total(), solo.eval.energy.total());
+        }
+        // Warm repeat answered every evaluation from the session memo.
+        assert!(b.cache.hits > a.cache.hits);
+        assert_eq!(b.cache.entries, a.cache.entries);
+    }
+
+    #[test]
+    fn external_model_is_consulted() {
+        // A custom CostModel (here: the default tiers plus a call counter)
+        // plugs into the engine via `.model(...)` — the drop-in hook for a
+        // batched backend.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        struct Counting {
+            inner: TieredCost<'static>,
+            calls: AtomicU64,
+        }
+        impl CostModel for Counting {
+            fn evaluate(
+                &self,
+                arch: &ArchConfig,
+                s: &LayerScheme,
+                ifm_on_chip: bool,
+            ) -> CostEstimate {
+                self.calls.fetch_add(1, Ordering::Relaxed);
+                self.inner.evaluate(arch, s, ifm_on_chip)
+            }
+            fn stats(&self) -> crate::cost::CacheStats {
+                self.inner.stats()
+            }
+        }
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let counting = Counting { inner: TieredCost::fresh(), calls: AtomicU64::new(0) };
+        let dp = DpConfig { max_rounds: 8, ..DpConfig::default() };
+        let r = SolveCtx::new(&arch).dp(dp).model(&counting).run(&net, 8, SolverKind::Kapla);
+        let baseline = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla);
+        assert!(counting.calls.load(Ordering::Relaxed) > 0, "model must be consulted");
+        assert_eq!(format!("{:?}", r.schedule), format!("{:?}", baseline.schedule));
+    }
+}

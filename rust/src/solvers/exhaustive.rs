@@ -8,18 +8,17 @@
 //!   occasionally beats it slightly, demonstrating the directives'
 //!   generality (paper Fig. 7 discussion).
 //!
-//! Both plug into the exact segment-chain DP in `solvers::exact_dp_schedule`.
+//! Both plug into the exact segment-chain DP via
+//! [`super::SolveCtx::run`] with `SolverKind::Baseline` /
+//! `SolverKind::DirectiveExhaustive`.
 
 use crate::arch::ArchConfig;
-use crate::cost::EvalCache;
+use crate::cost::CostModel;
 use crate::directives::LayerScheme;
-use crate::interlayer::dp::DpConfig;
-use crate::workloads::{Layer, Network};
+use crate::workloads::Layer;
 
 use super::space::visit_schemes;
-use super::{
-    exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective, SolveResult,
-};
+use super::{IntraCtx, IntraSolver};
 
 /// Exhaustive intra-layer solver.
 #[derive(Debug, Clone, Copy)]
@@ -42,15 +41,12 @@ impl IntraSolver for ExhaustiveIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &dyn EvalCache,
+        model: &dyn CostModel,
     ) -> Option<LayerScheme> {
         let mut best: Option<(f64, LayerScheme)> = None;
         visit_schemes(arch, layer, ctx.region, ctx.rb, self.with_sharing, |s| {
-            let ev = cost.evaluate_layer(arch, s, ctx.ifm_on_chip);
-            let c = match ctx.objective {
-                Objective::Energy => ev.energy.total(),
-                Objective::Latency => ev.latency_cycles,
-            };
+            let est = model.evaluate(arch, s, ctx.ifm_on_chip);
+            let c = ctx.objective.of(&est);
             if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
                 best = Some((c, *s));
             }
@@ -60,60 +56,14 @@ impl IntraSolver for ExhaustiveIntra {
     }
 }
 
-/// Schedule a network with baseline B (nn-dataflow-style exhaustive).
-pub fn baseline_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-) -> SolveResult {
-    exact_dp_schedule(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: false })
-}
-
-/// [`baseline_schedule`] against a caller-supplied (session) cache.
-pub fn baseline_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    cost: &dyn EvalCache,
-) -> SolveResult {
-    exact_dp_schedule_with(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: false }, cost)
-}
-
-/// Schedule a network with S (exhaustive over the directive space).
-pub fn directive_exhaustive_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-) -> SolveResult {
-    exact_dp_schedule(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: true })
-}
-
-/// [`directive_exhaustive_schedule`] against a caller-supplied (session)
-/// cache.
-pub fn directive_exhaustive_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    cost: &dyn EvalCache,
-) -> SolveResult {
-    exact_dp_schedule_with(arch, net, batch, obj, cfg, &ExhaustiveIntra { with_sharing: true }, cost)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
-    use crate::cost::CostCache;
+    use crate::cost::{CostCache, TieredCost};
     use crate::sim::evaluate_layer;
     use crate::solvers::kapla::solve_intra;
+    use crate::solvers::Objective;
     use crate::workloads::nets;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
@@ -125,7 +75,7 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 16, 32, 14, 3, 1);
         let s = ExhaustiveIntra { with_sharing: false }
-            .solve(&arch, &l, &ctx((2, 2), 4), &CostCache::new())
+            .solve(&arch, &l, &ctx((2, 2), 4), &TieredCost::fresh())
             .unwrap();
         s.validate(&arch).unwrap();
     }
@@ -137,8 +87,9 @@ mod tests {
         let l = crate::workloads::Layer::conv("c", 32, 64, 28, 3, 1);
         let c = ctx((4, 4), 8);
         let cache = CostCache::new();
-        let b = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &cache).unwrap();
-        let s = ExhaustiveIntra { with_sharing: true }.solve(&arch, &l, &c, &cache).unwrap();
+        let model = TieredCost::over(&cache);
+        let b = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &model).unwrap();
+        let s = ExhaustiveIntra { with_sharing: true }.solve(&arch, &l, &c, &model).unwrap();
         let eb = evaluate_layer(&arch, &b, false).energy.total();
         let es = evaluate_layer(&arch, &s, false).energy.total();
         assert!(es <= eb + 1e-9, "S {es} worse than B {eb}");
@@ -157,7 +108,7 @@ mod tests {
         for l in net.layers.iter().filter(|l| l.has_weights()).take(5) {
             let c = ctx((2, 2), 4);
             let ex = ExhaustiveIntra { with_sharing: true }
-                .solve(&arch, l, &c, &CostCache::new())
+                .solve(&arch, l, &c, &TieredCost::fresh())
                 .unwrap();
             let ka = solve_intra(&arch, l, &c).unwrap();
             let ee = evaluate_layer(&arch, &ex, false).energy.total();
@@ -175,10 +126,15 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::fc("f", 784, 1500);
         let s = ExhaustiveIntra { with_sharing: false }
-            .solve(&arch, &l, &ctx((4, 4), 16), &CostCache::new())
+            .solve(&arch, &l, &ctx((4, 4), 16), &TieredCost::fresh())
             .unwrap();
         let a = s.access_counts(false);
         // weight DRAM traffic within 2x of compulsory
-        assert!(a.dram[2] <= 2 * l.weight_elems(), "wgt dram {} vs {}", a.dram[2], l.weight_elems());
+        assert!(
+            a.dram[2] <= 2 * l.weight_elems(),
+            "wgt dram {} vs {}",
+            a.dram[2],
+            l.weight_elems()
+        );
     }
 }

@@ -1,32 +1,29 @@
-//! The KAPLA solver (paper §IV).
+//! The KAPLA intra-layer solver (paper §IV).
 //!
-//! Intra-layer: *bottom-up cost descending* (Algorithm 1). Starting from
-//! the PE mapping's unit tensors, each memory level is solved in turn —
-//! a greedy *stacking* pass chooses node-parallel dims (hill-climbing over
+//! *Bottom-up cost descending* (Algorithm 1). Starting from the PE
+//! mapping's unit tensors, each memory level is solved in turn — a greedy
+//! *stacking* pass chooses node-parallel dims (hill-climbing over
 //! partition moves), then a *caching* pass enlarges the resident block one
 //! divisor step at a time, always growing a dimension that relieves the
 //! currently most-accessed tensor, until the buffer capacity is used up.
 //! Validity holds *by construction* at every step, eliminating the
 //! capacity-check churn of top-down factorization.
 //!
-//! Inter-layer: the decoupled fast DP of `interlayer::dp` prunes and
-//! prioritizes segment chains on the optimistic cost model; only the top
-//! k_S chains get their intra-layer schemes solved and are then scored on
-//! the detailed model.
+//! Every probe and final sweep scores candidates through the detailed tier
+//! of the shared [`CostModel`]; the network-level flow (estimate-tier DP,
+//! top-k_S realization) lives in [`super::SolveCtx::kapla`].
 
 use crate::arch::ArchConfig;
-use crate::cost::{CostCache, EvalCache};
-use crate::directives::{refetch_factor_groups, tensor_groups, Grp, LevelBlock, LayerScheme, LoopOrder, Qty, TensorKind};
-use crate::interlayer::dp::{best_chains, DpConfig};
-use crate::interlayer::prune::PruneStats;
-use crate::interlayer::Schedule;
+use crate::cost::{CostModel, TieredCost};
+use crate::directives::{
+    refetch_factor_groups, tensor_groups, Grp, LayerScheme, LevelBlock, LoopOrder, Qty, TensorKind,
+};
 use crate::mapping::UnitMap;
 use crate::partition::PartitionScheme;
-use crate::sim::pipeline::evaluate_schedule;
 use crate::util::next_divisor;
-use crate::workloads::{Layer, Network};
+use crate::workloads::Layer;
 
-use super::{IntraCtx, IntraSolver, Objective, SolveResult};
+use super::{IntraCtx, IntraSolver};
 
 /// The KAPLA intra-layer solver.
 #[derive(Debug, Clone, Copy, Default)]
@@ -42,33 +39,33 @@ impl IntraSolver for KaplaIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &dyn EvalCache,
+        model: &dyn CostModel,
     ) -> Option<LayerScheme> {
-        solve_intra_cached(arch, layer, ctx, cost)
+        solve_intra_cached(arch, layer, ctx, model)
     }
 }
 
-/// Bottom-up solve of one layer in one context (uncached convenience
-/// wrapper: each call gets a private evaluation memo).
+/// Bottom-up solve of one layer in one context (convenience wrapper: each
+/// call gets a private tiered model with a fresh evaluation memo).
 pub fn solve_intra(arch: &ArchConfig, layer: &Layer, ctx: &IntraCtx) -> Option<LayerScheme> {
-    solve_intra_cached(arch, layer, ctx, &CostCache::new())
+    solve_intra_cached(arch, layer, ctx, &TieredCost::fresh())
 }
 
-/// Bottom-up solve of one layer in one context, with all detailed-model
-/// evaluations memoized through the shared `cost` cache (per-run
-/// `CostCache` or a cross-job `SessionCache`). The stacking pass probes
-/// each partition with the default loop orders and the final sweep
-/// re-scores the same schemes, so even a single solve hits the cache;
-/// across overlapping segment contexts — and across session jobs — the
-/// reuse compounds.
+/// Bottom-up solve of one layer in one context, scoring through the
+/// detailed tier of the shared cost `model` (cache-backed: per-run memo or
+/// a cross-job `cost::SessionCache`). The stacking pass probes each
+/// partition with the default loop orders and the final sweep re-scores
+/// the same schemes, so even a single solve hits the cache; across
+/// overlapping segment contexts — and across session jobs — the reuse
+/// compounds.
 pub fn solve_intra_cached(
     arch: &ArchConfig,
     layer: &Layer,
     ctx: &IntraCtx,
-    cost: &dyn EvalCache,
+    model: &dyn CostModel,
 ) -> Option<LayerScheme> {
     let mut best: Option<(f64, LayerScheme)> = None;
-    for part in stacking_candidates(arch, layer, ctx, cost) {
+    for part in stacking_candidates(arch, layer, ctx, model) {
         let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
         // Level 1: REGF caching per order. The REGF block must stay
         // GBUF-feasible too (the next level's block contains it).
@@ -76,20 +73,12 @@ pub fn solve_intra_cached(
             let rq = descend(&unit, unit.granule, unit.totals, ro, |q| {
                 unit.regf_pe_words(q) <= arch.regf_words() && gbuf_fits(arch, &unit, &part, q)
             });
-            if unit.regf_pe_words(rq) > arch.regf_words()
-                || !gbuf_fits(arch, &unit, &part, rq)
-            {
+            if unit.regf_pe_words(rq) > arch.regf_words() || !gbuf_fits(arch, &unit, &part, rq) {
                 continue; // even the unit tensors overflow the buffers
             }
             // Level 2: GBUF caching per order, starting from the REGF block.
             for go in LoopOrder::all() {
-                let gq = descend(
-                    &unit,
-                    rq,
-                    unit.totals,
-                    go,
-                    |q| gbuf_fits(arch, &unit, &part, q),
-                );
+                let gq = descend(&unit, rq, unit.totals, go, |q| gbuf_fits(arch, &unit, &part, q));
                 let s = LayerScheme {
                     part,
                     unit,
@@ -99,11 +88,8 @@ pub fn solve_intra_cached(
                 if s.validate(arch).is_err() {
                     continue;
                 }
-                let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
-                let c = match ctx.objective {
-                    Objective::Energy => ev.energy.total(),
-                    Objective::Latency => ev.latency_cycles,
-                };
+                let est = model.evaluate(arch, &s, ctx.ifm_on_chip);
+                let c = ctx.objective.of(&est);
                 if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
                     best = Some((c, s));
                 }
@@ -204,7 +190,7 @@ fn stacking_candidates(
     arch: &ArchConfig,
     layer: &Layer,
     ctx: &IntraCtx,
-    cost: &dyn EvalCache,
+    model: &dyn CostModel,
 ) -> Vec<PartitionScheme> {
     let region = ctx.region;
     let area = region.0 * region.1;
@@ -214,14 +200,14 @@ fn stacking_candidates(
     let seeds = seed_partitions(layer, ctx.rb, region);
     for seed in seeds {
         let mut cur = seed;
-        let mut cur_cost = probe_cost(arch, layer, ctx, &cur, cost);
+        let mut cur_cost = probe_cost(arch, layer, ctx, &cur, model);
         if !seen.contains(&cur) {
             seen.push(cur);
         }
         loop {
             let mut improved = false;
             for next in partition_moves(&cur, layer, ctx.rb, area) {
-                let c = probe_cost(arch, layer, ctx, &next, cost);
+                let c = probe_cost(arch, layer, ctx, &next, model);
                 if c < cur_cost {
                     cur = next;
                     cur_cost = c;
@@ -275,7 +261,12 @@ fn largest_pow2_divisor(n: u64) -> u64 {
 
 /// Neighbour moves: double one partition dim (if it still fits the region
 /// and the layer), halve one (to escape over-splits), toggle sharing.
-fn partition_moves(cur: &PartitionScheme, layer: &Layer, rb: u64, area: u64) -> Vec<PartitionScheme> {
+fn partition_moves(
+    cur: &PartitionScheme,
+    layer: &Layer,
+    rb: u64,
+    area: u64,
+) -> Vec<PartitionScheme> {
     let mut out = Vec::new();
     type Fld = (fn(&PartitionScheme) -> u64, fn(&mut PartitionScheme, u64));
     let fields: [Fld; 5] = [
@@ -318,16 +309,16 @@ fn partition_moves(cur: &PartitionScheme, layer: &Layer, rb: u64, area: u64) -> 
     out
 }
 
-/// One-shot probe: default orders, full descend, detailed eval (memoized —
-/// the hill climb re-probes partitions along its paths and the final sweep
-/// re-scores the same schemes). Infinity when no valid scheme exists under
-/// this partition.
+/// One-shot probe: default orders, full descend, detailed-tier eval
+/// (memoized — the hill climb re-probes partitions along its paths and the
+/// final sweep re-scores the same schemes). Infinity when no valid scheme
+/// exists under this partition.
 fn probe_cost(
     arch: &ArchConfig,
     layer: &Layer,
     ctx: &IntraCtx,
     part: &PartitionScheme,
-    cost: &dyn EvalCache,
+    model: &dyn CostModel,
 ) -> f64 {
     let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
     let ro = LoopOrder([Grp::B, Grp::K, Grp::C]);
@@ -348,119 +339,18 @@ fn probe_cost(
     if s.validate(arch).is_err() {
         return f64::INFINITY;
     }
-    let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
-    match ctx.objective {
-        Objective::Energy => ev.energy.total(),
-        Objective::Latency => ev.latency_cycles,
-    }
-}
-
-/// Full KAPLA network scheduling: fast inter-layer DP, then intra-layer
-/// solving of the top-k_S chains, final pick on the detailed model.
-///
-/// With `cfg.solve_threads > 1` the distinct per-layer solve contexts of
-/// all top-k_S chains are solved first across the scoped worker pool; the
-/// chain assembly afterwards only reads the memo, so the schedule is
-/// identical to the sequential run for any thread count.
-pub fn kapla_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-) -> (SolveResult, PruneStats) {
-    kapla_schedule_with(arch, net, batch, obj, cfg, &CostCache::new())
-}
-
-/// [`kapla_schedule`] against a caller-supplied evaluation cache — the
-/// entry point scheduling sessions use to reuse detailed-model evaluations
-/// across jobs. Because the solver is pure per context and the cache is
-/// exact-keyed, a shared (even bounded/evicting) session yields schedules
-/// byte-identical to a solitary run.
-pub fn kapla_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    cost: &dyn EvalCache,
-) -> (SolveResult, PruneStats) {
-    let timer = crate::util::Timer::start();
-    let (chains, stats) = best_chains(arch, net, batch, cfg);
-    let intra = KaplaIntra;
-    let mut cache: super::IntraCache = std::collections::HashMap::new();
-
-    if cfg.solve_threads > 1 {
-        let keys = super::collect_intra_keys(
-            net,
-            batch,
-            chains.iter().flat_map(|c| c.segments.iter()),
-        );
-        super::presolve_contexts(
-            arch,
-            net,
-            keys,
-            &intra,
-            obj,
-            cfg.solve_threads,
-            &mut cache,
-            cost,
-        );
-    }
-
-    let mut best: Option<(f64, Schedule)> = None;
-    for chain in &chains {
-        let mut segments = Vec::with_capacity(chain.segments.len());
-        let mut ok = true;
-        for seg in &chain.segments {
-            match super::solve_segment_layers(arch, net, batch, seg, &intra, obj, &mut cache, cost)
-            {
-                Some(schemes) => segments.push((seg.clone(), schemes)),
-                None => {
-                    ok = false;
-                    break;
-                }
-            }
-        }
-        if !ok {
-            continue;
-        }
-        let sched = Schedule { segments };
-        let ev = evaluate_schedule(arch, net, &sched);
-        let c = match obj {
-            Objective::Energy => ev.energy.total(),
-            Objective::Latency => ev.latency_cycles,
-        };
-        if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
-            best = Some((c, sched));
-        }
-    }
-
-    // Fallback: all-singleton chain (always realizable).
-    let schedule = match best {
-        Some((_, s)) => s,
-        None => {
-            let mut segments = Vec::new();
-            for i in 0..net.len() {
-                let seg = crate::interlayer::Segment::single(i, arch);
-                let schemes = super::solve_segment_layers(
-                    arch, net, batch, &seg, &intra, obj, &mut cache, cost,
-                )
-                .expect("even singleton segment unschedulable");
-                segments.push((seg, schemes));
-            }
-            Schedule { segments }
-        }
-    };
-    let eval = evaluate_schedule(arch, net, &schedule);
-    (SolveResult { schedule, eval, solve_s: timer.elapsed_s(), cache: cost.stats() }, stats)
+    let est = model.evaluate(arch, &s, ctx.ifm_on_chip);
+    ctx.objective.of(&est)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::cost::CostCache;
+    use crate::interlayer::dp::DpConfig;
     use crate::sim::evaluate_layer;
+    use crate::solvers::{Objective, SolveCtx, SolverKind};
     use crate::workloads::nets;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
@@ -472,7 +362,8 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
         for l in &net.layers {
-            let s = solve_intra(&arch, l, &ctx((16, 16), 64)).unwrap_or_else(|| panic!("{}", l.name));
+            let s =
+                solve_intra(&arch, l, &ctx((16, 16), 64)).unwrap_or_else(|| panic!("{}", l.name));
             s.validate(&arch).unwrap();
         }
     }
@@ -529,11 +420,12 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
         let cache = CostCache::new();
+        let model = TieredCost::over(&cache);
         let c = ctx((8, 8), 16);
-        let a = solve_intra_cached(&arch, &net.layers[2], &c, &cache).unwrap();
+        let a = solve_intra_cached(&arch, &net.layers[2], &c, &model).unwrap();
         assert!(cache.hits() > 0, "probe/final sweep must share evaluations");
         let (h1, l1) = (cache.hits(), cache.lookups());
-        let b = solve_intra_cached(&arch, &net.layers[2], &c, &cache).unwrap();
+        let b = solve_intra_cached(&arch, &net.layers[2], &c, &model).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
         // A repeated identical solve answers every evaluation from the memo.
         assert_eq!(cache.hits() - h1, cache.lookups() - l1);
@@ -543,10 +435,12 @@ mod tests {
     fn parallel_kapla_schedule_matches_sequential() {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
-        let seq_cfg = DpConfig { solve_threads: 1, ..DpConfig::default() };
-        let par_cfg = DpConfig { solve_threads: 4, ..DpConfig::default() };
-        let (seq, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &seq_cfg);
-        let (par, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &par_cfg);
+        let seq = SolveCtx::new(&arch)
+            .dp(DpConfig { solve_threads: 1, ..DpConfig::default() })
+            .run(&net, 16, SolverKind::Kapla);
+        let par = SolveCtx::new(&arch)
+            .dp(DpConfig { solve_threads: 4, ..DpConfig::default() })
+            .run(&net, 16, SolverKind::Kapla);
         assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
         assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
     }
@@ -555,19 +449,20 @@ mod tests {
     fn full_schedule_mlp() {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
-        let (r, stats) =
-            kapla_schedule(&arch, &net, 16, Objective::Energy, &DpConfig::default());
+        let r = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla);
         assert_eq!(r.schedule.num_layers(), net.len());
         assert!(r.eval.energy.total() > 0.0);
-        assert!(stats.total > 0);
+        assert!(r.prune.expect("kapla reports prune stats").total > 0);
     }
 
     #[test]
     fn latency_objective_not_slower() {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
-        let (re, _) = kapla_schedule(&arch, &net, 16, Objective::Energy, &DpConfig::default());
-        let (rl, _) = kapla_schedule(&arch, &net, 16, Objective::Latency, &DpConfig::default());
+        let re = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla);
+        let rl = SolveCtx::new(&arch)
+            .objective(Objective::Latency)
+            .run(&net, 16, SolverKind::Kapla);
         assert!(rl.eval.latency_cycles <= re.eval.latency_cycles * 1.25);
     }
 }

@@ -13,19 +13,15 @@
 //! cross-checked in tests.
 
 use crate::arch::ArchConfig;
-use crate::cost::{scheme_features, EvalCache, SCHEME_FEATURES};
-use crate::directives::{LevelBlock, LayerScheme, LoopOrder};
-use crate::interlayer::dp::DpConfig;
+use crate::cost::{scheme_features, CostModel, SCHEME_FEATURES};
+use crate::directives::{LayerScheme, LevelBlock, LoopOrder};
 use crate::mapping::UnitMap;
 use crate::partition::enumerate_partitions;
 use crate::util::SplitMix64;
-use crate::workloads::{Layer, Network};
+use crate::workloads::Layer;
 
 use super::space::qty_candidates;
-use super::{
-    ctx_fingerprint, exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective,
-    SolveResult,
-};
+use super::{ctx_fingerprint, IntraCtx, IntraSolver};
 
 /// A trainable cost predictor over scheme features.
 pub trait CostPredictor {
@@ -247,7 +243,7 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &dyn EvalCache,
+        model: &dyn CostModel,
     ) -> Option<LayerScheme> {
         let fp = ctx_fingerprint(layer, ctx);
         let mut rng = SplitMix64::new(self.seed ^ fp);
@@ -258,11 +254,8 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         }
 
         let real_cost = |s: &LayerScheme| -> f64 {
-            let ev = cost.evaluate_layer(arch, s, ctx.ifm_on_chip);
-            match ctx.objective {
-                Objective::Energy => ev.energy.total(),
-                Objective::Latency => ev.latency_cycles,
-            }
+            let est = model.evaluate(arch, s, ctx.ifm_on_chip);
+            ctx.objective.of(&est)
         };
 
         // Seed population.
@@ -335,46 +328,14 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
     }
 }
 
-/// Schedule a network with the ML baseline (native surrogate).
-pub fn ml_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    seed: u64,
-    rounds: usize,
-    sa_batch: usize,
-) -> SolveResult {
-    let intra = MlIntra::native(seed, rounds, sa_batch);
-    exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
-}
-
-/// [`ml_schedule`] against a caller-supplied (session) cache. Surrogates
-/// are freshly derived per context, so a shared session changes nothing
-/// but speed.
-pub fn ml_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    seed: u64,
-    rounds: usize,
-    sa_batch: usize,
-    cost: &dyn EvalCache,
-) -> SolveResult {
-    let intra = MlIntra::native(seed, rounds, sa_batch);
-    exact_dp_schedule_with(arch, net, batch, obj, cfg, &intra, cost)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
-    use crate::cost::CostCache;
+    use crate::cost::TieredCost;
     use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
+    use crate::solvers::Objective;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
         IntraCtx { region, rb, ifm_on_chip: false, objective: Objective::Energy }
@@ -408,7 +369,7 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let intra = MlIntra::native(11, 8, 32);
-        let s = intra.solve(&arch, &l, &ctx((2, 2), 4), &CostCache::new()).unwrap();
+        let s = intra.solve(&arch, &l, &ctx((2, 2), 4), &TieredCost::fresh()).unwrap();
         s.validate(&arch).unwrap();
     }
 
@@ -418,9 +379,9 @@ mod tests {
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let c = ctx((4, 4), 8);
         let ex =
-            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &CostCache::new()).unwrap();
+            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
-        let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         let em = evaluate_layer(&arch, &m, false).energy.total();
         assert!(em + 1e-9 >= ee);
         assert!(em <= ee * 2.5, "ML {em} vs optimal {ee}");
@@ -431,8 +392,8 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let a = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &CostCache::new()).unwrap();
-        let b = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let a = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
+        let b = MlIntra::native(9, 6, 16).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
@@ -443,9 +404,9 @@ mod tests {
         let l2 = crate::workloads::Layer::fc("f", 256, 128);
         let c = ctx((2, 2), 4);
         let intra = MlIntra::native(13, 4, 16);
-        let a1 = intra.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
-        let _ = intra.solve(&arch, &l2, &c, &CostCache::new());
-        let b1 = intra.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        let a1 = intra.solve(&arch, &l1, &c, &TieredCost::fresh()).unwrap();
+        let _ = intra.solve(&arch, &l2, &c, &TieredCost::fresh());
+        let b1 = intra.solve(&arch, &l1, &c, &TieredCost::fresh()).unwrap();
         assert_eq!(format!("{a1:?}"), format!("{b1:?}"));
     }
 }

@@ -12,22 +12,30 @@
 //! simulator-evaluated segment costs; they differ in how each layer's
 //! intra-layer scheme is found. KAPLA instead runs the fast estimated DP
 //! first and only solves intra-layer schemes for the top-k_S chains.
+//!
+//! The one entry point is the [`SolveCtx`] engine (`engine` module): it
+//! owns the arch, DP knobs, objective and the tiered [`CostModel`], and
+//! dispatches a [`SolverKind`] through `SolveCtx::run`. The per-family
+//! `*_schedule` free functions this module used to export are gone —
+//! coordinator, service, CLI, benches and tests all go through the engine.
 
+pub mod engine;
 pub mod exhaustive;
 pub mod kapla;
 pub mod ml;
 pub mod random;
 pub mod space;
 
+pub use engine::SolveCtx;
+
 use std::collections::{HashMap, HashSet};
 
 use crate::arch::ArchConfig;
-use crate::cost::{CacheStats, CostCache, EvalCache};
+use crate::cost::{CacheStats, CostEstimate, CostModel};
 use crate::directives::LayerScheme;
-use crate::interlayer::dp::DpConfig;
-use crate::interlayer::prune::conservative_valid;
-use crate::interlayer::{candidate_spans, enumerate_segment_schemes, Schedule, Segment};
-use crate::sim::pipeline::{evaluate_schedule, evaluate_segment, NetEval};
+use crate::interlayer::prune::PruneStats;
+use crate::interlayer::{Schedule, Segment};
+use crate::sim::pipeline::NetEval;
 use crate::workloads::{Layer, Network};
 
 /// Optimization objective (the paper evaluates energy, Fig. 7/9/10, and
@@ -57,6 +65,133 @@ impl Objective {
             Objective::Latency => "latency",
         }
     }
+
+    /// Scalar value of a cost-model estimate under this objective — the
+    /// one projection every solver scores candidates with.
+    pub fn of(&self, est: &CostEstimate) -> f64 {
+        match self {
+            Objective::Energy => est.energy_pj,
+            Objective::Latency => est.latency_cycles,
+        }
+    }
+}
+
+/// The five evaluated solvers (paper §V letters). Stochastic members carry
+/// their knobs so a `SolverKind` value fully determines the search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverKind {
+    /// B — nn-dataflow exhaustive baseline.
+    Baseline,
+    /// S — exhaustive over the directive space.
+    DirectiveExhaustive,
+    /// R — random sampling with keep-probability `p`.
+    Random { p: f64, seed: u64 },
+    /// M — simulated annealing + surrogate.
+    Ml { seed: u64, rounds: usize, batch: usize },
+    /// K — KAPLA.
+    Kapla,
+}
+
+/// Default knobs of the stochastic solvers — shared by [`SolverKind::parse`]
+/// (what you get when a knob is omitted) and [`SolverKind::label`] (which
+/// only prints knobs that differ from these).
+pub const DEFAULT_RANDOM_P: f64 = 0.1;
+pub const DEFAULT_RANDOM_SEED: u64 = 0xDA7AF10;
+pub const DEFAULT_ML_SEED: u64 = 0x5EED;
+pub const DEFAULT_ML_ROUNDS: usize = 16;
+pub const DEFAULT_ML_BATCH: usize = 64;
+
+impl SolverKind {
+    pub fn letter(&self) -> &'static str {
+        match self {
+            SolverKind::Baseline => "B",
+            SolverKind::DirectiveExhaustive => "S",
+            SolverKind::Random { .. } => "R",
+            SolverKind::Ml { .. } => "M",
+            SolverKind::Kapla => "K",
+        }
+    }
+
+    /// The letter plus any non-default knobs, so report rows from a
+    /// `random:p=0.3,seed=7` sweep are distinguishable from each other
+    /// (bare `letter()` collapses them all to `R`). Round-trips through
+    /// [`SolverKind::parse`].
+    pub fn label(&self) -> String {
+        let mut knobs: Vec<String> = Vec::new();
+        match self {
+            SolverKind::Random { p, seed } => {
+                if *p != DEFAULT_RANDOM_P {
+                    knobs.push(format!("p={p}"));
+                }
+                if *seed != DEFAULT_RANDOM_SEED {
+                    knobs.push(format!("seed={seed}"));
+                }
+            }
+            SolverKind::Ml { seed, rounds, batch } => {
+                if *rounds != DEFAULT_ML_ROUNDS {
+                    knobs.push(format!("rounds={rounds}"));
+                }
+                if *batch != DEFAULT_ML_BATCH {
+                    knobs.push(format!("batch={batch}"));
+                }
+                if *seed != DEFAULT_ML_SEED {
+                    knobs.push(format!("seed={seed}"));
+                }
+            }
+            _ => {}
+        }
+        if knobs.is_empty() {
+            self.letter().to_string()
+        } else {
+            format!("{}:{}", self.letter(), knobs.join(","))
+        }
+    }
+
+    /// Parse a CLI/service name. Stochastic solvers take knobs after a
+    /// `:` — either the legacy bare number (`"random:0.1"`, `"ml:16"`) or
+    /// comma-separated `key=value` pairs (`"random:p=0.2,seed=9"`,
+    /// `"ml:rounds=8,batch=32,seed=5"`). Unknown names, unknown keys and
+    /// unparseable values all return `None`, so front ends can reject a
+    /// malformed request instead of silently falling back to defaults.
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        let lower = s.to_ascii_lowercase();
+        let (name, arg) = match lower.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        match name {
+            "k" | "kapla" => Some(SolverKind::Kapla),
+            "b" | "baseline" | "nn-dataflow" => Some(SolverKind::Baseline),
+            "s" | "exhaustive" => Some(SolverKind::DirectiveExhaustive),
+            "r" | "random" => {
+                let (mut p, mut seed) = (DEFAULT_RANDOM_P, DEFAULT_RANDOM_SEED);
+                for part in arg.into_iter().flat_map(|a| a.split(',')) {
+                    match part.split_once('=') {
+                        Some(("p", v)) => p = v.parse().ok()?,
+                        Some(("seed", v)) => seed = v.parse().ok()?,
+                        Some(_) => return None,
+                        None => p = part.parse().ok()?,
+                    }
+                }
+                Some(SolverKind::Random { p, seed })
+            }
+            "m" | "ml" => {
+                let (mut seed, mut rounds, mut batch) =
+                    (DEFAULT_ML_SEED, DEFAULT_ML_ROUNDS, DEFAULT_ML_BATCH);
+                for part in arg.into_iter().flat_map(|a| a.split(',')) {
+                    match part.split_once('=') {
+                        Some(("rounds", v)) => rounds = v.parse().ok()?,
+                        Some(("batch", v)) => batch = v.parse().ok()?,
+                        Some(("seed", v)) => seed = v.parse().ok()?,
+                        Some(_) => return None,
+                        None => rounds = part.parse().ok()?,
+                    }
+                }
+                Some(SolverKind::Ml { seed, rounds, batch })
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Context handed to an intra-layer solver for one layer of one segment.
@@ -74,12 +209,13 @@ pub struct IntraCtx {
 /// An intra-layer solver: find a (near-)optimal `LayerScheme` for one layer
 /// in the given context, or `None` if no valid scheme exists.
 ///
-/// Solvers are *pure* per call — all candidate evaluations go through the
-/// shared [`EvalCache`] (the per-run [`CostCache`] or a cross-job
-/// `cost::SessionCache`) and any internal randomness is derived from the
-/// solver's seed plus [`ctx_fingerprint`] — so independent contexts can be
-/// solved concurrently, and sessions shared across jobs, with results
-/// identical to a solitary sequential run.
+/// Solvers are *pure* per call — all candidate scoring goes through the
+/// detailed tier of the shared [`CostModel`] (cache-backed, so a per-run
+/// memo or a cross-job `cost::SessionCache` serves repeats) and any
+/// internal randomness is derived from the solver's seed plus
+/// [`ctx_fingerprint`] — so independent contexts can be solved
+/// concurrently, and sessions shared across jobs, with results identical
+/// to a solitary sequential run.
 pub trait IntraSolver: Sync {
     fn name(&self) -> &'static str;
     fn solve(
@@ -87,7 +223,7 @@ pub trait IntraSolver: Sync {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &dyn EvalCache,
+        model: &dyn CostModel,
     ) -> Option<LayerScheme>;
 }
 
@@ -125,6 +261,10 @@ pub struct SolveResult {
     /// counters are session-cumulative, so deltas between consecutive
     /// results expose cross-job reuse.
     pub cache: CacheStats,
+    /// Inter-layer pruning statistics (Table VI). Populated by the KAPLA
+    /// decoupled path; the exact-DP baselines don't rank-prune, so they
+    /// report `None`.
+    pub prune: Option<PruneStats>,
 }
 
 impl SolveResult {
@@ -136,7 +276,7 @@ impl SolveResult {
     }
 }
 
-fn seg_objective(ev: &crate::sim::pipeline::SegmentEval, obj: Objective) -> f64 {
+pub(crate) fn seg_objective(ev: &crate::sim::pipeline::SegmentEval, obj: Objective) -> f64 {
     match obj {
         Objective::Energy => ev.energy.total(),
         Objective::Latency => ev.latency_cycles,
@@ -158,7 +298,7 @@ pub(crate) fn solve_segment_layers(
     intra: &dyn IntraSolver,
     obj: Objective,
     cache: &mut IntraCache,
-    cost: &dyn EvalCache,
+    model: &dyn CostModel,
 ) -> Option<Vec<LayerScheme>> {
     let rb = seg.round_batch(batch);
     let mut out = Vec::with_capacity(seg.len());
@@ -168,7 +308,7 @@ pub(crate) fn solve_segment_layers(
         let entry = cache.entry(key).or_insert_with(|| {
             let ctx =
                 IntraCtx { region: seg.regions[pos], rb, ifm_on_chip: on_chip, objective: obj };
-            intra.solve(arch, &net.layers[li], &ctx, cost)
+            intra.solve(arch, &net.layers[li], &ctx, model)
         });
         match entry {
             Some(s) => out.push(*s),
@@ -211,226 +351,21 @@ pub(crate) fn presolve_contexts(
     obj: Objective,
     threads: usize,
     cache: &mut IntraCache,
-    cost: &dyn EvalCache,
+    model: &dyn CostModel,
 ) {
     let solved = crate::util::par_map(&keys, threads, |&(li, region, rb, on_chip)| {
         let ctx = IntraCtx { region, rb, ifm_on_chip: on_chip, objective: obj };
-        intra.solve(arch, &net.layers[li], &ctx, cost)
+        intra.solve(arch, &net.layers[li], &ctx, model)
     });
     for (key, s) in keys.into_iter().zip(solved) {
         cache.insert(key, s);
     }
 }
 
-/// Exact dynamic program over segment chains: every candidate segment is
-/// fully intra-solved and simulator-evaluated (this is what makes the
-/// exhaustive/random/ML baselines slow and exact). Conservative validity
-/// pruning is safe for optimality and applied for all solvers, mirroring
-/// nn-dataflow's own buffering checks.
-///
-/// With `cfg.solve_threads > 1` the intra-layer solves — the dominant cost
-/// by orders of magnitude — run first, sharded across a scoped worker pool:
-/// the candidate segments (and hence solve contexts) do not depend on DP
-/// state, only the chain costs do, so the sequential DP afterwards is pure
-/// cache assembly and the result is identical to the single-threaded run.
-pub fn exact_dp_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    intra: &dyn IntraSolver,
-) -> SolveResult {
-    exact_dp_schedule_with(arch, net, batch, obj, cfg, intra, &CostCache::new())
-}
-
-/// [`exact_dp_schedule`] against a caller-supplied evaluation cache — the
-/// entry point scheduling sessions use to reuse detailed-model evaluations
-/// across jobs (the cache key carries the arch fingerprint, so one session
-/// can serve jobs on different hardware configs without aliasing).
-pub fn exact_dp_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    intra: &dyn IntraSolver,
-    cost: &dyn EvalCache,
-) -> SolveResult {
-    let timer = crate::util::Timer::start();
-    let n = net.len();
-    struct Node {
-        cost: f64,
-        seg: Segment,
-        schemes: Vec<LayerScheme>,
-        parent: Option<usize>, // layer index of previous chain node
-    }
-    let mut table: Vec<Option<Node>> = (0..n).map(|_| None).collect();
-    let mut cache: IntraCache = HashMap::new();
-
-    // Enumerate every candidate segment once, grouped per (end layer,
-    // span start). The enumeration is DP-state-independent, so the same
-    // list feeds both the parallel pre-solve and the DP proper. Holding
-    // all spans' candidates at once costs O(total segments) small structs
-    // (~100 MB at the most extreme full-scale settings, trivial at CI
-    // scale) and buys a single loop shape for both thread modes.
-    let mut spans_by_end: Vec<Vec<(usize, Vec<Segment>)>> = Vec::with_capacity(n);
-    for i in 0..n {
-        let mut per_span = Vec::new();
-        for span in candidate_spans(i, cfg.max_seg_len) {
-            let segs: Vec<Segment> = enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds)
-                .into_iter()
-                .filter(|seg| conservative_valid(arch, net, batch, seg))
-                .collect();
-            per_span.push((span[0], segs));
-        }
-        spans_by_end.push(per_span);
-    }
-
-    if cfg.solve_threads > 1 {
-        let keys = collect_intra_keys(
-            net,
-            batch,
-            spans_by_end.iter().flatten().flat_map(|(_, segs)| segs.iter()),
-        );
-        presolve_contexts(arch, net, keys, intra, obj, cfg.solve_threads, &mut cache, cost);
-    }
-
-    for i in 0..n {
-        for (start, segs) in &spans_by_end[i] {
-            let start = *start;
-            let prev_cost = if start == 0 {
-                0.0
-            } else {
-                match &table[start - 1] {
-                    Some(nd) => nd.cost,
-                    None => continue,
-                }
-            };
-            for seg in segs {
-                let Some(schemes) =
-                    solve_segment_layers(arch, net, batch, seg, intra, obj, &mut cache, cost)
-                else {
-                    continue;
-                };
-                let ev = evaluate_segment(arch, net, seg, &schemes);
-                let cost = prev_cost + seg_objective(&ev, obj);
-                let better = table[i].as_ref().map(|nd| cost < nd.cost).unwrap_or(true);
-                if better {
-                    table[i] = Some(Node {
-                        cost,
-                        seg: seg.clone(),
-                        schemes,
-                        parent: if start == 0 { None } else { Some(start - 1) },
-                    });
-                }
-            }
-        }
-        assert!(
-            table[i].is_some(),
-            "no valid schedule ends at layer {i} ({})",
-            net.layers[i].name
-        );
-    }
-
-    // Reconstruct.
-    let mut segments = Vec::new();
-    let mut cur = Some(n - 1);
-    while let Some(i) = cur {
-        let nd = table[i].as_ref().unwrap();
-        segments.push((nd.seg.clone(), nd.schemes.clone()));
-        cur = nd.parent;
-    }
-    segments.reverse();
-    let schedule = Schedule { segments };
-    let eval = evaluate_schedule(arch, net, &schedule);
-    SolveResult { schedule, eval, solve_s: timer.elapsed_s(), cache: cost.stats() }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets;
-    use crate::workloads::{nets, Layer, Network};
-
-    /// Minimal intra solver for tests: smallest valid scheme.
-    pub(crate) struct Minimal;
-    impl IntraSolver for Minimal {
-        fn name(&self) -> &'static str {
-            "minimal"
-        }
-        fn solve(
-            &self,
-            arch: &ArchConfig,
-            layer: &Layer,
-            ctx: &IntraCtx,
-            _cost: &dyn EvalCache,
-        ) -> Option<LayerScheme> {
-            space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
-        }
-    }
-
-    fn small_net() -> Network {
-        let mut n = Network::new("s", 8, 28, 28);
-        n.chain(Layer::conv("a", 8, 16, 28, 3, 1));
-        n.chain(Layer::conv("b", 16, 16, 28, 3, 1));
-        n.chain(Layer::fc("c", 16 * 28 * 28, 64));
-        n
-    }
-
-    #[test]
-    fn exact_dp_produces_full_coverage() {
-        let arch = presets::bench_multi_node();
-        let net = small_net();
-        let r =
-            exact_dp_schedule(&arch, &net, 4, Objective::Energy, &DpConfig::default(), &Minimal);
-        assert_eq!(r.schedule.num_layers(), net.len());
-        assert!(r.eval.energy.total() > 0.0);
-        let mut seen = Vec::new();
-        for (seg, schemes) in &r.schedule.segments {
-            assert_eq!(seg.len(), schemes.len());
-            seen.extend(seg.layers.iter().copied());
-        }
-        assert_eq!(seen, (0..net.len()).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn exact_dp_objective_latency_differs() {
-        let arch = presets::bench_multi_node();
-        let net = small_net();
-        let re =
-            exact_dp_schedule(&arch, &net, 4, Objective::Energy, &DpConfig::default(), &Minimal);
-        let rl =
-            exact_dp_schedule(&arch, &net, 4, Objective::Latency, &DpConfig::default(), &Minimal);
-        // Latency-optimized schedule can't have worse latency than the
-        // energy-optimized one (same space, different objective).
-        assert!(rl.eval.latency_cycles <= re.eval.latency_cycles + 1e-6);
-    }
-
-    #[test]
-    fn works_on_mlp_at_edge() {
-        let arch = presets::edge_tpu();
-        let net = nets::mlp();
-        let r =
-            exact_dp_schedule(&arch, &net, 1, Objective::Energy, &DpConfig::default(), &Minimal);
-        assert_eq!(r.schedule.num_layers(), net.len());
-        for (seg, _) in &r.schedule.segments {
-            assert_eq!(seg.len(), 1); // single node: no pipelining
-        }
-    }
-
-    #[test]
-    fn parallel_dp_matches_sequential_exactly() {
-        let arch = presets::bench_multi_node();
-        let net = small_net();
-        let seq_cfg = DpConfig { solve_threads: 1, ..DpConfig::default() };
-        let par_cfg = DpConfig { solve_threads: 4, ..DpConfig::default() };
-        let seq = exact_dp_schedule(&arch, &net, 4, Objective::Energy, &seq_cfg, &Minimal);
-        let par = exact_dp_schedule(&arch, &net, 4, Objective::Energy, &par_cfg, &Minimal);
-        assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
-        assert_eq!(seq.eval.latency_cycles, par.eval.latency_cycles);
-        assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
-    }
+    use crate::workloads::Layer;
 
     #[test]
     fn ctx_fingerprint_distinguishes_contexts() {
@@ -447,5 +382,83 @@ mod tests {
         let mut lat = ctx(4);
         lat.objective = Objective::Latency;
         assert_ne!(ctx_fingerprint(&a, &ctx(4)), ctx_fingerprint(&a, &lat));
+    }
+
+    #[test]
+    fn solver_kind_parsing() {
+        assert_eq!(SolverKind::parse("kapla"), Some(SolverKind::Kapla));
+        assert_eq!(SolverKind::parse("K"), Some(SolverKind::Kapla));
+        assert_eq!(SolverKind::parse("b"), Some(SolverKind::Baseline));
+        assert!(
+            matches!(SolverKind::parse("random:0.5"), Some(SolverKind::Random { p, .. }) if p == 0.5)
+        );
+        assert!(matches!(SolverKind::parse("ml:4"), Some(SolverKind::Ml { rounds: 4, .. })));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn solver_kind_key_value_knobs() {
+        assert_eq!(
+            SolverKind::parse("random:p=0.25,seed=9"),
+            Some(SolverKind::Random { p: 0.25, seed: 9 })
+        );
+        assert_eq!(
+            SolverKind::parse("ml:rounds=8,batch=32,seed=5"),
+            Some(SolverKind::Ml { seed: 5, rounds: 8, batch: 32 })
+        );
+        // Bare-number legacy form still accepted.
+        assert!(
+            matches!(SolverKind::parse("r:0.3"), Some(SolverKind::Random { p, .. }) if p == 0.3)
+        );
+        // Malformed knobs are rejected, not silently defaulted.
+        assert_eq!(SolverKind::parse("random:q=0.5"), None);
+        assert_eq!(SolverKind::parse("random:p=zero"), None);
+        assert_eq!(SolverKind::parse("ml:rounds=many"), None);
+    }
+
+    #[test]
+    fn letters_match_paper() {
+        assert_eq!(SolverKind::Kapla.letter(), "K");
+        assert_eq!(SolverKind::Baseline.letter(), "B");
+        assert_eq!(SolverKind::DirectiveExhaustive.letter(), "S");
+        assert_eq!(SolverKind::Random { p: 0.1, seed: 0 }.letter(), "R");
+        assert_eq!(SolverKind::Ml { seed: 0, rounds: 1, batch: 1 }.letter(), "M");
+    }
+
+    #[test]
+    fn labels_fold_in_non_default_knobs_and_roundtrip() {
+        // Default knobs collapse to the bare letter.
+        assert_eq!(SolverKind::Kapla.label(), "K");
+        assert_eq!(
+            SolverKind::Random { p: DEFAULT_RANDOM_P, seed: DEFAULT_RANDOM_SEED }.label(),
+            "R"
+        );
+        assert_eq!(
+            SolverKind::Ml {
+                seed: DEFAULT_ML_SEED,
+                rounds: DEFAULT_ML_ROUNDS,
+                batch: DEFAULT_ML_BATCH
+            }
+            .label(),
+            "M"
+        );
+        // Non-default knobs are spelled out, so sweep rows stay distinct.
+        let r = SolverKind::Random { p: 0.3, seed: 7 };
+        assert_eq!(r.label(), "R:p=0.3,seed=7");
+        let m = SolverKind::Ml { seed: 5, rounds: 8, batch: 32 };
+        assert_eq!(m.label(), "M:rounds=8,batch=32,seed=5");
+        let r_p_only = SolverKind::Random { p: 0.3, seed: DEFAULT_RANDOM_SEED };
+        assert_eq!(r_p_only.label(), "R:p=0.3");
+        // Labels parse back to the same kind.
+        for kind in [SolverKind::Kapla, r, m, r_p_only] {
+            assert_eq!(SolverKind::parse(&kind.label()), Some(kind), "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn objective_projects_estimates() {
+        let est = CostEstimate { energy_pj: 3.0, latency_cycles: 7.0 };
+        assert_eq!(Objective::Energy.of(&est), 3.0);
+        assert_eq!(Objective::Latency.of(&est), 7.0);
     }
 }

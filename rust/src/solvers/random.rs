@@ -4,22 +4,20 @@
 //! is independently subsampled with probability `p`; the surviving cross
 //! product is evaluated exactly. If the sample contains no valid scheme the
 //! layer retries with a fresh sample (the paper found p < 0.1 fails to
-//! produce valid schemes; the edge config even needs p = 0.85).
+//! produce valid schemes; the edge config even needs p = 0.85). Plugs into
+//! the exact segment-chain DP via [`super::SolveCtx::run`] with
+//! `SolverKind::Random`.
 
 use crate::arch::ArchConfig;
-use crate::cost::EvalCache;
-use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
-use crate::interlayer::dp::DpConfig;
+use crate::cost::CostModel;
+use crate::directives::{LayerScheme, LevelBlock, LoopOrder, Qty};
 use crate::mapping::UnitMap;
 use crate::partition::enumerate_partitions;
 use crate::util::SplitMix64;
-use crate::workloads::{Layer, Network};
+use crate::workloads::Layer;
 
 use super::space::qty_candidates;
-use super::{
-    ctx_fingerprint, exact_dp_schedule, exact_dp_schedule_with, IntraCtx, IntraSolver, Objective,
-    SolveResult,
-};
+use super::{ctx_fingerprint, IntraCtx, IntraSolver};
 
 /// Random-sampling intra-layer solver. Each (layer, context) solve draws
 /// from its own RNG stream — `seed` folded with `ctx_fingerprint` — so
@@ -59,7 +57,7 @@ impl IntraSolver for RandomIntra {
         arch: &ArchConfig,
         layer: &Layer,
         ctx: &IntraCtx,
-        cost: &dyn EvalCache,
+        model: &dyn CostModel,
     ) -> Option<LayerScheme> {
         let rng = &mut SplitMix64::new(self.seed ^ ctx_fingerprint(layer, ctx));
         let parts = enumerate_partitions(layer, ctx.rb, ctx.region, false);
@@ -84,11 +82,8 @@ impl IntraSolver for RandomIntra {
                                 if s.validate(arch).is_err() {
                                     continue;
                                 }
-                                let ev = cost.evaluate_layer(arch, &s, ctx.ifm_on_chip);
-                                let c = match ctx.objective {
-                                    Objective::Energy => ev.energy.total(),
-                                    Objective::Latency => ev.latency_cycles,
-                                };
+                                let est = model.evaluate(arch, &s, ctx.ifm_on_chip);
+                                let c = ctx.objective.of(&est);
                                 if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
                                     best = Some((c, s));
                                 }
@@ -106,44 +101,14 @@ impl IntraSolver for RandomIntra {
     }
 }
 
-/// Schedule a network with random search at probability `p`.
-pub fn random_schedule(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    p: f64,
-    seed: u64,
-) -> SolveResult {
-    let intra = RandomIntra::new(p, seed);
-    exact_dp_schedule(arch, net, batch, obj, cfg, &intra)
-}
-
-/// [`random_schedule`] against a caller-supplied (session) cache. The
-/// per-context RNG streams make the solver order-independent, so a shared
-/// session changes nothing but speed.
-pub fn random_schedule_with(
-    arch: &ArchConfig,
-    net: &Network,
-    batch: u64,
-    obj: Objective,
-    cfg: &DpConfig,
-    p: f64,
-    seed: u64,
-    cost: &dyn EvalCache,
-) -> SolveResult {
-    let intra = RandomIntra::new(p, seed);
-    exact_dp_schedule_with(arch, net, batch, obj, cfg, &intra, cost)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets;
-    use crate::cost::CostCache;
+    use crate::cost::TieredCost;
     use crate::sim::evaluate_layer;
     use crate::solvers::exhaustive::ExhaustiveIntra;
+    use crate::solvers::Objective;
     use crate::workloads::nets;
 
     fn ctx(region: (u64, u64), rb: u64) -> IntraCtx {
@@ -155,9 +120,9 @@ mod tests {
         let arch = presets::bench_multi_node();
         let net = nets::alexnet();
         let solver = RandomIntra::new(0.1, 42);
-        let cache = CostCache::new();
+        let model = TieredCost::fresh();
         for l in net.layers.iter().take(6) {
-            let s = solver.solve(&arch, l, &ctx((2, 2), 4), &cache).unwrap();
+            let s = solver.solve(&arch, l, &ctx((2, 2), 4), &model).unwrap();
             s.validate(&arch).unwrap();
         }
     }
@@ -167,11 +132,12 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let ex =
-            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let ex = ExhaustiveIntra { with_sharing: false }
+            .solve(&arch, &l, &c, &TieredCost::fresh())
+            .unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
         for seed in [1u64, 2, 3] {
-            let r = RandomIntra::new(0.1, seed).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+            let r = RandomIntra::new(0.1, seed).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
             let er = evaluate_layer(&arch, &r, false).energy.total();
             assert!(er + 1e-9 >= ee, "seed {seed}: random {er} beat exhaustive {ee}");
         }
@@ -185,7 +151,8 @@ mod tests {
         let avg = |p: f64| {
             let mut tot = 0.0;
             for seed in 0..5u64 {
-                let s = RandomIntra::new(p, seed).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+                let s =
+                    RandomIntra::new(p, seed).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
                 tot += evaluate_layer(&arch, &s, false).energy.total();
             }
             tot / 5.0
@@ -200,8 +167,8 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &CostCache::new()).unwrap();
-        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &CostCache::new()).unwrap();
+        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
+        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
@@ -215,10 +182,10 @@ mod tests {
         let l2 = crate::workloads::Layer::conv("c", 16, 64, 28, 3, 1);
         let c = ctx((2, 2), 4);
         let solver = RandomIntra::new(0.2, 11);
-        let a1 = solver.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
-        let a2 = solver.solve(&arch, &l2, &c, &CostCache::new()).unwrap();
-        let b2 = solver.solve(&arch, &l2, &c, &CostCache::new()).unwrap();
-        let b1 = solver.solve(&arch, &l1, &c, &CostCache::new()).unwrap();
+        let a1 = solver.solve(&arch, &l1, &c, &TieredCost::fresh()).unwrap();
+        let a2 = solver.solve(&arch, &l2, &c, &TieredCost::fresh()).unwrap();
+        let b2 = solver.solve(&arch, &l2, &c, &TieredCost::fresh()).unwrap();
+        let b1 = solver.solve(&arch, &l1, &c, &TieredCost::fresh()).unwrap();
         assert_eq!(format!("{a1:?}"), format!("{b1:?}"));
         assert_eq!(format!("{a2:?}"), format!("{b2:?}"));
     }

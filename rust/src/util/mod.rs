@@ -97,6 +97,12 @@ pub fn available_threads() -> usize {
 /// regardless of `threads` — the determinism invariant the solver stack
 /// relies on (tests/parallel_determinism.rs). `threads <= 1` runs inline
 /// with no pool at all.
+///
+/// A panic in `f` is caught on the worker, the remaining workers drain,
+/// and the panic is re-raised on the caller with the failing item's index
+/// folded into the message (the bare scoped-thread join would otherwise
+/// abort with no hint of *which* of thousands of solver contexts died).
+/// When several items panic concurrently, the first one recorded wins.
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -107,21 +113,53 @@ where
     if threads <= 1 {
         return items.iter().map(&f).collect();
     }
+    type Failure = Option<(usize, Box<dyn std::any::Any + Send>)>;
     let next = std::sync::atomic::AtomicUsize::new(0);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let failure: std::sync::Mutex<Failure> = std::sync::Mutex::new(None);
     let slots: Vec<std::sync::Mutex<Option<R>>> =
         items.iter().map(|_| std::sync::Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                    break; // a sibling already panicked: stop early
+                }
                 let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
-                let r = f(&items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&items[i]))) {
+                    Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                    Err(payload) => {
+                        let mut slot = failure.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some((i, payload));
+                        }
+                        failed.store(true, std::sync::atomic::Ordering::Relaxed);
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some((i, payload)) = failure.into_inner().unwrap() {
+        // String payloads (the `panic!("...")` norm) get the item index
+        // folded into the message; typed `panic_any` payloads are resumed
+        // untouched so upstream downcasts keep working, with the index on
+        // stderr.
+        let msg = payload
+            .downcast_ref::<&'static str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned());
+        match msg {
+            Some(m) => panic!("par_map: worker panicked on item {i}: {m}"),
+            None => {
+                eprintln!("par_map: worker panicked on item {i} (non-string payload)");
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
     slots.into_iter().map(|m| m.into_inner().unwrap().expect("worker missed item")).collect()
 }
 
@@ -233,6 +271,49 @@ mod tests {
         let empty: Vec<u64> = Vec::new();
         assert!(par_map(&empty, 4, |&x| x).is_empty());
         assert_eq!(par_map(&[5u64], 4, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked on item 5")]
+    fn par_map_propagates_worker_panic_with_item_index() {
+        let items: Vec<u64> = (0..8).collect();
+        par_map(&items, 4, |&x| {
+            if x == 5 {
+                panic!("boom at {x}");
+            }
+            x
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "boom at 5")]
+    fn par_map_preserves_the_original_panic_message() {
+        let items: Vec<u64> = (0..8).collect();
+        par_map(&items, 2, |&x| {
+            if x == 5 {
+                panic!("boom at {x}");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn par_map_resumes_typed_panic_payloads_intact() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        let items: Vec<u64> = (0..8).collect();
+        let r = std::panic::catch_unwind(|| {
+            par_map(&items, 2, |&x| {
+                if x == 3 {
+                    std::panic::panic_any(Typed(42));
+                }
+                x
+            })
+        });
+        // The original payload survives the re-raise for upstream
+        // downcasts; only string panics get the index folded in.
+        let payload = r.unwrap_err();
+        assert_eq!(payload.downcast_ref::<Typed>(), Some(&Typed(42)));
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Estimator-admissibility property tests (seeded SplitMix64 stands in
+//! for proptest, which is not in the offline registry).
+//!
+//! The tiered `cost::CostModel` makes admissibility a *soundness*
+//! invariant, not just a heuristic: the inter-layer search prunes and
+//! prioritizes on the estimate tier and only realizes the survivors on
+//! the detailed tier, so an estimate that ever exceeded the detailed cost
+//! of a realizable scheme could prune the true optimum. These tests pin,
+//! across seeded random layers and real segment candidates, that
+//!
+//! * `estimate_layer` (= `cost::layer_lower_bound`) never exceeds the
+//!   detailed `evaluate` of any scheme the solvers realize in the same
+//!   context, for both energy and latency, and
+//! * `estimate_segment` (= `cost::segment_lower_bound`) never exceeds the
+//!   detailed `sim::pipeline::evaluate_segment` of the fully-solved
+//!   segment.
+
+use kapla::arch::presets;
+use kapla::cost::{CostModel, LayerCtx, TieredCost};
+use kapla::directives::LayerScheme;
+use kapla::interlayer::prune::conservative_valid;
+use kapla::interlayer::{candidate_spans, enumerate_segment_schemes};
+use kapla::partition::PartitionScheme;
+use kapla::sim::pipeline::evaluate_segment;
+use kapla::solvers::kapla::KaplaIntra;
+use kapla::solvers::space::minimal_scheme;
+use kapla::solvers::{IntraCtx, IntraSolver, Objective};
+use kapla::util::SplitMix64;
+use kapla::workloads::{nets, training_graph, Layer};
+
+/// Multiplicative slack for float accumulation-order differences between
+/// the two tiers; the invariant itself is `estimate <= detailed`.
+const SLACK: f64 = 1.001;
+
+/// Random but plausible conv/fc/dw layer (mirrors
+/// tests/property_invariants.rs).
+fn random_layer(rng: &mut SplitMix64) -> Layer {
+    let c = 1 + rng.below(96);
+    let k = 1 + rng.below(128);
+    let xo = 1 + rng.below(32);
+    let r = *rng.choose(&[1u64, 3, 5, 7]);
+    match rng.below(4) {
+        0 => Layer::fc("f", c, k),
+        1 => Layer::dwconv("d", c, xo.max(2), r, 1 + rng.below(2)),
+        _ => Layer::conv("c", c, k, xo.max(r), r, 1 + rng.below(2)),
+    }
+}
+
+/// The estimate context matching a concrete scheme solved on `region` at
+/// `rb`: full-region node count (the estimate optimistically assumes all
+/// allocated nodes help) and the region's DRAM-distribution hop distance
+/// (`PartitionScheme::dram_hops` — the solvers always set a partition's
+/// `region` to the allocated region, so this matches every scheme's hops).
+fn ctx_for(region: (u64, u64), rb: u64, ifm_on_chip: bool) -> LayerCtx {
+    let hops = PartitionScheme { region, ..PartitionScheme::single() }.dram_hops();
+    LayerCtx {
+        nodes: region.0 * region.1,
+        round_batch: rb,
+        rounds: 1,
+        ifm_on_chip,
+        ofm_on_chip: false,
+        dram_hops: hops,
+    }
+}
+
+#[test]
+fn layer_estimate_never_exceeds_detailed_evaluation() {
+    let arch = presets::bench_multi_node();
+    let model = TieredCost::fresh();
+    let mut rng = SplitMix64::new(0xAD15_51B1);
+    let mut checked = 0usize;
+    while checked < 120 {
+        let layer = random_layer(&mut rng);
+        let region = *rng.choose(&[(2u64, 2u64), (4, 4), (2, 4)]);
+        let rb = *rng.choose(&[1u64, 2, 4, 8]);
+        let ifm_on = rng.chance(0.5);
+        let ictx =
+            IntraCtx { region, rb, ifm_on_chip: ifm_on, objective: Objective::Energy };
+
+        // The estimate must lower-bound *every* realizable scheme: check
+        // it against two very different ones — KAPLA's descent result and
+        // the minimal fallback scheme.
+        let mut schemes: Vec<LayerScheme> = Vec::new();
+        if let Some(s) = KaplaIntra.solve(&arch, &layer, &ictx, &model) {
+            schemes.push(s);
+        }
+        if let Some(s) = minimal_scheme(&arch, &layer, region, rb) {
+            schemes.push(s);
+        }
+        if schemes.is_empty() {
+            continue; // layer does not fit this region/batch at all
+        }
+
+        let est = model.estimate_layer(&arch, &layer, &ctx_for(region, rb, ifm_on));
+        for s in &schemes {
+            let detailed = model.evaluate(&arch, s, ifm_on);
+            assert!(
+                est.energy_pj <= detailed.energy_pj * SLACK,
+                "#{checked} {:?} region={region:?} rb={rb} ifm_on={ifm_on}: \
+                 estimate energy {} > detailed {}",
+                layer.kind,
+                est.energy_pj,
+                detailed.energy_pj
+            );
+            assert!(
+                est.latency_cycles <= detailed.latency_cycles * SLACK,
+                "#{checked} {:?} region={region:?} rb={rb} ifm_on={ifm_on}: \
+                 estimate latency {} > detailed {}",
+                layer.kind,
+                est.latency_cycles,
+                detailed.latency_cycles
+            );
+        }
+        checked += 1;
+    }
+}
+
+#[test]
+fn segment_estimate_never_exceeds_detailed_evaluation() {
+    let arch = presets::bench_multi_node();
+    let model = TieredCost::fresh();
+    let intra = KaplaIntra;
+    let batch = 8u64;
+    let mut rng = SplitMix64::new(0x5E6_AD15);
+    let mut checked = 0usize;
+
+    for net in [nets::mlp(), nets::alexnet(), training_graph(&nets::mlp())] {
+        for end in 0..net.len() {
+            for span in candidate_spans(end, 2) {
+                let cands = enumerate_segment_schemes(&net, &arch, batch, &span, 8);
+                for seg in cands {
+                    if !conservative_valid(&arch, &net, batch, &seg) {
+                        continue;
+                    }
+                    // Sample the candidate stream: the full cross product
+                    // is large and the invariant is per-candidate.
+                    if !rng.chance(0.4) {
+                        continue;
+                    }
+                    let rb = seg.round_batch(batch);
+                    let mut schemes = Vec::with_capacity(seg.len());
+                    for (pos, &li) in seg.layers.iter().enumerate() {
+                        let ictx = IntraCtx {
+                            region: seg.regions[pos],
+                            rb,
+                            ifm_on_chip: seg.ifm_on_chip(&net, li),
+                            objective: Objective::Energy,
+                        };
+                        if let Some(s) = intra.solve(&arch, &net.layers[li], &ictx, &model) {
+                            schemes.push(s);
+                        }
+                    }
+                    if schemes.len() != seg.len() {
+                        continue; // some layer has no valid scheme here
+                    }
+                    let est = model.estimate_segment(&arch, &net, batch, &seg);
+                    let detailed = evaluate_segment(&arch, &net, &seg, &schemes);
+                    assert!(
+                        est.energy_pj <= detailed.energy.total() * SLACK,
+                        "{} seg {:?} rounds={}: estimate energy {} > detailed {}",
+                        net.name,
+                        seg.layers,
+                        seg.rounds,
+                        est.energy_pj,
+                        detailed.energy.total()
+                    );
+                    assert!(
+                        est.latency_cycles <= detailed.latency_cycles * SLACK,
+                        "{} seg {:?} rounds={}: estimate latency {} > detailed {}",
+                        net.name,
+                        seg.layers,
+                        seg.rounds,
+                        est.latency_cycles,
+                        detailed.latency_cycles
+                    );
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked >= 10, "too few segment candidates exercised: {checked}");
+}

@@ -53,10 +53,12 @@ fn knobs_plumb_into_the_solve() {
     assert!(ok(&r));
     assert_eq!(text(&r, "objective"), "latency");
 
-    // Solver-level key=value knobs ride the solver token.
+    // Solver-level key=value knobs ride the solver token, and the echoed
+    // solver label folds the non-default knobs back in so sweep responses
+    // stay distinguishable.
     let r = handle_line(&arch, &s, "schedule mlp 8 random:p=0.3,seed=7 threads=1").unwrap();
     assert!(ok(&r));
-    assert_eq!(text(&r, "solver"), "R");
+    assert_eq!(text(&r, "solver"), "R:p=0.3,seed=7");
 
     // Batch is optional: a non-numeric first positional is the solver.
     let r = handle_line(&arch, &s, "schedule mlp kapla threads=1 max_rounds=4").unwrap();
