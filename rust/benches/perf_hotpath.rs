@@ -24,16 +24,27 @@ use kapla::mapping::UnitMap;
 use kapla::partition::PartitionScheme;
 use kapla::report::benchkit as bk;
 use kapla::solvers::kapla::{solve_intra, solve_intra_cached};
-use kapla::solvers::space::visit_schemes;
+use kapla::solvers::space::{visit_schemes, visit_schemes_staged, BnbCounters, StagedQuery};
 use kapla::solvers::{IntraCtx, Objective};
+use kapla::util::json::Json;
 use kapla::util::{available_threads, par_map, Timer};
-use kapla::workloads::nets;
+use kapla::workloads::{nets, Layer};
 
 fn main() {
     let arch = presets::multi_node_eyeriss();
     let net = nets::alexnet();
     let conv2 = &net.layers[2];
     let mut lines = Vec::new();
+
+    // Satellite guard: the memoized divisors must be exactly the trial
+    // division results (the enumeration counts below all hang off this).
+    for n in [1u64, 12, 96, 256, 1024, 4095, 4096, 4097, 14336] {
+        assert_eq!(
+            kapla::util::divisors(n),
+            kapla::util::divisors_uncached(n),
+            "divisors memo diverged at {n}"
+        );
+    }
 
     // L3a: access-count calculus throughput.
     {
@@ -157,6 +168,96 @@ fn main() {
             n1 as f64 / warm.max(1e-9) / 1e6,
             cold / warm.max(1e-9)
         ));
+    }
+
+    // L3c-staged: the full evaluated argmin — baseline B's actual inner
+    // loop — run naively (every candidate one-shot evaluated through the
+    // memo) vs the staged branch-and-bound enumeration. Same space, and
+    // the chosen optimum must be byte-identical: the checksums gate the CI
+    // bench smoke against any staged/naive divergence.
+    {
+        let layer = Layer::conv("bench_l3c", 32, 64, 28, 3, 1);
+        let ctx =
+            IntraCtx { region: (2, 2), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
+
+        let cache = CostCache::new();
+        let t = Timer::start();
+        let mut naive_best: Option<(f64, String)> = None;
+        let mut naive_n = 0u64;
+        visit_schemes(&arch, &layer, ctx.region, ctx.rb, true, |s| {
+            let e = cache.evaluate_layer(&arch, s, ctx.ifm_on_chip).energy.total();
+            if naive_best.as_ref().map(|(b, _)| e < *b).unwrap_or(true) {
+                naive_best = Some((e, format!("{s:?}")));
+            }
+            naive_n += 1;
+            true
+        });
+        let t_naive = t.elapsed_s();
+        let (naive_cost, naive_scheme) = naive_best.expect("non-empty space");
+
+        let model = TieredCost::fresh();
+        let counters = BnbCounters::new();
+        let q = StagedQuery::for_ctx(&arch, &layer, &ctx, true, &model).counters(&counters);
+        let t = Timer::start();
+        let mut staged_best: Option<(f64, String)> = None;
+        visit_schemes_staged(&q, |s, est| {
+            let c = est.energy_pj;
+            if staged_best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                staged_best = Some((c, format!("{s:?}")));
+            }
+            Some(staged_best.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
+        });
+        let t_staged = t.elapsed_s();
+        let (staged_cost, staged_scheme) = staged_best.expect("non-empty space");
+
+        // The CI divergence gate: byte-identical optimum, or the bench
+        // (and the smoke step running it) fails.
+        let naive_checksum = kapla::util::fnv1a(
+            naive_scheme.bytes().map(u64::from).chain([naive_cost.to_bits()]),
+        );
+        let staged_checksum = kapla::util::fnv1a(
+            staged_scheme.bytes().map(u64::from).chain([staged_cost.to_bits()]),
+        );
+        assert_eq!(
+            naive_checksum, staged_checksum,
+            "staged search diverged from the naive scan: {naive_cost} ({naive_scheme}) vs \
+             {staged_cost} ({staged_scheme})"
+        );
+
+        let st = counters.snapshot();
+        // Effective rate: the staged search covers the same `naive_n`
+        // candidates (visited + proven-unimprovable) in `t_staged`.
+        let naive_rate = naive_n as f64 / t_naive.max(1e-9);
+        let staged_rate = naive_n as f64 / t_staged.max(1e-9);
+        lines.push(format!(
+            "L3c naive evaluated argmin: {naive_n} schemes in {t_naive:.2} s \
+             ({:.2} M schemes/s, checksum {naive_checksum:x})",
+            naive_rate / 1e6
+        ));
+        lines.push(format!(
+            "L3c staged+B&B evaluated argmin: {} evaluated / {} skipped in {t_staged:.2} s \
+             ({:.2} M effective schemes/s, {:.1}x naive, prune rate {:.0}%, bound tightness {:.2}, \
+             checksum {staged_checksum:x})",
+            st.schemes_visited,
+            st.schemes_skipped,
+            staged_rate / 1e6,
+            staged_rate / naive_rate.max(1e-9),
+            100.0 * st.prune_rate(),
+            st.avg_bound_tightness()
+        ));
+
+        let mut row = Json::obj();
+        row.set("layer", "conv 32x64x28 r3 @(2,2) rb4 sharing".into())
+            .set("naive_schemes", naive_n.into())
+            .set("naive_s", t_naive.into())
+            .set("naive_schemes_per_s", naive_rate.into())
+            .set("staged_s", t_staged.into())
+            .set("staged_effective_schemes_per_s", staged_rate.into())
+            .set("speedup", (staged_rate / naive_rate.max(1e-9)).into())
+            .set("best_energy_pj", staged_cost.into())
+            .set("checksum", format!("{staged_checksum:x}").into())
+            .set("bnb", st.to_json());
+        bk::save_json("perf_hotpath_l3c", &row);
     }
 
     // L3d: inter-layer DP (estimate tier of the cost model only).

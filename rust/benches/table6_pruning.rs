@@ -60,4 +60,50 @@ fn main() {
     println!("{out}");
     bk::log_section("table6_pruning", &out);
     println!("paper shape: 85.7%..99.8% of candidate inter-layer schemes pruned per segment.");
+
+    // Companion table: *intra-layer* subtree pruning — the staged
+    // branch-and-bound enumeration behind the exhaustive baselines (B/S).
+    // Reported at the scaled bench config (the full per-layer scans are
+    // what the admissible bound makes tractable in the first place).
+    use kapla::cost::TieredCost as Tiered;
+    use kapla::solvers::exhaustive::ExhaustiveIntra;
+    use kapla::solvers::space::BnbCounters;
+    use kapla::solvers::{IntraCtx, IntraSolver as _, Objective};
+
+    let barch = kapla::arch::presets::bench_multi_node();
+    let mut bt = Table::new(
+        "Table VI-b — intra-layer branch-and-bound pruning (staged exhaustive scan, S)",
+        &[
+            "layer",
+            "prefixes visited",
+            "prefixes pruned",
+            "schemes evaluated",
+            "schemes skipped",
+            "prune rate",
+            "bound tightness",
+        ],
+    );
+    let anet = kapla::workloads::nets::alexnet();
+    let mnet = kapla::workloads::nets::mlp();
+    let mlp_name = format!("mlp/{}", mnet.layers[0].name);
+    for (name, layer) in [("alexnet/conv2", &anet.layers[2]), (mlp_name.as_str(), &mnet.layers[0])] {
+        let ctx = IntraCtx { region: (2, 2), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
+        let counters = BnbCounters::new();
+        let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters) };
+        let s = solver.solve(&barch, layer, &ctx, &Tiered::fresh()).expect("solvable layer");
+        std::hint::black_box(s);
+        let st = counters.snapshot();
+        bt.row(vec![
+            name.to_string(),
+            st.prefixes_visited.to_string(),
+            st.prefixes_pruned.to_string(),
+            st.schemes_visited.to_string(),
+            st.schemes_skipped.to_string(),
+            format!("{:.1}%", 100.0 * st.prune_rate()),
+            format!("{:.2}", st.avg_bound_tightness()),
+        ]);
+    }
+    let bout = bt.save_and_render("table6_bnb_pruning");
+    println!("{bout}");
+    bk::log_section("table6_bnb_pruning", &bout);
 }

@@ -176,6 +176,11 @@ fn handle_schedule(
         .set("solve_s", r.solve_s.into())
         .set("segments", r.schedule.segments.len().into())
         .set("cache", r.cache.to_json());
+    // Exhaustive (B/S) requests ran the staged branch-and-bound scan;
+    // surface its pruning counters next to the cache stats.
+    if let Some(b) = &r.bnb {
+        o.set("bnb", b.to_json());
+    }
     let segs: Vec<Json> = r
         .schedule
         .segments
@@ -265,6 +270,21 @@ mod tests {
         assert!(r.get("cache").unwrap().get("lookups").unwrap().as_f64().unwrap() > 0.0);
         let out = r.to_string_compact();
         assert!(out.starts_with('{') && out.ends_with('}'));
+    }
+
+    #[test]
+    fn exhaustive_request_reports_bnb_counters() {
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        let r =
+            handle_line(&arch, &s, "schedule mlp 4 b max_rounds=4 max_seg_len=2 threads=1").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let bnb = r.get("bnb").expect("exhaustive response carries bnb counters");
+        assert!(bnb.get("schemes_visited").unwrap().as_f64().unwrap() > 0.0);
+        assert!(bnb.get("prune_rate").unwrap().as_f64().is_some());
+        // The KAPLA path doesn't subtree-prune: no bnb object.
+        let k = handle_line(&arch, &s, "schedule mlp 4 kapla max_rounds=4 threads=1").unwrap();
+        assert!(k.get("bnb").is_none());
     }
 
     #[test]

@@ -167,11 +167,27 @@ pub fn segment_lower_bound(
     batch: u64,
     seg: &Segment,
 ) -> CostEstimate {
+    segment_lower_bound_with(net, batch, seg, &mut |li, ctx| {
+        layer_lower_bound(arch, &net.layers[li], ctx)
+    })
+}
+
+/// The per-layer assembly behind [`segment_lower_bound`], parameterized
+/// over the layer-estimate source. `interlayer::prune_and_rank` stages its
+/// candidate scoring through this: the distinct `(layer, ctx)` estimates —
+/// which recur across the whole candidate set — are computed once, and the
+/// per-candidate assembly here is pure summation, so the staged totals are
+/// bit-identical to the one-shot path (both run this exact accumulation).
+pub fn segment_lower_bound_with(
+    net: &Network,
+    batch: u64,
+    seg: &Segment,
+    layer_est: &mut dyn FnMut(usize, &LayerCtx) -> CostEstimate,
+) -> CostEstimate {
     let rb = seg.round_batch(batch);
     let mut energy = 0.0;
     let mut round_lat: f64 = 0.0;
     for (pos, &li) in seg.layers.iter().enumerate() {
-        let layer = &net.layers[li];
         let nodes = seg.regions[pos].0 * seg.regions[pos].1;
         let ctx = LayerCtx {
             nodes,
@@ -181,7 +197,7 @@ pub fn segment_lower_bound(
             ofm_on_chip: seg.ofm_on_chip(net, li),
             dram_hops: ((seg.regions[pos].0 + seg.regions[pos].1) as f64 / 4.0).max(1.0),
         };
-        let est = layer_lower_bound(arch, layer, &ctx);
+        let est = layer_est(li, &ctx);
         energy += est.energy_pj;
         round_lat = round_lat.max(est.latency_cycles);
     }
@@ -202,7 +218,7 @@ pub fn segment_lower_bound(
                     ofm_on_chip: false,
                     dram_hops: ((seg.regions[pos].0 + seg.regions[pos].1) as f64 / 4.0).max(1.0),
                 };
-                layer_lower_bound(arch, &net.layers[li], &ctx).latency_cycles
+                layer_est(li, &ctx).latency_cycles
             })
             .sum::<f64>()
             * seg.rounds as f64

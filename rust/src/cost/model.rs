@@ -18,8 +18,11 @@
 //! drop-in `CostModel` impl rather than another solver-surface fork.
 
 use crate::arch::ArchConfig;
-use crate::directives::LayerScheme;
+use crate::directives::{LayerScheme, Qty};
 use crate::interlayer::Segment;
+use crate::mapping::UnitMap;
+use crate::partition::PartitionScheme;
+use crate::sim::StagedEval;
 use crate::workloads::{Layer, Network};
 
 use super::cache::{CacheStats, CostCache, EvalCache};
@@ -54,6 +57,36 @@ pub trait CostModel: Sync {
     /// Detailed tier: evaluate one concrete intra-layer scheme on the
     /// detailed model (cache-backed).
     fn evaluate(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> CostEstimate;
+
+    /// Detailed tier, staged: a [`StagedEval`] for one `(part, unit)`
+    /// enumeration prefix, or `None` when this backend has no staged
+    /// shortcut and callers must score every candidate through
+    /// [`CostModel::evaluate`]. An implementation returning `Some` opts the
+    /// enumeration hot path (`solvers::space::visit_schemes_staged`) into
+    /// incremental scoring *and* branch-and-bound pruning, and therefore
+    /// promises that the staged results — and the [`CostModel::bound_prefix`]
+    /// lower bound — match its `evaluate` exactly; the default `None` keeps
+    /// external backends on the one-candidate-at-a-time contract.
+    fn staged<'a>(
+        &self,
+        arch: &'a ArchConfig,
+        part: &PartitionScheme,
+        unit: &UnitMap,
+        ifm_on_chip: bool,
+    ) -> Option<StagedEval<'a>> {
+        let _ = (arch, part, unit, ifm_on_chip);
+        None
+    }
+
+    /// Admissible lower bound on `evaluate` for *every* completion of a
+    /// `(part, gbuf block)` enumeration prefix — any gbuf/regf loop order,
+    /// any nested REGF block. Only consulted when [`CostModel::staged`]
+    /// returned `Some`, so the default (the staged floor of the detailed
+    /// simulator) is admissible exactly when the staged evaluator is the
+    /// detailed simulator.
+    fn bound_prefix(&self, staged: &StagedEval<'_>, gq: Qty) -> CostEstimate {
+        staged.bound_prefix(gq)
+    }
 
     /// Counter snapshot of the detailed tier's evaluation cache (zeros for
     /// backends without one).
@@ -100,6 +133,22 @@ impl CostModel for TieredCost<'_> {
     fn evaluate(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> CostEstimate {
         let ev = self.cache().evaluate_layer(arch, s, ifm_on_chip);
         CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
+    }
+
+    /// The detailed tier *is* `sim::evaluate_layer` (the cache is pure), so
+    /// the staged evaluator scores enumeration-unique candidates directly —
+    /// skipping the per-candidate `SchemeKey` hashing entirely — while
+    /// staying bit-identical to `evaluate`. The memo keeps serving the
+    /// revisit-heavy paths (KAPLA's descent probes, cross-job sessions) at
+    /// the `SolveCtx` boundary.
+    fn staged<'a>(
+        &self,
+        arch: &'a ArchConfig,
+        part: &PartitionScheme,
+        unit: &UnitMap,
+        ifm_on_chip: bool,
+    ) -> Option<StagedEval<'a>> {
+        Some(StagedEval::new(arch, *part, *unit, ifm_on_chip))
     }
 
     fn stats(&self) -> CacheStats {
@@ -164,6 +213,22 @@ mod tests {
         let a = model.estimate_segment(&arch, &net, 16, &seg);
         let b = segment_lower_bound(&arch, &net, 16, &seg);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn staged_tier_matches_evaluate_bit_for_bit() {
+        let arch = presets::multi_node_eyeriss();
+        let model = TieredCost::fresh();
+        let s = scheme(&arch);
+        for ifm_on_chip in [false, true] {
+            let staged = model.staged(&arch, &s.part, &s.unit, ifm_on_chip).expect("tiered opts in");
+            let via_staged = staged.gbuf(s.gbuf.qty, s.gbuf.order).cost(s.regf.qty, s.regf.order);
+            assert_eq!(via_staged, model.evaluate(&arch, &s, ifm_on_chip));
+            // The prefix bound never exceeds any completion's evaluation.
+            let bound = model.bound_prefix(&staged, s.gbuf.qty);
+            assert!(bound.energy_pj <= via_staged.energy_pj);
+            assert!(bound.latency_cycles <= via_staged.latency_cycles);
+        }
     }
 
     #[test]

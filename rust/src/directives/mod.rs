@@ -22,7 +22,7 @@ pub mod emit;
 pub mod parse;
 pub mod scheme;
 
-pub use scheme::{LayerScheme, LevelBlock};
+pub use scheme::{GbufAccess, LayerScheme, LevelBlock, PartAccess};
 
 /// Tensor dimensions (paper Table I).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -14,10 +14,9 @@
 //!   `stack` directives).
 
 use crate::arch::ArchConfig;
-use crate::directives::{ofm_accum_group, ofm_revisits_for, ofm_rw_factor, refetch_factor_groups, tensor_groups, LoopOrder, Qty, TensorKind};
+use crate::directives::{ofm_accum_group, ofm_revisits_for, ofm_rw_factor, refetch_factor_groups, tensor_groups, Grp, LoopOrder, Qty, TensorKind};
 use crate::mapping::UnitMap;
 use crate::partition::PartitionScheme;
-use crate::workloads::LayerKind;
 
 /// Temporal blocking at one memory level: the resident block quantities and
 /// the loop order iterating blocks at this level.
@@ -38,7 +37,7 @@ pub struct LayerScheme {
 
 /// Access volumes implied by a scheme (whole layer, all nodes), in words.
 /// These are the statistics the paper's directives expose "by inspection".
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AccessCounts {
     /// DRAM traffic per tensor [ifm, ofm, wgt].
     pub dram: [u64; 3],
@@ -121,108 +120,232 @@ impl LayerScheme {
     /// Compute the access counts implied by the directives. `ifm_on_chip`
     /// marks layers whose input is forwarded from a producer in the same
     /// pipelined segment (traffic moves from DRAM to the NoC).
+    ///
+    /// One-shot wrapper over the staged calculus below: the enumeration hot
+    /// path ([`crate::solvers::space::visit_schemes_staged`]) reuses the
+    /// [`PartAccess`] and [`GbufAccess`] prefixes across thousands of
+    /// candidates, and because this wrapper runs the very same stages the
+    /// two paths are bit-identical by construction
+    /// (`tests/staged_eval_equivalence.rs`).
     pub fn access_counts(&self, ifm_on_chip: bool) -> AccessCounts {
-        let kind = self.unit.shape.kind;
-        let nodes = self.part.used_nodes();
-        let tg = self.gbuf_trips();
-        let tr = self.regf_trips();
+        PartAccess::new(self.part, self.unit)
+            .gbuf(self.gbuf.qty, self.gbuf.order, ifm_on_chip)
+            .counts(self.regf.qty, self.regf.order)
+    }
+}
 
-        // --- DRAM <-> GBUF, per node -----------------------------------
-        let g = self.gbuf.qty;
-        let (i_mem, i_miss) = split_groups(TensorKind::Ifm, kind);
-        let (w_mem, w_miss) = split_groups(TensorKind::Wgt, kind);
+/// Stage 1 of the staged access-count calculus: everything determined by
+/// the `(part, unit)` enumeration prefix alone — node counts, the kind's
+/// tensor/group splits, sharing and reduction divisors, hop distances and
+/// the MAC total. Computed once per partition and shared by every blocking
+/// candidate underneath it.
+#[derive(Debug, Clone, Copy)]
+pub struct PartAccess {
+    unit: UnitMap,
+    nodes: u64,
+    i_mem: [Grp; 2],
+    i_miss: Grp,
+    w_mem: [Grp; 2],
+    w_miss: Grp,
+    o_mem: [Grp; 2],
+    accum: Grp,
+    ifm_shr: u64,
+    wgt_shr: u64,
+    red: u64,
+    neighbor_hops: f64,
+    dram_distr_hops: f64,
+    macs: u64,
+}
+
+impl PartAccess {
+    pub fn new(part: PartitionScheme, unit: UnitMap) -> PartAccess {
+        let kind = unit.shape.kind;
+        let (i_mem, i_miss) = tensor_groups(TensorKind::Ifm, kind);
+        let (w_mem, w_miss) = tensor_groups(TensorKind::Wgt, kind);
+        let (o_mem, _) = tensor_groups(TensorKind::Ofm, kind);
+        let nodes = part.used_nodes();
+        PartAccess {
+            unit,
+            nodes,
+            i_mem,
+            i_miss,
+            w_mem,
+            w_miss,
+            o_mem,
+            accum: ofm_accum_group(kind),
+            // Replicated tensors: every replica group fetches the same
+            // data. With buffer sharing, DRAM sees one copy; the rest
+            // moves as NoC rotation among the shr sibling buffers.
+            ifm_shr: part.ifm_shr(),
+            wgt_shr: part.wgt_shr_for(kind),
+            // Cross-node partial-sum reduction: only one reduced copy
+            // reaches DRAM (pc for forward convs; batch/fmap parallel
+            // nodes for the back-weight pass, whose output reduces over B).
+            red: part.ofm_reduction_for(kind),
+            neighbor_hops: part.neighbor_hops(),
+            dram_distr_hops: part.dram_hops(),
+            macs: unit.node_macs() * nodes,
+        }
+    }
+
+    /// Stage 2: all DRAM and NoC terms plus the per-node GBUF fill streams
+    /// for one `(gbuf block, gbuf order)` prefix — none of which depend on
+    /// the REGF-level choices iterated underneath.
+    pub fn gbuf(&self, gq: Qty, go: LoopOrder, ifm_on_chip: bool) -> GbufAccess {
+        let tg = gq.trips_over(self.unit.totals);
         let ifm_per_node =
-            self.unit.ifm_node_words(g) * refetch_factor_groups(tg, self.gbuf.order, i_mem, i_miss);
+            self.unit.ifm_node_words(gq) * refetch_factor_groups(tg, go, self.i_mem, self.i_miss);
         let wgt_per_node =
-            self.unit.wgt_node_words(g) * refetch_factor_groups(tg, self.gbuf.order, w_mem, w_miss);
-        let accum = ofm_accum_group(kind);
-        let (o_mem, _) = split_groups(TensorKind::Ofm, kind);
-        let ofm_unique_per_node =
-            self.unit.ofm_node_words(g) * tg.get(o_mem[0]) * tg.get(o_mem[1]);
-        let v = ofm_revisits_for(tg, self.gbuf.order, accum);
-        let ofm_per_node = ofm_unique_per_node * ofm_rw_factor(v);
+            self.unit.wgt_node_words(gq) * refetch_factor_groups(tg, go, self.w_mem, self.w_miss);
+        let ofm_unique =
+            self.unit.ofm_node_words(gq) * tg.get(self.o_mem[0]) * tg.get(self.o_mem[1]);
+        let v = ofm_revisits_for(tg, go, self.accum);
+        let ofm_per_node = ofm_unique * ofm_rw_factor(v);
+        self.finish_gbuf(gq, tg, ifm_per_node, wgt_per_node, ofm_unique, ofm_per_node, ifm_on_chip)
+    }
 
-        // --- replication / sharing across nodes -------------------------
-        // Replicated tensors: every replica group fetches the same data.
-        // With buffer sharing, DRAM sees one copy; the rest moves as NoC
-        // rotation among the shr sibling buffers.
-        let ifm_shr = self.part.ifm_shr();
-        let wgt_shr = self.part.wgt_shr_for(kind);
-        let mut dram_ifm = ifm_per_node * nodes / ifm_shr;
-        let dram_wgt = wgt_per_node * nodes / wgt_shr;
-        // Cross-node partial-sum reduction: only one reduced copy reaches
-        // DRAM (pc for forward convs; batch/fmap parallel nodes for the
-        // back-weight pass, whose output reduces over B).
-        let red = self.part.ofm_reduction_for(kind);
-        let dram_ofm = ofm_per_node * nodes / red;
+    /// Order-independent floor of stage 2: the per-node streams with every
+    /// miss-group refetch dropped (refetch factor >= the member-trip
+    /// product for any loop order) and a single accumulation visit
+    /// (`ofm_rw_factor(v) >= 1`). Every DRAM/NoC/GBUF-fill quantity of
+    /// [`PartAccess::gbuf`] is monotone in these streams, so the result
+    /// lower-bounds the real stage 2 for *every* gbuf order — the
+    /// admissible prefix bound behind branch-and-bound pruning.
+    pub fn gbuf_floor(&self, gq: Qty, ifm_on_chip: bool) -> GbufAccess {
+        let tg = gq.trips_over(self.unit.totals);
+        let ifm_min = self.unit.ifm_node_words(gq) * tg.get(self.i_mem[0]) * tg.get(self.i_mem[1]);
+        let wgt_min = self.unit.wgt_node_words(gq) * tg.get(self.w_mem[0]) * tg.get(self.w_mem[1]);
+        let ofm_unique =
+            self.unit.ofm_node_words(gq) * tg.get(self.o_mem[0]) * tg.get(self.o_mem[1]);
+        self.finish_gbuf(gq, tg, ifm_min, wgt_min, ofm_unique, ofm_unique, ifm_on_chip)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish_gbuf(
+        &self,
+        gq: Qty,
+        tg: Qty,
+        ifm_per_node: u64,
+        wgt_per_node: u64,
+        ofm_unique: u64,
+        ofm_per_node: u64,
+        ifm_on_chip: bool,
+    ) -> GbufAccess {
+        let nodes = self.nodes;
+        let mut dram_ifm = ifm_per_node * nodes / self.ifm_shr;
+        let dram_wgt = wgt_per_node * nodes / self.wgt_shr;
+        let dram_ofm = ofm_per_node * nodes / self.red;
 
         let mut noc = 0.0;
         // Rotation traffic for shared tensors: each node still *consumes*
         // its full per-node access stream; the (shr-1)/shr remote fraction
         // rides the NoC ring.
-        if ifm_shr > 1 {
-            noc += (ifm_per_node * nodes) as f64 * (ifm_shr - 1) as f64 / ifm_shr as f64
-                * self.part.neighbor_hops();
+        if self.ifm_shr > 1 {
+            noc += (ifm_per_node * nodes) as f64 * (self.ifm_shr - 1) as f64 / self.ifm_shr as f64
+                * self.neighbor_hops;
         }
-        if wgt_shr > 1 {
-            noc += (wgt_per_node * nodes) as f64 * (wgt_shr - 1) as f64 / wgt_shr as f64
-                * self.part.neighbor_hops();
+        if self.wgt_shr > 1 {
+            noc += (wgt_per_node * nodes) as f64 * (self.wgt_shr - 1) as f64 / self.wgt_shr as f64
+                * self.neighbor_hops;
         }
-        if red > 1 {
-            noc += (ofm_unique_per_node * nodes) as f64 * (red - 1) as f64 / red as f64
-                * self.part.neighbor_hops();
+        if self.red > 1 {
+            noc += (ofm_unique * nodes) as f64 * (self.red - 1) as f64 / self.red as f64
+                * self.neighbor_hops;
         }
         // DRAM words travel the mesh to/from edge memory controllers.
-        let dram_distr_hops = self.part.dram_hops();
         if ifm_on_chip {
             // Producer forwards through the NoC instead of DRAM (layer
             // pipelining): same volume, neighbour-region distance.
-            noc += dram_ifm as f64 * self.part.neighbor_hops();
+            noc += dram_ifm as f64 * self.neighbor_hops;
             dram_ifm = 0;
         } else {
-            noc += dram_ifm as f64 * dram_distr_hops;
+            noc += dram_ifm as f64 * self.dram_distr_hops;
         }
-        noc += (dram_wgt + dram_ofm) as f64 * dram_distr_hops;
+        noc += (dram_wgt + dram_ofm) as f64 * self.dram_distr_hops;
 
-        // --- GBUF <-> REGF, per node ------------------------------------
-        let rq = self.regf.qty;
-        let gbuf_iters = tg.product();
-        let ifm_g = self.unit.ifm_node_words(rq)
-            * refetch_factor_groups(tr, self.regf.order, i_mem, i_miss)
-            * gbuf_iters;
-        let wgt_g = self.unit.wgt_node_words(rq)
-            * refetch_factor_groups(tr, self.regf.order, w_mem, w_miss)
-            * gbuf_iters;
-        let vr = ofm_revisits_for(tr, self.regf.order, accum);
-        let ofm_g = self.unit.ofm_node_words(rq)
-            * tr.get(o_mem[0])
-            * tr.get(o_mem[1])
-            * ofm_rw_factor(vr)
-            * gbuf_iters;
-
-        // GBUF port sees both the DRAM-side fills and the REGF-side drains.
-        let gbuf_ifm = (ifm_g + ifm_per_node) * nodes;
-        let gbuf_wgt = (wgt_g + wgt_per_node) * nodes;
-        let gbuf_ofm = (ofm_g + ofm_per_node) * nodes;
-
-        // --- REGF traffic -------------------------------------------------
-        let macs = self.unit.node_macs() * nodes;
-        // Per MAC: ifm read, wgt read, psum read + write; plus refills.
-        let regf = 4 * macs + (ifm_g + wgt_g + ofm_g) * nodes;
-
-        AccessCounts {
+        GbufAccess {
+            base: *self,
+            gq,
+            gbuf_iters: tg.product(),
             dram: [dram_ifm, dram_ofm, dram_wgt],
-            gbuf: [gbuf_ifm, gbuf_ofm, gbuf_wgt],
-            gbuf_regf_side: (ifm_g + wgt_g + ofm_g) * nodes,
-            regf,
-            noc_word_hops: noc,
-            macs,
+            noc,
+            ifm_per_node,
+            wgt_per_node,
+            ofm_per_node,
         }
     }
 }
 
-fn split_groups(t: TensorKind, kind: LayerKind) -> ([crate::directives::Grp; 2], crate::directives::Grp) {
-    tensor_groups(t, kind)
+/// Stages 1+2 of the access-count calculus, frozen for one
+/// `(part, gbuf block, gbuf order)` prefix. The remaining per-candidate
+/// work ([`GbufAccess::counts`]) is only the GBUF<->REGF suffix — the
+/// cheap arithmetic the innermost `(regf block, regf order)` loops touch.
+#[derive(Debug, Clone, Copy)]
+pub struct GbufAccess {
+    base: PartAccess,
+    gq: Qty,
+    gbuf_iters: u64,
+    dram: [u64; 3],
+    noc: f64,
+    ifm_per_node: u64,
+    wgt_per_node: u64,
+    ofm_per_node: u64,
+}
+
+impl GbufAccess {
+    /// Stage 3: finish the counts for one REGF-level `(block, order)`.
+    pub fn counts(&self, rq: Qty, ro: LoopOrder) -> AccessCounts {
+        let b = &self.base;
+        let tr = rq.trips_over(self.gq);
+        // --- GBUF <-> REGF, per node ------------------------------------
+        let ifm_g = b.unit.ifm_node_words(rq)
+            * refetch_factor_groups(tr, ro, b.i_mem, b.i_miss)
+            * self.gbuf_iters;
+        let wgt_g = b.unit.wgt_node_words(rq)
+            * refetch_factor_groups(tr, ro, b.w_mem, b.w_miss)
+            * self.gbuf_iters;
+        let vr = ofm_revisits_for(tr, ro, b.accum);
+        let ofm_g = b.unit.ofm_node_words(rq)
+            * tr.get(b.o_mem[0])
+            * tr.get(b.o_mem[1])
+            * ofm_rw_factor(vr)
+            * self.gbuf_iters;
+        self.assemble(ifm_g, wgt_g, ofm_g)
+    }
+
+    /// Floor of stage 3 over every REGF-level completion: one drain pass
+    /// over the resident gbuf block per gbuf iteration (reached exactly at
+    /// `rq == gq`; any smaller block only adds refetches). Composed with
+    /// [`PartAccess::gbuf_floor`] this bounds the whole `(rq, ro)` subtree.
+    pub fn counts_floor(&self) -> AccessCounts {
+        let b = &self.base;
+        let ifm_g = b.unit.ifm_node_words(self.gq) * self.gbuf_iters;
+        let wgt_g = b.unit.wgt_node_words(self.gq) * self.gbuf_iters;
+        let ofm_g = b.unit.ofm_node_words(self.gq) * self.gbuf_iters;
+        self.assemble(ifm_g, wgt_g, ofm_g)
+    }
+
+    fn assemble(&self, ifm_g: u64, wgt_g: u64, ofm_g: u64) -> AccessCounts {
+        let nodes = self.base.nodes;
+        // GBUF port sees both the DRAM-side fills and the REGF-side drains.
+        let gbuf_ifm = (ifm_g + self.ifm_per_node) * nodes;
+        let gbuf_wgt = (wgt_g + self.wgt_per_node) * nodes;
+        let gbuf_ofm = (ofm_g + self.ofm_per_node) * nodes;
+
+        // --- REGF traffic ------------------------------------------------
+        let macs = self.base.macs;
+        // Per MAC: ifm read, wgt read, psum read + write; plus refills.
+        let regf = 4 * macs + (ifm_g + wgt_g + ofm_g) * nodes;
+
+        AccessCounts {
+            dram: self.dram,
+            gbuf: [gbuf_ifm, gbuf_ofm, gbuf_wgt],
+            gbuf_regf_side: (ifm_g + wgt_g + ofm_g) * nodes,
+            regf,
+            noc_word_hops: self.noc,
+            macs,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -10,9 +10,11 @@
 //! *estimate* tier of the shared [`CostModel`], so pruning, DP scoring and
 //! the intra-layer descent all score against one model object.
 
+use std::collections::HashMap;
+
 use super::Segment;
 use crate::arch::ArchConfig;
-use crate::cost::{CostEstimate, CostModel};
+use crate::cost::{segment_lower_bound_with, CostEstimate, CostModel, LayerCtx};
 use crate::workloads::Network;
 
 /// Conservative validity: for every pipelined layer, the per-round working
@@ -69,10 +71,46 @@ pub fn prune_and_rank(
     prune_and_rank_threaded(arch, net, batch, candidates, 0, model)
 }
 
+/// Hashable identity of one per-layer estimate context (`LayerCtx` holds
+/// an f64, so the key carries its bits).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct CtxKey {
+    li: usize,
+    nodes: u64,
+    round_batch: u64,
+    rounds: u64,
+    ifm_on_chip: bool,
+    ofm_on_chip: bool,
+    dram_hops_bits: u64,
+}
+
+impl CtxKey {
+    fn of(li: usize, ctx: &LayerCtx) -> CtxKey {
+        CtxKey {
+            li,
+            nodes: ctx.nodes,
+            round_batch: ctx.round_batch,
+            rounds: ctx.rounds,
+            ifm_on_chip: ctx.ifm_on_chip,
+            ofm_on_chip: ctx.ofm_on_chip,
+            dram_hops_bits: ctx.dram_hops.to_bits(),
+        }
+    }
+}
+
 /// [`prune_and_rank`] with an explicit estimation thread count: `0` keeps
 /// the size-based auto heuristic, `1` forces inline scoring. Callers that
 /// already run on the scoped worker pool (the parallel inter-layer DP)
 /// pass `1` so the pools don't nest and multiply.
+///
+/// Segment estimation is *staged*: a span's candidates are a cartesian
+/// product of per-layer regions and round counts, so the same
+/// `(layer, context)` lower bound recurs across most of them. The distinct
+/// contexts are collected first (deterministic first-seen order), scored
+/// once each through the model's estimate tier — across the worker pool
+/// for large sets — and every candidate's estimate is then assembled from
+/// the memo by the exact accumulation `cost::segment_lower_bound` runs, so
+/// the totals are bit-identical to per-candidate scoring.
 pub fn prune_and_rank_threaded(
     arch: &ArchConfig,
     net: &Network,
@@ -86,11 +124,26 @@ pub fn prune_and_rank_threaded(
         candidates.into_iter().filter(|seg| conservative_valid(arch, net, batch, seg)).collect();
     stats.after_validity = valid.len();
 
-    // A lower-bound estimate costs ~1us; spawning the scoped pool costs
-    // ~100us. Only shard genuinely large candidate sets (full-scale meshes
-    // with long spans) — everything else runs inline.
+    // Stage 1: the distinct (layer, context) estimate keys, in first-seen
+    // order (a dry assembly run records which contexts each candidate
+    // reads).
+    let mut keys: Vec<(usize, LayerCtx)> = Vec::new();
+    let mut index: HashMap<CtxKey, usize> = HashMap::new();
+    for seg in &valid {
+        segment_lower_bound_with(net, batch, seg, &mut |li, ctx| {
+            index.entry(CtxKey::of(li, ctx)).or_insert_with(|| {
+                keys.push((li, *ctx));
+                keys.len() - 1
+            });
+            CostEstimate { energy_pj: 0.0, latency_cycles: 0.0 }
+        });
+    }
+
+    // Stage 2: score each distinct context once. An estimate costs ~1us;
+    // spawning the scoped pool costs ~100us — only shard genuinely large
+    // context sets (full-scale meshes with long spans).
     let threads = if threads == 0 {
-        if valid.len() >= 1024 {
+        if keys.len() >= 1024 {
             crate::util::available_threads()
         } else {
             1
@@ -98,8 +151,19 @@ pub fn prune_and_rank_threaded(
     } else {
         threads
     };
-    let ests =
-        crate::util::par_map(&valid, threads, |seg| model.estimate_segment(arch, net, batch, seg));
+    let layer_ests = crate::util::par_map(&keys, threads, |(li, ctx)| {
+        model.estimate_layer(arch, &net.layers[*li], ctx)
+    });
+
+    // Stage 3: assemble every candidate's estimate from the memo.
+    let ests: Vec<CostEstimate> = valid
+        .iter()
+        .map(|seg| {
+            segment_lower_bound_with(net, batch, seg, &mut |li, ctx| {
+                layer_ests[index[&CtxKey::of(li, ctx)]]
+            })
+        })
+        .collect();
     let mut ranked: Vec<RankedSegment> =
         valid.into_iter().zip(ests).map(|(seg, est)| RankedSegment { seg, est }).collect();
 
@@ -205,6 +269,23 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn staged_estimates_match_per_candidate_scoring() {
+        // The staged (distinct-context memo + shared assembly) estimates
+        // must equal per-candidate `estimate_segment` bit for bit — the
+        // ranking, Pareto front and DP scores all hang off this.
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let model = TieredCost::fresh();
+        let cands = enumerate_segment_schemes(&net, &arch, 64, &[2, 3, 4], 64);
+        let (ranked, _) = prune_and_rank(&arch, &net, 64, cands, &model);
+        assert!(!ranked.is_empty());
+        for r in &ranked {
+            let direct = model.estimate_segment(&arch, &net, 64, &r.seg);
+            assert_eq!(r.est, direct, "staged estimate diverged for {:?}", r.seg);
         }
     }
 

@@ -99,7 +99,11 @@ pub fn run_cell(
 /// and the evaluation-cache counters (so warm-session reuse shows up in
 /// the uploaded bench artifacts). The solver field carries the *label*
 /// (letter + non-default knobs, `SolverKind::label`) so rows from a
-/// `random:p=0.3,seed=7` sweep stay distinguishable.
+/// `random:p=0.3,seed=7` sweep stay distinguishable. Solves that ran the
+/// staged branch-and-bound enumeration (the exhaustive B/S families) add
+/// a `bnb` object — visited/pruned prefixes, schemes visited/skipped,
+/// prune rate and average bound tightness — feeding the Table VI-style
+/// pruning reports.
 pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
     let mut o = Json::obj();
     o.set("net", net.into())
@@ -108,6 +112,9 @@ pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
         .set("latency_cycles", r.eval.latency_cycles.into())
         .set("solve_s", r.solve_s.into())
         .set("cache", r.cache.to_json());
+    if let Some(b) = &r.bnb {
+        o.set("bnb", b.to_json());
+    }
     o
 }
 

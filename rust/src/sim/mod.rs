@@ -16,8 +16,11 @@
 pub mod pipeline;
 
 use crate::arch::{energy as earch, ArchConfig};
+use crate::cost::CostEstimate;
 use crate::directives::scheme::AccessCounts;
-use crate::directives::LayerScheme;
+use crate::directives::{GbufAccess, LayerScheme, LoopOrder, PartAccess, Qty};
+use crate::mapping::UnitMap;
+use crate::partition::PartitionScheme;
 
 /// Energy by hardware component, in pJ (the paper's Fig. 7 breakdown).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -69,19 +72,113 @@ pub struct LayerEval {
     pub dram_cycles: f64,
 }
 
-/// Evaluate one layer's scheme on the detailed model.
+/// Evaluate one layer's scheme on the detailed model. One-shot wrapper
+/// over the staged path: `access_counts` runs the staged calculus end to
+/// end and [`eval_from_counts`] is the same assembly [`StagedGbuf::eval`]
+/// uses, so this and a [`StagedEval`] walk of the same scheme are
+/// bit-identical by construction.
 pub fn evaluate_layer(arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval {
     let a = s.access_counts(ifm_on_chip);
-    let energy = energy_of(arch, &a);
-
     let nodes = s.part.used_nodes().max(1);
-    let compute_cycles = s.unit.compute_cycles();
+    eval_from_counts(arch, nodes, s.unit.compute_cycles(), a)
+}
+
+/// Assemble energy and the latency roofline from finished access counts —
+/// shared by the one-shot [`evaluate_layer`] and the staged evaluator.
+pub fn eval_from_counts(
+    arch: &ArchConfig,
+    nodes: u64,
+    compute_cycles: f64,
+    a: AccessCounts,
+) -> LayerEval {
+    let energy = energy_of(arch, &a);
     let dram_cycles = a.dram_total() as f64 / arch.dram_words_per_cycle();
     let gbuf_cycles = (a.gbuf_total() as f64 / nodes as f64) / arch.gbuf.words_per_cycle;
     let noc_cycles = (a.noc_word_hops / nodes as f64) / arch.noc_words_per_cycle;
     let latency_cycles = compute_cycles.max(dram_cycles).max(gbuf_cycles).max(noc_cycles);
-
     LayerEval { energy, latency_cycles, access: a, compute_cycles, dram_cycles }
+}
+
+/// Staged detailed evaluation of one `(part, unit)` enumeration prefix
+/// (the tentpole of the staged/branch-and-bound search): stage 1 is frozen
+/// at construction, [`StagedEval::gbuf`] freezes the DRAM/NoC stage for a
+/// `(gbuf block, gbuf order)` prefix, and [`StagedGbuf::eval`] finishes a
+/// candidate with only the GBUF<->REGF suffix arithmetic. All three stages
+/// are the exact code `evaluate_layer` runs, so every staged result is
+/// bit-identical to the one-shot evaluation of the same scheme.
+#[derive(Debug, Clone, Copy)]
+pub struct StagedEval<'a> {
+    arch: &'a ArchConfig,
+    part: PartAccess,
+    ifm_on_chip: bool,
+    /// `used_nodes().max(1)` — the latency divisor of `evaluate_layer`.
+    nodes: u64,
+    compute_cycles: f64,
+}
+
+impl<'a> StagedEval<'a> {
+    pub fn new(
+        arch: &'a ArchConfig,
+        part: PartitionScheme,
+        unit: UnitMap,
+        ifm_on_chip: bool,
+    ) -> StagedEval<'a> {
+        StagedEval {
+            arch,
+            part: PartAccess::new(part, unit),
+            ifm_on_chip,
+            nodes: part.used_nodes().max(1),
+            compute_cycles: unit.compute_cycles(),
+        }
+    }
+
+    /// Freeze stage 2 for one `(gbuf block, gbuf order)` prefix.
+    pub fn gbuf(&self, gq: Qty, go: LoopOrder) -> StagedGbuf<'a> {
+        StagedGbuf {
+            arch: self.arch,
+            nodes: self.nodes,
+            compute_cycles: self.compute_cycles,
+            g: self.part.gbuf(gq, go, self.ifm_on_chip),
+        }
+    }
+
+    /// Admissible lower bound on the detailed cost of *every* completion
+    /// of the `(part, gbuf block)` prefix — any gbuf/regf order, any REGF
+    /// block: the order-independent stage-2 floor composed with the
+    /// one-drain-pass stage-3 floor, pushed through the same monotone
+    /// energy/latency assembly. `bound <= evaluate` for every realizable
+    /// completion extends the estimate-tier admissibility property to
+    /// prefixes (`tests/staged_eval_equivalence.rs`), which is what makes
+    /// branch-and-bound subtree pruning exact.
+    pub fn bound_prefix(&self, gq: Qty) -> CostEstimate {
+        let a = self.part.gbuf_floor(gq, self.ifm_on_chip).counts_floor();
+        let ev = eval_from_counts(self.arch, self.nodes, self.compute_cycles, a);
+        CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
+    }
+}
+
+/// Stages 1+2 frozen; only the REGF-level suffix left to evaluate.
+#[derive(Debug, Clone, Copy)]
+pub struct StagedGbuf<'a> {
+    arch: &'a ArchConfig,
+    nodes: u64,
+    compute_cycles: f64,
+    g: GbufAccess,
+}
+
+impl StagedGbuf<'_> {
+    /// Finish one `(regf block, regf order)` candidate — bit-identical to
+    /// `evaluate_layer` on the corresponding full scheme.
+    pub fn eval(&self, rq: Qty, ro: LoopOrder) -> LayerEval {
+        eval_from_counts(self.arch, self.nodes, self.compute_cycles, self.g.counts(rq, ro))
+    }
+
+    /// [`StagedGbuf::eval`] projected to the `CostEstimate` the solvers
+    /// score with (exactly what `CostModel::evaluate` reports).
+    pub fn cost(&self, rq: Qty, ro: LoopOrder) -> CostEstimate {
+        let ev = self.eval(rq, ro);
+        CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
+    }
 }
 
 /// Assemble component energy from access counts.
@@ -175,6 +272,62 @@ mod tests {
         // On a 1x1 region the forward hop equals the DRAM distribution hop,
         // so NoC energy is unchanged; it must never decrease.
         assert!(on.energy.noc_pj >= off.energy.noc_pj);
+    }
+
+    #[test]
+    fn staged_eval_matches_one_shot() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 64, 64, 28, 3, 1);
+        let part = PartitionScheme { region: (2, 2), pk: 4, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 8));
+        for ifm_on_chip in [false, true] {
+            let staged = StagedEval::new(&arch, part, unit, ifm_on_chip);
+            for go in LoopOrder::all() {
+                let pre = staged.gbuf(Qty::new(2, 16, 16), go);
+                for ro in LoopOrder::all() {
+                    let s = LayerScheme {
+                        part,
+                        unit,
+                        regf: LevelBlock { qty: Qty::new(1, 2, 2), order: ro },
+                        gbuf: LevelBlock { qty: Qty::new(2, 16, 16), order: go },
+                    };
+                    let one_shot = evaluate_layer(&arch, &s, ifm_on_chip);
+                    let st = pre.eval(Qty::new(1, 2, 2), ro);
+                    assert_eq!(st.access, one_shot.access);
+                    assert_eq!(st.energy, one_shot.energy);
+                    assert_eq!(st.latency_cycles, one_shot.latency_cycles);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_bound_is_admissible() {
+        // bound_prefix(gq) never exceeds the detailed evaluation of any
+        // completion under that prefix — for energy AND latency.
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 32, 64, 14, 3, 1);
+        let part = PartitionScheme { region: (2, 2), pn: 2, pk: 2, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 8));
+        let staged = StagedEval::new(&arch, part, unit, false);
+        for gq in [Qty::new(1, 2, 2), Qty::new(2, 8, 16), Qty::new(4, 16, 32)] {
+            let bound = staged.bound_prefix(gq);
+            for go in LoopOrder::all() {
+                let pre = staged.gbuf(gq, go);
+                for rq in [Qty::new(1, 1, 1), Qty::new(1, 2, 2), gq] {
+                    for ro in LoopOrder::all() {
+                        let ev = pre.eval(rq, ro);
+                        assert!(
+                            bound.energy_pj <= ev.energy.total() + 1e-9,
+                            "energy bound {} > {}",
+                            bound.energy_pj,
+                            ev.energy.total()
+                        );
+                        assert!(bound.latency_cycles <= ev.latency_cycles + 1e-9);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -127,11 +127,18 @@ impl<'a> SolveCtx<'a> {
     pub fn run(&self, net: &Network, batch: u64, kind: SolverKind) -> SolveResult {
         match kind {
             SolverKind::Kapla => self.kapla(net, batch),
-            SolverKind::Baseline => {
-                self.exact_dp(net, batch, &ExhaustiveIntra { with_sharing: false })
-            }
-            SolverKind::DirectiveExhaustive => {
-                self.exact_dp(net, batch, &ExhaustiveIntra { with_sharing: true })
+            SolverKind::Baseline | SolverKind::DirectiveExhaustive => {
+                // The exhaustive scans run on the staged branch-and-bound
+                // enumeration; aggregate its pruning counters across every
+                // intra-layer solve of the run into `SolveResult::bnb`.
+                let counters = super::space::BnbCounters::new();
+                let intra = ExhaustiveIntra {
+                    with_sharing: kind == SolverKind::DirectiveExhaustive,
+                    stats: Some(&counters),
+                };
+                let mut r = self.exact_dp(net, batch, &intra);
+                r.bnb = Some(counters.snapshot());
+                r
             }
             SolverKind::Random { p, seed } => self.exact_dp(net, batch, &RandomIntra::new(p, seed)),
             SolverKind::Ml { seed, rounds, batch: sa_batch } => {
@@ -250,6 +257,7 @@ impl<'a> SolveCtx<'a> {
             solve_s: timer.elapsed_s(),
             cache: model.stats(),
             prune: None,
+            bnb: None,
         }
     }
 
@@ -325,6 +333,7 @@ impl<'a> SolveCtx<'a> {
             solve_s: timer.elapsed_s(),
             cache: model.stats(),
             prune: Some(stats),
+            bnb: None,
         }
     }
 }
@@ -430,6 +439,13 @@ mod tests {
             assert_eq!(r.schedule.num_layers(), net.len(), "{kind:?}");
             assert!(r.eval.energy.total() > 0.0, "{kind:?}");
             assert_eq!(r.prune.is_some(), kind == SolverKind::Kapla, "{kind:?}");
+            // The exhaustive scans report their branch-and-bound counters.
+            let exhaustive =
+                matches!(kind, SolverKind::Baseline | SolverKind::DirectiveExhaustive);
+            assert_eq!(r.bnb.is_some(), exhaustive, "{kind:?}");
+            if let Some(b) = r.bnb {
+                assert!(b.schemes_visited > 0, "{kind:?}");
+            }
         }
     }
 

@@ -17,17 +17,30 @@ use crate::cost::CostModel;
 use crate::directives::LayerScheme;
 use crate::workloads::Layer;
 
-use super::space::visit_schemes;
+use super::space::{visit_schemes_staged, BnbCounters, StagedQuery};
 use super::{IntraCtx, IntraSolver};
 
-/// Exhaustive intra-layer solver.
-#[derive(Debug, Clone, Copy)]
-pub struct ExhaustiveIntra {
+/// Exhaustive intra-layer solver. The scan runs on the staged
+/// branch-and-bound enumeration (`space::visit_schemes_staged`): prefix
+/// evaluations are shared across the inner loops and subtrees whose
+/// admissible lower bound cannot strictly beat the incumbent are skipped —
+/// the returned optimum is provably the full scan's first minimum.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExhaustiveIntra<'a> {
     /// Include buffer-sharing variants (S) or not (B).
     pub with_sharing: bool,
+    /// Shared pruning counters (`SolveResult::bnb`); `None` skips the
+    /// book-keeping, never the pruning.
+    pub stats: Option<&'a BnbCounters>,
 }
 
-impl IntraSolver for ExhaustiveIntra {
+impl ExhaustiveIntra<'_> {
+    pub fn new(with_sharing: bool) -> ExhaustiveIntra<'static> {
+        ExhaustiveIntra { with_sharing, stats: None }
+    }
+}
+
+impl IntraSolver for ExhaustiveIntra<'_> {
     fn name(&self) -> &'static str {
         if self.with_sharing {
             "exhaustive-directives(S)"
@@ -43,14 +56,17 @@ impl IntraSolver for ExhaustiveIntra {
         ctx: &IntraCtx,
         model: &dyn CostModel,
     ) -> Option<LayerScheme> {
+        let mut q = StagedQuery::for_ctx(arch, layer, ctx, self.with_sharing, model);
+        if let Some(c) = self.stats {
+            q = q.counters(c);
+        }
         let mut best: Option<(f64, LayerScheme)> = None;
-        visit_schemes(arch, layer, ctx.region, ctx.rb, self.with_sharing, |s| {
-            let est = model.evaluate(arch, s, ctx.ifm_on_chip);
-            let c = ctx.objective.of(&est);
+        visit_schemes_staged(&q, |s, est| {
+            let c = ctx.objective.of(est);
             if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
                 best = Some((c, *s));
             }
-            true
+            Some(best.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
         });
         best.map(|(_, s)| s)
     }
@@ -74,7 +90,7 @@ mod tests {
     fn exhaustive_finds_valid_optimum() {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 16, 32, 14, 3, 1);
-        let s = ExhaustiveIntra { with_sharing: false }
+        let s = ExhaustiveIntra::new(false)
             .solve(&arch, &l, &ctx((2, 2), 4), &TieredCost::fresh())
             .unwrap();
         s.validate(&arch).unwrap();
@@ -83,19 +99,38 @@ mod tests {
     #[test]
     fn sharing_space_is_superset() {
         // S (with sharing) can never be worse than B on the same layer.
+        // The staged enumeration scores candidates directly (no memo
+        // hashing), so the shared cache must stay untouched by either scan.
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 64, 28, 3, 1);
         let c = ctx((4, 4), 8);
         let cache = CostCache::new();
         let model = TieredCost::over(&cache);
-        let b = ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &model).unwrap();
-        let s = ExhaustiveIntra { with_sharing: true }.solve(&arch, &l, &c, &model).unwrap();
+        let b = ExhaustiveIntra::new(false).solve(&arch, &l, &c, &model).unwrap();
+        let s = ExhaustiveIntra::new(true).solve(&arch, &l, &c, &model).unwrap();
         let eb = evaluate_layer(&arch, &b, false).energy.total();
         let es = evaluate_layer(&arch, &s, false).energy.total();
         assert!(es <= eb + 1e-9, "S {es} worse than B {eb}");
-        // The S space contains the whole B space: every one of B's
-        // evaluations repeats under S and hits the shared memo.
-        assert!(cache.hits() > 0, "B ⊂ S evaluations must hit the shared cache");
+        assert_eq!(cache.lookups(), 0, "enumeration-unique candidates must bypass the memo");
+    }
+
+    #[test]
+    fn bnb_counters_record_pruning() {
+        use crate::solvers::space::BnbCounters;
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
+        let counters = BnbCounters::new();
+        let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters) };
+        let s = solver.solve(&arch, &l, &ctx((2, 2), 8), &TieredCost::fresh()).unwrap();
+        s.validate(&arch).unwrap();
+        let st = counters.snapshot();
+        assert!(st.schemes_visited > 0);
+        assert!(st.bound_evals > 0);
+        // The same solver without counters finds the same scheme.
+        let plain = ExhaustiveIntra::new(true)
+            .solve(&arch, &l, &ctx((2, 2), 8), &TieredCost::fresh())
+            .unwrap();
+        assert_eq!(format!("{s:?}"), format!("{plain:?}"));
     }
 
     #[test]
@@ -107,7 +142,7 @@ mod tests {
         let mut ratios = Vec::new();
         for l in net.layers.iter().filter(|l| l.has_weights()).take(5) {
             let c = ctx((2, 2), 4);
-            let ex = ExhaustiveIntra { with_sharing: true }
+            let ex = ExhaustiveIntra::new(true)
                 .solve(&arch, l, &c, &TieredCost::fresh())
                 .unwrap();
             let ka = solve_intra(&arch, l, &c).unwrap();
@@ -125,7 +160,7 @@ mod tests {
         // refetch weights per batch item at the DRAM level.
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::fc("f", 784, 1500);
-        let s = ExhaustiveIntra { with_sharing: false }
+        let s = ExhaustiveIntra::new(false)
             .solve(&arch, &l, &ctx((4, 4), 16), &TieredCost::fresh())
             .unwrap();
         let a = s.access_counts(false);

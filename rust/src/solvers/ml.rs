@@ -253,8 +253,25 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
             return super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb);
         }
 
-        let real_cost = |s: &LayerScheme| -> f64 {
-            let est = model.evaluate(arch, s, ctx.ifm_on_chip);
+        // Staged scoring: one `StagedEval` per distinct partition seen in
+        // this solve (mutations change the blocking far more often than
+        // the partition), so proposals are scored with the cheap staged
+        // suffix instead of a full memo-hashed evaluation. Values are
+        // bit-identical to `model.evaluate`, so the annealing trajectory —
+        // and the schedule — is unchanged. A `None` entry records a
+        // backend without a staged shortcut; those keep the evaluate path.
+        let mut staged_memo: std::collections::HashMap<
+            crate::partition::PartitionScheme,
+            Option<crate::sim::StagedEval<'_>>,
+        > = std::collections::HashMap::new();
+        let mut real_cost = |s: &LayerScheme| -> f64 {
+            let staged = staged_memo
+                .entry(s.part)
+                .or_insert_with(|| model.staged(arch, &s.part, &s.unit, ctx.ifm_on_chip));
+            let est = match staged {
+                Some(st) => st.gbuf(s.gbuf.qty, s.gbuf.order).cost(s.regf.qty, s.regf.order),
+                None => model.evaluate(arch, s, ctx.ifm_on_chip),
+            };
             ctx.objective.of(&est)
         };
 
@@ -379,7 +396,7 @@ mod tests {
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let c = ctx((4, 4), 8);
         let ex =
-            ExhaustiveIntra { with_sharing: false }.solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
+            ExhaustiveIntra::new(false).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
         let m = MlIntra::native(5, 16, 64).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         let em = evaluate_layer(&arch, &m, false).energy.total();

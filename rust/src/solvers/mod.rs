@@ -27,6 +27,7 @@ pub mod random;
 pub mod space;
 
 pub use engine::SolveCtx;
+pub use space::{BnbCounters, BnbStats};
 
 use std::collections::{HashMap, HashSet};
 
@@ -209,11 +210,14 @@ pub struct IntraCtx {
 /// An intra-layer solver: find a (near-)optimal `LayerScheme` for one layer
 /// in the given context, or `None` if no valid scheme exists.
 ///
-/// Solvers are *pure* per call — all candidate scoring goes through the
-/// detailed tier of the shared [`CostModel`] (cache-backed, so a per-run
-/// memo or a cross-job `cost::SessionCache` serves repeats) and any
-/// internal randomness is derived from the solver's seed plus
-/// [`ctx_fingerprint`] — so independent contexts can be solved
+/// Solvers are *pure* per call — all candidate scoring draws from the
+/// detailed tier of the shared [`CostModel`], either per candidate through
+/// `evaluate` (cache-backed, so a per-run memo or a cross-job
+/// `cost::SessionCache` serves repeats — the KAPLA descent's revisit-heavy
+/// probes) or through the bit-identical staged evaluator for
+/// enumeration-unique candidates (`CostModel::staged`, the B/S/R/M hot
+/// loops) — and any internal randomness is derived from the solver's seed
+/// plus [`ctx_fingerprint`] — so independent contexts can be solved
 /// concurrently, and sessions shared across jobs, with results identical
 /// to a solitary sequential run.
 pub trait IntraSolver: Sync {
@@ -265,6 +269,11 @@ pub struct SolveResult {
     /// decoupled path; the exact-DP baselines don't rank-prune, so they
     /// report `None`.
     pub prune: Option<PruneStats>,
+    /// Intra-layer branch-and-bound statistics of the staged enumeration
+    /// (visited/pruned prefixes, bound tightness — Table VI companion).
+    /// Populated by the exhaustive B/S solvers; the other families don't
+    /// subtree-prune, so they report `None`.
+    pub bnb: Option<BnbStats>,
 }
 
 impl SolveResult {

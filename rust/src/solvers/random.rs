@@ -67,11 +67,19 @@ impl IntraSolver for RandomIntra {
             let mut best: Option<(f64, LayerScheme)> = None;
             for &part in sample(rng, &parts, self.p) {
                 let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
+                // Staged scoring: the sampled cross product under one
+                // partition shares its stage-1/2 prefix evaluations, and
+                // enumeration-unique candidates skip the memo hashing. The
+                // sampling stream is untouched, so schedules are identical
+                // to the one-shot-evaluated path.
+                let staged = model.staged(arch, &part, &unit, ctx.ifm_on_chip);
                 let gqs: Vec<Qty> = qty_candidates(unit.totals, unit.granule);
                 for &gq in sample(rng, &gqs, self.p) {
+                    let mut gbuf_evals: [Option<crate::sim::StagedGbuf>; 6] = [None; 6];
                     let rqs: Vec<Qty> = qty_candidates(gq, unit.granule);
                     for &rq in sample(rng, &rqs, self.p) {
                         for &go in sample(rng, &orders, self.p) {
+                            let gi = orders.iter().position(|o| *o == go).unwrap();
                             for &ro in sample(rng, &orders, self.p) {
                                 let s = LayerScheme {
                                     part,
@@ -82,7 +90,12 @@ impl IntraSolver for RandomIntra {
                                 if s.validate(arch).is_err() {
                                     continue;
                                 }
-                                let est = model.evaluate(arch, &s, ctx.ifm_on_chip);
+                                let est = match &staged {
+                                    Some(st) => gbuf_evals[gi]
+                                        .get_or_insert_with(|| st.gbuf(gq, go))
+                                        .cost(rq, ro),
+                                    None => model.evaluate(arch, &s, ctx.ifm_on_chip),
+                                };
                                 let c = ctx.objective.of(&est);
                                 if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
                                     best = Some((c, s));
@@ -132,7 +145,7 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
-        let ex = ExhaustiveIntra { with_sharing: false }
+        let ex = ExhaustiveIntra::new(false)
             .solve(&arch, &l, &c, &TieredCost::fresh())
             .unwrap();
         let ee = evaluate_layer(&arch, &ex, false).energy.total();
@@ -168,6 +181,23 @@ mod tests {
         let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
         let c = ctx((2, 2), 4);
         let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
+        let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn staged_scoring_bypasses_the_memo() {
+        // The sampled candidates are enumeration-unique per solve: the
+        // staged path scores them directly, so a session cache behind the
+        // model sees no lookups — while the chosen scheme stays identical.
+        use crate::cost::CostCache;
+        let arch = presets::bench_multi_node();
+        let l = crate::workloads::Layer::conv("c", 32, 32, 14, 3, 1);
+        let c = ctx((2, 2), 4);
+        let cache = CostCache::new();
+        let model = TieredCost::over(&cache);
+        let a = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &model).unwrap();
+        assert_eq!(cache.lookups(), 0);
         let b = RandomIntra::new(0.2, 7).solve(&arch, &l, &c, &TieredCost::fresh()).unwrap();
         assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }

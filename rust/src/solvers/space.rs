@@ -3,19 +3,32 @@
 //! partitioning; KAPLA itself avoids this enumeration via bottom-up cost
 //! descent).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::arch::ArchConfig;
+use crate::cost::{CostEstimate, CostModel};
 use crate::directives::{LevelBlock, LayerScheme, LoopOrder, Qty};
 use crate::mapping::UnitMap;
 use crate::partition::{enumerate_partitions, PartitionScheme};
 use crate::util::divisors;
 use crate::workloads::Layer;
 
+use super::{IntraCtx, Objective};
+
 /// Candidate resident-block quantities for one group: granule multiples
 /// whose unit counts divide the total unit count (the divisor-chain
-/// blocking space of [39], [58]).
+/// blocking space of [39], [58]). Only the largest divisor can reach the
+/// `min(total)` clamp (any other divisor `d` of `units` has
+/// `d <= units/2`, so `d * granule < total`), so duplicates should be
+/// impossible; the `dedup` is a cheap guard that pins that invariant —
+/// no candidate quantity is ever enumerated (and evaluated) twice, even
+/// if the clamp rule changes.
 pub fn block_candidates(total: u64, granule: u64) -> Vec<u64> {
     let units = crate::util::ceil_div(total, granule);
-    divisors(units).into_iter().map(|d| (d * granule).min(total)).collect()
+    let mut out: Vec<u64> =
+        divisors(units).into_iter().map(|d| (d * granule).min(total)).collect();
+    out.dedup();
+    out
 }
 
 /// All block quantities (triples) for a level, given per-group totals and
@@ -104,6 +117,260 @@ pub fn count_schemes(
     n
 }
 
+/// Thread-safe branch-and-bound counters, shared by every intra-layer
+/// solve of one scheduling run (the staged enumeration bumps them from all
+/// worker threads; plain relaxed adds, so the totals are deterministic for
+/// any thread count).
+#[derive(Debug, Default)]
+pub struct BnbCounters {
+    /// Gbuf-level prefixes whose subtree was actually enumerated.
+    prefixes_visited: AtomicU64,
+    /// Gbuf-level prefixes skipped because their admissible lower bound
+    /// already met the incumbent.
+    prefixes_pruned: AtomicU64,
+    /// Prefix lower bounds computed.
+    bound_evals: AtomicU64,
+    /// Candidates scored on the detailed tier.
+    schemes_visited: AtomicU64,
+    /// Upper estimate of candidates skipped by pruned prefixes (the
+    /// pre-validation subtree size: REGF block candidates x 36 orders).
+    schemes_skipped: AtomicU64,
+    /// Sum of `1000 * bound / incumbent` over bound evaluations (ratio
+    /// clamped to 8.0), for the average bound-tightness report.
+    tightness_permille: AtomicU64,
+}
+
+impl BnbCounters {
+    pub fn new() -> BnbCounters {
+        BnbCounters::default()
+    }
+
+    fn add(&self, c: &AtomicU64, v: u64) {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Plain-value snapshot for reporting.
+    pub fn snapshot(&self) -> BnbStats {
+        BnbStats {
+            prefixes_visited: self.prefixes_visited.load(Ordering::Relaxed),
+            prefixes_pruned: self.prefixes_pruned.load(Ordering::Relaxed),
+            bound_evals: self.bound_evals.load(Ordering::Relaxed),
+            schemes_visited: self.schemes_visited.load(Ordering::Relaxed),
+            schemes_skipped: self.schemes_skipped.load(Ordering::Relaxed),
+            tightness_permille: self.tightness_permille.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Branch-and-bound statistics of one solve (Table VI-style reporting —
+/// `SolveResult::bnb`, bench/service JSON).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BnbStats {
+    pub prefixes_visited: u64,
+    pub prefixes_pruned: u64,
+    pub bound_evals: u64,
+    pub schemes_visited: u64,
+    pub schemes_skipped: u64,
+    tightness_permille: u64,
+}
+
+impl BnbStats {
+    /// Fraction of bounded prefixes whose whole subtree was skipped.
+    pub fn prune_rate(&self) -> f64 {
+        let total = self.prefixes_visited + self.prefixes_pruned;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefixes_pruned as f64 / total as f64
+        }
+    }
+
+    /// Mean `bound / incumbent` over the prefixes where a bound was
+    /// checked (1.0 and above means the prefix pruned; the closer the
+    /// unpruned rest sits to 1.0, the tighter the bound).
+    pub fn avg_bound_tightness(&self) -> f64 {
+        if self.bound_evals == 0 {
+            0.0
+        } else {
+            self.tightness_permille as f64 / 1000.0 / self.bound_evals as f64
+        }
+    }
+
+    /// JSON object shared by bench reports and service responses.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("prefixes_visited", self.prefixes_visited.into())
+            .set("prefixes_pruned", self.prefixes_pruned.into())
+            .set("bound_evals", self.bound_evals.into())
+            .set("schemes_visited", self.schemes_visited.into())
+            .set("schemes_skipped", self.schemes_skipped.into())
+            .set("prune_rate", self.prune_rate().into())
+            .set("avg_bound_tightness", self.avg_bound_tightness().into());
+        o
+    }
+}
+
+/// One staged enumeration query: the layer context plus the cost model
+/// whose detailed tier scores (and, when it opts in via
+/// `CostModel::staged`, bounds) the candidates.
+pub struct StagedQuery<'a> {
+    pub arch: &'a ArchConfig,
+    pub layer: &'a Layer,
+    pub region: (u64, u64),
+    pub rb: u64,
+    pub with_sharing: bool,
+    pub ifm_on_chip: bool,
+    pub objective: Objective,
+    pub model: &'a dyn CostModel,
+    pub counters: Option<&'a BnbCounters>,
+}
+
+impl<'a> StagedQuery<'a> {
+    pub fn for_ctx(
+        arch: &'a ArchConfig,
+        layer: &'a Layer,
+        ctx: &IntraCtx,
+        with_sharing: bool,
+        model: &'a dyn CostModel,
+    ) -> StagedQuery<'a> {
+        StagedQuery {
+            arch,
+            layer,
+            region: ctx.region,
+            rb: ctx.rb,
+            with_sharing,
+            ifm_on_chip: ctx.ifm_on_chip,
+            objective: ctx.objective,
+            model,
+            counters: None,
+        }
+    }
+
+    pub fn counters(mut self, counters: &'a BnbCounters) -> StagedQuery<'a> {
+        self.counters = Some(counters);
+        self
+    }
+}
+
+/// Pre-validation size of one gbuf prefix's subtree: REGF block candidates
+/// times the 36 loop-order pairs (the book-keeping value behind
+/// `BnbStats::schemes_skipped`).
+fn subtree_candidates(gq: Qty, granule: Qty) -> u64 {
+    let b = block_candidates(gq.b, granule.b).len() as u64;
+    let c = block_candidates(gq.c, granule.c).len() as u64;
+    let k = block_candidates(gq.k, granule.k).len() as u64;
+    b * c * k * 36
+}
+
+/// Staged, incrementally-evaluated, branch-and-bound variant of
+/// [`visit_schemes`] — the enumeration hot path of the exhaustive
+/// baselines.
+///
+/// Candidates are visited in *exactly* the order of [`visit_schemes`], and
+/// the estimate handed to the visitor equals `model.evaluate` on the same
+/// scheme bit for bit (staged stage-3 suffix arithmetic when the model
+/// opts in via `CostModel::staged`, a plain `evaluate` call otherwise). The
+/// visitor returns `Some(incumbent)` — the best cost it has accepted so
+/// far, `f64::INFINITY` for none — to continue, or `None` to stop.
+///
+/// Contract: the incumbent MUST be `q.objective.of(..)` of an estimate
+/// this visitor was handed (the two sides of the pruning comparison must
+/// be in the same units and the incumbent must be achieved, not
+/// aspirational) — returning a value in other units, or below every
+/// real candidate, would prune subtrees unsoundly.
+/// At every `(part, gbuf block)` prefix the admissible
+/// `CostModel::bound_prefix` lower bound is checked against the incumbent:
+/// `bound >= incumbent` proves no completion can *strictly beat* the
+/// incumbent, so the whole subtree is skipped without changing the
+/// first-minimum argmin an exhaustive scan would return — byte-identical
+/// optima, orders of magnitude fewer evaluations
+/// (`tests/staged_eval_equivalence.rs` pins the equality).
+pub fn visit_schemes_staged(
+    q: &StagedQuery<'_>,
+    mut visit: impl FnMut(&LayerScheme, &CostEstimate) -> Option<f64>,
+) {
+    let parts = enumerate_partitions(q.layer, q.rb, q.region, q.with_sharing);
+    let orders = LoopOrder::all();
+    let mut incumbent = f64::INFINITY;
+    for part in parts {
+        let unit = UnitMap::build(q.arch, part.node_shape(q.layer, q.rb));
+        let staged = q.model.staged(q.arch, &part, &unit, q.ifm_on_chip);
+        'gbuf: for gq in qty_candidates(unit.totals, unit.granule) {
+            // Capacity pre-check before spawning the inner loops.
+            let probe = LayerScheme {
+                part,
+                unit,
+                regf: LevelBlock { qty: unit.granule, order: orders[0] },
+                gbuf: LevelBlock { qty: gq, order: orders[0] },
+            };
+            if probe.gbuf_words_per_node() > q.arch.gbuf_words() {
+                continue 'gbuf;
+            }
+            // Branch-and-bound: an admissible prefix bound at or above the
+            // incumbent proves the subtree cannot strictly improve on it.
+            if let Some(st) = &staged {
+                if incumbent.is_finite() {
+                    let bound = q.model.bound_prefix(st, gq);
+                    let b = q.objective.of(&bound);
+                    if let Some(c) = q.counters {
+                        c.add(&c.bound_evals, 1);
+                        let ratio = (b / incumbent).clamp(0.0, 8.0);
+                        c.add(&c.tightness_permille, (ratio * 1000.0) as u64);
+                    }
+                    if b >= incumbent {
+                        if let Some(c) = q.counters {
+                            c.add(&c.prefixes_pruned, 1);
+                            c.add(&c.schemes_skipped, subtree_candidates(gq, unit.granule));
+                        }
+                        continue 'gbuf;
+                    }
+                }
+            }
+            if let Some(c) = q.counters {
+                c.add(&c.prefixes_visited, 1);
+            }
+            // The six gbuf-order stage-2 evaluations of this prefix,
+            // computed lazily and reused across every REGF-level candidate.
+            let mut gbuf_evals: [Option<crate::sim::StagedGbuf>; 6] = [None; 6];
+            for rq in qty_candidates(gq, unit.granule) {
+                let probe2 = LayerScheme {
+                    regf: LevelBlock { qty: rq, order: orders[0] },
+                    ..probe
+                };
+                if probe2.regf_words_per_pe() > q.arch.regf_words() {
+                    continue;
+                }
+                for (gi, &go) in orders.iter().enumerate() {
+                    for ro in orders {
+                        let s = LayerScheme {
+                            part,
+                            unit,
+                            regf: LevelBlock { qty: rq, order: ro },
+                            gbuf: LevelBlock { qty: gq, order: go },
+                        };
+                        if s.validate(q.arch).is_err() {
+                            continue;
+                        }
+                        let est = match &staged {
+                            Some(st) => gbuf_evals[gi]
+                                .get_or_insert_with(|| st.gbuf(gq, go))
+                                .cost(rq, ro),
+                            None => q.model.evaluate(q.arch, &s, q.ifm_on_chip),
+                        };
+                        if let Some(c) = q.counters {
+                            c.add(&c.schemes_visited, 1);
+                        }
+                        match visit(&s, &est) {
+                            Some(inc) => incumbent = inc,
+                            None => return,
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// A fallback scheme that is always valid if one exists at all: the
 /// smallest blocks everywhere, on the best-effort partition. Returns `None`
 /// when even the unit tensors overflow the buffers.
@@ -159,6 +426,25 @@ mod tests {
     }
 
     #[test]
+    fn block_candidates_never_repeat() {
+        // Strictly-increasing output pins the no-duplicates invariant the
+        // enumeration (and the R sampler's RNG-stream stability) relies
+        // on, for any (total, granule) — whether guaranteed by the clamp
+        // analysis or, defensively, by the dedup.
+        for total in 1..=96u64 {
+            for granule in 1..=total {
+                let c = block_candidates(total, granule);
+                assert!(!c.is_empty(), "({total}, {granule})");
+                assert!(
+                    c.windows(2).all(|w| w[0] < w[1]),
+                    "duplicates or disorder for ({total}, {granule}): {c:?}"
+                );
+                assert_eq!(*c.last().unwrap(), total);
+            }
+        }
+    }
+
+    #[test]
     fn qty_candidates_cartesian() {
         let q = qty_candidates(Qty::new(2, 4, 1), Qty::UNIT);
         assert_eq!(q.len(), 2 * 3 * 1);
@@ -196,6 +482,85 @@ mod tests {
             n < 10
         });
         assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn staged_visit_matches_naive_order_and_values() {
+        // Without pruning (incumbent pinned at infinity), the staged
+        // visitor must walk the exact candidate sequence of visit_schemes
+        // and hand out estimates bit-identical to the one-shot evaluation.
+        use crate::cost::TieredCost;
+        let arch = presets::bench_multi_node();
+        let l = Layer::conv("c", 16, 32, 14, 3, 1);
+        let mut naive: Vec<(String, f64)> = Vec::new();
+        visit_schemes(&arch, &l, (2, 2), 4, true, |s| {
+            naive.push((format!("{s:?}"), crate::sim::evaluate_layer(&arch, s, false).energy.total()));
+            true
+        });
+        let model = TieredCost::fresh();
+        let ctx = IntraCtx {
+            region: (2, 2),
+            rb: 4,
+            ifm_on_chip: false,
+            objective: Objective::Energy,
+        };
+        let q = StagedQuery::for_ctx(&arch, &l, &ctx, true, &model);
+        let mut staged: Vec<(String, f64)> = Vec::new();
+        visit_schemes_staged(&q, |s, est| {
+            staged.push((format!("{s:?}"), est.energy_pj));
+            Some(f64::INFINITY)
+        });
+        assert_eq!(naive.len(), staged.len());
+        for (n, s) in naive.iter().zip(&staged) {
+            assert_eq!(n.0, s.0, "candidate order diverged");
+            assert_eq!(n.1, s.1, "staged estimate diverged on {}", n.0);
+        }
+    }
+
+    #[test]
+    fn bnb_pruning_preserves_the_argmin() {
+        use crate::cost::TieredCost;
+        let arch = presets::bench_multi_node();
+        let ctx = IntraCtx {
+            region: (2, 2),
+            rb: 4,
+            ifm_on_chip: false,
+            objective: Objective::Energy,
+        };
+        for l in [Layer::conv("c", 32, 64, 28, 3, 1), Layer::fc("f", 256, 512)] {
+            let mut full: Option<(f64, LayerScheme)> = None;
+            visit_schemes(&arch, &l, ctx.region, ctx.rb, true, |s| {
+                let e = crate::sim::evaluate_layer(&arch, s, false).energy.total();
+                if full.as_ref().map(|(b, _)| e < *b).unwrap_or(true) {
+                    full = Some((e, *s));
+                }
+                true
+            });
+            let model = TieredCost::fresh();
+            let counters = BnbCounters::new();
+            let q = StagedQuery::for_ctx(&arch, &l, &ctx, true, &model).counters(&counters);
+            let mut pruned: Option<(f64, LayerScheme)> = None;
+            visit_schemes_staged(&q, |s, est| {
+                let c = est.energy_pj;
+                if pruned.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                    pruned = Some((c, *s));
+                }
+                Some(pruned.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
+            });
+            let (fe, fs) = full.unwrap();
+            let (pe, ps) = pruned.unwrap();
+            assert_eq!(fe, pe, "{}: optimum value changed", l.name);
+            assert_eq!(format!("{fs:?}"), format!("{ps:?}"), "{}: optimum scheme changed", l.name);
+            let st = counters.snapshot();
+            assert!(st.schemes_visited > 0);
+            assert!(
+                st.prefixes_pruned > 0,
+                "{}: expected some subtree pruning (visited {}, bounds {})",
+                l.name,
+                st.prefixes_visited,
+                st.bound_evals
+            );
+        }
     }
 
     #[test]

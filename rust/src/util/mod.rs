@@ -11,8 +11,32 @@ pub mod stats;
 
 pub use prng::SplitMix64;
 
-/// All divisors of `n`, ascending. `n >= 1`.
+/// Bound of the small-`n` divisor memo: the enumeration inner loops call
+/// `divisors` per level per partition with loop-group extents (channel
+/// counts, batches — rarely beyond a few thousand); larger arguments fall
+/// back to trial division.
+const DIVISOR_MEMO_LIMIT: usize = 4096;
+
+/// Lock-free once-per-argument memo for [`divisors`]. `OnceLock` keeps it
+/// thread-safe for the scoped worker pools with no lock on the hot (hit)
+/// path, and the fixed bound keeps the resident footprint small.
+static DIVISOR_MEMO: [std::sync::OnceLock<Vec<u64>>; DIVISOR_MEMO_LIMIT] =
+    [const { std::sync::OnceLock::new() }; DIVISOR_MEMO_LIMIT];
+
+/// All divisors of `n`, ascending. `n >= 1`. Memoized for small `n` (the
+/// blocking-factor enumerators re-request the same totals constantly);
+/// results are identical to [`divisors_uncached`] by construction, which
+/// `perf_hotpath` micro-asserts.
 pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n >= 1, "divisors of zero requested");
+    if (n as usize) < DIVISOR_MEMO_LIMIT {
+        return DIVISOR_MEMO[n as usize].get_or_init(|| divisors_uncached(n)).clone();
+    }
+    divisors_uncached(n)
+}
+
+/// Trial-division reference behind [`divisors`].
+pub fn divisors_uncached(n: u64) -> Vec<u64> {
     assert!(n >= 1, "divisors of zero requested");
     let mut lo = Vec::new();
     let mut hi = Vec::new();
@@ -201,6 +225,25 @@ mod tests {
             assert!(ds.iter().all(|d| n % d == 0), "divide for {n}");
             assert_eq!(*ds.first().unwrap(), 1);
             assert_eq!(*ds.last().unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn divisors_memo_matches_uncached() {
+        // Inside and beyond the memo bound, including repeated queries and
+        // the boundary values themselves.
+        for n in (1..600u64).chain([4094, 4095, 4096, 4097, 14336, 123456]) {
+            assert_eq!(divisors(n), divisors_uncached(n), "n={n}");
+            assert_eq!(divisors(n), divisors_uncached(n), "repeat n={n}");
+        }
+    }
+
+    #[test]
+    fn divisors_memo_is_thread_safe() {
+        let items: Vec<u64> = (1..256u64).cycle().take(2048).collect();
+        let par = par_map(&items, 8, |&n| divisors(n));
+        for (n, ds) in items.iter().zip(&par) {
+            assert_eq!(*ds, divisors_uncached(*n));
         }
     }
 

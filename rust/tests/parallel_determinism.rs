@@ -274,8 +274,8 @@ fn golden_intra_layer_directives_for_all_solvers() {
     let layers = [&anet.layers[2], &mnet.layers[0]];
     let ctx = IntraCtx { region: (4, 4), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
     let solvers: Vec<(&str, Box<dyn IntraSolver>)> = vec![
-        ("B", Box::new(ExhaustiveIntra { with_sharing: false })),
-        ("S", Box::new(ExhaustiveIntra { with_sharing: true })),
+        ("B", Box::new(ExhaustiveIntra::new(false))),
+        ("S", Box::new(ExhaustiveIntra::new(true))),
         ("R", Box::new(RandomIntra::new(0.15, 1))),
         ("M", Box::new(MlIntra::native(1, 4, 16))),
         ("K", Box::new(KaplaIntra)),
@@ -304,6 +304,11 @@ fn golden_intra_layer_directives_for_all_solvers() {
             ));
         }
     }
-    assert!(session.hits() > 0, "overlapping solver spaces must share evaluations");
+    // Since the staged-enumeration PR, B/S/R/M score their
+    // enumeration-unique candidates directly and bypass the memo; the
+    // session traffic here comes from KAPLA's revisit-heavy path (its
+    // hill-climb probes and final sweep re-score the same schemes —
+    // pinned by `solve_intra_reuses_cached_evaluations`).
+    assert!(session.hits() > 0, "KAPLA's probe/sweep revisits must share evaluations");
     golden_file_check("intra_directives", &snap);
 }

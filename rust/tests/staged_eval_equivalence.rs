@@ -1,0 +1,196 @@
+//! The staged evaluation path (`sim::StagedEval` / the incremental
+//! access-count calculus in `directives::scheme`) is an *optimization* of
+//! the one-shot `sim::evaluate_layer`, never a semantic change: across
+//! seeded random valid schemes on three architecture presets the two paths
+//! must agree bit for bit, the `(part, gbuf)` prefix lower bound must stay
+//! admissible against every completion (the property branch-and-bound
+//! soundness rests on), and the pruned exhaustive search must return the
+//! full scan's exact optimum.
+
+use kapla::arch::{presets, ArchConfig};
+use kapla::cost::{CostModel as _, TieredCost};
+use kapla::directives::{LayerScheme, LevelBlock, LoopOrder};
+use kapla::mapping::UnitMap;
+use kapla::partition::enumerate_partitions;
+use kapla::sim::{evaluate_layer, StagedEval};
+use kapla::solvers::exhaustive::ExhaustiveIntra;
+use kapla::solvers::space::{qty_candidates, visit_schemes, BnbCounters};
+use kapla::solvers::{IntraCtx, IntraSolver as _, Objective};
+use kapla::util::SplitMix64;
+use kapla::workloads::nets;
+
+/// The three presets the battery runs on: (arch, region, round batch).
+fn presets_under_test() -> Vec<(&'static str, ArchConfig, (u64, u64), u64)> {
+    vec![
+        ("multi_node_eyeriss", presets::multi_node_eyeriss(), (4, 4), 8),
+        ("bench_multi_node", presets::bench_multi_node(), (2, 2), 4),
+        ("edge_tpu", presets::edge_tpu(), (1, 1), 1),
+    ]
+}
+
+/// Draw one random valid scheme for `layer`, or `None` if the draw missed.
+fn random_scheme(
+    arch: &ArchConfig,
+    layer: &kapla::workloads::Layer,
+    region: (u64, u64),
+    rb: u64,
+    rng: &mut SplitMix64,
+) -> Option<LayerScheme> {
+    let parts = enumerate_partitions(layer, rb, region, true);
+    if parts.is_empty() {
+        return None;
+    }
+    let part = parts[rng.below(parts.len() as u64) as usize];
+    let unit = UnitMap::build(arch, part.node_shape(layer, rb));
+    let gqs = qty_candidates(unit.totals, unit.granule);
+    let gq = gqs[rng.below(gqs.len() as u64) as usize];
+    let rqs = qty_candidates(gq, unit.granule);
+    let rq = rqs[rng.below(rqs.len() as u64) as usize];
+    let orders = LoopOrder::all();
+    let s = LayerScheme {
+        part,
+        unit,
+        regf: LevelBlock { qty: rq, order: orders[rng.below(6) as usize] },
+        gbuf: LevelBlock { qty: gq, order: orders[rng.below(6) as usize] },
+    };
+    s.validate(arch).ok().map(|_| s)
+}
+
+#[test]
+fn staged_totals_are_bit_identical_to_one_shot() {
+    let mut rng = SplitMix64::new(0x57A6ED);
+    let net = nets::alexnet();
+    let mnet = nets::mobilenet();
+    let layers: Vec<&kapla::workloads::Layer> =
+        net.layers.iter().take(6).chain(mnet.layers.iter().take(4)).collect();
+    let mut checked = 0u32;
+    for (name, arch, region, rb) in presets_under_test() {
+        for layer in &layers {
+            for _ in 0..24 {
+                let Some(s) = random_scheme(&arch, layer, region, rb, &mut rng) else {
+                    continue;
+                };
+                for ifm_on_chip in [false, true] {
+                    let one_shot = evaluate_layer(&arch, &s, ifm_on_chip);
+                    let staged = StagedEval::new(&arch, s.part, s.unit, ifm_on_chip)
+                        .gbuf(s.gbuf.qty, s.gbuf.order)
+                        .eval(s.regf.qty, s.regf.order);
+                    // Bit-exact equality across every field — integer
+                    // counts and f64 energy/latency alike.
+                    assert_eq!(staged.access, one_shot.access, "{name}/{}", layer.name);
+                    assert_eq!(staged.energy, one_shot.energy, "{name}/{}", layer.name);
+                    assert_eq!(
+                        staged.latency_cycles, one_shot.latency_cycles,
+                        "{name}/{}",
+                        layer.name
+                    );
+                    assert_eq!(staged.compute_cycles, one_shot.compute_cycles);
+                    assert_eq!(staged.dram_cycles, one_shot.dram_cycles);
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "property needs coverage, only {checked} schemes drawn");
+}
+
+#[test]
+fn prefix_bound_admissible_for_every_completion() {
+    // The estimate <= detailed admissibility property, extended to
+    // enumeration prefixes: bound_prefix(part, gq) never exceeds the
+    // detailed evaluation of ANY (go, rq, ro) completion, in energy or
+    // latency. This is exactly the soundness condition of the B&B pruning.
+    let mut rng = SplitMix64::new(0xB0B0);
+    let net = nets::alexnet();
+    let model = TieredCost::fresh();
+    let mut checked = 0u32;
+    for (name, arch, region, rb) in presets_under_test() {
+        for layer in net.layers.iter().take(5) {
+            for _ in 0..12 {
+                let Some(s) = random_scheme(&arch, layer, region, rb, &mut rng) else {
+                    continue;
+                };
+                for ifm_on_chip in [false, true] {
+                    let staged = model
+                        .staged(&arch, &s.part, &s.unit, ifm_on_chip)
+                        .expect("tiered model opts into staging");
+                    let bound = model.bound_prefix(&staged, s.gbuf.qty);
+                    let ev = model.evaluate(&arch, &s, ifm_on_chip);
+                    assert!(
+                        bound.energy_pj <= ev.energy_pj + 1e-9,
+                        "{name}/{}: energy bound {} > evaluation {}",
+                        layer.name,
+                        bound.energy_pj,
+                        ev.energy_pj
+                    );
+                    assert!(
+                        bound.latency_cycles <= ev.latency_cycles + 1e-9,
+                        "{name}/{}: latency bound {} > evaluation {}",
+                        layer.name,
+                        bound.latency_cycles,
+                        ev.latency_cycles
+                    );
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 50, "property needs coverage, only {checked} prefixes drawn");
+}
+
+#[test]
+fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
+    // Two zoo layers, both objectives: the branch-and-bound exhaustive
+    // solver must return the byte-identical first-minimum scheme of a
+    // plain full scan, while actually pruning subtrees.
+    let arch = presets::bench_multi_node();
+    let anet = nets::alexnet();
+    let mnet = nets::mlp();
+    let layers = [&anet.layers[2], &mnet.layers[0]];
+    for objective in [Objective::Energy, Objective::Latency] {
+        for layer in layers {
+            let ctx = IntraCtx { region: (2, 2), rb: 4, ifm_on_chip: false, objective };
+            // Full scan: one-shot evaluation of every candidate, first
+            // minimum wins (the pre-staged solver semantics).
+            let mut full: Option<(f64, LayerScheme)> = None;
+            visit_schemes(&arch, layer, ctx.region, ctx.rb, true, |s| {
+                let ev = evaluate_layer(&arch, s, ctx.ifm_on_chip);
+                let c = match objective {
+                    Objective::Energy => ev.energy.total(),
+                    Objective::Latency => ev.latency_cycles,
+                };
+                if full.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                    full = Some((c, *s));
+                }
+                true
+            });
+            let (full_cost, full_scheme) = full.expect("space non-empty");
+
+            let counters = BnbCounters::new();
+            let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters) };
+            let pruned = solver.solve(&arch, layer, &ctx, &TieredCost::fresh()).unwrap();
+            assert_eq!(
+                format!("{full_scheme:?}"),
+                format!("{pruned:?}"),
+                "{}/{objective:?}: optimum scheme changed",
+                layer.name
+            );
+            let ev = evaluate_layer(&arch, &pruned, ctx.ifm_on_chip);
+            let pruned_cost = match objective {
+                Objective::Energy => ev.energy.total(),
+                Objective::Latency => ev.latency_cycles,
+            };
+            assert_eq!(full_cost, pruned_cost, "{}/{objective:?}", layer.name);
+
+            let st = counters.snapshot();
+            assert!(st.schemes_visited > 0);
+            assert!(
+                st.prefixes_pruned > 0,
+                "{}/{objective:?}: expected subtree pruning (visited {} prefixes, {} bounds)",
+                layer.name,
+                st.prefixes_visited,
+                st.bound_evals
+            );
+        }
+    }
+}
