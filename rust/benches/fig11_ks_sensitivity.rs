@@ -29,7 +29,10 @@ fn main() {
         let be = b.eval.energy.total();
         for ks in [1usize, 2, 4, 8] {
             let dp = DpConfig { ks, ..bk::bench_dp() };
-            let r = SolveCtx::new(&arch).dp(dp).run(&net, batch, SolverKind::Kapla);
+            let r = SolveCtx::new(&arch)
+                .dp(dp)
+                .run(&net, batch, SolverKind::Kapla)
+                .expect("kapla solve");
             t.row(vec![
                 fwd.name.clone(),
                 ks.to_string(),

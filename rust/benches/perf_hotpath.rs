@@ -267,10 +267,59 @@ fn main() {
         let t = Timer::start();
         let n = 20;
         for _ in 0..n {
-            let (c, _) = best_chains(&arch, &net, 64, &cfg, &model);
+            let (c, _) = best_chains(&arch, &net, 64, &cfg, &model).expect("chains");
             std::hint::black_box(c);
         }
         lines.push(format!("L3d inter-layer DP (alexnet, 16x16): {:.1} ms/net", t.elapsed_ms() / n as f64));
+    }
+
+    // L3d2: the lazy inter-layer span machinery — the iterative
+    // composition generator (one reused buffer) and the scratch-segment
+    // scheme streaming vs the eager materialized Vec<Segment>. The counts
+    // double as correctness micro-asserts: C(15,3) compositions of a
+    // 16-wide mesh into 4 strips, and stream == eager candidate counts.
+    {
+        use kapla::interlayer::{enumerate_segment_schemes, visit_segment_schemes, Compositions};
+        let reps = 2000u64;
+        let t = Timer::start();
+        let mut comps = 0u64;
+        for _ in 0..reps {
+            let mut comp_gen = Compositions::new(16, 4);
+            while let Some(ws) = comp_gen.next_slice() {
+                std::hint::black_box(ws);
+                comps += 1;
+            }
+        }
+        let comp_rate = comps as f64 / t.elapsed_s();
+        assert_eq!(comps, 455 * reps, "C(15,3) compositions expected");
+
+        let span = [2usize, 3, 4];
+        let t = Timer::start();
+        let mut streamed = 0u64;
+        for _ in 0..200 {
+            visit_segment_schemes(&net, &arch, 64, &span, 64, |s| {
+                std::hint::black_box(s.rounds);
+                streamed += 1;
+                true
+            });
+        }
+        let t_stream = t.elapsed_s();
+        let t = Timer::start();
+        let mut eager = 0u64;
+        for _ in 0..200 {
+            eager += enumerate_segment_schemes(&net, &arch, 64, &span, 64).len() as u64;
+        }
+        let t_eager = t.elapsed_s();
+        assert_eq!(streamed, eager, "lazy stream diverged from eager enumeration");
+        lines.push(format!(
+            "L3d2 span streaming: compositions {:.1} M/s; {} schemes/span streamed \
+             {:.2} M/s vs eager {:.2} M/s ({:.1}x)",
+            comp_rate / 1e6,
+            streamed / 200,
+            streamed as f64 / t_stream.max(1e-9) / 1e6,
+            eager as f64 / t_eager.max(1e-9) / 1e6,
+            t_eager / t_stream.max(1e-9)
+        ));
     }
 
     // L4: warm scheduling sessions — cross-job evaluation reuse. A sweep
@@ -295,12 +344,15 @@ fn main() {
             .collect();
 
         let t = Timer::start();
-        let cold: Vec<_> = jobs.iter().map(|j| run_job(&sarch, j)).collect();
+        let cold: Vec<_> = jobs.iter().map(|j| run_job(&sarch, j).expect("cold solve")).collect();
         let t_cold = t.elapsed_s();
 
         let session = SessionCache::unbounded();
         let t = Timer::start();
-        let warm = run_jobs_with(&sarch, &jobs, 1, &session);
+        let warm: Vec<_> = run_jobs_with(&sarch, &jobs, 1, &session)
+            .into_iter()
+            .map(|r| r.expect("warm solve"))
+            .collect();
         let t_warm = t.elapsed_s();
         for (a, b) in cold.iter().zip(&warm) {
             assert_eq!(
@@ -312,20 +364,25 @@ fn main() {
         let st = session.stats();
         lines.push(format!(
             "L4a warm session ({} jobs): cold {:.2} s -> shared {:.2} s \
-             ({:.1}x, hit rate {:.0}%, {} entries)",
+             ({:.1}x, hit rate {:.0}%, {} entries, intra-argmin {}/{} replays)",
             jobs.len(),
             t_cold,
             t_warm,
             t_cold / t_warm.max(1e-9),
             100.0 * st.hit_rate(),
-            st.entries
+            st.entries,
+            st.intra_hits,
+            st.intra_lookups
         ));
 
         // A tiny budget forces clock-eviction churn; schedules must not
         // change (purity makes eviction a perf knob, never a results one).
         let bounded = SessionCache::new(CacheBudget::entries(256));
         let t = Timer::start();
-        let bres = run_jobs_with(&sarch, &jobs, 1, &bounded);
+        let bres: Vec<_> = run_jobs_with(&sarch, &jobs, 1, &bounded)
+            .into_iter()
+            .map(|r| r.expect("bounded solve"))
+            .collect();
         let t_bounded = t.elapsed_s();
         for (a, b) in cold.iter().zip(&bres) {
             assert_eq!(

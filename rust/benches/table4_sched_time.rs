@@ -9,6 +9,7 @@
 use kapla::report::benchkit as bk;
 use kapla::report::Table;
 use kapla::solvers::Objective;
+use kapla::util::json::Json;
 use kapla::util::stats::fmt_duration;
 use kapla::workloads::training_graph;
 
@@ -23,6 +24,7 @@ fn main() {
         &["network", "B", "S", "R", "M", "K", "B/K speedup"],
     );
     let mut speedups = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
     for fwd in &nets {
         let net = training_graph(fwd);
         eprintln!("[table4] {} ({} layers)...", net.name, net.len());
@@ -32,12 +34,29 @@ fn main() {
             let r = bk::run_cell(&arch, &net, batch, Objective::Energy, s);
             times.push(r.solve_s);
             row.push(fmt_duration(r.solve_s));
+            // Planner rows for the K cells: spans visited/skipped and the
+            // session memo hit rate ride into the uploaded bench JSON via
+            // `result_json`'s prune/cache objects.
+            if let Some(p) = &r.prune {
+                eprintln!(
+                    "[table4] {} K planner: {}/{} spans pruned, {} schemes bound-pruned, \
+                     intra-memo {}/{} hits",
+                    net.name,
+                    p.spans_pruned,
+                    p.spans_total,
+                    p.schemes_bound_pruned,
+                    r.cache.intra_hits,
+                    r.cache.intra_lookups
+                );
+            }
+            json_rows.push(bk::result_json(&net.name, s, &r));
         }
         let speedup = times[0] / times[4].max(1e-9);
         speedups.push(speedup);
         row.push(format!("{speedup:.0}x"));
         t.row(row);
     }
+    bk::save_json("table4_sched_time", &Json::Arr(json_rows));
     let out = t.save_and_render("table4_sched_time");
     println!("{out}");
     bk::log_section("table4_sched_time", &out);

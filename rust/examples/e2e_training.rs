@@ -52,7 +52,7 @@ fn main() {
         println!("running {} ...", solver.letter());
         let job =
             Job { net: net.clone(), batch, objective: Objective::Energy, solver, dp };
-        let r = run_job(&arch, &job);
+        let r = run_job(&arch, &job).expect("schedulable");
         let e = r.eval.energy.total();
         if solver == SolverKind::Baseline {
             base_energy = Some(e);

@@ -28,7 +28,7 @@ fn main() {
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
         };
-        let r = run_job(&arch, &job);
+        let r = run_job(&arch, &job).expect("schedulable");
         t.row(vec![
             net.name.clone(),
             eng(r.eval.energy.total(), "pJ"),

@@ -60,7 +60,10 @@ fn main() {
         .collect();
 
     let t = Timer::start();
-    let results = run_jobs(&arch, &jobs, kapla::coordinator::default_threads());
+    let results: Vec<_> = run_jobs(&arch, &jobs, kapla::coordinator::default_threads())
+        .into_iter()
+        .map(|r| r.expect("candidate schedulable"))
+        .collect();
     let wall = t.elapsed_s();
 
     let mut table = Table::new(

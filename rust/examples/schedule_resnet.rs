@@ -18,7 +18,8 @@ fn main() {
     println!("scheduling {} ({} layers) batch={batch} on {}", net.name, net.len(), arch.name);
 
     let t = Timer::start();
-    let result = SolveCtx::new(&arch).run(&net, batch, SolverKind::Kapla);
+    let result =
+        SolveCtx::new(&arch).run(&net, batch, SolverKind::Kapla).expect("resnet schedules");
     let stats = result.prune.expect("the KAPLA path reports pruning stats");
     println!("\nKAPLA solved in {:.1} s", t.elapsed_s());
     println!(

@@ -159,7 +159,10 @@ fn handle_schedule(
     let objective = knobs.objective.unwrap_or(objective);
     let net = if train { workloads::training_graph(&fwd) } else { fwd };
     let job = Job { net, batch, objective, solver, dp };
-    let r = run_job_with(arch, &job, session);
+    // A degenerate request (net/arch combination no solver can realize)
+    // comes back as a structured SolveError — report it like any other
+    // malformed request instead of letting a panic kill the serve loop.
+    let r = run_job_with(arch, &job, session).map_err(|e| e.to_string())?;
 
     let mut o = Json::obj();
     o.set("ok", true.into())
@@ -180,6 +183,11 @@ fn handle_schedule(
     // surface its pruning counters next to the cache stats.
     if let Some(b) = &r.bnb {
         o.set("bnb", b.to_json());
+    }
+    // KAPLA requests ran the staged inter-layer planner; surface its
+    // span-level pruning counters (Table VI + chain-level B&B).
+    if let Some(p) = &r.prune {
+        o.set("prune", p.to_json());
     }
     let segs: Vec<Json> = r
         .schedule
@@ -285,6 +293,23 @@ mod tests {
         // The KAPLA path doesn't subtree-prune: no bnb object.
         let k = handle_line(&arch, &s, "schedule mlp 4 kapla max_rounds=4 threads=1").unwrap();
         assert!(k.get("bnb").is_none());
+    }
+
+    #[test]
+    fn kapla_request_reports_planner_prune_counters() {
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "schedule mlp 4 kapla max_rounds=4 threads=1").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        let prune = r.get("prune").expect("kapla response carries planner counters");
+        assert!(prune.get("spans_total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(prune.get("spans_pruned").unwrap().as_f64().is_some());
+        assert!(prune.get("schemes_bound_pruned").unwrap().as_f64().is_some());
+        // The exact-DP baselines don't rank-prune: no prune object.
+        let b =
+            handle_line(&arch, &s, "schedule mlp 4 b max_rounds=4 max_seg_len=2 threads=1")
+                .unwrap();
+        assert!(b.get("prune").is_none());
     }
 
     #[test]

@@ -75,7 +75,7 @@ impl SchemeKey {
 /// shard lock + map probe, and any memo keyed on `&ArchConfig` identity
 /// (address) could alias a reallocated config — the exact bug this
 /// fingerprint exists to prevent.
-fn arch_fingerprint(arch: &ArchConfig) -> u64 {
+pub(crate) fn arch_fingerprint(arch: &ArchConfig) -> u64 {
     crate::util::fnv1a([
         arch.nodes.0,
         arch.nodes.1,
@@ -117,6 +117,13 @@ pub struct CacheStats {
     pub hits: u64,
     pub evictions: u64,
     pub entries: usize,
+    /// Lookups into the cross-job intra-layer *argmin* memo (whole
+    /// enumeration optima keyed by [`super::IntraKey`], not individual
+    /// evaluations). Zero for caches without one (the per-run `CostCache`).
+    pub intra_lookups: u64,
+    /// Argmin-memo lookups answered from a recorded scan — each hit skips
+    /// an entire intra-layer search, not just one evaluation.
+    pub intra_hits: u64,
 }
 
 impl CacheStats {
@@ -146,7 +153,9 @@ impl CacheStats {
             .set("misses", self.misses().into())
             .set("evictions", self.evictions.into())
             .set("entries", self.entries.into())
-            .set("hit_rate", self.hit_rate().into());
+            .set("hit_rate", self.hit_rate().into())
+            .set("intra_lookups", self.intra_lookups.into())
+            .set("intra_hits", self.intra_hits.into());
         o
     }
 }
@@ -163,6 +172,26 @@ impl CacheStats {
 /// pin.
 pub trait EvalCache: Sync {
     fn evaluate_layer(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> LayerEval;
+
+    /// Cross-job intra-layer *argmin* memo, consulted before running a
+    /// full intra-layer scan: `Some(argmin)` replays a recorded
+    /// enumeration optimum (the inner `Option` is the scan's result —
+    /// `None` when the recorded answer was "no valid scheme exists"),
+    /// outer `None` means not recorded. Because every intra-layer solver
+    /// is pure per `(arch, layer, ctx, solver)` — the fields
+    /// [`super::IntraKey`] fingerprints — replaying never changes a
+    /// schedule, it only skips the search. Backends without a cross-job
+    /// store (the per-run [`CostCache`]) keep the default no-op: solitary
+    /// runs already dedup contexts in the engine's per-run memo.
+    fn intra_argmin(&self, key: &super::IntraKey) -> Option<Option<LayerScheme>> {
+        let _ = key;
+        None
+    }
+
+    /// Record a finished scan's argmin for [`EvalCache::intra_argmin`].
+    fn record_intra_argmin(&self, key: super::IntraKey, argmin: Option<LayerScheme>) {
+        let _ = (key, argmin);
+    }
 
     /// Current counter snapshot.
     fn stats(&self) -> CacheStats;
@@ -246,7 +275,13 @@ impl EvalCache for CostCache {
         // torn concurrent snapshots unlikely; relaxed atomics can still
         // reorder, so misses()/hit_rate() clamp rather than trust this.
         let hits = self.hits();
-        CacheStats { lookups: self.lookups(), hits, evictions: 0, entries: self.len() }
+        CacheStats {
+            lookups: self.lookups(),
+            hits,
+            evictions: 0,
+            entries: self.len(),
+            ..Default::default()
+        }
     }
 }
 

@@ -18,7 +18,7 @@ pub mod session;
 
 pub use cache::{CacheStats, CostCache, EvalCache};
 pub use model::{CostModel, TieredCost};
-pub use session::{CacheBudget, SessionCache};
+pub use session::{CacheBudget, IntraKey, SessionCache};
 
 use crate::arch::{energy as earch, ArchConfig};
 use crate::interlayer::Segment;

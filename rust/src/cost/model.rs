@@ -88,6 +88,22 @@ pub trait CostModel: Sync {
         staged.bound_prefix(gq)
     }
 
+    /// Cross-job intra-layer argmin memo, consulted by the solver engine
+    /// before running a full intra-layer scan (see
+    /// [`EvalCache::intra_argmin`] for the contract). The default `None`
+    /// ("not recorded") keeps external backends — and per-run caches — on
+    /// the always-scan path; [`TieredCost`] forwards to its cache, so a
+    /// session-backed model replays recorded scans across jobs.
+    fn intra_argmin(&self, key: &super::IntraKey) -> Option<Option<LayerScheme>> {
+        let _ = key;
+        None
+    }
+
+    /// Record a finished scan's argmin for [`CostModel::intra_argmin`].
+    fn record_intra_argmin(&self, key: super::IntraKey, argmin: Option<LayerScheme>) {
+        let _ = (key, argmin);
+    }
+
     /// Counter snapshot of the detailed tier's evaluation cache (zeros for
     /// backends without one).
     fn stats(&self) -> CacheStats {
@@ -149,6 +165,14 @@ impl CostModel for TieredCost<'_> {
         ifm_on_chip: bool,
     ) -> Option<StagedEval<'a>> {
         Some(StagedEval::new(arch, *part, *unit, ifm_on_chip))
+    }
+
+    fn intra_argmin(&self, key: &super::IntraKey) -> Option<Option<LayerScheme>> {
+        self.cache().intra_argmin(key)
+    }
+
+    fn record_intra_argmin(&self, key: super::IntraKey, argmin: Option<LayerScheme>) {
+        self.cache().record_intra_argmin(key, argmin)
     }
 
     fn stats(&self) -> CacheStats {

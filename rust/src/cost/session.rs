@@ -19,7 +19,7 @@
 //! eviction changes when the simulator runs, never what callers see:
 //! schedules are byte-identical for any budget (golden-schedule tests).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -27,7 +27,31 @@ use crate::arch::ArchConfig;
 use crate::directives::LayerScheme;
 use crate::sim::LayerEval;
 
-use super::cache::{shard_of, CacheStats, EvalCache, SchemeKey, SHARDS};
+use super::cache::{arch_fingerprint, shard_of, CacheStats, EvalCache, SchemeKey, SHARDS};
+
+/// Identity of one intra-layer *argmin*: which hardware (`arch_fp`, the
+/// same fingerprint the evaluation memo keys on), which layer in which
+/// solve context (`ctx_fp` — `solvers::ctx_fingerprint`, folding every
+/// layer dimension plus region/round-batch/forwarding/objective), and
+/// which solver policy and search space (`solver_fp` —
+/// `IntraSolver::fingerprint`, folding the family name and every
+/// stochastic knob). Every intra-layer solver is a pure function of
+/// exactly these three, so a session may replay a recorded argmin — for
+/// repeated `(layer, ctx)` solves across DP chains, KAPLA descent probes
+/// and warm cross-job sessions — and skip the scan entirely without any
+/// schedule changing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IntraKey {
+    arch_fp: u64,
+    ctx_fp: u64,
+    solver_fp: u64,
+}
+
+impl IntraKey {
+    pub fn of(arch: &ArchConfig, ctx_fp: u64, solver_fp: u64) -> IntraKey {
+        IntraKey { arch_fp: arch_fingerprint(arch), ctx_fp, solver_fp }
+    }
+}
 
 /// Capacity budget of a [`SessionCache`], in resident entries. Byte budgets
 /// are converted via [`entry_bytes`] at construction.
@@ -42,6 +66,13 @@ pub struct CacheBudget {
 /// map/ring overhead (the factor of 2).
 pub fn entry_bytes() -> usize {
     (std::mem::size_of::<SchemeKey>() + std::mem::size_of::<LayerEval>()) * 2
+}
+
+/// Estimated resident bytes per recorded intra-layer argmin: the key in
+/// the map and again in the FIFO ring, the recorded scheme, and amortized
+/// map overhead (the factor of 2).
+pub fn intra_entry_bytes() -> usize {
+    (std::mem::size_of::<IntraKey>() * 2 + std::mem::size_of::<Option<LayerScheme>>()) * 2
 }
 
 impl CacheBudget {
@@ -144,10 +175,39 @@ pub struct SessionCache {
     lookups: AtomicU64,
     hits: AtomicU64,
     evictions: AtomicU64,
+    /// Cross-job intra-layer argmin memo ([`IntraKey`] -> recorded scan
+    /// result), FIFO-bounded by `intra_cap`. Eviction only changes when a
+    /// scan re-runs, never its result.
+    intra: Mutex<IntraMemo>,
+    /// Entry cap of the argmin memo: a dedicated ~1/8 slice of the
+    /// session budget, re-denominated from evaluation-entry bytes into
+    /// (larger) argmin-entry bytes, so a byte-budgeted session's total
+    /// resident footprint overshoots the requested ceiling by at most
+    /// ~12.5% rather than doubling it.
+    intra_cap: usize,
+    intra_lookups: AtomicU64,
+    intra_hits: AtomicU64,
+}
+
+#[derive(Default)]
+struct IntraMemo {
+    map: HashMap<IntraKey, Option<LayerScheme>>,
+    fifo: VecDeque<IntraKey>,
 }
 
 impl SessionCache {
     pub fn new(budget: CacheBudget) -> SessionCache {
+        let intra_cap = if budget.is_unbounded() {
+            usize::MAX
+        } else if budget.max_entries == 0 {
+            0
+        } else {
+            // One argmin entry replaces a whole scan but costs more bytes
+            // than one evaluation entry; charge it at its true size
+            // against a 1/8 slice of the budget (at least one entry, so a
+            // tiny budget still short-circuits its hottest scan).
+            (budget.max_entries * entry_bytes() / 8 / intra_entry_bytes()).max(1)
+        };
         SessionCache {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             cap: budget.max_entries,
@@ -155,6 +215,10 @@ impl SessionCache {
             lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            intra: Mutex::new(IntraMemo::default()),
+            intra_cap,
+            intra_lookups: AtomicU64::new(0),
+            intra_hits: AtomicU64::new(0),
         }
     }
 
@@ -186,6 +250,15 @@ impl SessionCache {
 
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Recorded intra-layer argmins currently resident.
+    pub fn intra_len(&self) -> usize {
+        self.intra.lock().unwrap().map.len()
+    }
+
+    pub fn intra_hits(&self) -> u64 {
+        self.intra_hits.load(Ordering::Relaxed)
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -304,16 +377,51 @@ impl EvalCache for SessionCache {
         ev
     }
 
+    /// Replay a recorded scan, or report "not recorded". Counted
+    /// separately from evaluation lookups: one hit here stands in for a
+    /// whole enumeration, not one candidate.
+    fn intra_argmin(&self, key: &IntraKey) -> Option<Option<LayerScheme>> {
+        self.intra_lookups.fetch_add(1, Ordering::Relaxed);
+        let memo = self.intra.lock().unwrap();
+        let hit = memo.map.get(key).copied();
+        if hit.is_some() {
+            self.intra_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Record a scan's argmin, FIFO-evicting under the memo's budget
+    /// slice. Concurrent recorders of the same key agree (solvers are
+    /// pure), so first-in wins and duplicates are dropped.
+    fn record_intra_argmin(&self, key: IntraKey, argmin: Option<LayerScheme>) {
+        if self.intra_cap == 0 {
+            return;
+        }
+        let mut memo = self.intra.lock().unwrap();
+        if memo.map.contains_key(&key) {
+            return;
+        }
+        while memo.map.len() >= self.intra_cap {
+            let Some(old) = memo.fifo.pop_front() else { break };
+            memo.map.remove(&old);
+        }
+        memo.map.insert(key, argmin);
+        memo.fifo.push_back(key);
+    }
+
     fn stats(&self) -> CacheStats {
         // Hits read before lookups (each hit bumps lookups first) to make
         // torn concurrent snapshots unlikely; relaxed atomics can still
         // reorder, so misses()/hit_rate() clamp rather than trust this.
         let hits = self.hits();
+        let intra_hits = self.intra_hits();
         CacheStats {
             lookups: self.lookups(),
             hits,
             evictions: self.evictions(),
             entries: self.len(),
+            intra_lookups: self.intra_lookups.load(Ordering::Relaxed),
+            intra_hits,
         }
     }
 }
@@ -441,6 +549,44 @@ mod tests {
         assert_eq!(sc.hits(), 2);
         assert_eq!(format!("{w1:?}"), format!("{e1:?}"));
         assert_eq!(format!("{w2:?}"), format!("{e2:?}"));
+    }
+
+    #[test]
+    fn intra_argmin_memo_records_and_replays() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::unbounded();
+        let key = IntraKey::of(&arch, 0xABCD, 0x1234);
+        assert!(EvalCache::intra_argmin(&sc, &key).is_none());
+        let s = scheme(&arch, 32);
+        EvalCache::record_intra_argmin(&sc, key, Some(s));
+        let hit = EvalCache::intra_argmin(&sc, &key).expect("recorded");
+        assert_eq!(format!("{:?}", hit.unwrap()), format!("{s:?}"));
+        // "No valid scheme" is memoizable too, and distinct keys never
+        // alias (different solver, different arch).
+        let none_key = IntraKey::of(&arch, 0xABCD, 0x9999);
+        EvalCache::record_intra_argmin(&sc, none_key, None);
+        assert!(matches!(EvalCache::intra_argmin(&sc, &none_key), Some(None)));
+        let other_arch = presets::eyeriss_like((4, 4), (8, 8), 64, 64 * 1024);
+        assert!(EvalCache::intra_argmin(&sc, &IntraKey::of(&other_arch, 0xABCD, 0x1234)).is_none());
+        let st = EvalCache::stats(&sc);
+        assert_eq!((st.intra_lookups, st.intra_hits), (4, 2));
+        assert_eq!(sc.intra_len(), 2);
+    }
+
+    #[test]
+    fn intra_argmin_memo_respects_the_entry_budget() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::new(CacheBudget::entries(2));
+        let s = scheme(&arch, 32);
+        for fp in 0..8u64 {
+            EvalCache::record_intra_argmin(&sc, IntraKey::of(&arch, fp, 0), Some(s));
+            assert!(sc.intra_len() <= 2, "intra memo breached the budget");
+        }
+        // Zero budget never records, but lookups stay well-formed.
+        let zero = SessionCache::new(CacheBudget::entries(0));
+        EvalCache::record_intra_argmin(&zero, IntraKey::of(&arch, 1, 0), Some(s));
+        assert_eq!(zero.intra_len(), 0);
+        assert!(EvalCache::intra_argmin(&zero, &IntraKey::of(&arch, 1, 0)).is_none());
     }
 
     #[test]

@@ -5,11 +5,18 @@
 //! `[j..=i]` with the best chains ending at `j-1`. To tolerate estimation
 //! error, the top `k_S` candidate chains are kept per layer (default 4,
 //! studied in the paper's Fig. 11).
+//!
+//! The search itself lives in the staged [`super::planner::Planner`]
+//! (lazy span enumeration, admissible chain-level branch-and-bound,
+//! memo-assembled estimates); [`best_chains`] is the conventional entry
+//! point the solver engine calls.
 
-use super::prune::{prune_and_rank, prune_and_rank_threaded, PruneStats, RankedSegment};
-use super::{candidate_spans, enumerate_segment_schemes, Segment};
+use super::planner::Planner;
+use super::prune::PruneStats;
+use super::Segment;
 use crate::arch::ArchConfig;
 use crate::cost::CostModel;
+use crate::solvers::SolveError;
 use crate::workloads::Network;
 
 /// Tuning knobs of the inter-layer search.
@@ -45,100 +52,22 @@ pub struct ChainCand {
     pub segments: Vec<Segment>,
 }
 
-#[derive(Clone)]
-struct Node {
-    cost: f64,
-    seg: Segment,
-    /// (previous layer index, rank within its candidate list)
-    parent: Option<(usize, usize)>,
-}
-
-/// Run the DP and return the top `ks` complete chains, plus aggregate
-/// pruning statistics (for Table VI-style reporting).
+/// Run the staged inter-layer planner and return the top `ks` complete
+/// chains, plus aggregate pruning statistics (for Table VI-style
+/// reporting). A degenerate net/arch combination with no valid chain
+/// returns a structured [`SolveError`] instead of panicking.
 ///
-/// The per-span work — enumerating a span's inter-layer schemes, validity
-/// pruning, lower-bound scoring, Pareto filtering — depends only on the
-/// span, never on DP state, so with `cfg.solve_threads > 1` every
-/// `(end layer, span)` candidate is scored up front across the scoped
-/// worker pool (each span ranking inline so pools don't nest); the
-/// sequential chain combination afterwards is pure table assembly.
-/// `par_map` preserves item order and the scoring is pure, so the chains
-/// are byte-identical for any thread count.
+/// Chain-level branch-and-bound and the staged context tables never change
+/// the result — chains are byte-identical to a full enumeration (pinned by
+/// `tests/planner_equivalence.rs`) and to any `solve_threads` value.
 pub fn best_chains(
     arch: &ArchConfig,
     net: &Network,
     batch: u64,
     cfg: &DpConfig,
     model: &dyn CostModel,
-) -> (Vec<ChainCand>, PruneStats) {
-    let n = net.len();
-    let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
-    let mut stats = PruneStats::default();
-
-    let span_jobs: Vec<(usize, Vec<usize>)> = (0..n)
-        .flat_map(|i| candidate_spans(i, cfg.max_seg_len).into_iter().map(move |s| (i, s)))
-        .collect();
-    let outer = cfg.solve_threads.max(1);
-    let ranked_jobs: Vec<(Vec<RankedSegment>, PruneStats)> =
-        crate::util::par_map(&span_jobs, outer, |(_, span)| {
-            let schemes = enumerate_segment_schemes(net, arch, batch, span, cfg.max_rounds);
-            let (mut ranked, st) = if outer > 1 {
-                prune_and_rank_threaded(arch, net, batch, schemes, 1, model)
-            } else {
-                prune_and_rank(arch, net, batch, schemes, model)
-            };
-            // Only the best `top_per_span` survivors are ever read; drop
-            // the rest here so holding all spans' results at once costs
-            // O(spans * top_per_span), not O(spans * survivors).
-            ranked.truncate(cfg.top_per_span);
-            (ranked, st)
-        });
-
-    let mut job = 0;
-    for i in 0..n {
-        let mut cands: Vec<Node> = Vec::new();
-        while job < span_jobs.len() && span_jobs[job].0 == i {
-            let start = span_jobs[job].1[0];
-            let (ranked, st) = &ranked_jobs[job];
-            job += 1;
-            stats.total += st.total;
-            stats.after_validity += st.after_validity;
-            stats.after_pareto += st.after_pareto;
-            for RankedSegment { seg, est } in ranked.iter() {
-                if start == 0 {
-                    cands.push(Node { cost: est.score(), seg: seg.clone(), parent: None });
-                } else {
-                    for (rank, prev) in table[start - 1].iter().enumerate() {
-                        cands.push(Node {
-                            cost: est.score() + prev.cost,
-                            seg: seg.clone(),
-                            parent: Some((start - 1, rank)),
-                        });
-                    }
-                }
-            }
-        }
-        cands.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
-        cands.truncate(cfg.ks.max(1));
-        assert!(!cands.is_empty(), "no valid segment chain ends at layer {i}");
-        table.push(cands);
-    }
-
-    // Reconstruct the top-ks chains ending at the last layer.
-    let last = n - 1;
-    let mut out = Vec::new();
-    for rank in 0..table[last].len() {
-        let mut segments = Vec::new();
-        let mut cur = Some((last, rank));
-        while let Some((li, r)) = cur {
-            let node = &table[li][r];
-            segments.push(node.seg.clone());
-            cur = node.parent;
-        }
-        segments.reverse();
-        out.push(ChainCand { cost: table[last][rank].cost, segments });
-    }
-    (out, stats)
+) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
+    Planner::new(arch, net, batch, cfg, model).chains()
 }
 
 #[cfg(test)]
@@ -161,13 +90,16 @@ mod tests {
     fn chains_cover_alexnet() {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
-        let (chains, stats) = best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh());
+        let (chains, stats) =
+            best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh()).unwrap();
         assert!(!chains.is_empty() && chains.len() <= 4);
         for ch in &chains {
             check_chain_covers(net.len(), ch);
         }
         assert!(stats.total > 0);
         assert!(stats.after_pareto <= stats.total);
+        assert!(stats.spans_total > 0);
+        assert!(stats.spans_pruned <= stats.spans_total);
         // chains sorted by cost
         for w in chains.windows(2) {
             assert!(w[0].cost <= w[1].cost);
@@ -179,7 +111,7 @@ mod tests {
         let arch = presets::multi_node_eyeriss();
         let net = nets::mlp();
         let cfg = DpConfig { ks: 1, ..DpConfig::default() };
-        let (chains, _) = best_chains(&arch, &net, 64, &cfg, &TieredCost::fresh());
+        let (chains, _) = best_chains(&arch, &net, 64, &cfg, &TieredCost::fresh()).unwrap();
         assert_eq!(chains.len(), 1);
         check_chain_covers(net.len(), &chains[0]);
     }
@@ -188,8 +120,10 @@ mod tests {
     fn bigger_ks_never_worse() {
         let arch = presets::multi_node_eyeriss();
         let net = nets::mlp();
-        let c1 = best_chains(&arch, &net, 64, &DpConfig { ks: 1, ..DpConfig::default() }, &TieredCost::fresh()).0;
-        let c8 = best_chains(&arch, &net, 64, &DpConfig { ks: 8, ..DpConfig::default() }, &TieredCost::fresh()).0;
+        let cfg1 = DpConfig { ks: 1, ..DpConfig::default() };
+        let c1 = best_chains(&arch, &net, 64, &cfg1, &TieredCost::fresh()).unwrap().0;
+        let cfg8 = DpConfig { ks: 8, ..DpConfig::default() };
+        let c8 = best_chains(&arch, &net, 64, &cfg8, &TieredCost::fresh()).unwrap().0;
         assert!(c8[0].cost <= c1[0].cost + 1e-9);
     }
 
@@ -197,7 +131,8 @@ mod tests {
     fn edge_arch_gets_singleton_segments() {
         let arch = presets::edge_tpu();
         let net = nets::alexnet();
-        let (chains, _) = best_chains(&arch, &net, 1, &DpConfig::default(), &TieredCost::fresh());
+        let (chains, _) =
+            best_chains(&arch, &net, 1, &DpConfig::default(), &TieredCost::fresh()).unwrap();
         for seg in &chains[0].segments {
             assert_eq!(seg.len(), 1);
         }
@@ -207,10 +142,22 @@ mod tests {
     fn parallel_span_scoring_is_byte_identical() {
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
-        let seq =
-            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 1, ..DpConfig::default() }, &TieredCost::fresh());
-        let par =
-            best_chains(&arch, &net, 64, &DpConfig { solve_threads: 4, ..DpConfig::default() }, &TieredCost::fresh());
+        let seq = best_chains(
+            &arch,
+            &net,
+            64,
+            &DpConfig { solve_threads: 1, ..DpConfig::default() },
+            &TieredCost::fresh(),
+        )
+        .unwrap();
+        let par = best_chains(
+            &arch,
+            &net,
+            64,
+            &DpConfig { solve_threads: 4, ..DpConfig::default() },
+            &TieredCost::fresh(),
+        )
+        .unwrap();
         assert_eq!(seq.0.len(), par.0.len());
         for (a, b) in seq.0.iter().zip(&par.0) {
             assert_eq!(a.cost, b.cost);
@@ -225,7 +172,8 @@ mod tests {
         // should use a multi-layer segment for conv-heavy nets.
         let arch = presets::multi_node_eyeriss();
         let net = nets::alexnet();
-        let (chains, _) = best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh());
+        let (chains, _) =
+            best_chains(&arch, &net, 64, &DpConfig::default(), &TieredCost::fresh()).unwrap();
         let any_multi =
             chains.iter().any(|ch| ch.segments.iter().any(|s| s.len() > 1));
         assert!(any_multi, "expected some pipelined segment in top chains");

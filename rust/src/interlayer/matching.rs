@@ -123,7 +123,7 @@ mod tests {
                 solver: SolverKind::Kapla,
                 dp: DpConfig::default(),
             };
-            let r = run_job(&arch, &j);
+            let r = run_job(&arch, &j).expect("schedulable");
             let violations = check_schedule(&net, &r.schedule);
             // Batch-round agreement (rule 1) must hold exactly; step
             // compatibility (rule 3) may legitimately round on ceil splits.

@@ -10,6 +10,7 @@
 
 pub mod dp;
 pub mod matching;
+pub mod planner;
 pub mod prune;
 
 use crate::arch::ArchConfig;
@@ -88,14 +89,67 @@ impl Schedule {
     }
 }
 
-/// Enumerate the candidate inter-layer schemes of the segment spanning
-/// `layers` (already known to be a contiguous topo range): every column
-/// split of the mesh into one strip per layer (the spatial-allocation
-/// axis) x every pipelining-rounds divisor of the batch (the
-/// granularity/timing axis). On the paper's 16x16 mesh this yields
+/// Stream the candidate inter-layer schemes of the segment spanning
+/// `layers` (already known to be a contiguous topo range) to `visit`:
+/// every column split of the mesh into one strip per layer (the
+/// spatial-allocation axis) x every pipelining-rounds divisor of the batch
+/// (the granularity/timing axis). On the paper's 16x16 mesh this is
 /// *hundreds* of schemes per segment (Table VI: AlexNet 700), which is
 /// exactly what makes the inter-layer space expensive for exhaustive
 /// solvers and cheap for KAPLA's conservative pruning.
+///
+/// The enumeration is lazy: one scratch [`Segment`] is reused for the
+/// whole span — the composition generator rewrites its `regions` in place
+/// and each rounds option rewrites only `rounds` — so a caller that
+/// rejects most candidates (validity pruning, the planner's chain-level
+/// bound) allocates nothing per rejected scheme; survivors are cloned by
+/// the visitor. Candidates arrive in exactly the order
+/// [`enumerate_segment_schemes`] materializes them. The visitor returns
+/// `true` to continue.
+pub fn visit_segment_schemes(
+    net: &Network,
+    arch: &ArchConfig,
+    batch: u64,
+    layers: &[usize],
+    max_rounds: u64,
+    mut visit: impl FnMut(&Segment) -> bool,
+) {
+    let _ = net;
+    if layers.len() == 1 {
+        visit(&Segment::single(layers[0], arch));
+        return;
+    }
+    if !arch.spatial_layer_pipe {
+        return; // multi-layer segments need spatial pipelining support
+    }
+    let (mesh_w, mesh_h) = arch.nodes;
+    if (layers.len() as u64) > mesh_w {
+        return; // cannot give each layer a column strip
+    }
+    let rounds_opts: Vec<u64> =
+        divisors(batch).into_iter().filter(|&r| r <= max_rounds).collect();
+    let mut seg = Segment {
+        layers: layers.to_vec(),
+        regions: vec![(0, mesh_h); layers.len()],
+        spatial: true,
+        rounds: 1,
+    };
+    let mut widths = Compositions::new(mesh_w, layers.len());
+    while let Some(ws) = widths.next_slice() {
+        for (slot, &w) in seg.regions.iter_mut().zip(ws) {
+            *slot = (w, mesh_h);
+        }
+        for &rounds in &rounds_opts {
+            seg.rounds = rounds;
+            if !visit(&seg) {
+                return;
+            }
+        }
+    }
+}
+
+/// Materialized form of [`visit_segment_schemes`], for callers that want
+/// the whole candidate set at once (the exact-DP baselines, Table VI).
 pub fn enumerate_segment_schemes(
     net: &Network,
     arch: &ArchConfig,
@@ -103,51 +157,76 @@ pub fn enumerate_segment_schemes(
     layers: &[usize],
     max_rounds: u64,
 ) -> Vec<Segment> {
-    let _ = net;
     let mut out = Vec::new();
-    if layers.len() == 1 {
-        out.push(Segment::single(layers[0], arch));
-        return out;
-    }
-    if !arch.spatial_layer_pipe {
-        return out; // multi-layer segments need spatial pipelining support
-    }
-    let (mesh_w, mesh_h) = arch.nodes;
-    if (layers.len() as u64) > mesh_w {
-        return out; // cannot give each layer a column strip
-    }
-    let rounds_opts: Vec<u64> =
-        divisors(batch).into_iter().filter(|&r| r <= max_rounds).collect();
-    for widths in compositions(mesh_w, layers.len()) {
-        let regions: Vec<(u64, u64)> = widths.iter().map(|&w| (w, mesh_h)).collect();
-        for &rounds in &rounds_opts {
-            out.push(Segment {
-                layers: layers.to_vec(),
-                regions: regions.clone(),
-                spatial: true,
-                rounds,
-            });
-        }
-    }
+    visit_segment_schemes(net, arch, batch, layers, max_rounds, |seg| {
+        out.push(seg.clone());
+        true
+    });
     out
 }
 
-/// All ordered compositions of `total` into `parts` positive integers.
-fn compositions(total: u64, parts: usize) -> Vec<Vec<u64>> {
-    assert!(parts >= 1);
-    if parts == 1 {
-        return vec![vec![total]];
+/// Iterative generator of all ordered compositions of `total` into
+/// `parts` positive integers, in the lexicographic order the recursive
+/// enumeration it replaced produced: `(1, 1, .., rest)` first,
+/// `(total-parts+1, 1, .., 1)` last. The successor is computed in place,
+/// so streaming all C(total-1, parts-1) compositions allocates one buffer
+/// instead of one `Vec` per composition — the allocation blow-up the old
+/// `compositions()` paid per span (micro-benchmarked in `perf_hotpath`).
+pub struct Compositions {
+    buf: Vec<u64>,
+    total: u64,
+    started: bool,
+    done: bool,
+}
+
+impl Compositions {
+    /// Generator over compositions of `total` into `parts` parts
+    /// (`parts >= 1`). A `total` smaller than `parts` yields none.
+    pub fn new(total: u64, parts: usize) -> Compositions {
+        assert!(parts >= 1);
+        let done = (parts as u64) > total;
+        Compositions { buf: vec![1; parts], total, started: false, done }
     }
-    let mut out = Vec::new();
-    for first in 1..=(total - (parts as u64 - 1)) {
-        for mut rest in compositions(total - first, parts - 1) {
-            let mut v = Vec::with_capacity(parts);
-            v.push(first);
-            v.append(&mut rest);
-            out.push(v);
+
+    /// The next composition, borrowed until the following call (lending
+    /// iteration: no per-item allocation), or `None` when exhausted.
+    pub fn next_slice(&mut self) -> Option<&[u64]> {
+        if self.done {
+            return None;
         }
+        let p = self.buf.len();
+        if !self.started {
+            self.started = true;
+            // Lexicographically smallest: all ones, remainder at the end.
+            for v in self.buf.iter_mut() {
+                *v = 1;
+            }
+            self.buf[p - 1] = self.total - (p as u64 - 1);
+            return Some(&self.buf);
+        }
+        // Successor: bump the rightmost position whose suffix still has a
+        // unit of slack to give, then reset that suffix to its smallest
+        // shape (ones, remainder at the end).
+        let mut suffix = self.buf[p - 1];
+        let mut bump = None;
+        for j in (0..p.saturating_sub(1)).rev() {
+            if suffix > (p - 1 - j) as u64 {
+                bump = Some(j);
+                break;
+            }
+            suffix += self.buf[j];
+        }
+        let Some(j) = bump else {
+            self.done = true;
+            return None;
+        };
+        self.buf[j] += 1;
+        for v in &mut self.buf[j + 1..] {
+            *v = 1;
+        }
+        self.buf[p - 1] = suffix - 1 - (p - 2 - j) as u64;
+        Some(&self.buf)
     }
-    out
 }
 
 /// Enumerate contiguous candidate segment spans ending at layer `end`
@@ -212,14 +291,77 @@ mod tests {
         assert!(schemes.iter().any(|s| s.regions[1].0 < s.regions[0].0));
     }
 
+    /// Reference recursive enumeration (the seed implementation) — the
+    /// iterative generator must reproduce its output order exactly.
+    fn compositions_recursive(total: u64, parts: usize) -> Vec<Vec<u64>> {
+        assert!(parts >= 1);
+        if parts == 1 {
+            return vec![vec![total]];
+        }
+        let mut out = Vec::new();
+        for first in 1..=(total - (parts as u64 - 1)) {
+            for mut rest in compositions_recursive(total - first, parts - 1) {
+                let mut v = Vec::with_capacity(parts);
+                v.push(first);
+                v.append(&mut rest);
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    fn collect_compositions(total: u64, parts: usize) -> Vec<Vec<u64>> {
+        let mut comp_gen = Compositions::new(total, parts);
+        let mut out = Vec::new();
+        while let Some(c) = comp_gen.next_slice() {
+            out.push(c.to_vec());
+        }
+        out
+    }
+
     #[test]
     fn compositions_count_and_sum() {
-        let cs = compositions(6, 3);
+        let cs = collect_compositions(6, 3);
         assert_eq!(cs.len(), 10); // C(5,2)
         for c in &cs {
             assert_eq!(c.iter().sum::<u64>(), 6);
             assert!(c.iter().all(|&x| x >= 1));
         }
+    }
+
+    #[test]
+    fn compositions_iterative_matches_recursive_order() {
+        for (total, parts) in [(1u64, 1usize), (4, 1), (4, 4), (6, 3), (8, 2), (16, 4), (9, 5)] {
+            assert_eq!(
+                collect_compositions(total, parts),
+                compositions_recursive(total, parts),
+                "({total}, {parts})"
+            );
+        }
+        // total < parts has no composition into positive integers.
+        assert!(collect_compositions(2, 3).is_empty());
+    }
+
+    #[test]
+    fn streaming_matches_materialized_enumeration() {
+        let net = nets::alexnet();
+        let arch = presets::multi_node_eyeriss();
+        for span in [vec![3usize], vec![2, 3], vec![2, 3, 4]] {
+            let eager = enumerate_segment_schemes(&net, &arch, 64, &span, 64);
+            let mut streamed = Vec::new();
+            visit_segment_schemes(&net, &arch, 64, &span, 64, |s| {
+                streamed.push(s.clone());
+                true
+            });
+            assert_eq!(eager, streamed, "span {span:?}");
+        }
+        // Early stop is respected.
+        let mut n = 0;
+        visit_segment_schemes(&net, &arch, 64, &[2, 3, 4], 64, |_| {
+            n += 1;
+            n < 5
+        });
+        assert_eq!(n, 5);
     }
 
     #[test]

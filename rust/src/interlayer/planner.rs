@@ -1,0 +1,494 @@
+//! The staged inter-layer planner (paper §IV-B, lifted to the upper
+//! level): lazy span enumeration, admissible chain-level branch-and-bound,
+//! and memo-assembled estimate scoring — the inter-layer mirror of the
+//! staged intra-layer enumeration (`solvers::space::visit_schemes_staged`).
+//!
+//! [`Planner`] owns the segment-chain search `dp::best_chains` wraps. The
+//! eager pipeline it replaces materialized every `(end layer, span)`
+//! candidate set up front — a `Vec` of hundreds of [`Segment`]s per span,
+//! each cloning its `regions` per rounds option — and fully ranked all of
+//! them before the DP ever looked at a cost. The planner instead processes
+//! spans in DP order and stages each one:
+//!
+//! 1. **Context table** — the span's distinct `(layer, LayerCtx)` estimate
+//!    keys are generated directly from the span shape (layer positions x
+//!    strip widths x rounds options) and scored once each through the
+//!    model's estimate tier ([`CostModel::estimate_layer`]); this is the
+//!    same memo the eager path staged inside `prune_and_rank_threaded`,
+//!    built *before* any scheme exists.
+//! 2. **Span floor** — an admissible lower bound on
+//!    [`CostEstimate::score`] over *every* scheme of the span, derived
+//!    from the table alone (per-layer minima over widths and rounds; the
+//!    admissibility argument lives on `Planner::span_table`). When
+//!    `floor + best_prev >= incumbent` — the k_S-th best chain cost
+//!    already accumulated at the span's end layer — the whole span is
+//!    skipped without streaming a single scheme (`PruneStats::spans_pruned`).
+//! 3. **Bounded streaming** — surviving spans stream their schemes lazily
+//!    ([`visit_segment_schemes`]: one scratch segment, no per-candidate
+//!    allocation), assemble each estimate from the context table (the
+//!    exact `segment_lower_bound_with` accumulation, so totals are
+//!    bit-identical to one-shot scoring), and drop every scheme whose
+//!    `score + best_prev >= incumbent`
+//!    (`PruneStats::schemes_bound_pruned`). Only the survivors are cloned,
+//!    Pareto-filtered and ranked.
+//!
+//! Both prunes are **exact**: a skipped candidate chain would cost at
+//! least `incumbent`, and the incumbent is the k_S-th smallest cost of
+//! candidates *already inserted* — all of which precede the skipped one in
+//! insertion order, so under the DP's stable ordering (insertion order
+//! breaks cost ties) the skipped candidate could never enter the final
+//! top-k_S. The bound criterion is monotone in score, so the bound-filtered
+//! scheme set is a suffix-drop of the span's score-sorted ranking; since
+//! domination implies a score no smaller than the dominator's, Pareto
+//! filtering commutes with the drop and the surviving ranked prefix equals
+//! the eager path's. `tests/planner_equivalence.rs` pins chains and final
+//! schedules byte-identical against a reference copy of the eager
+//! pipeline.
+//!
+//! Threading: span processing is inherently sequential (the incumbent
+//! flows span to span), so with `solve_threads > 1` only a span's context
+//! table is sharded across the scoped worker pool — and only for large
+//! tables, where the estimates outweigh the pool spawn. Pruning never
+//! depends on thread count, so chains are byte-identical for any value.
+
+use std::collections::HashMap;
+
+use super::dp::{ChainCand, DpConfig};
+use super::prune::{conservative_valid, pareto_rank, CtxKey, PruneStats, RankedSegment};
+use super::{candidate_spans, visit_segment_schemes, Segment};
+use crate::arch::ArchConfig;
+use crate::cost::{segment_lower_bound_with, CostEstimate, CostModel, LayerCtx};
+use crate::solvers::SolveError;
+use crate::workloads::Network;
+
+/// Context-table size at which the estimate stage shards across the
+/// worker pool: an estimate costs ~1us, the scoped pool ~100us to spawn.
+const PARALLEL_TABLE_MIN: usize = 1024;
+
+/// One chain-candidate node of the DP table.
+struct Node {
+    cost: f64,
+    seg: Segment,
+    /// (previous layer index, rank within its candidate list)
+    parent: Option<(usize, usize)>,
+}
+
+/// The per-span staged state: the distinct `(layer, ctx)` estimate table
+/// and the admissible score floor derived from it.
+struct SpanTable {
+    index: HashMap<CtxKey, usize>,
+    ests: Vec<CostEstimate>,
+    floor: f64,
+}
+
+/// The staged inter-layer segment-chain planner. Build with
+/// [`Planner::new`], optionally disable the chain-level bound with
+/// [`Planner::bound_prune`] (the reference full-enumeration mode the
+/// equivalence battery compares against), then call [`Planner::chains`].
+pub struct Planner<'a> {
+    arch: &'a ArchConfig,
+    net: &'a Network,
+    batch: u64,
+    cfg: &'a DpConfig,
+    model: &'a dyn CostModel,
+    bound_prune: bool,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(
+        arch: &'a ArchConfig,
+        net: &'a Network,
+        batch: u64,
+        cfg: &'a DpConfig,
+        model: &'a dyn CostModel,
+    ) -> Planner<'a> {
+        Planner { arch, net, batch, cfg, model, bound_prune: true }
+    }
+
+    /// Enable/disable the chain-level branch-and-bound (default on).
+    /// Disabling streams and ranks every span in full — the argmin is
+    /// identical by construction; only the work differs.
+    pub fn bound_prune(mut self, on: bool) -> Planner<'a> {
+        self.bound_prune = on;
+        self
+    }
+
+    /// Run the DP and return the top `k_S` complete chains plus pruning
+    /// statistics, or a structured error when no valid chain covers the
+    /// network (a degenerate net/arch combination must not panic a
+    /// long-running service).
+    pub fn chains(&self) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
+        let n = self.net.len();
+        let ks = self.cfg.ks.max(1);
+        let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
+        let mut stats = PruneStats::default();
+
+        for i in 0..n {
+            let mut cands: Vec<Node> = Vec::new();
+            for span in candidate_spans(i, self.cfg.max_seg_len) {
+                let start = span[0];
+                stats.spans_total += 1;
+                // The cheapest chain this span's candidates can extend
+                // anchors both bounds; a missing prefix row cannot happen
+                // (every processed layer has at least one chain or the DP
+                // already returned an error).
+                let prev_best = if start == 0 { 0.0 } else { table[start - 1][0].cost };
+                let incumbent =
+                    if cands.len() >= ks { cands[ks - 1].cost } else { f64::INFINITY };
+                let ranked = self.rank_span(&span, prev_best, incumbent, &mut stats);
+                for RankedSegment { seg, est } in ranked {
+                    if start == 0 {
+                        insert_top(&mut cands, ks, Node {
+                            cost: est.score(),
+                            seg,
+                            parent: None,
+                        });
+                    } else {
+                        for rank in 0..table[start - 1].len() {
+                            insert_top(&mut cands, ks, Node {
+                                cost: est.score() + table[start - 1][rank].cost,
+                                seg: seg.clone(),
+                                parent: Some((start - 1, rank)),
+                            });
+                        }
+                    }
+                }
+            }
+            if cands.is_empty() {
+                return Err(SolveError::NoChain {
+                    layer: i,
+                    layer_name: self.net.layers[i].name.clone(),
+                });
+            }
+            table.push(cands);
+        }
+
+        // Reconstruct the top-ks chains ending at the last layer.
+        let last = n - 1;
+        let mut out = Vec::new();
+        for rank in 0..table[last].len() {
+            let mut segments = Vec::new();
+            let mut cur = Some((last, rank));
+            while let Some((li, r)) = cur {
+                let node = &table[li][r];
+                segments.push(node.seg.clone());
+                cur = node.parent;
+            }
+            segments.reverse();
+            out.push(ChainCand { cost: table[last][rank].cost, segments });
+        }
+        Ok((out, stats))
+    }
+
+    /// Rank one span: context table + floor, bounded streaming, Pareto +
+    /// sort + top-per-span truncation. Returns the ranked survivors (empty
+    /// when the span floor pruned everything).
+    fn rank_span(
+        &self,
+        span: &[usize],
+        prev_best: f64,
+        incumbent: f64,
+        stats: &mut PruneStats,
+    ) -> Vec<RankedSegment> {
+        // Single-layer spans have exactly one scheme, so the "floor" is
+        // the scheme's exact estimate and the span-level check subsumes
+        // the per-scheme one.
+        if span.len() == 1 {
+            let seg = Segment::single(span[0], self.arch);
+            let est = segment_lower_bound_with(self.net, self.batch, &seg, &mut |li, ctx| {
+                self.model.estimate_layer(self.arch, &self.net.layers[li], ctx)
+            });
+            if self.prunes(est.score(), prev_best, incumbent) {
+                stats.spans_pruned += 1;
+                return Vec::new();
+            }
+            stats.total += 1;
+            stats.after_validity += 1;
+            stats.after_pareto += 1;
+            return vec![RankedSegment { seg, est }];
+        }
+
+        let Some(tbl) = self.span_table(span) else {
+            return Vec::new(); // no scheme exists for this span shape
+        };
+        if self.prunes(tbl.floor, prev_best, incumbent) {
+            stats.spans_pruned += 1;
+            return Vec::new();
+        }
+
+        // Bounded streaming: validity, memo-assembled estimate, chain
+        // bound — survivors cloned, everything else allocation-free.
+        let mut ranked: Vec<RankedSegment> = Vec::new();
+        let (mut total, mut valid) = (0usize, 0usize);
+        visit_segment_schemes(self.net, self.arch, self.batch, span, self.cfg.max_rounds, |seg| {
+            total += 1;
+            if !conservative_valid(self.arch, self.net, self.batch, seg) {
+                return true;
+            }
+            valid += 1;
+            let est = segment_lower_bound_with(self.net, self.batch, seg, &mut |li, ctx| {
+                match tbl.index.get(&CtxKey::of(li, ctx)) {
+                    Some(&k) => tbl.ests[k],
+                    // Defensive: the table generation mirrors the assembly's
+                    // context construction; an unseen context still scores
+                    // correctly, it just wasn't pre-staged.
+                    None => self.model.estimate_layer(self.arch, &self.net.layers[li], ctx),
+                }
+            });
+            if self.prunes(est.score(), prev_best, incumbent) {
+                stats.schemes_bound_pruned += 1;
+                return true;
+            }
+            ranked.push(RankedSegment { seg: seg.clone(), est });
+            true
+        });
+        stats.total += total;
+        stats.after_validity += valid;
+        let mut ranked = pareto_rank(ranked);
+        stats.after_pareto += ranked.len();
+        // Only the best `top_per_span` survivors ever reach the DP.
+        ranked.truncate(self.cfg.top_per_span);
+        ranked
+    }
+
+    /// The one pruning predicate: admissible `floor_or_score` plus the
+    /// cheapest extendable prefix cannot strictly beat the k_S-th
+    /// incumbent. Never fires on an infinite incumbent (fewer than k_S
+    /// candidates so far) and never fires on a NaN score (`>=` is false),
+    /// so a broken estimate tier degrades to no pruning, not to a wrong
+    /// argmin.
+    fn prunes(&self, floor_or_score: f64, prev_best: f64, incumbent: f64) -> bool {
+        self.bound_prune && incumbent.is_finite() && floor_or_score + prev_best >= incumbent
+    }
+
+    /// Build the context table and admissible floor of a multi-layer span.
+    ///
+    /// The distinct contexts of a span are exactly the cartesian product
+    /// (layer position) x (strip width) x (rounds option): every scheme's
+    /// per-layer context is determined by its layer's width and the
+    /// scheme's rounds, and the on-chip flags depend only on span
+    /// membership. The keys are therefore collected by *dry assembly runs*
+    /// of `segment_lower_bound_with` itself over one scratch segment per
+    /// (width, rounds) with uniform strips — exactly how
+    /// `prune_and_rank_threaded` stages its scoring — so the table is
+    /// derived from the real accumulation and can never drift from the
+    /// assembly's context construction.
+    ///
+    /// Floor admissibility: for any scheme, its energy is a sum of
+    /// per-layer estimates, each bounded below by that layer's minimum
+    /// over all (width, rounds); its latency is
+    /// `max_layer(latency) * (rounds + len - 1)`, bounded below by
+    /// `min_rounds [ max_layer( min_width latency ) * (rounds + len - 1) ]`;
+    /// and `CostEstimate::score` is monotone in both, so the floor score
+    /// never exceeds any scheme's score.
+    fn span_table(&self, span: &[usize]) -> Option<SpanTable> {
+        let len = span.len();
+        if !self.arch.spatial_layer_pipe {
+            return None;
+        }
+        let (mesh_w, mesh_h) = self.arch.nodes;
+        if (len as u64) > mesh_w {
+            return None;
+        }
+        let widths: Vec<u64> = (1..=(mesh_w - (len as u64 - 1))).collect();
+        let rounds_opts: Vec<u64> = crate::util::divisors(self.batch)
+            .into_iter()
+            .filter(|&r| r <= self.cfg.max_rounds)
+            .collect();
+
+        // Stage 1: dry assembly runs record the distinct keys. Spans hold
+        // distinct layers, so (width, rounds) passes can never collide in
+        // `CtxKey` and the key layout is (width-major, rounds, position).
+        let mut keys: Vec<(usize, LayerCtx)> =
+            Vec::with_capacity(widths.len() * rounds_opts.len() * len);
+        let mut index = HashMap::with_capacity(keys.capacity());
+        let mut scratch = Segment {
+            layers: span.to_vec(),
+            regions: vec![(0, mesh_h); len],
+            spatial: true,
+            rounds: 1,
+        };
+        for &w in &widths {
+            for slot in scratch.regions.iter_mut() {
+                *slot = (w, mesh_h);
+            }
+            for &r in &rounds_opts {
+                scratch.rounds = r;
+                segment_lower_bound_with(self.net, self.batch, &scratch, &mut |li, ctx| {
+                    index.entry(CtxKey::of(li, ctx)).or_insert_with(|| {
+                        keys.push((li, *ctx));
+                        keys.len() - 1
+                    });
+                    CostEstimate { energy_pj: 0.0, latency_cycles: 0.0 }
+                });
+            }
+        }
+
+        // Stage 2: score each distinct context once (sharded only when
+        // the table is large enough to amortize the pool spawn).
+        let threads = if self.cfg.solve_threads > 1 && keys.len() >= PARALLEL_TABLE_MIN {
+            self.cfg.solve_threads
+        } else {
+            1
+        };
+        let ests = crate::util::par_map(&keys, threads, |(li, ctx)| {
+            self.model.estimate_layer(self.arch, &self.net.layers[*li], ctx)
+        });
+
+        // Stage 3: the floor, reduced by index arithmetic over the
+        // (width, rounds, position) layout. Should the assembly ever
+        // produce an unexpected key count, the floor degrades to "never
+        // prune this span" — the per-scheme bounds (computed from real
+        // estimates) stay fully sound either way.
+        let (nw, nr) = (widths.len(), rounds_opts.len());
+        let floor = if !keys.is_empty() && keys.len() == nw * nr * len {
+            let at = |pos: usize, wi: usize, ri: usize| &ests[(wi * nr + ri) * len + pos];
+            let mut floor_e = 0.0;
+            for pos in 0..len {
+                let mut min_e = f64::INFINITY;
+                for wi in 0..nw {
+                    for ri in 0..nr {
+                        min_e = min_e.min(at(pos, wi, ri).energy_pj);
+                    }
+                }
+                floor_e += min_e;
+            }
+            let mut floor_l = f64::INFINITY;
+            for (ri, &r) in rounds_opts.iter().enumerate() {
+                let mut round_lat: f64 = 0.0;
+                for pos in 0..len {
+                    let mut min_l = f64::INFINITY;
+                    for wi in 0..nw {
+                        min_l = min_l.min(at(pos, wi, ri).latency_cycles);
+                    }
+                    round_lat = round_lat.max(min_l);
+                }
+                floor_l = floor_l.min(round_lat * (r as f64 + len as f64 - 1.0));
+            }
+            CostEstimate { energy_pj: floor_e, latency_cycles: floor_l }.score()
+        } else {
+            f64::NEG_INFINITY
+        };
+        Some(SpanTable { index, ests, floor })
+    }
+}
+
+/// Insert a candidate into the running top-k_S list, keeping it sorted by
+/// cost with ties resolved by insertion order — exactly the stable
+/// sort-then-truncate the eager DP ran, maintained incrementally.
+/// `total_cmp` ordering makes a NaN cost sort last instead of panicking.
+fn insert_top(cands: &mut Vec<Node>, ks: usize, node: Node) {
+    let pos = cands
+        .partition_point(|n| n.cost.total_cmp(&node.cost) != std::cmp::Ordering::Greater);
+    if pos >= ks {
+        return; // provably outside the top-k_S, never materialized
+    }
+    cands.insert(pos, node);
+    cands.truncate(ks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::TieredCost;
+    use crate::interlayer::enumerate_segment_schemes;
+    use crate::workloads::nets;
+
+    fn chains_snapshot(chains: &[ChainCand]) -> String {
+        chains
+            .iter()
+            .map(|c| format!("{:?} {:?}\n", c.cost, c.segments))
+            .collect::<String>()
+    }
+
+    #[test]
+    fn bound_pruning_never_changes_the_chains() {
+        let arch = presets::multi_node_eyeriss();
+        let model = TieredCost::fresh();
+        for net in [nets::mlp(), nets::alexnet()] {
+            for ks in [1usize, 4] {
+                let cfg = DpConfig { ks, ..DpConfig::default() };
+                let full = Planner::new(&arch, &net, 64, &cfg, &model)
+                    .bound_prune(false)
+                    .chains()
+                    .unwrap();
+                let pruned =
+                    Planner::new(&arch, &net, 64, &cfg, &model).chains().unwrap();
+                assert_eq!(
+                    chains_snapshot(&full.0),
+                    chains_snapshot(&pruned.0),
+                    "{} ks={ks}: pruning changed the chains",
+                    net.name
+                );
+                assert_eq!(full.1.spans_pruned + full.1.schemes_bound_pruned, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_ks_makes_the_bound_fire() {
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let cfg = DpConfig { ks: 1, ..DpConfig::default() };
+        let (_, stats) =
+            Planner::new(&arch, &net, 64, &cfg, &TieredCost::fresh()).chains().unwrap();
+        assert!(stats.spans_total > 0);
+        assert!(
+            stats.spans_pruned + stats.schemes_bound_pruned > 0,
+            "k_S=1 should prune at least some spans/schemes: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn staged_table_matches_per_candidate_estimates() {
+        // Every streamed scheme's memo-assembled estimate must equal the
+        // model's one-shot `estimate_segment` bit for bit — the floor,
+        // ranking and DP scores all hang off this.
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let model = TieredCost::fresh();
+        let cfg = DpConfig::default();
+        let planner = Planner::new(&arch, &net, 64, &cfg, &model);
+        for span in [vec![2usize, 3], vec![2, 3, 4]] {
+            let tbl = planner.span_table(&span).expect("pipelinable span");
+            for seg in enumerate_segment_schemes(&net, &arch, 64, &span, cfg.max_rounds) {
+                let staged =
+                    segment_lower_bound_with(&net, 64, &seg, &mut |li, ctx| {
+                        tbl.ests[tbl.index[&CtxKey::of(li, ctx)]]
+                    });
+                let direct = model.estimate_segment(&arch, &net, 64, &seg);
+                assert_eq!(staged, direct, "span {span:?}, seg {seg:?}");
+                // Floor admissibility over the whole span.
+                assert!(
+                    tbl.floor <= staged.score() + 1e-9,
+                    "floor {} above scheme score {}",
+                    tbl.floor,
+                    staged.score()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn insert_top_matches_stable_sort_truncate() {
+        let arch = presets::bench_multi_node();
+        let seg = |r: u64| {
+            let mut s = Segment::single(0, &arch);
+            s.rounds = r; // tag so ties are distinguishable
+            s
+        };
+        let costs = [3.0, 1.0, 2.0, 1.0, f64::NAN, 0.5, 2.0, 1.0];
+        let mut top: Vec<Node> = Vec::new();
+        for (i, &c) in costs.iter().enumerate() {
+            insert_top(&mut top, 3, Node { cost: c, seg: seg(i as u64), parent: None });
+        }
+        // Reference: stable sort by total order, truncate.
+        let mut all: Vec<(f64, u64)> =
+            costs.iter().enumerate().map(|(i, &c)| (c, i as u64)).collect();
+        all.sort_by(|a, b| a.0.total_cmp(&b.0));
+        all.truncate(3);
+        let got: Vec<(f64, u64)> = top.iter().map(|n| (n.cost, n.seg.rounds)).collect();
+        assert_eq!(format!("{got:?}"), format!("{all:?}"));
+    }
+}

@@ -46,12 +46,41 @@ pub struct RankedSegment {
     pub est: CostEstimate,
 }
 
-/// Statistics for Table VI.
+/// Statistics for Table VI, plus the span-level counters of the staged
+/// inter-layer planner's chain-level branch-and-bound
+/// (`interlayer::planner`). The scheme-level counters (`total`,
+/// `after_validity`, `after_pareto`) only cover spans that were actually
+/// enumerated: a span skipped by the admissible floor contributes to
+/// `spans_pruned` and nothing else — its schemes were never streamed.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PruneStats {
     pub total: usize,
     pub after_validity: usize,
     pub after_pareto: usize,
+    /// Candidate `(end layer, span)` pairs the planner examined. Zero for
+    /// direct `prune_and_rank` calls, which rank one span's schemes.
+    pub spans_total: usize,
+    /// Spans skipped outright: the admissible span floor (computed from
+    /// `CostModel::estimate_layer` before any scheme enumeration) already
+    /// met the k_S-th incumbent chain cost at the span's end layer.
+    pub spans_pruned: usize,
+    /// Individual streamed schemes dropped by the chain-level bound
+    /// (`score + best_prev >= incumbent`) before Pareto ranking.
+    pub schemes_bound_pruned: usize,
+}
+
+impl PruneStats {
+    /// JSON object shared by bench reports and service responses.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("total", self.total.into())
+            .set("after_validity", self.after_validity.into())
+            .set("after_pareto", self.after_pareto.into())
+            .set("spans_total", self.spans_total.into())
+            .set("spans_pruned", self.spans_pruned.into())
+            .set("schemes_bound_pruned", self.schemes_bound_pruned.into());
+        o
+    }
 }
 
 /// Apply conservative validity pruning then Pareto filtering on the
@@ -72,9 +101,10 @@ pub fn prune_and_rank(
 }
 
 /// Hashable identity of one per-layer estimate context (`LayerCtx` holds
-/// an f64, so the key carries its bits).
+/// an f64, so the key carries its bits). Shared with the staged planner's
+/// per-span context tables (`interlayer::planner`).
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
-struct CtxKey {
+pub(crate) struct CtxKey {
     li: usize,
     nodes: u64,
     round_batch: u64,
@@ -85,7 +115,7 @@ struct CtxKey {
 }
 
 impl CtxKey {
-    fn of(li: usize, ctx: &LayerCtx) -> CtxKey {
+    pub(crate) fn of(li: usize, ctx: &LayerCtx) -> CtxKey {
         CtxKey {
             li,
             nodes: ctx.nodes,
@@ -164,12 +194,21 @@ pub fn prune_and_rank_threaded(
             })
         })
         .collect();
-    let mut ranked: Vec<RankedSegment> =
+    let ranked: Vec<RankedSegment> =
         valid.into_iter().zip(ests).map(|(seg, est)| RankedSegment { seg, est }).collect();
+    let ranked = pareto_rank(ranked);
+    stats.after_pareto = ranked.len();
+    (ranked, stats)
+}
 
-    // Pareto prune on (energy, latency): drop candidates dominated by
-    // *any* other candidate in both objectives (paper §IV-B: "skipping the
-    // schemes with non-Pareto-optimal access counts").
+/// Pareto prune on (energy, latency) — drop candidates dominated by *any*
+/// other candidate in both objectives (paper §IV-B: "skipping the schemes
+/// with non-Pareto-optimal access counts") — then sort the survivors by
+/// score. The sort is stable and `total_cmp`-ordered, so equal scores keep
+/// candidate order and a NaN score (a broken external estimate tier) sinks
+/// to the end instead of panicking the solver. Shared by the eager
+/// [`prune_and_rank`] path and the streamed `interlayer::planner` pipeline.
+pub(crate) fn pareto_rank(mut ranked: Vec<RankedSegment>) -> Vec<RankedSegment> {
     let mut keep = vec![true; ranked.len()];
     for i in 0..ranked.len() {
         for j in 0..ranked.len() {
@@ -184,10 +223,8 @@ pub fn prune_and_rank_threaded(
     }
     let mut it = keep.iter();
     ranked.retain(|_| *it.next().unwrap());
-    stats.after_pareto = ranked.len();
-
-    ranked.sort_by(|a, b| a.est.score().partial_cmp(&b.est.score()).unwrap());
-    (ranked, stats)
+    ranked.sort_by(|a, b| a.est.score().total_cmp(&b.est.score()));
+    ranked
 }
 
 fn dominates(a: &CostEstimate, b: &CostEstimate) -> bool {

@@ -76,12 +76,15 @@ fn budget_of(flags: &HashMap<String, String>) -> Result<CacheBudget, String> {
 
 fn print_cache_stats(prefix: &str, st: &CacheStats) {
     println!(
-        "{prefix}: {} lookups, {} hits ({:.0}%), {} evictions, {} entries resident",
+        "{prefix}: {} lookups, {} hits ({:.0}%), {} evictions, {} entries resident, \
+         {}/{} intra-argmin replays",
         st.lookups,
         st.hits,
         100.0 * st.hit_rate(),
         st.evictions,
-        st.entries
+        st.entries,
+        st.intra_hits,
+        st.intra_lookups
     );
 }
 
@@ -174,7 +177,13 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         solver.label()
     );
     let session = SessionCache::new(budget);
-    let r = coordinator::run_job_with(&arch, &job, &session);
+    let r = match coordinator::run_job_with(&arch, &job, &session) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("scheduling failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
     print_cache_stats("evaluation cache", &r.cache);
 
     println!(
@@ -255,7 +264,13 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
     // overlapping candidate spaces (B ⊂ S, R/M ⊂ B) reuse each other's
     // detailed-model evaluations.
     let session = SessionCache::new(budget);
-    let results = coordinator::run_jobs_with(&arch, &jobs, threads, &session);
+    let results: Vec<_> = coordinator::run_jobs_with(&arch, &jobs, threads, &session)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .unwrap_or_else(|e| {
+            eprintln!("scheduling failed: {e}");
+            std::process::exit(1);
+        });
     let base = results[0].eval.energy.total();
     let mut t = Table::new(
         &format!("{} batch={batch} on {}", net.name, arch.name),

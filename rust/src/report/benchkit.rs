@@ -93,6 +93,7 @@ pub fn run_cell(
 ) -> SolveResult {
     let job = Job { net: net.clone(), batch, objective: obj, solver, dp: bench_dp() };
     run_job(arch, &job)
+        .unwrap_or_else(|e| panic!("bench cell {}/{}: {e}", net.name, solver.label()))
 }
 
 /// Machine-readable record of one solve: identity, quality, solve time,
@@ -114,6 +115,9 @@ pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
         .set("cache", r.cache.to_json());
     if let Some(b) = &r.bnb {
         o.set("bnb", b.to_json());
+    }
+    if let Some(p) = &r.prune {
+        o.set("prune", p.to_json());
     }
     o
 }
@@ -173,7 +177,7 @@ mod tests {
             solver: SolverKind::Random { p: 0.3, seed: 7 },
             dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
         };
-        let r = run_job(&arch, &job);
+        let r = run_job(&arch, &job).unwrap();
         let j = result_json(&net.name, job.solver, &r);
         assert_eq!(j.get("solver").unwrap().as_str(), Some("R:p=0.3,seed=7"));
     }
@@ -189,7 +193,7 @@ mod tests {
             solver: SolverKind::Kapla,
             dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
         };
-        let r = run_job(&arch, &job);
+        let r = run_job(&arch, &job).unwrap();
         let j = result_json(&net.name, job.solver, &r);
         assert_eq!(j.get("solver").unwrap().as_str(), Some("K"));
         assert!(j.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);

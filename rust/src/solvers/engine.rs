@@ -34,7 +34,7 @@ use super::ml::MlIntra;
 use super::random::RandomIntra;
 use super::{
     collect_intra_keys, presolve_contexts, seg_objective, solve_segment_layers, IntraCache,
-    IntraSolver, Objective, SolveResult, SolverKind,
+    IntraSolver, Objective, SolveError, SolveResult, SolverKind,
 };
 
 enum Model<'a> {
@@ -54,7 +54,7 @@ enum Model<'a> {
 /// use kapla::workloads::nets;
 ///
 /// let arch = presets::bench_multi_node();
-/// let r = SolveCtx::new(&arch).run(&nets::mlp(), 8, SolverKind::Kapla);
+/// let r = SolveCtx::new(&arch).run(&nets::mlp(), 8, SolverKind::Kapla).unwrap();
 /// assert_eq!(r.schedule.num_layers(), nets::mlp().len());
 /// ```
 pub struct SolveCtx<'a> {
@@ -124,21 +124,31 @@ impl<'a> SolveCtx<'a> {
     /// Solve one network under the given solver kind. Schedules are
     /// byte-identical for any `dp.solve_threads` and any session/budget
     /// state (the golden battery in `tests/parallel_determinism.rs`).
-    pub fn run(&self, net: &Network, batch: u64, kind: SolverKind) -> SolveResult {
+    /// Degenerate net/arch combinations return a structured [`SolveError`]
+    /// instead of panicking (front ends surface it; the service maps it to
+    /// an error response).
+    pub fn run(
+        &self,
+        net: &Network,
+        batch: u64,
+        kind: SolverKind,
+    ) -> Result<SolveResult, SolveError> {
         match kind {
             SolverKind::Kapla => self.kapla(net, batch),
             SolverKind::Baseline | SolverKind::DirectiveExhaustive => {
                 // The exhaustive scans run on the staged branch-and-bound
                 // enumeration; aggregate its pruning counters across every
                 // intra-layer solve of the run into `SolveResult::bnb`.
+                // Warm sessions may replay recorded argmins, in which case
+                // the skipped scans legitimately report zero visits.
                 let counters = super::space::BnbCounters::new();
                 let intra = ExhaustiveIntra {
                     with_sharing: kind == SolverKind::DirectiveExhaustive,
                     stats: Some(&counters),
                 };
-                let mut r = self.exact_dp(net, batch, &intra);
+                let mut r = self.exact_dp(net, batch, &intra)?;
                 r.bnb = Some(counters.snapshot());
-                r
+                Ok(r)
             }
             SolverKind::Random { p, seed } => self.exact_dp(net, batch, &RandomIntra::new(p, seed)),
             SolverKind::Ml { seed, rounds, batch: sa_batch } => {
@@ -159,7 +169,12 @@ impl<'a> SolveCtx<'a> {
     /// not depend on DP state, only the chain costs do, so the sequential
     /// DP afterwards is pure cache assembly and the result is identical to
     /// the single-threaded run.
-    pub fn exact_dp(&self, net: &Network, batch: u64, intra: &dyn IntraSolver) -> SolveResult {
+    pub fn exact_dp(
+        &self,
+        net: &Network,
+        batch: u64,
+        intra: &dyn IntraSolver,
+    ) -> Result<SolveResult, SolveError> {
         let timer = crate::util::Timer::start();
         let (arch, obj, cfg) = (self.arch, self.objective, &self.dp);
         let model = self.cost_model();
@@ -233,11 +248,12 @@ impl<'a> SolveCtx<'a> {
                     }
                 }
             }
-            assert!(
-                table[i].is_some(),
-                "no valid schedule ends at layer {i} ({})",
-                net.layers[i].name
-            );
+            if table[i].is_none() {
+                return Err(SolveError::Unschedulable {
+                    layer: i,
+                    layer_name: net.layers[i].name.clone(),
+                });
+            }
         }
 
         // Reconstruct.
@@ -251,14 +267,14 @@ impl<'a> SolveCtx<'a> {
         segments.reverse();
         let schedule = Schedule { segments };
         let eval = evaluate_schedule(arch, net, &schedule);
-        SolveResult {
+        Ok(SolveResult {
             schedule,
             eval,
             solve_s: timer.elapsed_s(),
             cache: model.stats(),
             prune: None,
             bnb: None,
-        }
+        })
     }
 
     /// Full KAPLA network scheduling (paper §IV): estimate-tier inter-layer
@@ -269,11 +285,11 @@ impl<'a> SolveCtx<'a> {
     /// all top-k_S chains are solved first across the scoped worker pool;
     /// the chain assembly afterwards only reads the memo, so the schedule
     /// is identical to the sequential run for any thread count.
-    pub fn kapla(&self, net: &Network, batch: u64) -> SolveResult {
+    pub fn kapla(&self, net: &Network, batch: u64) -> Result<SolveResult, SolveError> {
         let timer = crate::util::Timer::start();
         let (arch, obj, cfg) = (self.arch, self.objective, &self.dp);
         let model = self.cost_model();
-        let (chains, stats) = best_chains(arch, net, batch, cfg, model);
+        let (chains, stats) = best_chains(arch, net, batch, cfg, model)?;
         let intra = KaplaIntra;
         let mut cache: IntraCache = HashMap::new();
 
@@ -310,31 +326,37 @@ impl<'a> SolveCtx<'a> {
             }
         }
 
-        // Fallback: all-singleton chain (always realizable).
+        // Fallback: all-singleton chain (realizable whenever the network
+        // is schedulable at all; a layer that defeats even this returns a
+        // structured error instead of panicking the caller).
         let schedule = match best {
             Some((_, s)) => s,
             None => {
                 let mut segments = Vec::new();
                 for i in 0..net.len() {
                     let seg = Segment::single(i, arch);
-                    let schemes = solve_segment_layers(
+                    let Some(schemes) = solve_segment_layers(
                         arch, net, batch, &seg, &intra, obj, &mut cache, model,
-                    )
-                    .expect("even singleton segment unschedulable");
+                    ) else {
+                        return Err(SolveError::Unschedulable {
+                            layer: i,
+                            layer_name: net.layers[i].name.clone(),
+                        });
+                    };
                     segments.push((seg, schemes));
                 }
                 Schedule { segments }
             }
         };
         let eval = evaluate_schedule(arch, net, &schedule);
-        SolveResult {
+        Ok(SolveResult {
             schedule,
             eval,
             solve_s: timer.elapsed_s(),
             cache: model.stats(),
             prune: Some(stats),
             bnb: None,
-        }
+        })
     }
 }
 
@@ -374,7 +396,7 @@ mod tests {
     fn exact_dp_produces_full_coverage() {
         let arch = presets::bench_multi_node();
         let net = small_net();
-        let r = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal);
+        let r = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len());
         assert!(r.eval.energy.total() > 0.0);
         assert!(r.prune.is_none());
@@ -390,8 +412,11 @@ mod tests {
     fn exact_dp_objective_latency_differs() {
         let arch = presets::bench_multi_node();
         let net = small_net();
-        let re = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal);
-        let rl = SolveCtx::new(&arch).objective(Objective::Latency).exact_dp(&net, 4, &Minimal);
+        let re = SolveCtx::new(&arch).exact_dp(&net, 4, &Minimal).unwrap();
+        let rl = SolveCtx::new(&arch)
+            .objective(Objective::Latency)
+            .exact_dp(&net, 4, &Minimal)
+            .unwrap();
         // Latency-optimized schedule can't have worse latency than the
         // energy-optimized one (same space, different objective).
         assert!(rl.eval.latency_cycles <= re.eval.latency_cycles + 1e-6);
@@ -401,7 +426,7 @@ mod tests {
     fn works_on_mlp_at_edge() {
         let arch = presets::edge_tpu();
         let net = nets::mlp();
-        let r = SolveCtx::new(&arch).exact_dp(&net, 1, &Minimal);
+        let r = SolveCtx::new(&arch).exact_dp(&net, 1, &Minimal).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len());
         for (seg, _) in &r.schedule.segments {
             assert_eq!(seg.len(), 1); // single node: no pipelining
@@ -414,10 +439,12 @@ mod tests {
         let net = small_net();
         let seq = SolveCtx::new(&arch)
             .dp(DpConfig { solve_threads: 1, ..DpConfig::default() })
-            .exact_dp(&net, 4, &Minimal);
+            .exact_dp(&net, 4, &Minimal)
+            .unwrap();
         let par = SolveCtx::new(&arch)
             .dp(DpConfig { solve_threads: 4, ..DpConfig::default() })
-            .exact_dp(&net, 4, &Minimal);
+            .exact_dp(&net, 4, &Minimal)
+            .unwrap();
         assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
         assert_eq!(seq.eval.latency_cycles, par.eval.latency_cycles);
         assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
@@ -435,7 +462,7 @@ mod tests {
             SolverKind::Ml { seed: 1, rounds: 4, batch: 16 },
             SolverKind::Kapla,
         ] {
-            let r = ctx.run(&net, 8, kind);
+            let r = ctx.run(&net, 8, kind).unwrap();
             assert_eq!(r.schedule.num_layers(), net.len(), "{kind:?}");
             assert!(r.eval.energy.total() > 0.0, "{kind:?}");
             assert_eq!(r.prune.is_some(), kind == SolverKind::Kapla, "{kind:?}");
@@ -454,17 +481,49 @@ mod tests {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
         let dp = DpConfig { max_rounds: 8, ..DpConfig::default() };
-        let solo = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla);
+        let solo = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla).unwrap();
         let session = SessionCache::unbounded();
-        let a = SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla);
-        let b = SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla);
+        let a =
+            SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla).unwrap();
+        let b =
+            SolveCtx::new(&arch).dp(dp).session(&session).run(&net, 8, SolverKind::Kapla).unwrap();
         for r in [&a, &b] {
             assert_eq!(format!("{:?}", r.schedule), format!("{:?}", solo.schedule));
             assert_eq!(r.eval.energy.total(), solo.eval.energy.total());
         }
-        // Warm repeat answered every evaluation from the session memo.
-        assert!(b.cache.hits > a.cache.hits);
+        // Warm repeat replayed every recorded intra-layer argmin — the
+        // scans (and their per-candidate evaluations) never ran at all.
+        assert!(b.cache.intra_hits > a.cache.intra_hits);
+        assert_eq!(b.cache.lookups, a.cache.lookups);
         assert_eq!(b.cache.entries, a.cache.entries);
+    }
+
+    #[test]
+    fn degenerate_net_returns_structured_error_not_panic() {
+        // A row-stationary unit block holds a full per-node input plane,
+        // so a conv with an 8192x8192 output plane (~4M-word ifm even
+        // under the deepest 4x4 spatial split, vs a 16K-word GBUF) admits
+        // no valid scheme at all. The engine must report that as a
+        // SolveError (the service maps it to an error response) instead
+        // of panicking a long-running caller.
+        let arch = presets::bench_multi_node();
+        let mut net = Network::new("degenerate", 8, 8192, 8192);
+        net.chain(Layer::conv("galaxy", 8, 8, 8192, 3, 1));
+        let err = SolveCtx::new(&arch)
+            .run(&net, 1, SolverKind::Baseline)
+            .err()
+            .expect("a full-plane 8192^2 conv cannot schedule on 16K-word GBUFs");
+        match &err {
+            SolveError::Unschedulable { layer, layer_name } => {
+                assert_eq!(*layer, 0);
+                assert_eq!(layer_name, "galaxy");
+            }
+            other => panic!("expected Unschedulable, got {other:?}"),
+        }
+        assert!(err.to_string().contains("galaxy"));
+        // The KAPLA path reports the same failure through its fallback.
+        let err = SolveCtx::new(&arch).run(&net, 1, SolverKind::Kapla).err().expect("kapla");
+        assert!(matches!(err, SolveError::Unschedulable { .. }));
     }
 
     #[test]
@@ -495,8 +554,9 @@ mod tests {
         let net = nets::mlp();
         let counting = Counting { inner: TieredCost::fresh(), calls: AtomicU64::new(0) };
         let dp = DpConfig { max_rounds: 8, ..DpConfig::default() };
-        let r = SolveCtx::new(&arch).dp(dp).model(&counting).run(&net, 8, SolverKind::Kapla);
-        let baseline = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla);
+        let r =
+            SolveCtx::new(&arch).dp(dp).model(&counting).run(&net, 8, SolverKind::Kapla).unwrap();
+        let baseline = SolveCtx::new(&arch).dp(dp).run(&net, 8, SolverKind::Kapla).unwrap();
         assert!(counting.calls.load(Ordering::Relaxed) > 0, "model must be consulted");
         assert_eq!(format!("{:?}", r.schedule), format!("{:?}", baseline.schedule));
     }

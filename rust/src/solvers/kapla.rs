@@ -437,10 +437,12 @@ mod tests {
         let net = nets::mlp();
         let seq = SolveCtx::new(&arch)
             .dp(DpConfig { solve_threads: 1, ..DpConfig::default() })
-            .run(&net, 16, SolverKind::Kapla);
+            .run(&net, 16, SolverKind::Kapla)
+            .unwrap();
         let par = SolveCtx::new(&arch)
             .dp(DpConfig { solve_threads: 4, ..DpConfig::default() })
-            .run(&net, 16, SolverKind::Kapla);
+            .run(&net, 16, SolverKind::Kapla)
+            .unwrap();
         assert_eq!(seq.eval.energy.total(), par.eval.energy.total());
         assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", par.schedule));
     }
@@ -449,7 +451,7 @@ mod tests {
     fn full_schedule_mlp() {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
-        let r = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla);
+        let r = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len());
         assert!(r.eval.energy.total() > 0.0);
         assert!(r.prune.expect("kapla reports prune stats").total > 0);
@@ -459,10 +461,11 @@ mod tests {
     fn latency_objective_not_slower() {
         let arch = presets::bench_multi_node();
         let net = nets::mlp();
-        let re = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla);
+        let re = SolveCtx::new(&arch).run(&net, 16, SolverKind::Kapla).unwrap();
         let rl = SolveCtx::new(&arch)
             .objective(Objective::Latency)
-            .run(&net, 16, SolverKind::Kapla);
+            .run(&net, 16, SolverKind::Kapla)
+            .unwrap();
         assert!(rl.eval.latency_cycles <= re.eval.latency_cycles * 1.25);
     }
 }

@@ -238,6 +238,27 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         "ml-annealing(M)"
     }
 
+    /// Folds every annealing knob plus the predictor factory identity into
+    /// the cross-job argmin memo key. The factory is identified by its
+    /// concrete type name and function address — stable within one
+    /// process, which is exactly the memo's lifetime — so two `MlIntra`
+    /// values with different surrogates (native vs PJRT) never alias.
+    fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a(
+            self.name()
+                .bytes()
+                .chain(std::any::type_name::<P>().bytes())
+                .map(u64::from)
+                .chain([
+                    self.rounds as u64,
+                    self.batch as u64,
+                    self.evals_per_round as u64,
+                    self.seed,
+                    self.make_predictor as usize as u64,
+                ]),
+        )
+    }
+
     fn solve(
         &self,
         arch: &ArchConfig,

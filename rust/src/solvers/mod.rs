@@ -195,6 +195,37 @@ impl SolverKind {
     }
 }
 
+/// A structured scheduling failure. Degenerate net/arch combinations used
+/// to panic deep inside the DP (killing a long-running serve loop on one
+/// bad request); every solver path now surfaces them through
+/// `SolveCtx::run`, and the service maps them to `{"ok":false,...}`
+/// responses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SolveError {
+    /// The inter-layer DP found no valid segment chain ending at `layer`.
+    NoChain { layer: usize, layer_name: String },
+    /// No intra-layer scheme realizes `layer` on this hardware — even the
+    /// minimal unit-block mapping overflows the buffers.
+    Unschedulable { layer: usize, layer_name: String },
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::NoChain { layer, layer_name } => {
+                write!(f, "no valid segment chain ends at layer {layer} ({layer_name})")
+            }
+            SolveError::Unschedulable { layer, layer_name } => write!(
+                f,
+                "no valid schedule ends at layer {layer} ({layer_name}): no intra-layer \
+                 scheme fits the hardware"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
 /// Context handed to an intra-layer solver for one layer of one segment.
 #[derive(Debug, Clone, Copy)]
 pub struct IntraCtx {
@@ -229,6 +260,18 @@ pub trait IntraSolver: Sync {
         ctx: &IntraCtx,
         model: &dyn CostModel,
     ) -> Option<LayerScheme>;
+
+    /// Deterministic identity of this solver's *search space and policy*:
+    /// two solver values with equal fingerprints must return identical
+    /// schemes for identical `(arch, layer, ctx)` inputs. It keys the
+    /// cross-job intra-argmin memo (`cost::IntraKey`), so stochastic
+    /// solvers MUST override it to fold every knob that changes their
+    /// candidate stream (seed, probabilities, budgets); the default covers
+    /// solvers fully described by their `name()` (KAPLA's descent, the
+    /// exhaustive scans — B and S carry distinct names).
+    fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a(self.name().bytes().map(u64::from))
+    }
 }
 
 /// Deterministic fingerprint of one (layer, context) solve. The stochastic
@@ -292,13 +335,38 @@ pub(crate) fn seg_objective(ev: &crate::sim::pipeline::SegmentEval, obj: Objecti
     }
 }
 
-/// Key of one intra-layer solve: (layer index, region, round batch,
-/// input-forwarded-on-chip).
-pub(crate) type IntraKey = (usize, (u64, u64), u64, bool);
-pub(crate) type IntraCache = HashMap<IntraKey, Option<LayerScheme>>;
+/// Key of one intra-layer solve within a run: (layer index, region, round
+/// batch, input-forwarded-on-chip).
+pub(crate) type IntraSolveKey = (usize, (u64, u64), u64, bool);
+pub(crate) type IntraCache = HashMap<IntraSolveKey, Option<LayerScheme>>;
+
+/// One intra-layer solve, short-circuited by the cross-job argmin memo:
+/// when the model's session has already recorded this exact
+/// `(arch, layer, ctx, solver)` scan — keyed by `cost::IntraKey` over
+/// [`ctx_fingerprint`] and [`IntraSolver::fingerprint`] — the recorded
+/// argmin is replayed and the scan never runs. Solvers are pure per
+/// context, so replaying changes *when* searches run, never what any
+/// schedule looks like (the golden battery and
+/// `tests/planner_equivalence.rs` pin cold == warm byte-identically).
+pub(crate) fn solve_ctx_memoized(
+    arch: &ArchConfig,
+    layer: &Layer,
+    ctx: &IntraCtx,
+    intra: &dyn IntraSolver,
+    model: &dyn CostModel,
+) -> Option<LayerScheme> {
+    let key = crate::cost::IntraKey::of(arch, ctx_fingerprint(layer, ctx), intra.fingerprint());
+    if let Some(recorded) = model.intra_argmin(&key) {
+        return recorded;
+    }
+    let s = intra.solve(arch, layer, ctx, model);
+    model.record_intra_argmin(key, s);
+    s
+}
 
 /// Solve every layer of a segment with the given intra-layer solver,
-/// memoizing per (layer, region, round-batch, forwarding) context.
+/// memoizing per (layer, region, round-batch, forwarding) context within
+/// the run and through the cross-job argmin memo across runs.
 pub(crate) fn solve_segment_layers(
     arch: &ArchConfig,
     net: &Network,
@@ -317,7 +385,7 @@ pub(crate) fn solve_segment_layers(
         let entry = cache.entry(key).or_insert_with(|| {
             let ctx =
                 IntraCtx { region: seg.regions[pos], rb, ifm_on_chip: on_chip, objective: obj };
-            intra.solve(arch, &net.layers[li], &ctx, model)
+            solve_ctx_memoized(arch, &net.layers[li], &ctx, intra, model)
         });
         match entry {
             Some(s) => out.push(*s),
@@ -333,9 +401,9 @@ pub(crate) fn collect_intra_keys<'a>(
     net: &Network,
     batch: u64,
     segs: impl Iterator<Item = &'a Segment>,
-) -> Vec<IntraKey> {
+) -> Vec<IntraSolveKey> {
     let mut keys = Vec::new();
-    let mut seen: HashSet<IntraKey> = HashSet::new();
+    let mut seen: HashSet<IntraSolveKey> = HashSet::new();
     for seg in segs {
         let rb = seg.round_batch(batch);
         for (pos, &li) in seg.layers.iter().enumerate() {
@@ -355,7 +423,7 @@ pub(crate) fn collect_intra_keys<'a>(
 pub(crate) fn presolve_contexts(
     arch: &ArchConfig,
     net: &Network,
-    keys: Vec<IntraKey>,
+    keys: Vec<IntraSolveKey>,
     intra: &dyn IntraSolver,
     obj: Objective,
     threads: usize,
@@ -364,7 +432,7 @@ pub(crate) fn presolve_contexts(
 ) {
     let solved = crate::util::par_map(&keys, threads, |&(li, region, rb, on_chip)| {
         let ctx = IntraCtx { region, rb, ifm_on_chip: on_chip, objective: obj };
-        intra.solve(arch, &net.layers[li], &ctx, model)
+        solve_ctx_memoized(arch, &net.layers[li], &ctx, intra, model)
     });
     for (key, s) in keys.into_iter().zip(solved) {
         cache.insert(key, s);

@@ -52,6 +52,18 @@ impl IntraSolver for RandomIntra {
         "random(R)"
     }
 
+    /// Every knob that shapes the sampling stream must key the cross-job
+    /// argmin memo: two `RandomIntra` values differing in `p`, `seed` or
+    /// the retry budget legitimately return different schemes for the same
+    /// context and must never alias.
+    fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a(self.name().bytes().map(u64::from).chain([
+            self.p.to_bits(),
+            self.retries as u64,
+            self.seed,
+        ]))
+    }
+
     fn solve(
         &self,
         arch: &ArchConfig,

@@ -42,7 +42,7 @@ fn every_solver_schedules_tiny_net() {
         SolverKind::Kapla,
     ] {
         let j = job(tiny_net(), solver);
-        let r = run_job(&arch, &j);
+        let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), 4, "{solver:?}");
         assert!(r.eval.energy.total() > 0.0);
         // Every scheme in the schedule is valid.
@@ -61,9 +61,9 @@ fn kapla_quality_band_vs_exhaustive() {
     // directive space lets K dip slightly below B).
     let arch = presets::bench_multi_node();
     let jb = job(tiny_net(), SolverKind::Baseline);
-    let b = run_job(&arch, &jb);
+    let b = run_job(&arch, &jb).unwrap();
     let jk = job(tiny_net(), SolverKind::Kapla);
-    let k = run_job(&arch, &jk);
+    let k = run_job(&arch, &jk).unwrap();
     let ratio = k.eval.energy.total() / b.eval.energy.total();
     assert!((0.7..=1.2).contains(&ratio), "K/B = {ratio:.3}");
     assert!(k.solve_s < b.solve_s, "K ({}) not faster than B ({})", k.solve_s, b.solve_s);
@@ -73,14 +73,14 @@ fn kapla_quality_band_vs_exhaustive() {
 fn random_and_ml_bounded_below_by_exhaustive() {
     let arch = presets::bench_multi_node();
     let jb = job(tiny_net(), SolverKind::Baseline);
-    let b = run_job(&arch, &jb);
+    let b = run_job(&arch, &jb).unwrap();
     // R and M search subsets of B's space (same partitions, same blocks),
     // so they cannot beat it.
     for solver in
         [SolverKind::Random { p: 0.1, seed: 3 }, SolverKind::Ml { seed: 3, rounds: 4, batch: 16 }]
     {
         let j = job(tiny_net(), solver);
-        let r = run_job(&arch, &j);
+        let r = run_job(&arch, &j).unwrap();
         assert!(
             r.eval.energy.total() >= b.eval.energy.total() * 0.999,
             "{solver:?} beat exhaustive: {} vs {}",
@@ -95,8 +95,8 @@ fn deterministic_schedules() {
     let arch = presets::bench_multi_node();
     for solver in [SolverKind::Kapla, SolverKind::Random { p: 0.2, seed: 9 }] {
         let ja = job(tiny_net(), solver);
-        let a = run_job(&arch, &ja);
-        let b = run_job(&arch, &ja);
+        let a = run_job(&arch, &ja).unwrap();
+        let b = run_job(&arch, &ja).unwrap();
         assert_eq!(a.eval.energy.total(), b.eval.energy.total(), "{solver:?}");
         assert_eq!(a.schedule.segments.len(), b.schedule.segments.len());
     }
@@ -105,7 +105,7 @@ fn deterministic_schedules() {
 #[test]
 fn emitted_directives_of_solved_schedule_roundtrip() {
     let arch = presets::bench_multi_node();
-    let r = run_job(&arch, &job(tiny_net(), SolverKind::Kapla));
+    let r = run_job(&arch, &job(tiny_net(), SolverKind::Kapla)).unwrap();
     let net = tiny_net();
     for (seg, schemes) in &r.schedule.segments {
         for (pos, s) in schemes.iter().enumerate() {
@@ -134,7 +134,7 @@ fn all_nets_schedule_with_kapla_on_paper_arch() {
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
         };
-        let r = run_job(&arch, &j);
+        let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{}", net.name);
         // Re-evaluating the schedule reproduces the reported numbers.
         let re = evaluate_schedule(&arch, &net, &r.schedule);
@@ -154,7 +154,7 @@ fn training_graphs_schedule_with_kapla() {
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
         };
-        let r = run_job(&arch, &j);
+        let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{name}");
     }
 }
@@ -170,7 +170,7 @@ fn edge_arch_schedules_all_nets_batch1() {
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
         };
-        let r = run_job(&arch, &j);
+        let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{}", net.name);
         for (seg, _) in &r.schedule.segments {
             assert!(!seg.spatial, "single-node arch cannot pipeline");
@@ -182,9 +182,9 @@ fn edge_arch_schedules_all_nets_batch1() {
 fn latency_objective_improves_latency() {
     let arch = presets::bench_multi_node();
     let je = job(tiny_net(), SolverKind::Kapla);
-    let e = run_job(&arch, &je);
+    let e = run_job(&arch, &je).unwrap();
     let mut jl = job(tiny_net(), SolverKind::Kapla);
     jl.objective = Objective::Latency;
-    let l = run_job(&arch, &jl);
+    let l = run_job(&arch, &jl).unwrap();
     assert!(l.eval.latency_cycles <= e.eval.latency_cycles * 1.05);
 }

@@ -47,8 +47,8 @@ fn parallel_run_job_is_byte_identical_for_every_solver() {
         SolverKind::Ml { seed: 1, rounds: 4, batch: 16 },
         SolverKind::Kapla,
     ] {
-        let seq = run_job(&arch, &job(solver, 1));
-        let par = run_job(&arch, &job(solver, 4));
+        let seq = run_job(&arch, &job(solver, 1)).unwrap();
+        let par = run_job(&arch, &job(solver, 4)).unwrap();
         // Exact equality, not tolerance: the parallel path must assemble
         // the same schemes in the same order from the same evaluations.
         assert_eq!(
@@ -72,8 +72,8 @@ fn parallel_run_job_is_byte_identical_for_every_solver() {
 #[test]
 fn thread_count_beyond_work_is_harmless() {
     let arch = presets::bench_multi_node();
-    let seq = run_job(&arch, &job(SolverKind::Kapla, 1));
-    let wide = run_job(&arch, &job(SolverKind::Kapla, 64));
+    let seq = run_job(&arch, &job(SolverKind::Kapla, 1)).unwrap();
+    let wide = run_job(&arch, &job(SolverKind::Kapla, 64)).unwrap();
     assert_eq!(seq.eval.energy.total(), wide.eval.energy.total());
     assert_eq!(format!("{:?}", seq.schedule), format!("{:?}", wide.schedule));
 }
@@ -172,7 +172,8 @@ fn run_battery(session: Option<&SessionCache>, threads: usize) -> String {
             let r = match session {
                 Some(s) => run_job_with(&arch, &job, s),
                 None => run_job(&arch, &job),
-            };
+            }
+            .expect("battery job must schedule");
             out.push_str(&snapshot_result(&net, solver, &r));
         }
     }
@@ -236,17 +237,15 @@ fn golden_schedules_cold_warm_shared_bounded_and_threads() {
     let st1 = session.stats();
     assert!(st1.lookups > 0 && st1.entries > 0);
 
-    // Warm: the same battery again on the now-hot session.
+    // Warm: the same battery again on the now-hot session. Since the
+    // intra-argmin memo replays every recorded scan, the warm pass issues
+    // no new detailed evaluations at all — the searches never run.
     let warm = run_battery(Some(&session), 1);
     assert_eq!(golden, warm, "warm-cache schedules diverged from cold");
     let st2 = session.stats();
     assert_eq!(st1.entries, st2.entries, "warm pass must add no entries");
-    assert_eq!(
-        st2.hits - st1.hits,
-        st2.lookups - st1.lookups,
-        "warm pass must answer every evaluation from the memo"
-    );
-    assert!(st2.hits > st1.hits, "cross-job reuse must actually occur");
+    assert_eq!(st2.lookups, st1.lookups, "warm pass must replay scans, not re-run them");
+    assert!(st2.intra_hits > st1.intra_hits, "cross-job argmin reuse must actually occur");
 
     // N worker threads.
     let par = run_battery(None, 4);

@@ -1,0 +1,246 @@
+//! Property battery for the staged inter-layer planner: chain-level
+//! branch-and-bound and the cross-job intra-argmin memo are
+//! *optimizations*, never semantic changes. This file pins
+//!
+//! 1. `best_chains` (lazy + bound-pruned) against a verbatim reference
+//!    copy of the pre-refactor eager pipeline (materialize every span's
+//!    schemes, `prune_and_rank`, stable sort-and-truncate DP) — chains
+//!    byte-identical, on two nets;
+//! 2. every solver's *final schedule* byte-identical across pruned/full
+//!    planning, cold/warm sessions (the argmin memo replaying scans), and
+//!    1-vs-4 worker threads, on two nets x both objectives;
+//! 3. the acceptance counters: nonzero span-level prune counters and
+//!    nonzero warm-session memo hits on a zoo net.
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_job, run_job_with, Job, SolverKind};
+use kapla::cost::{CostModel, SessionCache, TieredCost};
+use kapla::interlayer::dp::{best_chains, DpConfig};
+use kapla::interlayer::planner::Planner;
+use kapla::interlayer::prune::prune_and_rank;
+use kapla::interlayer::{candidate_spans, enumerate_segment_schemes, Segment};
+use kapla::solvers::Objective;
+use kapla::workloads::{nets, Layer, Network};
+
+// ---------------------------------------------------------------------------
+// Reference: the pre-refactor eager inter-layer DP, kept verbatim (modulo
+// the NaN-safe comparator) so the staged planner has a frozen behavioral
+// oracle that does not share code with it.
+
+struct RefNode {
+    cost: f64,
+    seg: Segment,
+    parent: Option<(usize, usize)>,
+}
+
+fn reference_best_chains(
+    arch: &kapla::arch::ArchConfig,
+    net: &Network,
+    batch: u64,
+    cfg: &DpConfig,
+    model: &dyn CostModel,
+) -> Vec<(f64, Vec<Segment>)> {
+    let n = net.len();
+    let mut table: Vec<Vec<RefNode>> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut cands: Vec<RefNode> = Vec::new();
+        for span in candidate_spans(i, cfg.max_seg_len) {
+            let start = span[0];
+            let schemes = enumerate_segment_schemes(net, arch, batch, &span, cfg.max_rounds);
+            let (mut ranked, _) = prune_and_rank(arch, net, batch, schemes, model);
+            ranked.truncate(cfg.top_per_span);
+            for r in ranked {
+                if start == 0 {
+                    cands.push(RefNode { cost: r.est.score(), seg: r.seg, parent: None });
+                } else {
+                    for (rank, prev) in table[start - 1].iter().enumerate() {
+                        cands.push(RefNode {
+                            cost: r.est.score() + prev.cost,
+                            seg: r.seg.clone(),
+                            parent: Some((start - 1, rank)),
+                        });
+                    }
+                }
+            }
+        }
+        cands.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+        cands.truncate(cfg.ks.max(1));
+        assert!(!cands.is_empty(), "reference: no chain ends at layer {i}");
+        table.push(cands);
+    }
+    let last = n - 1;
+    let mut out = Vec::new();
+    for rank in 0..table[last].len() {
+        let mut segments = Vec::new();
+        let mut cur = Some((last, rank));
+        while let Some((li, r)) = cur {
+            segments.push(table[li][r].seg.clone());
+            cur = table[li][r].parent;
+        }
+        segments.reverse();
+        out.push((table[last][rank].cost, segments));
+    }
+    out
+}
+
+fn chains_snapshot(chains: &[(f64, Vec<Segment>)]) -> String {
+    chains.iter().map(|(c, segs)| format!("{c:?} {segs:?}\n")).collect()
+}
+
+#[test]
+fn planner_matches_the_reference_eager_pipeline() {
+    let arch = presets::multi_node_eyeriss();
+    let model = TieredCost::fresh();
+    for net in [nets::mlp(), nets::alexnet()] {
+        for cfg in [
+            DpConfig::default(),
+            DpConfig { ks: 1, top_per_span: 1, ..DpConfig::default() },
+            DpConfig { max_seg_len: 3, max_rounds: 16, ..DpConfig::default() },
+        ] {
+            let want = reference_best_chains(&arch, &net, 64, &cfg, &model);
+            let (got, stats) = best_chains(&arch, &net, 64, &cfg, &model).unwrap();
+            let got: Vec<(f64, Vec<Segment>)> =
+                got.into_iter().map(|c| (c.cost, c.segments)).collect();
+            assert_eq!(
+                chains_snapshot(&want),
+                chains_snapshot(&got),
+                "{} {cfg:?}: planner diverged from the eager reference",
+                net.name
+            );
+            assert!(stats.spans_total > 0);
+
+            // Full (bound off) mode matches too, and never prunes.
+            let (full, fstats) = Planner::new(&arch, &net, 64, &cfg, &model)
+                .bound_prune(false)
+                .chains()
+                .unwrap();
+            let full: Vec<(f64, Vec<Segment>)> =
+                full.into_iter().map(|c| (c.cost, c.segments)).collect();
+            assert_eq!(chains_snapshot(&want), chains_snapshot(&full));
+            assert_eq!(fstats.spans_pruned + fstats.schemes_bound_pruned, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver-level battery: schedules byte-identical across pruned/full
+// planning, cold/warm sessions and thread counts.
+
+fn tiny_net() -> Network {
+    let mut n = Network::new("tiny", 8, 28, 28);
+    n.chain(Layer::conv("c1", 8, 16, 28, 3, 1));
+    n.chain(Layer::pool("p1", 16, 14, 2, 2));
+    n.chain(Layer::conv("c2", 16, 32, 14, 3, 1));
+    n.chain(Layer::fc("f1", 32 * 14 * 14, 64));
+    n
+}
+
+fn snapshot(r: &kapla::solvers::SolveResult) -> String {
+    format!(
+        "{:?} {:?} {:?}",
+        r.eval.energy.total(),
+        r.eval.latency_cycles,
+        r.schedule
+    )
+}
+
+#[test]
+fn schedules_identical_across_memo_threads_and_sessions() {
+    let arch = presets::bench_multi_node();
+    for net in [nets::mlp(), tiny_net()] {
+        for objective in [Objective::Energy, Objective::Latency] {
+            for solver in [SolverKind::Kapla, SolverKind::Baseline] {
+                let job = |threads: usize| Job {
+                    net: net.clone(),
+                    batch: 4,
+                    objective,
+                    solver,
+                    dp: DpConfig {
+                        max_rounds: 4,
+                        max_seg_len: 3,
+                        solve_threads: threads,
+                        ..DpConfig::default()
+                    },
+                };
+                let tag = format!("{}/{objective:?}/{}", net.name, solver.letter());
+                // Cold solitary run: the golden reference.
+                let cold = run_job(&arch, &job(1)).unwrap();
+                // 1-vs-4 worker threads.
+                let par = run_job(&arch, &job(4)).unwrap();
+                assert_eq!(snapshot(&cold), snapshot(&par), "{tag}: threads diverged");
+                // Cold session, then a warm repeat replaying the recorded
+                // argmins.
+                let session = SessionCache::unbounded();
+                let s1 = run_job_with(&arch, &job(1), &session).unwrap();
+                let s2 = run_job_with(&arch, &job(1), &session).unwrap();
+                assert_eq!(snapshot(&cold), snapshot(&s1), "{tag}: session diverged");
+                assert_eq!(snapshot(&cold), snapshot(&s2), "{tag}: warm session diverged");
+                assert!(
+                    s2.cache.intra_hits > s1.cache.intra_hits,
+                    "{tag}: warm run must replay recorded argmins"
+                );
+                assert_eq!(
+                    s2.cache.lookups, s1.cache.lookups,
+                    "{tag}: warm run must not re-run any scan"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn span_prune_counters_fire_on_a_zoo_net() {
+    // Acceptance: `SolveResult` reports nonzero span-level prune counters
+    // for at least one zoo net. k_S = 1 gives the tightest incumbent, so
+    // the chain-level bound provably has something to cut on AlexNet's
+    // pipelined spans.
+    let arch = presets::multi_node_eyeriss();
+    let job = Job {
+        net: nets::alexnet(),
+        batch: 64,
+        objective: Objective::Energy,
+        solver: SolverKind::Kapla,
+        dp: DpConfig { ks: 1, top_per_span: 1, ..DpConfig::default() },
+    };
+    let r = run_job(&arch, &job).unwrap();
+    let prune = r.prune.expect("kapla path reports planner stats");
+    assert!(prune.spans_total > 0);
+    assert!(
+        prune.spans_pruned + prune.schemes_bound_pruned > 0,
+        "expected span-level pruning on alexnet with k_S=1: {prune:?}"
+    );
+    // ... and pruning never changed the result vs the unpruned planner.
+    let model = TieredCost::fresh();
+    let full = Planner::new(&arch, &job.net, 64, &job.dp, &model)
+        .bound_prune(false)
+        .chains()
+        .unwrap()
+        .0;
+    let pruned = best_chains(&arch, &job.net, 64, &job.dp, &model).unwrap().0;
+    assert_eq!(
+        format!("{:?}", full.iter().map(|c| (c.cost, &c.segments)).collect::<Vec<_>>()),
+        format!("{:?}", pruned.iter().map(|c| (c.cost, &c.segments)).collect::<Vec<_>>()),
+    );
+}
+
+#[test]
+fn warm_session_reports_memo_hits_on_a_zoo_net() {
+    // Acceptance: memo hits on warm sessions for at least one zoo net.
+    let arch = presets::bench_multi_node();
+    let job = Job {
+        net: nets::mlp(),
+        batch: 8,
+        objective: Objective::Energy,
+        solver: SolverKind::Kapla,
+        dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+    };
+    let session = SessionCache::unbounded();
+    let cold = run_job_with(&arch, &job, &session).unwrap();
+    assert_eq!(cold.cache.intra_hits, 0, "nothing recorded yet");
+    assert!(cold.cache.intra_lookups > 0, "scans must consult the memo");
+    let warm = run_job_with(&arch, &job, &session).unwrap();
+    assert!(warm.cache.intra_hits > 0, "warm session must report memo hits");
+    assert_eq!(snapshot(&cold), snapshot(&warm));
+    assert!(session.intra_len() > 0);
+    assert!(session.intra_hits() > 0);
+}

@@ -166,11 +166,11 @@ fn cache_stress() {
         solver: SolverKind::Kapla,
         dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
     };
-    let golden = run_job(&arch, &job);
+    let golden = run_job(&arch, &job).unwrap();
 
     let session = SessionCache::new(CacheBudget::entries(budget));
     for pass in 0..2 {
-        let r = run_job_with(&arch, &job, &session);
+        let r = run_job_with(&arch, &job, &session).unwrap();
         assert_eq!(
             format!("{:?}", r.schedule),
             format!("{:?}", golden.schedule),
