@@ -1,6 +1,8 @@
-//! Paper Fig. 7: dataflow energy for *training* on multi-node Eyeriss-like
-//! accelerators (batch 64), all five solvers (B S R M K), normalized to B,
-//! with the per-component energy breakdown for B and K.
+//! Paper Fig. 7: dataflow energy for *training* on multi-node accelerators
+//! (batch 64), all five solvers (B S R M K), normalized to B, with the
+//! per-component energy breakdown for B and K — swept under BOTH PE-array
+//! mapping templates (row-stationary and systolic) over full training
+//! graphs (fwd + dX + dW + wu).
 //!
 //! Run: `cargo bench --bench fig7_training_energy`
 //! Scale: 4x4-node config + CI net subset by default; KAPLA_FULL=1 /
@@ -9,51 +11,62 @@
 use kapla::report::benchkit as bk;
 use kapla::report::{eng, Table};
 use kapla::solvers::Objective;
+use kapla::util::json::Json;
 use kapla::util::stats::{fmt_duration, geomean};
 use kapla::workloads::training_graph;
 
 fn main() {
-    let arch = bk::bench_arch();
+    let base = bk::bench_arch();
     let batch = bk::bench_batch();
     let nets = bk::bench_nets(&["alexnet", "mlp"]);
     let solvers = bk::paper_solvers(0.1);
 
     let mut t = Table::new(
-        &format!("Fig.7 — training energy normalized to B (batch {batch}, {})", arch.name),
-        &["network", "B", "S", "R", "M", "K", "K solve", "B solve"],
+        &format!("Fig.7 — training energy normalized to B (batch {batch}, {})", base.name),
+        &["network", "array", "B", "S", "R", "M", "K", "K solve", "B solve"],
     );
     let mut per_solver: Vec<Vec<f64>> = vec![Vec::new(); solvers.len()];
+    let mut rows: Vec<Json> = Vec::new();
     for fwd in &nets {
         let net = training_graph(fwd);
-        eprintln!("[fig7] {} ({} layers)...", net.name, net.len());
-        let results: Vec<_> = solvers
-            .iter()
-            .map(|&s| bk::run_cell(&arch, &net, batch, Objective::Energy, s))
-            .collect();
-        let base = results[0].eval.energy.total();
-        let mut row = vec![fwd.name.clone()];
-        for (i, r) in results.iter().enumerate() {
-            let norm = r.eval.energy.total() / base;
-            per_solver[i].push(norm);
-            row.push(format!("{norm:.3}"));
-        }
-        row.push(fmt_duration(results[4].solve_s));
-        row.push(fmt_duration(results[0].solve_s));
-        t.row(row);
+        // Structural pin: bd + bw + wu present, MACs conserved.
+        bk::check_training_graph(fwd, &net, batch);
+        for df in bk::array_mappings() {
+            let arch = bk::with_mapping(&base, df);
+            let mapping = bk::mapping_label(&arch);
+            eprintln!("[fig7] {} / {} ({} layers)...", net.name, mapping, net.len());
+            let results: Vec<_> = solvers
+                .iter()
+                .map(|&s| bk::run_cell(&arch, &net, batch, Objective::Energy, s))
+                .collect();
+            let base_e = results[0].eval.energy.total();
+            let mut row = vec![fwd.name.clone(), mapping.to_string()];
+            for (i, r) in results.iter().enumerate() {
+                let norm = r.eval.energy.total() / base_e;
+                per_solver[i].push(norm);
+                row.push(format!("{norm:.3}"));
+                let mut j = bk::result_json(&net.name, solvers[i], r);
+                j.set("array", mapping.into());
+                rows.push(j);
+            }
+            row.push(fmt_duration(results[4].solve_s));
+            row.push(fmt_duration(results[0].solve_s));
+            t.row(row);
 
-        // Component breakdown match (paper: "energy breakdowns across major
-        // hardware components also match well").
-        let bb = &results[0].eval.energy;
-        let kb = &results[4].eval.energy;
-        eprintln!(
-            "  breakdown B: dram {} gbuf {} | K: dram {} gbuf {}",
-            eng(bb.dram_pj, "pJ"),
-            eng(bb.gbuf_pj, "pJ"),
-            eng(kb.dram_pj, "pJ"),
-            eng(kb.gbuf_pj, "pJ"),
-        );
+            // Component breakdown match (paper: "energy breakdowns across
+            // major hardware components also match well").
+            let bb = &results[0].eval.energy;
+            let kb = &results[4].eval.energy;
+            eprintln!(
+                "  breakdown B: dram {} gbuf {} | K: dram {} gbuf {}",
+                eng(bb.dram_pj, "pJ"),
+                eng(bb.gbuf_pj, "pJ"),
+                eng(kb.dram_pj, "pJ"),
+                eng(kb.gbuf_pj, "pJ"),
+            );
+        }
     }
-    let mut gm = vec!["geomean".to_string()];
+    let mut gm = vec!["geomean".to_string(), String::new()];
     for s in &per_solver {
         gm.push(format!("{:.3}", geomean(s)));
     }
@@ -63,6 +76,7 @@ fn main() {
 
     let out = t.save_and_render("fig7_training_energy");
     println!("{out}");
+    bk::save_json("fig7_training_energy", &Json::Arr(rows));
     bk::log_section("fig7_training_energy", &out);
     println!(
         "paper shape: K within a few % of B (2.2% avg in paper); R worst/erratic; M between.\n\

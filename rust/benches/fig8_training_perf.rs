@@ -1,45 +1,57 @@
 //! Paper Fig. 8: dataflow *performance* (latency) for training on
-//! multi-node Eyeriss-like accelerators (batch 64), all five solvers
-//! normalized to B — demonstrating that optimizing for performance follows
-//! the same trends as energy ("validates our conjecture of co-optimizing
-//! energy and performance").
+//! multi-node accelerators (batch 64), all five solvers normalized to B —
+//! demonstrating that optimizing for performance follows the same trends
+//! as energy ("validates our conjecture of co-optimizing energy and
+//! performance") — swept under BOTH PE-array mapping templates over full
+//! training graphs (fwd + dX + dW + wu).
 //!
 //! Run: `cargo bench --bench fig8_training_perf`
 
 use kapla::report::benchkit as bk;
 use kapla::report::Table;
 use kapla::solvers::Objective;
+use kapla::util::json::Json;
 use kapla::util::stats::geomean;
 use kapla::workloads::training_graph;
 
 fn main() {
-    let arch = bk::bench_arch();
+    let base = bk::bench_arch();
     let batch = bk::bench_batch();
     let nets = bk::bench_nets(&["alexnet", "mlp"]);
     let solvers = bk::paper_solvers(0.1);
 
     let mut t = Table::new(
-        &format!("Fig.8 — training latency normalized to B (batch {batch}, {})", arch.name),
-        &["network", "B", "S", "R", "M", "K"],
+        &format!("Fig.8 — training latency normalized to B (batch {batch}, {})", base.name),
+        &["network", "array", "B", "S", "R", "M", "K"],
     );
     let mut per_solver: Vec<Vec<f64>> = vec![Vec::new(); solvers.len()];
+    let mut rows: Vec<Json> = Vec::new();
     for fwd in &nets {
         let net = training_graph(fwd);
-        eprintln!("[fig8] {} ({} layers)...", net.name, net.len());
-        let results: Vec<_> = solvers
-            .iter()
-            .map(|&s| bk::run_cell(&arch, &net, batch, Objective::Latency, s))
-            .collect();
-        let base = results[0].eval.latency_cycles;
-        let mut row = vec![fwd.name.clone()];
-        for (i, r) in results.iter().enumerate() {
-            let norm = r.eval.latency_cycles / base;
-            per_solver[i].push(norm);
-            row.push(format!("{norm:.3}"));
+        // Structural pin: bd + bw + wu present, MACs conserved.
+        bk::check_training_graph(fwd, &net, batch);
+        for df in bk::array_mappings() {
+            let arch = bk::with_mapping(&base, df);
+            let mapping = bk::mapping_label(&arch);
+            eprintln!("[fig8] {} / {} ({} layers)...", net.name, mapping, net.len());
+            let results: Vec<_> = solvers
+                .iter()
+                .map(|&s| bk::run_cell(&arch, &net, batch, Objective::Latency, s))
+                .collect();
+            let base_l = results[0].eval.latency_cycles;
+            let mut row = vec![fwd.name.clone(), mapping.to_string()];
+            for (i, r) in results.iter().enumerate() {
+                let norm = r.eval.latency_cycles / base_l;
+                per_solver[i].push(norm);
+                row.push(format!("{norm:.3}"));
+                let mut j = bk::result_json(&net.name, solvers[i], r);
+                j.set("array", mapping.into());
+                rows.push(j);
+            }
+            t.row(row);
         }
-        t.row(row);
     }
-    let mut gm = vec!["geomean".to_string()];
+    let mut gm = vec!["geomean".to_string(), String::new()];
     for s in &per_solver {
         gm.push(format!("{:.3}", geomean(s)));
     }
@@ -47,6 +59,7 @@ fn main() {
 
     let out = t.save_and_render("fig8_training_perf");
     println!("{out}");
+    bk::save_json("fig8_training_perf", &Json::Arr(rows));
     bk::log_section("fig8_training_perf", &out);
     println!("paper shape: same ordering as Fig.7 — performance co-optimizes with energy.");
 }

@@ -57,7 +57,10 @@ impl SchemeKey {
             arch_fp: arch_fingerprint(arch),
             shape: s.unit.shape,
             array: s.unit.array,
-            dataflow: s.unit.dataflow,
+            // The unit map carries its template as a trait object; the
+            // arch's dataflow selector is the same information in hashable
+            // form (UnitMap::build derives one from the other).
+            dataflow: arch.pe_dataflow,
             rs_chunk: s.unit.rs_chunk,
             part: s.part,
             regf: s.regf,

@@ -2,12 +2,14 @@
 //!
 //! The emitted program is the paper's user-facing representation: per
 //! memory level, the resident `tensor`s, the spatial `stack`s and the
-//! temporal `update`s, constructed from the inside out. `parse.rs` reads
-//! the same format back; round-trip equality is tested.
+//! temporal `update`s, constructed from the inside out. The REGF body is
+//! fixed by the hardware template and emitted by the scheme's
+//! [`crate::mapping::ArrayMapping`]; this module owns the level framing,
+//! the GBUF tensors/stacks and the update nests. `parse.rs` reads the
+//! same format back; round-trip equality is tested.
 
 use super::scheme::LayerScheme;
 use super::{Grp, Qty};
-use crate::arch::PeDataflow;
 use crate::workloads::LayerKind;
 use std::fmt::Write as _;
 
@@ -21,6 +23,8 @@ pub fn emit_layer(name: &str, s: &LayerScheme) -> String {
         LayerKind::Pool => "POOL",
         LayerKind::Eltwise => "ELTWISE",
         LayerKind::ConvBwWeight => "CONVBW",
+        LayerKind::ConvBwAct => "CONVBD",
+        LayerKind::DWConvBwAct => "DWCONVBD",
     };
     let _ = writeln!(out, "{kind} {name}:");
     emit_regf(&mut out, name, s);
@@ -28,7 +32,7 @@ pub fn emit_layer(name: &str, s: &LayerScheme) -> String {
     out
 }
 
-fn tensor_line(
+pub(crate) fn tensor_line(
     out: &mut String,
     tag: &str,
     dims: &[(&str, u64)],
@@ -48,42 +52,11 @@ fn update_line(out: &mut String, steps: &[(Grp, u64)], comment: &str) {
     let _ = writeln!(out, "    update({}) % {comment}", body.join(", "));
 }
 
-/// REGF-level directives: per-PE unit tensors, the PE-array stacks fixed by
-/// the hardware dataflow, and the REGF-level update nest.
+/// REGF-level directives: the per-PE unit tensors and PE-array stacks fixed
+/// by the hardware template, then the REGF-level update nest.
 fn emit_regf(out: &mut String, name: &str, s: &LayerScheme) {
     let _ = writeln!(out, "  REGF:");
-    let sh = &s.unit.shape;
-    let q = s.regf.qty;
-    let (ci, ki) = chan_view(s, q);
-    match s.unit.dataflow {
-        PeDataflow::RowStationary => {
-            tensor_line(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.r), ("Yi", 1)], 1);
-            if s.unit.wgt_node_words(Qty::UNIT) > 0 {
-                tensor_line(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", 1)], 1);
-            }
-            tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", 1), ("Yo", 1)], 1);
-            let cols = s.unit.array.0.min(sh.yo);
-            let rows = s.unit.array.1.min(sh.s);
-            let _ = writeln!(out, "    stack(Yi+=1, Yo+=1, {cols}) % PE columns");
-            let _ = writeln!(out, "    stack(S+=1, Yi+=1, {rows}) % PE rows");
-            let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % 1D conv", sh.stride);
-            if sh.yo > cols {
-                let _ = writeln!(out, "    update(Yi+={c}, Yo+={c}) % folding", c = cols);
-            }
-        }
-        PeDataflow::Systolic => {
-            tensor_line(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.xi()), ("Yi", sh.s)], 1);
-            if s.unit.wgt_node_words(Qty::UNIT) > 0 {
-                tensor_line(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)], 1);
-            }
-            tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", 1)], 1);
-            let rows = (s.unit.granule.c * sh.r * sh.s).min(s.unit.array.1);
-            let cols = s.unit.granule.k.min(s.unit.array.0);
-            let _ = writeln!(out, "    stack(C+=1, {rows}) % systolic rows (reduction)");
-            let _ = writeln!(out, "    stack(K+=1, {cols}) % systolic cols");
-            let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % pixel stream", sh.stride);
-        }
-    }
+    s.unit.mapping.emit_regf(out, name, s);
     emit_updates(out, s.regf_trips(), s.regf.order, s.regf.qty, s);
 }
 
@@ -94,10 +67,7 @@ fn emit_gbuf(out: &mut String, name: &str, s: &LayerScheme) {
     let sh = &s.unit.shape;
     let q = s.gbuf.qty;
     let (ci, ki) = chan_view(s, q);
-    let (ifm_y, ofm_y) = match s.unit.dataflow {
-        PeDataflow::RowStationary => (sh.yi(), sh.yo),
-        PeDataflow::Systolic => (sh.s, 1),
-    };
+    let (ifm_y, ofm_y) = s.unit.mapping.gbuf_fmap_rows(sh);
     tensor_line(
         out,
         &format!("{name}_i"),
@@ -105,14 +75,24 @@ fn emit_gbuf(out: &mut String, name: &str, s: &LayerScheme) {
         s.part.ifm_shr(),
     );
     if s.unit.wgt_node_words(Qty::UNIT) > 0 {
-        tensor_line(
-            out,
-            &format!("{name}_w"),
-            &[("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)],
-            s.part.wgt_shr(),
-        );
+        let wdims: [(&str, u64); 4] = match sh.kind {
+            // One filter per channel: trivial C axis, channels in K.
+            LayerKind::DWConv | LayerKind::DWConvBwAct => {
+                [("C", 1), ("K", ki), ("R", sh.r), ("S", sh.s)]
+            }
+            // The weight-role tensor is the streamed dY: batch x K rows of
+            // Xo pixels (ofm_y rows resident, like the output fmap).
+            LayerKind::ConvBwWeight => [("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", ofm_y)],
+            _ => [("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)],
+        };
+        tensor_line(out, &format!("{name}_w"), &wdims, s.part.wgt_shr());
     }
-    tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", ofm_y)], 1);
+    let odims: [(&str, u64); 4] = match sh.kind {
+        // The back-weight output is dW (C x K x R x S), batch-invariant.
+        LayerKind::ConvBwWeight => [("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)],
+        _ => [("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", ofm_y)],
+    };
+    tensor_line(out, &format!("{name}_o"), &odims, 1);
     // Node-level stacks, one per partitioned dim (declared order applies
     // recursively, paper §III-B).
     let p = &s.part;
@@ -143,19 +123,30 @@ fn emit_updates(out: &mut String, trips: Qty, order: super::LoopOrder, block: Qt
     }
 }
 
+/// What one step of loop group `g` iterates over, for directive comments.
+/// The B label comes from the array mapping (images vs output rows); the K
+/// group carries the fused channel axis for depthwise-family kinds.
 fn group_dim_name(g: Grp, s: &LayerScheme) -> &'static str {
-    match (g, s.unit.dataflow) {
-        (Grp::B, PeDataflow::RowStationary) => "N",
-        (Grp::B, PeDataflow::Systolic) => "N*Yo",
-        (Grp::C, _) => "C",
-        (Grp::K, _) => "K",
+    let kind = s.unit.shape.kind;
+    match g {
+        Grp::B => s.unit.mapping.batch_dim_label(kind),
+        Grp::C => "C",
+        Grp::K => match kind {
+            LayerKind::DWConv
+            | LayerKind::DWConvBwAct
+            | LayerKind::Pool
+            | LayerKind::Eltwise => "C=K",
+            _ => "K",
+        },
     }
 }
 
 /// Channel view of a block: DW-family layers carry channels in K.
-fn chan_view(s: &LayerScheme, q: Qty) -> (u64, u64) {
+pub(crate) fn chan_view(s: &LayerScheme, q: Qty) -> (u64, u64) {
     match s.unit.shape.kind {
-        LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => (q.k, q.k),
+        LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool | LayerKind::Eltwise => {
+            (q.k, q.k)
+        }
         _ => (q.c, q.k),
     }
 }
@@ -243,5 +234,64 @@ mod tests {
         let text = emit_layer("conv2", &s);
         // gbuf trips: b: ceil(16/4)=4, c: ceil(96/24)=4, k: ceil(64/16)=4
         assert!(text.contains("x4"), "{text}");
+    }
+
+    #[test]
+    fn dwconv_wgt_tensor_has_trivial_c_axis() {
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::dwconv("dw3", 64, 28, 3, 1);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 4));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::UNIT, order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(4, 1, 64), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        };
+        let text = emit_layer("dw3", &s);
+        // GBUF wgt words are K*R*S: the emitted dims must multiply to that,
+        // not K^2*R*S (the C axis is trivial for depthwise filters).
+        assert!(text.contains("tensor{dw3_w}(C=1, K=64, R=3, S=3)"), "{text}");
+        // Fused channel axis labels as C=K in loop comments.
+        assert!(text.contains("C=K loop"), "{text}");
+    }
+
+    #[test]
+    fn conv_bw_weight_streams_dy_as_weights() {
+        let arch = presets::multi_node_eyeriss();
+        let mut l = Layer::conv("c3@bw", 16, 32, 14, 3, 1);
+        l.kind = LayerKind::ConvBwWeight;
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 4));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::UNIT, order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(4, 16, 32), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        };
+        let text = emit_layer("c3@bw", &s);
+        assert!(text.contains("CONVBW c3@bw:"));
+        // Weight-role tensor is dY (N,K,Xo,Yo); output is dW (C,K,R,S).
+        assert!(text.contains("tensor{c3@bw_w}(N=4, K=32, Xo=14, Yo=14)"), "{text}");
+        assert!(text.contains("tensor{c3@bw_o}(C=16, K=32, R=3, S=3)"), "{text}");
+    }
+
+    #[test]
+    fn conv_bw_act_emission_round_dims() {
+        let arch = presets::edge_tpu();
+        let mut l = Layer::conv("c1@bd", 32, 16, 16, 3, 1);
+        l.kind = LayerKind::ConvBwAct;
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 2));
+        let s = LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: unit.granule, order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+            gbuf: LevelBlock { qty: Qty::new(2, 32, 16), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        };
+        let text = emit_layer("c1@bd", &s);
+        assert!(text.contains("CONVBD c1@bd:"), "{text}");
+        // Transposed filters keep the (C,K,R,S) weight tensor.
+        assert!(text.contains("tensor{c1@bd_w}(C=32, K=16, R=3, S=3)"), "{text}");
     }
 }

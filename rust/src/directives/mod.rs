@@ -214,11 +214,20 @@ pub fn tensor_groups(
 ) -> ([Grp; 2], Grp) {
     use crate::workloads::LayerKind::*;
     match (kind, tensor) {
-        (DWConv | Pool | Eltwise, TensorKind::Ifm) => ([Grp::B, Grp::K], Grp::C),
+        (DWConv | DWConvBwAct | Pool | Eltwise, TensorKind::Ifm) => ([Grp::B, Grp::K], Grp::C),
         // Back-weight pass: "wgt" is the streamed dY (varies with batch),
         // "ofm" is dW, accumulated over the batch (misses B).
         (ConvBwWeight, TensorKind::Wgt) => ([Grp::B, Grp::K], Grp::C),
         (ConvBwWeight, TensorKind::Ofm) => ([Grp::C, Grp::K], Grp::B),
+        // Back-activation pass: a conv with swapped channel roles. Its
+        // input fmap is dY (follows B, C; misses K), its output is dX
+        // (follows B, K; accumulated over the C group = forward K), and
+        // its weights are the transposed forward filters (miss B) — the
+        // forward-conv defaults, listed explicitly because the *roles*
+        // differ even though the group assignment coincides.
+        (ConvBwAct, TensorKind::Ifm) => ([Grp::B, Grp::C], Grp::K),
+        (ConvBwAct, TensorKind::Ofm) => ([Grp::B, Grp::K], Grp::C),
+        (ConvBwAct, TensorKind::Wgt) => ([Grp::C, Grp::K], Grp::B),
         _ => (tensor.member_groups(), tensor.miss_group()),
     }
 }

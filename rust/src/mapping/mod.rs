@@ -2,8 +2,11 @@
 //!
 //! The lowest-level REGF dataflow is fixed by the hardware template: the
 //! Eyeriss-like row-stationary scheme [8] or the TPU-like weight-stationary
-//! systolic flow [25]. A `UnitMap` captures everything the upper levels need
-//! to know about the PE array:
+//! systolic flow [25]. Each template is an [`ArrayMapping`] implementation
+//! — the single place that knows how the PE array absorbs spatial dims —
+//! and everything above (partitioning, the staged evaluator, emission)
+//! talks to it through the trait. A `UnitMap` captures everything the
+//! upper levels need to know about the PE array:
 //!
 //! * the *unit tensors* — the per-group granules the bottom-up solver
 //!   starts from (paper §IV-C);
@@ -12,6 +15,12 @@
 //! * tensor word-count functions at node scope (for GBUF residency and
 //!   traffic) and per-PE REGF footprint functions (for REGF validity);
 //! * the spatial utilization of the array after folding.
+
+pub mod row_stationary;
+pub mod systolic;
+
+pub use row_stationary::RowStationary;
+pub use systolic::Systolic;
 
 use crate::arch::{ArchConfig, PeDataflow};
 use crate::directives::Qty;
@@ -48,12 +57,25 @@ impl LayerShape {
         }
     }
 
+    /// Input fmap width; back-activation layers invert the stride (their
+    /// input is the forward output fmap), matching `Layer::xi`.
     pub fn xi(&self) -> u64 {
-        (self.xo - 1) * self.stride + self.r
+        match self.kind {
+            LayerKind::ConvBwAct | LayerKind::DWConvBwAct => {
+                self.xo.saturating_sub(self.r) / self.stride + 1
+            }
+            _ => (self.xo - 1) * self.stride + self.r,
+        }
     }
 
+    /// Input fmap height (see `xi`).
     pub fn yi(&self) -> u64 {
-        (self.yo - 1) * self.stride + self.s
+        match self.kind {
+            LayerKind::ConvBwAct | LayerKind::DWConvBwAct => {
+                self.yo.saturating_sub(self.s) / self.stride + 1
+            }
+            _ => (self.yo - 1) * self.stride + self.s,
+        }
     }
 
     /// MACs for this (per-node) shape.
@@ -62,7 +84,14 @@ impl LayerShape {
             LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwWeight => {
                 self.n * self.k * self.c * self.xo * self.yo * self.r * self.s
             }
-            LayerKind::DWConv | LayerKind::Pool => self.n * self.k * self.xo * self.yo * self.r * self.s,
+            // Transposed conv: one reduction per dY (= input fmap) pixel.
+            LayerKind::ConvBwAct => {
+                self.n * self.k * self.c * self.xi() * self.yi() * self.r * self.s
+            }
+            LayerKind::DWConv | LayerKind::Pool => {
+                self.n * self.k * self.xo * self.yo * self.r * self.s
+            }
+            LayerKind::DWConvBwAct => self.n * self.k * self.xi() * self.yi() * self.r * self.s,
             LayerKind::Eltwise => self.n * self.k * self.xo * self.yo,
         }
     }
@@ -70,7 +99,12 @@ impl LayerShape {
     fn has_weights(&self) -> bool {
         matches!(
             self.kind,
-            LayerKind::Conv | LayerKind::Fc | LayerKind::DWConv | LayerKind::ConvBwWeight
+            LayerKind::Conv
+                | LayerKind::Fc
+                | LayerKind::DWConv
+                | LayerKind::ConvBwWeight
+                | LayerKind::ConvBwAct
+                | LayerKind::DWConvBwAct
         )
     }
 }
@@ -78,16 +112,81 @@ impl LayerShape {
 /// Effective C-group extent of a shape: depthwise/pool/eltwise layers carry
 /// their channels in the K group, so their C group is trivial.
 fn chan_c(shape: LayerShape) -> u64 {
-    match shape.kind {
-        LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => 1,
-        _ => shape.c,
+    if chan_in_k(shape.kind) {
+        1
+    } else {
+        shape.c
+    }
+}
+
+/// Whether a kind tracks its channels in the K loop group (see
+/// `directives::tensor_groups`): one "filter" per channel, no cross-channel
+/// reduction.
+fn chan_in_k(kind: LayerKind) -> bool {
+    matches!(
+        kind,
+        LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool | LayerKind::Eltwise
+    )
+}
+
+/// A PE-array mapping template (paper §III-A): everything the hardware's
+/// fixed REGF dataflow determines, behind one seam. Implementations are
+/// stateless statics; `UnitMap` carries the per-layer quantities and
+/// delegates back here, so the rest of the stack — `partition`, the staged
+/// evaluator (`directives::PartAccess`/`GbufAccess`), `solvers::space`,
+/// `directives::emit`, the sim — never matches on `PeDataflow`.
+pub trait ArrayMapping: std::fmt::Debug + Sync {
+    /// Human-readable template name (bench tables, JSON rows).
+    fn name(&self) -> &'static str;
+
+    /// Build the unit mapping for a per-node shape: unit-tensor granules,
+    /// remaining temporal totals, and spatial utilization after folding.
+    fn build(&'static self, arch: &ArchConfig, shape: LayerShape) -> UnitMap;
+
+    /// Words of the input fmap covering quantity block `q` at node scope.
+    fn ifm_node_words(&self, u: &UnitMap, q: Qty) -> u64;
+
+    /// Words of the output fmap for quantity block `q` at node scope.
+    fn ofm_node_words(&self, u: &UnitMap, q: Qty) -> u64;
+
+    /// Words of the weight-role tensor for quantity block `q` (0 if
+    /// unweighted). For the back-weight pass this is the streamed dY.
+    fn wgt_node_words(&self, u: &UnitMap, q: Qty) -> u64;
+
+    /// Per-PE REGF footprint in words when the REGF-resident block is `q`.
+    fn regf_pe_words(&self, u: &UnitMap, q: Qty) -> u64;
+
+    /// GBUF-resident fmap rows `(ifm_rows, ofm_rows)`: full planes under
+    /// row-stationary, one streaming stripe under systolic.
+    fn gbuf_fmap_rows(&self, shape: &LayerShape) -> (u64, u64);
+
+    /// Emit the REGF-level tensors, PE-array stacks and PE-internal
+    /// updates fixed by this template (the body under `REGF:`).
+    fn emit_regf(&self, out: &mut String, name: &str, s: &crate::directives::LayerScheme);
+
+    /// Directive-comment label of the B loop group for `kind` under this
+    /// template (what one B step iterates over).
+    fn batch_dim_label(&self, kind: LayerKind) -> &'static str;
+}
+
+/// Select the array-mapping template for an arch's fixed PE dataflow.
+///
+/// This is the single `PeDataflow` dispatch point for the mapping /
+/// partition / directives / sim layers; everything downstream carries the
+/// returned trait object.
+pub fn array_mapping(df: PeDataflow) -> &'static dyn ArrayMapping {
+    match df {
+        PeDataflow::RowStationary => &RowStationary,
+        PeDataflow::Systolic => &Systolic,
     }
 }
 
 /// The PE-array mapping of one layer on one node.
 #[derive(Debug, Clone, Copy)]
 pub struct UnitMap {
-    pub dataflow: PeDataflow,
+    /// The hardware template that built this map (and serves its word
+    /// counts, footprints and emission).
+    pub mapping: &'static dyn ArrayMapping,
     /// Per-node layer shape this map was built for.
     pub shape: LayerShape,
     /// PE array dims (cols, rows).
@@ -112,118 +211,23 @@ impl UnitMap {
     /// Build the unit mapping for a per-node shape under the arch's fixed
     /// PE dataflow.
     pub fn build(arch: &ArchConfig, shape: LayerShape) -> UnitMap {
-        let array = arch.pes; // (x = cols, y = rows)
-        match arch.pe_dataflow {
-            PeDataflow::RowStationary => Self::row_stationary(array, shape, arch.regf_words()),
-            PeDataflow::Systolic => Self::systolic(array, shape),
-        }
-    }
-
-    /// Eyeriss row stationary [8]: filter rows (S) across array rows, output
-    /// rows (Yo) across array columns, 1D convolution inside each PE. The
-    /// whole 2D conv plane of one (n, c, k) triple is one unit pass; fmap
-    /// and filter dims are fully absorbed, so the temporal groups above the
-    /// array are exactly (N, C, K).
-    fn row_stationary(array: (u64, u64), shape: LayerShape, regf_words: u64) -> UnitMap {
-        // Largest per-PE window chunk the REGF can hold at the unit block
-        // (ifm chunk + wgt chunk + 1 psum <= capacity).
-        let rs_chunk = shape.r.min(((regf_words.saturating_sub(1)) / 2).max(1));
-        let (cols, rows) = array;
-        let used_rows = shape.s.min(rows);
-        let used_cols = shape.yo.min(cols);
-        // Folding: larger S or Yo time-multiplexes onto the same PEs
-        // (Listing 1 line 9, "folding"); utilization counts the active
-        // fraction of the array during a unit pass.
-        let fold_s = crate::util::ceil_div(shape.s, rows);
-        let fold_y = crate::util::ceil_div(shape.yo, cols);
-        let full_passes = fold_s * fold_y;
-        let active = {
-            // average active PEs over folded passes
-            let total_work = shape.s * shape.yo;
-            total_work as f64 / (full_passes as f64 * (rows * cols) as f64)
-        };
-        UnitMap {
-            dataflow: PeDataflow::RowStationary,
-            shape,
-            array,
-            totals: Qty::new(shape.n, chan_c(shape), shape.k),
-            granule: Qty::UNIT,
-            utilization: active.min(1.0) * (used_rows * used_cols > 0) as u64 as f64,
-            rs_chunk,
-        }
-    }
-
-    /// TPU-like weight-stationary systolic array [25]: the C*R*S reduction
-    /// spreads across array rows and K across columns; output pixels stream
-    /// through. One unit pass computes one output *row* (Xo pixels) for the
-    /// resident (C-slice, K-slice) weight tile, so the B group counts
-    /// n * yo output rows.
-    fn systolic(array: (u64, u64), shape: LayerShape) -> UnitMap {
-        let (cols, rows) = array;
-        let red = shape.r * shape.s; // reduction elems per channel
-        let tot_c = chan_c(shape);
-        // Channels per weight-tile row-fill: how many C channels fit down
-        // the rows at once.
-        let c_gran = (rows / red).max(1).min(tot_c);
-        let k_gran = cols.min(shape.k);
-        let used_rows = (tot_c.min(c_gran) * red).min(rows);
-        let used_cols = k_gran;
-        let utilization = (used_rows * used_cols) as f64 / (rows * cols) as f64;
-        UnitMap {
-            dataflow: PeDataflow::Systolic,
-            shape,
-            array,
-            totals: Qty::new(shape.n * shape.yo, tot_c, shape.k),
-            granule: Qty::new(1, c_gran, k_gran),
-            utilization,
-            rs_chunk: 0,
-        }
+        array_mapping(arch.pe_dataflow).build(arch, shape)
     }
 
     /// Words of the input fmap covering quantity block `q` at node scope.
     pub fn ifm_node_words(&self, q: Qty) -> u64 {
-        let s = &self.shape;
-        let chan = match s.kind {
-            // DW/pool/eltwise track channels in K (see directives::tensor_groups).
-            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => q.k,
-            _ => q.c,
-        };
-        match self.dataflow {
-            // b counts images; a block holds full (xi x yi) planes.
-            PeDataflow::RowStationary => q.b * chan * s.xi() * s.yi(),
-            // b counts output rows; each needs an (xi x s) input stripe.
-            PeDataflow::Systolic => q.b * chan * s.xi() * s.s,
-        }
+        self.mapping.ifm_node_words(self, q)
     }
 
     /// Words of the output fmap for quantity block `q` at node scope.
     pub fn ofm_node_words(&self, q: Qty) -> u64 {
-        let s = &self.shape;
-        if s.kind == LayerKind::ConvBwWeight {
-            // Output is dW (C x K x R x S), batch-invariant.
-            return q.c * q.k * s.r * s.s;
-        }
-        match self.dataflow {
-            PeDataflow::RowStationary => q.b * q.k * s.xo * s.yo,
-            PeDataflow::Systolic => q.b * q.k * s.xo,
-        }
+        self.mapping.ofm_node_words(self, q)
     }
 
     /// Words of the weight-role tensor for quantity block `q` (0 if
     /// unweighted). For the back-weight pass this is the streamed dY.
     pub fn wgt_node_words(&self, q: Qty) -> u64 {
-        let s = &self.shape;
-        if !s.has_weights() {
-            return 0;
-        }
-        match s.kind {
-            LayerKind::DWConv => q.k * s.r * s.s,
-            LayerKind::ConvBwWeight => match self.dataflow {
-                PeDataflow::RowStationary => q.b * q.k * s.xo * s.yo,
-                PeDataflow::Systolic => q.b * q.k * s.xo,
-            },
-            _ => q.c * q.k * s.r * s.s,
-        }
+        self.mapping.wgt_node_words(self, q)
     }
 
     /// Total words of all three tensors for block `q` at node scope.
@@ -233,46 +237,7 @@ impl UnitMap {
 
     /// Per-PE REGF footprint in words when the REGF-resident block is `q`.
     pub fn regf_pe_words(&self, q: Qty) -> u64 {
-        let s = &self.shape;
-        match self.dataflow {
-            PeDataflow::RowStationary => {
-                // Per PE: ifm sliding window + filter-row chunk (rows
-                // longer than the REGF fold temporally in `rs_chunk`-tap
-                // chunks, accumulating psums) + psum accumulator.
-                let w = self.rs_chunk.min(s.r).max(1);
-                let chan_i = match s.kind {
-                    LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => q.k,
-                    _ => q.c,
-                };
-                let wgt = if s.has_weights() {
-                    match s.kind {
-                        LayerKind::DWConv => q.k * w,
-                        LayerKind::ConvBwWeight => q.b * q.k * w,
-                        _ => q.c * q.k * w,
-                    }
-                } else {
-                    0
-                };
-                let psum = if s.kind == LayerKind::ConvBwWeight { q.c * q.k } else { q.b * q.k };
-                q.b * chan_i * w + wgt + psum
-            }
-            PeDataflow::Systolic => {
-                // Per PE: its share of the resident weight tile (double
-                // buffered) + streaming input/psum registers.
-                let (cols, rows) = self.array;
-                let wgt_share = if s.has_weights() {
-                    let welems = match s.kind {
-                        LayerKind::DWConv => q.k * s.r * s.s,
-                        LayerKind::ConvBwWeight => q.b * q.k * s.xo,
-                        _ => q.c * q.k * s.r * s.s,
-                    };
-                    2 * crate::util::ceil_div(welems, rows * cols)
-                } else {
-                    0
-                };
-                wgt_share + 4
-            }
-        }
+        self.mapping.regf_pe_words(self, q)
     }
 
     /// Clamp a desired block to the per-node totals and align it to granule
@@ -426,5 +391,69 @@ mod tests {
         let active = 64.0 * m.utilization;
         let rel = (c * active - m.shape.macs() as f64).abs() / (m.shape.macs() as f64);
         assert!(rel < 1e-9);
+    }
+
+    #[test]
+    fn selection_point_matches_arch() {
+        assert_eq!(array_mapping(PeDataflow::RowStationary).name(), "row-stationary");
+        assert_eq!(array_mapping(PeDataflow::Systolic).name(), "systolic");
+        let arch = presets::multi_node_eyeriss();
+        let m = UnitMap::build(&arch, conv_shape());
+        assert_eq!(m.mapping.name(), array_mapping(arch.pe_dataflow).name());
+    }
+
+    #[test]
+    fn bwact_shape_mirrors_forward_volumes() {
+        // conv: 16 -> 32 channels, 14x14 out, 3x3, stride 1.
+        let fwd = LayerShape::full(&Layer::conv("c", 16, 32, 14, 3, 1), 4);
+        let bd = LayerShape {
+            kind: LayerKind::ConvBwAct,
+            n: 4,
+            c: 32,
+            k: 16,
+            xo: fwd.xi(),
+            yo: fwd.yi(),
+            r: 3,
+            s: 3,
+            stride: 1,
+        };
+        assert_eq!((bd.xi(), bd.yi()), (fwd.xo, fwd.yo));
+        assert_eq!(bd.macs(), fwd.macs());
+        for arch in [presets::multi_node_eyeriss(), presets::edge_tpu()] {
+            let mf = UnitMap::build(&arch, fwd);
+            let mb = UnitMap::build(&arch, bd);
+            // At full blocks, the bd input fmap is the fwd output fmap
+            // (row-for-row under either template) and weights transpose.
+            let qf = Qty::new(4, 16, 32);
+            let qb = Qty::new(4, 32, 16);
+            assert_eq!(mb.wgt_node_words(qb), mf.wgt_node_words(qf));
+            assert_eq!(
+                mb.ifm_node_words(qb) / (4 * 32),
+                mb.shape.xi() * if mb.rs_chunk > 0 { mb.shape.yi() } else { mb.shape.s }
+            );
+        }
+    }
+
+    #[test]
+    fn dwconv_bwact_tracks_k_like_dwconv() {
+        let arch = presets::multi_node_eyeriss();
+        let fwd = Layer::dwconv("dw", 32, 14, 3, 1);
+        let bd = LayerShape {
+            kind: LayerKind::DWConvBwAct,
+            n: 1,
+            c: 32,
+            k: 32,
+            xo: fwd.xi(),
+            yo: fwd.yi(),
+            r: 3,
+            s: 3,
+            stride: 1,
+        };
+        let m = UnitMap::build(&arch, bd);
+        // Channels ride K: trivial C group, per-channel filters.
+        assert_eq!(m.totals.c, 1);
+        let q = Qty::new(1, 1, 8);
+        assert_eq!(m.wgt_node_words(q), 8 * 9);
+        assert_eq!(m.ifm_node_words(q), 8 * bd.xi() * bd.yi());
     }
 }

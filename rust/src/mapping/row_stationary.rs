@@ -1,0 +1,149 @@
+//! Eyeriss-like row-stationary array mapping [8] (paper §III-A, §III-C).
+//!
+//! Filter rows (S) spread across array rows, output rows (Yo) across array
+//! columns, and each PE runs a 1D convolution over one filter row. The
+//! whole 2D conv plane of one (n, c, k) triple is one unit pass; fmap and
+//! filter dims are fully absorbed, so the temporal groups above the array
+//! are exactly (N, C, K).
+
+use super::{chan_c, chan_in_k, ArrayMapping, LayerShape, UnitMap};
+use crate::arch::ArchConfig;
+use crate::directives::emit::{chan_view, tensor_line};
+use crate::directives::{LayerScheme, Qty};
+use crate::workloads::LayerKind;
+use std::fmt::Write as _;
+
+/// The row-stationary template. Stateless: every per-layer quantity lives
+/// in the `UnitMap` it builds.
+#[derive(Debug, Clone, Copy)]
+pub struct RowStationary;
+
+impl ArrayMapping for RowStationary {
+    fn name(&self) -> &'static str {
+        "row-stationary"
+    }
+
+    fn build(&'static self, arch: &ArchConfig, shape: LayerShape) -> UnitMap {
+        let array = arch.pes; // (x = cols, y = rows)
+        // Largest per-PE window chunk the REGF can hold at the unit block
+        // (ifm chunk + wgt chunk + 1 psum <= capacity). Filter rows longer
+        // than the REGF allows fold temporally in chunks with psum
+        // accumulation (Eyeriss handles large filters the same way);
+        // training back-weight layers have filter rows of 27+ taps.
+        let rs_chunk = shape.r.min(((arch.regf_words().saturating_sub(1)) / 2).max(1));
+        let (cols, rows) = array;
+        let used_rows = shape.s.min(rows);
+        let used_cols = shape.yo.min(cols);
+        // Folding: larger S or Yo time-multiplexes onto the same PEs
+        // (Listing 1 line 9, "folding"); utilization counts the active
+        // fraction of the array during a unit pass.
+        let fold_s = crate::util::ceil_div(shape.s, rows);
+        let fold_y = crate::util::ceil_div(shape.yo, cols);
+        let full_passes = fold_s * fold_y;
+        let active = {
+            // average active PEs over folded passes
+            let total_work = shape.s * shape.yo;
+            total_work as f64 / (full_passes as f64 * (rows * cols) as f64)
+        };
+        UnitMap {
+            mapping: self,
+            shape,
+            array,
+            totals: Qty::new(shape.n, chan_c(shape), shape.k),
+            granule: Qty::UNIT,
+            utilization: active.min(1.0) * (used_rows * used_cols > 0) as u64 as f64,
+            rs_chunk,
+        }
+    }
+
+    fn ifm_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        let chan = if chan_in_k(s.kind) { q.k } else { q.c };
+        // b counts images; a block holds full (xi x yi) planes.
+        q.b * chan * s.xi() * s.yi()
+    }
+
+    fn ofm_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        if s.kind == LayerKind::ConvBwWeight {
+            // Output is dW (C x K x R x S), batch-invariant.
+            return q.c * q.k * s.r * s.s;
+        }
+        q.b * q.k * s.xo * s.yo
+    }
+
+    fn wgt_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        if !s.has_weights() {
+            return 0;
+        }
+        match s.kind {
+            LayerKind::DWConv | LayerKind::DWConvBwAct => q.k * s.r * s.s,
+            LayerKind::ConvBwWeight => q.b * q.k * s.xo * s.yo,
+            _ => q.c * q.k * s.r * s.s,
+        }
+    }
+
+    fn regf_pe_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        // Per PE: ifm sliding window + filter-row chunk (rows longer than
+        // the REGF fold temporally in `rs_chunk`-tap chunks, accumulating
+        // psums) + psum accumulator.
+        let w = u.rs_chunk.min(s.r).max(1);
+        let chan_i = if chan_in_k(s.kind) { q.k } else { q.c };
+        let wgt = if s.has_weights() {
+            match s.kind {
+                LayerKind::DWConv | LayerKind::DWConvBwAct => q.k * w,
+                LayerKind::ConvBwWeight => q.b * q.k * w,
+                _ => q.c * q.k * w,
+            }
+        } else {
+            0
+        };
+        let psum = if s.kind == LayerKind::ConvBwWeight { q.c * q.k } else { q.b * q.k };
+        q.b * chan_i * w + wgt + psum
+    }
+
+    fn gbuf_fmap_rows(&self, shape: &LayerShape) -> (u64, u64) {
+        // Full fmap planes are GBUF-resident per batch image.
+        (shape.yi(), shape.yo)
+    }
+
+    fn emit_regf(&self, out: &mut String, name: &str, s: &LayerScheme) {
+        let sh = &s.unit.shape;
+        let q = s.regf.qty;
+        let (ci, ki) = chan_view(s, q);
+        let emit = tensor_line;
+        emit(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.r), ("Yi", 1)], 1);
+        if s.unit.wgt_node_words(Qty::UNIT) > 0 {
+            let w = s.unit.rs_chunk.min(sh.r).max(1);
+            match sh.kind {
+                // One filter per channel: the C axis of the wgt tensor is
+                // trivial (channels ride the K group).
+                LayerKind::DWConv | LayerKind::DWConvBwAct => {
+                    emit(out, &format!("{name}_w"), &[("C", 1), ("K", ki), ("R", sh.r), ("S", 1)], 1)
+                }
+                // The streamed "filter" is dY: batch x K output rows of
+                // `w` taps each.
+                LayerKind::ConvBwWeight => {
+                    emit(out, &format!("{name}_w"), &[("N", q.b), ("K", ki), ("Xo", w), ("Yo", 1)], 1)
+                }
+                _ => emit(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", 1)], 1),
+            }
+        }
+        emit(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", 1), ("Yo", 1)], 1);
+        let cols = s.unit.array.0.min(sh.yo);
+        let rows = s.unit.array.1.min(sh.s);
+        let _ = writeln!(out, "    stack(Yi+=1, Yo+=1, {cols}) % PE columns");
+        let _ = writeln!(out, "    stack(S+=1, Yi+=1, {rows}) % PE rows");
+        let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % 1D conv", sh.stride);
+        if sh.yo > cols {
+            let _ = writeln!(out, "    update(Yi+={c}, Yo+={c}) % folding", c = cols);
+        }
+    }
+
+    fn batch_dim_label(&self, _kind: LayerKind) -> &'static str {
+        // The B group always counts images under row-stationary.
+        "N"
+    }
+}

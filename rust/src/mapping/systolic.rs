@@ -1,0 +1,133 @@
+//! TPU-like weight-stationary systolic array mapping [25] (paper §III-C).
+//!
+//! The C*R*S reduction spreads across array rows and K across columns;
+//! output pixels stream through. One unit pass computes one output *row*
+//! (Xo pixels) for the resident (C-slice, K-slice) weight tile, so the B
+//! group counts n * yo output rows.
+
+use super::{chan_c, chan_in_k, ArrayMapping, LayerShape, UnitMap};
+use crate::arch::ArchConfig;
+use crate::directives::emit::{chan_view, tensor_line};
+use crate::directives::{LayerScheme, Qty};
+use crate::workloads::LayerKind;
+use std::fmt::Write as _;
+
+/// The weight-stationary systolic template. Stateless: every per-layer
+/// quantity lives in the `UnitMap` it builds.
+#[derive(Debug, Clone, Copy)]
+pub struct Systolic;
+
+impl ArrayMapping for Systolic {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn build(&'static self, arch: &ArchConfig, shape: LayerShape) -> UnitMap {
+        let array = arch.pes; // (x = cols, y = rows)
+        let (cols, rows) = array;
+        let red = shape.r * shape.s; // reduction elems per channel
+        let tot_c = chan_c(shape);
+        // Channels per weight-tile row-fill: how many C channels fit down
+        // the rows at once.
+        let c_gran = (rows / red).max(1).min(tot_c);
+        let k_gran = cols.min(shape.k);
+        let used_rows = (tot_c.min(c_gran) * red).min(rows);
+        let used_cols = k_gran;
+        let utilization = (used_rows * used_cols) as f64 / (rows * cols) as f64;
+        UnitMap {
+            mapping: self,
+            shape,
+            array,
+            totals: Qty::new(shape.n * shape.yo, tot_c, shape.k),
+            granule: Qty::new(1, c_gran, k_gran),
+            utilization,
+            rs_chunk: 0,
+        }
+    }
+
+    fn ifm_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        let chan = if chan_in_k(s.kind) { q.k } else { q.c };
+        // b counts output rows; each needs an (xi x s) input stripe.
+        q.b * chan * s.xi() * s.s
+    }
+
+    fn ofm_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        if s.kind == LayerKind::ConvBwWeight {
+            // Output is dW (C x K x R x S), batch-invariant.
+            return q.c * q.k * s.r * s.s;
+        }
+        q.b * q.k * s.xo
+    }
+
+    fn wgt_node_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        if !s.has_weights() {
+            return 0;
+        }
+        match s.kind {
+            LayerKind::DWConv | LayerKind::DWConvBwAct => q.k * s.r * s.s,
+            LayerKind::ConvBwWeight => q.b * q.k * s.xo,
+            _ => q.c * q.k * s.r * s.s,
+        }
+    }
+
+    fn regf_pe_words(&self, u: &UnitMap, q: Qty) -> u64 {
+        let s = &u.shape;
+        // Per PE: its share of the resident weight tile (double buffered)
+        // + streaming input/psum registers.
+        let (cols, rows) = u.array;
+        let wgt_share = if s.has_weights() {
+            let welems = match s.kind {
+                LayerKind::DWConv | LayerKind::DWConvBwAct => q.k * s.r * s.s,
+                LayerKind::ConvBwWeight => q.b * q.k * s.xo,
+                _ => q.c * q.k * s.r * s.s,
+            };
+            2 * crate::util::ceil_div(welems, rows * cols)
+        } else {
+            0
+        };
+        wgt_share + 4
+    }
+
+    fn gbuf_fmap_rows(&self, shape: &LayerShape) -> (u64, u64) {
+        // Only the input stripe feeding one output row stays GBUF-resident.
+        (shape.s, 1)
+    }
+
+    fn emit_regf(&self, out: &mut String, name: &str, s: &LayerScheme) {
+        let sh = &s.unit.shape;
+        let q = s.regf.qty;
+        let (ci, ki) = chan_view(s, q);
+        tensor_line(out, &format!("{name}_i"), &[("N", q.b), ("C", ci), ("Xi", sh.xi()), ("Yi", sh.s)], 1);
+        if s.unit.wgt_node_words(Qty::UNIT) > 0 {
+            match sh.kind {
+                // One filter per channel: the C axis of the wgt tensor is
+                // trivial (channels ride the K group).
+                LayerKind::DWConv | LayerKind::DWConvBwAct => {
+                    tensor_line(out, &format!("{name}_w"), &[("C", 1), ("K", ki), ("R", sh.r), ("S", sh.s)], 1)
+                }
+                // The streamed "filter" is dY: batch x K rows of Xo pixels.
+                LayerKind::ConvBwWeight => {
+                    tensor_line(out, &format!("{name}_w"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", 1)], 1)
+                }
+                _ => tensor_line(out, &format!("{name}_w"), &[("C", ci), ("K", ki), ("R", sh.r), ("S", sh.s)], 1),
+            }
+        }
+        tensor_line(out, &format!("{name}_o"), &[("N", q.b), ("K", ki), ("Xo", sh.xo), ("Yo", 1)], 1);
+        let rows = (s.unit.granule.c * sh.r * sh.s).min(s.unit.array.1);
+        let cols = s.unit.granule.k.min(s.unit.array.0);
+        let _ = writeln!(out, "    stack(C+=1, {rows}) % systolic rows (reduction)");
+        let _ = writeln!(out, "    stack(K+=1, {cols}) % systolic cols");
+        let _ = writeln!(out, "    update(Xi+={}, Xo+=1) % pixel stream", sh.stride);
+    }
+
+    fn batch_dim_label(&self, kind: LayerKind) -> &'static str {
+        match kind {
+            // FC fmaps are 1x1: the output-row stream is pure batch.
+            LayerKind::Fc => "N",
+            _ => "N*Yo",
+        }
+    }
+}

@@ -61,7 +61,7 @@ impl PartitionScheme {
         // c and k (they are the same physical dim); pc must be 1.
         let chan_split = self.pk;
         let (c, k) = match layer.kind {
-            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => {
+            LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool | LayerKind::Eltwise => {
                 (ceil_div(full.c, chan_split), ceil_div(full.k, chan_split))
             }
             _ => (ceil_div(full.c, self.pc), ceil_div(full.k, self.pk)),
@@ -160,9 +160,11 @@ impl PartitionScheme {
         }
         match layer.kind {
             // Channel-paired kinds cannot split C independently.
-            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise => self.pc == 1,
+            LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool | LayerKind::Eltwise => {
+                self.pc == 1
+            }
             LayerKind::Fc => self.px == 1 && self.py == 1,
-            LayerKind::Conv | LayerKind::ConvBwWeight => true,
+            LayerKind::Conv | LayerKind::ConvBwWeight | LayerKind::ConvBwAct => true,
         }
     }
 }

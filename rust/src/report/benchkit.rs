@@ -9,9 +9,10 @@
 //! networks explicitly). The *shape* of the results — who wins, by what
 //! factor — is preserved; EXPERIMENTS.md records both.
 
-use crate::arch::{presets, ArchConfig};
+use crate::arch::{presets, ArchConfig, PeDataflow};
 use crate::coordinator::{run_job, Job, SolverKind};
 use crate::interlayer::dp::DpConfig;
+use crate::mapping::array_mapping;
 use crate::solvers::{Objective, SolveResult};
 use crate::util::json::Json;
 use crate::workloads::{self, Network};
@@ -81,6 +82,54 @@ pub fn paper_solvers(random_p: f64) -> Vec<SolverKind> {
         SolverKind::Ml { seed: 0x5EED, rounds: 12, batch: 48 },
         SolverKind::Kapla,
     ]
+}
+
+/// Both PE-array mapping templates, for benches that sweep the array axis
+/// (fig7/fig8 run every training graph under each).
+pub fn array_mappings() -> [PeDataflow; 2] {
+    [PeDataflow::RowStationary, PeDataflow::Systolic]
+}
+
+/// `base` with its PE-array template swapped (everything else identical,
+/// so mapping columns are an apples-to-apples sweep).
+pub fn with_mapping(base: &ArchConfig, df: PeDataflow) -> ArchConfig {
+    let mut a = base.clone();
+    a.pe_dataflow = df;
+    a
+}
+
+/// Label of an arch's array-mapping template for table/JSON rows.
+pub fn mapping_label(arch: &ArchConfig) -> &'static str {
+    array_mapping(arch.pe_dataflow).name()
+}
+
+/// Assert the structural invariants the training sweeps rely on: every
+/// weighted forward layer has @bd/@bw/@wu successors in the training
+/// graph, and the backward MAC counts conserve the forward count exactly.
+pub fn check_training_graph(fwd: &Network, t: &Network, batch: u64) {
+    for l in &fwd.layers {
+        if !l.has_weights() {
+            continue;
+        }
+        let bd = t
+            .layers
+            .iter()
+            .find(|x| x.name == format!("{}@bd", l.name))
+            .unwrap_or_else(|| panic!("{}: missing {}@bd", t.name, l.name));
+        let bw = t
+            .layers
+            .iter()
+            .find(|x| x.name == format!("{}@bw", l.name))
+            .unwrap_or_else(|| panic!("{}: missing {}@bw", t.name, l.name));
+        assert!(
+            t.layers.iter().any(|x| x.name == format!("{}@wu", l.name)),
+            "{}: missing {}@wu",
+            t.name,
+            l.name
+        );
+        assert_eq!(bd.macs(batch), l.macs(batch), "{}: {}@bd macs", t.name, l.name);
+        assert_eq!(bw.macs(batch), l.macs(batch), "{}: {}@bw macs", t.name, l.name);
+    }
 }
 
 /// Run one (net, solver) cell.

@@ -62,7 +62,8 @@ pub fn evaluate_segment(
         // Weights stay resident across rounds: their DRAM (and the NoC
         // distribution share) is paid once, not `rounds` times. The
         // back-weight pass streams dY in the weight slot (changes every
-        // round), so it gets no credit.
+        // round), so it gets no credit; back-activation layers reread the
+        // persistent (transposed) forward filters and keep it.
         if rounds > 1.0 && scheme.unit.shape.kind != crate::workloads::LayerKind::ConvBwWeight {
             let wgt_dram = ev.access.dram[2] as f64;
             e.dram_pj -= wgt_dram * arch.dram.pj_per_word * (rounds - 1.0);

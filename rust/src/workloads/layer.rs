@@ -27,6 +27,18 @@ pub enum LayerKind {
     /// output is dW (K,C,R,S) accumulated over the batch, and the input
     /// fmap is the stashed activation X (N,C,Xi,Yi).
     ConvBwWeight,
+    /// Training back-activation pass dX = dY (*) W-transposed (paper
+    /// §II-A): a transposed convolution whose C/K are the forward layer's
+    /// K/C, whose output fmap is the forward *input* fmap, and whose
+    /// stride is the forward stride acting as dY *upsampling*. The input
+    /// fmap (dY) is therefore the forward output fmap: `xi()`/`yi()`
+    /// invert the stride instead of multiplying by it, and MACs count one
+    /// C*R*S reduction per dY pixel — exactly the forward MAC count.
+    ConvBwAct,
+    /// Depthwise back-activation pass: `ConvBwAct` with the depthwise
+    /// single-filter-per-channel constraint (C == K, channels in the K
+    /// group).
+    DWConvBwAct,
 }
 
 /// A single layer. Batch size N is a property of the scheduling run, not
@@ -128,20 +140,41 @@ impl Layer {
         }
     }
 
-    /// Input fmap width Xi = (Xo - 1) * stride + R.
+    /// Input fmap width Xi = (Xo - 1) * stride + R for forward layers.
+    /// Back-activation layers invert the relation (their input is the
+    /// forward output fmap): Xi = (Xo - R) / stride + 1, saturating so
+    /// ragged per-node splits stay well-defined.
     pub fn xi(&self) -> u64 {
-        (self.xo - 1) * self.stride + self.r
+        match self.kind {
+            LayerKind::ConvBwAct | LayerKind::DWConvBwAct => {
+                self.xo.saturating_sub(self.r) / self.stride + 1
+            }
+            _ => (self.xo - 1) * self.stride + self.r,
+        }
     }
 
-    /// Input fmap height Yi.
+    /// Input fmap height Yi (see `xi`).
     pub fn yi(&self) -> u64 {
-        (self.yo - 1) * self.stride + self.s
+        match self.kind {
+            LayerKind::ConvBwAct | LayerKind::DWConvBwAct => {
+                self.yo.saturating_sub(self.s) / self.stride + 1
+            }
+            _ => (self.yo - 1) * self.stride + self.s,
+        }
     }
 
     /// Whether this layer owns a *persistent* weight tensor (resident
-    /// across batch rounds). Back-weight layers stream dY instead.
+    /// across batch rounds). Back-weight layers stream dY instead;
+    /// back-activation layers reread the forward filters (transposed).
     pub fn has_weights(&self) -> bool {
-        matches!(self.kind, LayerKind::Conv | LayerKind::DWConv | LayerKind::Fc)
+        matches!(
+            self.kind,
+            LayerKind::Conv
+                | LayerKind::DWConv
+                | LayerKind::Fc
+                | LayerKind::ConvBwAct
+                | LayerKind::DWConvBwAct
+        )
     }
 
     /// Number of input operands (Eltwise takes two fmaps).
@@ -156,8 +189,10 @@ impl Layer {
     /// Weight tensor element count (0 for unweighted layers).
     pub fn weight_elems(&self) -> u64 {
         match self.kind {
-            LayerKind::Conv | LayerKind::Fc => self.k * self.c * self.r * self.s,
-            LayerKind::DWConv => self.c * self.r * self.s,
+            LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwAct => {
+                self.k * self.c * self.r * self.s
+            }
+            LayerKind::DWConv | LayerKind::DWConvBwAct => self.c * self.r * self.s,
             LayerKind::Pool | LayerKind::Eltwise | LayerKind::ConvBwWeight => 0,
         }
     }
@@ -188,7 +223,11 @@ impl Layer {
             LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwWeight => {
                 n * self.k * self.c * self.xo * self.yo * self.r * self.s
             }
+            // Transposed conv: one C*R*S reduction per dY pixel, so MACs
+            // count over the *input* fmap and equal the forward layer's.
+            LayerKind::ConvBwAct => n * self.k * self.c * self.xi() * self.yi() * self.r * self.s,
             LayerKind::DWConv => n * self.c * self.xo * self.yo * self.r * self.s,
+            LayerKind::DWConvBwAct => n * self.c * self.xi() * self.yi() * self.r * self.s,
             LayerKind::Pool => n * self.c * self.xo * self.yo * self.r * self.s,
             LayerKind::Eltwise => n * self.c * self.xo * self.yo,
         }
@@ -197,8 +236,8 @@ impl Layer {
     /// The reduction size per output element (C*R*S for conv).
     pub fn reduction_per_output(&self) -> u64 {
         match self.kind {
-            LayerKind::Conv | LayerKind::Fc => self.c * self.r * self.s,
-            LayerKind::DWConv | LayerKind::Pool => self.r * self.s,
+            LayerKind::Conv | LayerKind::Fc | LayerKind::ConvBwAct => self.c * self.r * self.s,
+            LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool => self.r * self.s,
             LayerKind::Eltwise => self.num_inputs() as u64,
             // dW accumulates over the batch and the output fmap.
             LayerKind::ConvBwWeight => self.xo * self.yo,
@@ -230,7 +269,9 @@ impl Layer {
             }
         }
         match self.kind {
-            LayerKind::DWConv | LayerKind::Pool | LayerKind::Eltwise if self.c != self.k => {
+            LayerKind::DWConv | LayerKind::DWConvBwAct | LayerKind::Pool | LayerKind::Eltwise
+                if self.c != self.k =>
+            {
                 Err(format!("layer {}: {:?} requires C == K", self.name, self.kind))
             }
             LayerKind::Fc if self.xo != 1 || self.yo != 1 || self.r != 1 || self.s != 1 => {
@@ -295,6 +336,55 @@ mod tests {
         l.no_batch = true;
         assert_eq!(l.macs(64), l.macs(1));
         assert_eq!(l.ifm_elems(64), l.ifm_elems(1));
+    }
+
+    #[test]
+    fn conv_bw_act_inverts_stride_and_conserves_macs() {
+        let fwd = Layer::conv("conv1", 3, 96, 55, 11, 4);
+        let bd = Layer {
+            name: "conv1@bd".into(),
+            kind: LayerKind::ConvBwAct,
+            c: fwd.k,
+            k: fwd.c,
+            xo: fwd.xi(),
+            yo: fwd.yi(),
+            r: fwd.r,
+            s: fwd.s,
+            stride: fwd.stride,
+            no_batch: false,
+        };
+        bd.validate().unwrap();
+        // dY is the backward input fmap: xi() inverts the stride exactly.
+        assert_eq!(bd.xi(), fwd.xo);
+        assert_eq!(bd.yi(), fwd.yo);
+        assert_eq!(bd.macs(64), fwd.macs(64));
+        // Same filter tensor, transposed roles; volumes swap with roles.
+        assert_eq!(bd.weight_elems(), fwd.weight_elems());
+        assert!(bd.has_weights());
+        assert_eq!(bd.ifm_elems(16), fwd.ofm_elems(16));
+        assert_eq!(bd.ofm_elems(16), fwd.ifm_elems(16));
+    }
+
+    #[test]
+    fn dwconv_bw_act_is_depthwise() {
+        let fwd = Layer::dwconv("dw1", 32, 112, 3, 2);
+        let mut bd = Layer {
+            name: "dw1@bd".into(),
+            kind: LayerKind::DWConvBwAct,
+            c: fwd.c,
+            k: fwd.c,
+            xo: fwd.xi(),
+            yo: fwd.yi(),
+            r: fwd.r,
+            s: fwd.s,
+            stride: fwd.stride,
+            no_batch: false,
+        };
+        bd.validate().unwrap();
+        assert_eq!(bd.macs(8), fwd.macs(8));
+        assert_eq!(bd.weight_elems(), fwd.weight_elems());
+        bd.k = 64;
+        assert!(bd.validate().is_err()); // C == K enforced like DWConv
     }
 
     #[test]

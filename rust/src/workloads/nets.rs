@@ -253,8 +253,13 @@ pub fn all_networks() -> Vec<Network> {
     vec![alexnet(), mobilenet(), vggnet(), googlenet(), resnet(), mlp(), lstm()]
 }
 
-/// Look a network up by name (CLI entry point).
+/// Look a network up by name (CLI entry point). A `-train` suffix returns
+/// the full training graph of the base net (fwd + dX + dW + wu layers),
+/// e.g. `alexnet-train`.
 pub fn by_name(name: &str) -> Option<Network> {
+    if let Some(base) = name.strip_suffix("-train") {
+        return by_name(base).map(|n| super::training::training_graph(&n));
+    }
     match name {
         "alexnet" => Some(alexnet()),
         "mobilenet" => Some(mobilenet()),
@@ -276,6 +281,15 @@ mod tests {
         for net in all_networks() {
             net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
         }
+    }
+
+    #[test]
+    fn by_name_train_suffix_builds_training_graph() {
+        let t = by_name("mlp-train").unwrap();
+        assert_eq!(t.name, "mlp-train");
+        assert!(t.len() > by_name("mlp").unwrap().len());
+        assert!(t.layers.iter().any(|l| l.name.ends_with("@bd")));
+        assert!(by_name("nonesuch-train").is_none());
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //!
 //! For each forward layer L we append, in reverse topological order:
 //!
-//! * **back-data** `L@bd` — dX = dY (*) W-transposed: a CONV with C and K
-//!   swapped and fmap dims equal to L's *input* fmap (full-size transposed
-//!   convolution; stride folded into the fmap size).
+//! * **back-data** `L@bd` — dX = dY (*) W-transposed: a first-class
+//!   `ConvBwAct` (`DWConvBwAct` for depthwise) with C and K swapped, fmap
+//!   dims equal to L's *input* fmap, and the forward stride acting as dY
+//!   upsampling — so its MAC count equals the forward layer's exactly.
 //! * **back-weight** `L@bw` — dW = X (*) dY: a CONV whose "output fmap" is
 //!   the R x S filter grid and whose reduction runs over the batch and the
 //!   output fmap (same MAC count as the forward layer).
@@ -62,17 +63,24 @@ pub fn training_graph(fwd: &Network) -> Network {
 
         match l.kind {
             LayerKind::Conv | LayerKind::Fc | LayerKind::DWConv => {
-                // back-data: C <-> K, fmap = forward input fmap.
+                // back-data: first-class transposed conv — C <-> K, output
+                // fmap = forward input fmap, forward stride kept as the dY
+                // upsampling stride (ConvBwAct::xi() inverts it back to the
+                // forward output fmap).
                 let mut bd = Layer {
                     name: format!("{}@bd", l.name),
-                    kind: if l.kind == LayerKind::DWConv { LayerKind::DWConv } else { LayerKind::Conv },
+                    kind: if l.kind == LayerKind::DWConv {
+                        LayerKind::DWConvBwAct
+                    } else {
+                        LayerKind::ConvBwAct
+                    },
                     c: l.k,
                     k: l.c,
                     xo: l.xi(),
                     yo: l.yi(),
                     r: l.r,
                     s: l.s,
-                    stride: 1,
+                    stride: l.stride,
                     no_batch: false,
                 };
                 if l.kind == LayerKind::DWConv {
@@ -128,7 +136,7 @@ pub fn training_graph(fwd: &Network) -> Network {
                 let bpi = push_raw(&mut net, bp, &[dy_ref]);
                 grad_of[i] = Some(bpi);
             }
-            LayerKind::ConvBwWeight => {
+            LayerKind::ConvBwWeight | LayerKind::ConvBwAct | LayerKind::DWConvBwAct => {
                 unreachable!("training graphs are built from forward networks")
             }
             LayerKind::Eltwise => {
@@ -205,9 +213,23 @@ mod tests {
         let t = training_graph(&f);
         let fwd = t.layers.iter().find(|l| l.name == "conv2").unwrap();
         let bd = t.layers.iter().find(|l| l.name == "conv2@bd").unwrap();
+        assert_eq!(bd.kind, LayerKind::ConvBwAct);
         assert_eq!(bd.c, fwd.k);
         assert_eq!(bd.k, fwd.c);
         assert_eq!((bd.xo, bd.yo), (fwd.xi(), fwd.yi()));
+        // The backward input fmap is exactly the forward output fmap.
+        assert_eq!((bd.xi(), bd.yi()), (fwd.xo, fwd.yo));
+        assert_eq!(bd.macs(64), fwd.macs(64));
+    }
+
+    #[test]
+    fn depthwise_back_data_is_first_class() {
+        let t = training_graph(&nets::mobilenet());
+        let fwd = t.layers.iter().find(|l| l.kind == LayerKind::DWConv).unwrap().clone();
+        let bd = t.layers.iter().find(|l| l.name == format!("{}@bd", fwd.name)).unwrap();
+        assert_eq!(bd.kind, LayerKind::DWConvBwAct);
+        assert_eq!(bd.c, bd.k);
+        assert_eq!(bd.macs(16), fwd.macs(16));
     }
 
     #[test]

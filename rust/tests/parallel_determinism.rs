@@ -263,6 +263,53 @@ fn golden_schedules_cold_warm_shared_bounded_and_threads() {
 }
 
 #[test]
+fn golden_array_mapping_training_battery() {
+    // Satellite of the ArrayMapping refactor: the systolic preset run
+    // under BOTH array-mapping templates, on two zoo nets, inference and
+    // training (full fwd + dX + dW + wu graphs), KAPLA solver. Pins the
+    // per-template directive programs across commits, and checks the
+    // structural training invariant (backward MACs conserve forward) on
+    // top of the byte pin.
+    use kapla::arch::PeDataflow;
+    use kapla::mapping::array_mapping;
+    use kapla::workloads::by_name;
+
+    let base = presets::edge_tpu();
+    let mut snap = String::new();
+    for df in [PeDataflow::RowStationary, PeDataflow::Systolic] {
+        let mut arch = base.clone();
+        arch.pe_dataflow = df;
+        for name in ["mlp", "mlp-train", "alexnet", "alexnet-train"] {
+            let net = by_name(name).expect("zoo net");
+            let job = Job {
+                net: net.clone(),
+                batch: 4,
+                objective: Objective::Energy,
+                solver: SolverKind::Kapla,
+                dp: golden_dp(1),
+            };
+            let r = run_job(&arch, &job).expect("battery job must schedule");
+            if let Some(base_name) = name.strip_suffix("-train") {
+                let fwd = by_name(base_name).unwrap();
+                for l in &fwd.layers {
+                    if l.has_weights() {
+                        let bd = net
+                            .layers
+                            .iter()
+                            .find(|x| x.name == format!("{}@bd", l.name))
+                            .expect("every weighted layer gets a back-activation pass");
+                        assert_eq!(bd.macs(4), l.macs(4), "{name}: {} bd macs", l.name);
+                    }
+                }
+            }
+            snap.push_str(&format!("### {} / {}\n", array_mapping(df).name(), name));
+            snap.push_str(&snapshot_result(&net, SolverKind::Kapla, &r));
+        }
+    }
+    golden_file_check("array_mapping_battery", &snap);
+}
+
+#[test]
 fn golden_intra_layer_directives_for_all_solvers() {
     // The two small zoo layers: alexnet's conv2 and mlp's fc1, solved by
     // every intra-layer solver family in a fixed context — cold cache vs

@@ -1,0 +1,241 @@
+//! First-class backward layers: conservation properties of the training
+//! graphs (per-layer back-activation / back-weight MAC counts equal the
+//! forward layer's; tensor word totals consistent under the C/K role
+//! swap), and equivalence of the new `ConvBwAct` kind with the historical
+//! dims-swapped-`Conv` modeling where their roles coincide.
+
+use kapla::arch::{presets, PeDataflow};
+use kapla::directives::{LayerScheme, LevelBlock, LoopOrder, Qty};
+use kapla::mapping::{LayerShape, UnitMap};
+use kapla::partition::enumerate_partitions;
+use kapla::solvers::space::qty_candidates;
+use kapla::workloads::{all_networks, training_graph, Layer, LayerKind};
+
+/// Every weighted forward layer in the zoo gets @bd/@bw/@wu successors
+/// whose MAC counts conserve the forward count exactly.
+#[test]
+fn backward_macs_conserve_forward_across_zoo() {
+    for fwd in all_networks() {
+        let t = training_graph(&fwd);
+        for l in &fwd.layers {
+            if !l.has_weights() {
+                continue;
+            }
+            let bd = t
+                .layers
+                .iter()
+                .find(|x| x.name == format!("{}@bd", l.name))
+                .unwrap_or_else(|| panic!("{}: missing {}@bd", t.name, l.name));
+            let bw = t
+                .layers
+                .iter()
+                .find(|x| x.name == format!("{}@bw", l.name))
+                .unwrap_or_else(|| panic!("{}: missing {}@bw", t.name, l.name));
+            assert!(
+                t.layers.iter().any(|x| x.name == format!("{}@wu", l.name)),
+                "{}: missing {}@wu",
+                t.name,
+                l.name
+            );
+            for n in [1u64, 16] {
+                assert_eq!(bd.macs(n), l.macs(n), "{}: {}@bd macs", t.name, l.name);
+                assert_eq!(bw.macs(n), l.macs(n), "{}: {}@bw macs", t.name, l.name);
+            }
+        }
+    }
+}
+
+/// The back-activation layer reads dY and writes dX: its input/output
+/// volumes are the forward layer's output/input volumes, and its filter
+/// tensor is the same (transposed) weight tensor.
+#[test]
+fn backward_volumes_swap_roles_across_zoo() {
+    for fwd in all_networks() {
+        let t = training_graph(&fwd);
+        for l in &fwd.layers {
+            if !l.has_weights() {
+                continue;
+            }
+            let bd = t.layers.iter().find(|x| x.name == format!("{}@bd", l.name)).unwrap();
+            assert_eq!(bd.ifm_elems(16), l.ofm_elems(16), "{}: {}@bd reads dY", t.name, l.name);
+            assert_eq!(bd.ofm_elems(16), l.ifm_elems(16), "{}: {}@bd writes dX", t.name, l.name);
+            assert_eq!(bd.weight_elems(), l.weight_elems(), "{}: {}@bd filters", t.name, l.name);
+        }
+    }
+}
+
+/// Training graphs emit the dedicated backward kinds, not dims-swapped
+/// forward kinds.
+#[test]
+fn training_graphs_use_first_class_kinds() {
+    for fwd in all_networks() {
+        let t = training_graph(&fwd);
+        for (i, l) in t.layers.iter().enumerate() {
+            if l.name.ends_with("@bd") {
+                let base = &t.layers[..i]
+                    .iter()
+                    .find(|x| format!("{}@bd", x.name) == l.name)
+                    .unwrap()
+                    .kind;
+                let want = if *base == LayerKind::DWConv {
+                    LayerKind::DWConvBwAct
+                } else {
+                    LayerKind::ConvBwAct
+                };
+                assert_eq!(l.kind, want, "{}: {}", t.name, l.name);
+            }
+            if l.name.ends_with("@bw") {
+                assert_eq!(l.kind, LayerKind::ConvBwWeight, "{}: {}", t.name, l.name);
+            }
+            if l.name.ends_with("@wu") {
+                assert!(l.no_batch, "{}: {}", t.name, l.name);
+            }
+        }
+    }
+}
+
+/// Under row-stationary (full fmap planes GBUF-resident), the node-scope
+/// tensor word counts of a back-activation layer at full blocks are the
+/// forward layer's with ifm/ofm swapped; weight words match under both
+/// templates.
+#[test]
+fn node_word_totals_consistent_under_role_swap() {
+    let layers = [
+        Layer::conv("c", 24, 48, 14, 3, 1),
+        Layer::conv("cs", 16, 32, 14, 3, 2),
+        Layer::conv("pw", 64, 96, 7, 1, 1),
+        Layer::fc("f", 256, 128),
+    ];
+    for l in &layers {
+        let bd = Layer {
+            name: format!("{}@bd", l.name),
+            kind: LayerKind::ConvBwAct,
+            c: l.k,
+            k: l.c,
+            xo: l.xi(),
+            yo: l.yi(),
+            r: l.r,
+            s: l.s,
+            stride: l.stride,
+            no_batch: false,
+        };
+        let n = 4;
+        let fsh = LayerShape::full(l, n);
+        let bsh = LayerShape::full(&bd, n);
+        let fq = Qty::new(n, l.c, l.k);
+        let bq = Qty::new(n, bd.c, bd.k);
+
+        let rs = presets::multi_node_eyeriss();
+        assert_eq!(rs.pe_dataflow, PeDataflow::RowStationary);
+        let mf = UnitMap::build(&rs, fsh);
+        let mb = UnitMap::build(&rs, bsh);
+        assert_eq!(mb.ifm_node_words(bq), mf.ofm_node_words(fq), "{}: ifm<-ofm", l.name);
+        assert_eq!(mb.ofm_node_words(bq), mf.ifm_node_words(fq), "{}: ofm<-ifm", l.name);
+        assert_eq!(mb.wgt_node_words(bq), mf.wgt_node_words(fq), "{}: wgt", l.name);
+
+        let sys = presets::edge_tpu();
+        assert_eq!(sys.pe_dataflow, PeDataflow::Systolic);
+        let sf = UnitMap::build(&sys, fsh);
+        let sb = UnitMap::build(&sys, bsh);
+        assert_eq!(sb.wgt_node_words(bq), sf.wgt_node_words(fq), "{}: sys wgt", l.name);
+        assert_eq!(sb.shape.macs(), sf.shape.macs(), "{}: macs", l.name);
+    }
+}
+
+/// Where the roles coincide — stride 1 and a 1x1 filter, so the transposed
+/// conv *is* a plain conv with C/K swapped — the new `ConvBwAct` kind must
+/// produce byte-identical access counts, footprints and validity to the
+/// historical dims-swapped-`Conv` modeling, under both array mappings.
+#[test]
+fn bwact_equals_dims_swapped_conv_where_roles_coincide() {
+    // pointwise conv and FC: r = s = stride = 1.
+    let cases = [Layer::conv("pw2", 96, 64, 14, 1, 1), Layer::fc("fc1", 512, 128)];
+    for arch in [presets::bench_multi_node(), presets::edge_tpu()] {
+        for l in &cases {
+            let old = Layer {
+                name: format!("{}@bd", l.name),
+                kind: LayerKind::Conv,
+                c: l.k,
+                k: l.c,
+                xo: l.xi(),
+                yo: l.yi(),
+                r: 1,
+                s: 1,
+                stride: 1,
+                no_batch: false,
+            };
+            let mut new = old.clone();
+            new.kind = LayerKind::ConvBwAct;
+            new.validate().unwrap();
+            let rb = 4;
+            let mut compared = 0;
+            for part in enumerate_partitions(&old, rb, (2, 2), true) {
+                let uo = UnitMap::build(&arch, part.node_shape(&old, rb));
+                let un = UnitMap::build(&arch, part.node_shape(&new, rb));
+                assert_eq!(uo.totals, un.totals);
+                assert_eq!(uo.granule, un.granule);
+                for gq in qty_candidates(uo.totals, uo.granule).into_iter().step_by(3) {
+                    let rq = uo.align_block(Qty::new(1, gq.c.min(2), gq.k.min(3)));
+                    let order = LoopOrder::all()[1];
+                    let mk = |unit| LayerScheme {
+                        part,
+                        unit,
+                        regf: LevelBlock { qty: rq, order },
+                        gbuf: LevelBlock { qty: gq, order },
+                    };
+                    let so = mk(uo);
+                    let sn = mk(un);
+                    assert_eq!(so.gbuf_words_per_node(), sn.gbuf_words_per_node());
+                    assert_eq!(so.regf_words_per_pe(), sn.regf_words_per_pe());
+                    assert_eq!(
+                        so.validate(&arch).is_ok(),
+                        sn.validate(&arch).is_ok(),
+                        "{}: validity diverged",
+                        l.name
+                    );
+                    if so.validate(&arch).is_err() {
+                        continue;
+                    }
+                    for on_chip in [false, true] {
+                        let ao = so.access_counts(on_chip);
+                        let an = sn.access_counts(on_chip);
+                        assert_eq!(ao.dram, an.dram, "{}: dram", l.name);
+                        assert_eq!(ao.gbuf, an.gbuf, "{}: gbuf", l.name);
+                        assert_eq!(ao.gbuf_regf_side, an.gbuf_regf_side, "{}: bus", l.name);
+                        assert_eq!(ao.regf, an.regf, "{}: regf", l.name);
+                        assert_eq!(ao.macs, an.macs, "{}: macs", l.name);
+                        assert!((ao.noc_word_hops - an.noc_word_hops).abs() < 1e-9);
+                    }
+                    compared += 1;
+                }
+            }
+            assert!(compared > 0, "{}: no schemes compared", l.name);
+        }
+    }
+}
+
+/// Depthwise back-activation keeps the depthwise partition constraints:
+/// channels split through pk only, pc stays 1.
+#[test]
+fn dwconv_bwact_partition_constraints() {
+    let fwd = Layer::dwconv("dw", 32, 28, 3, 2);
+    let bd = Layer {
+        name: "dw@bd".into(),
+        kind: LayerKind::DWConvBwAct,
+        c: fwd.c,
+        k: fwd.c,
+        xo: fwd.xi(),
+        yo: fwd.yi(),
+        r: fwd.r,
+        s: fwd.s,
+        stride: fwd.stride,
+        no_batch: false,
+    };
+    let parts = enumerate_partitions(&bd, 8, (2, 2), true);
+    assert!(!parts.is_empty());
+    for p in &parts {
+        assert_eq!(p.pc, 1, "depthwise bd must not split C");
+        let sh = p.node_shape(&bd, 8);
+        assert_eq!(sh.c, sh.k, "channel split applies to both views");
+    }
+}
