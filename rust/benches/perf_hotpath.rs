@@ -407,6 +407,68 @@ fn main() {
         bk::save_json("perf_hotpath_session", &Json::Arr(rows));
     }
 
+    // L5: concurrent service connections — end-to-end request throughput
+    // of the network front end. C clients stream warm requests at an
+    // in-process TCP service sharing one tenant session; the row compares
+    // single-connection against fan-out to show the bounded worker pool
+    // multiplexing (solves are pure per session, so concurrency changes
+    // throughput, never responses).
+    {
+        use kapla::coordinator::transport::{self, ServiceConfig};
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpStream;
+
+        let sarch = presets::bench_multi_node();
+        let reqs_per_conn = 8usize;
+        let mut l5_rows: Vec<Json> = Vec::new();
+        for conns in [1usize, 4] {
+            let cfg = ServiceConfig {
+                queue_depth: 64,
+                workers: available_threads(),
+                ..Default::default()
+            };
+            let handle = transport::spawn(&sarch, cfg, "127.0.0.1:0").expect("bind service");
+            let addr = handle.tcp_addr().expect("tcp addr");
+            let ids: Vec<usize> = (0..conns).collect();
+            let t = Timer::start();
+            let served: Vec<usize> = par_map(&ids, conns, |_| {
+                let conn = TcpStream::connect(addr).expect("connect");
+                let mut writer = conn.try_clone().expect("clone");
+                let mut reader = BufReader::new(conn);
+                let mut ok = 0usize;
+                for _ in 0..reqs_per_conn {
+                    writer
+                        .write_all(
+                            b"schedule mlp 8 kapla threads=1 max_rounds=8 tenant=bench\n",
+                        )
+                        .expect("send");
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp).expect("recv");
+                    assert!(resp.contains("\"ok\":true"), "service error: {resp}");
+                    ok += 1;
+                }
+                ok
+            });
+            let total: usize = served.iter().sum();
+            let secs = t.elapsed_s();
+            handle.shutdown();
+            lines.push(format!(
+                "L5 service transport {conns} conns x {reqs_per_conn} reqs: \
+                 {:.1} req/s ({:.2} s end-to-end)",
+                total as f64 / secs.max(1e-9),
+                secs
+            ));
+            let mut row = Json::obj();
+            row.set("conns", conns.into())
+                .set("reqs_per_conn", reqs_per_conn.into())
+                .set("requests", total.into())
+                .set("seconds", secs.into())
+                .set("req_per_s", (total as f64 / secs.max(1e-9)).into());
+            l5_rows.push(row);
+        }
+        bk::save_json("perf_hotpath_transport", &Json::Arr(l5_rows));
+    }
+
     // L1: PJRT batched cost kernel vs native formula.
     {
         let ctx = LayerCtx {

@@ -1,0 +1,146 @@
+//! Service metrics: request/connection/overload counters and per-solver
+//! latency histograms, snapshotted together with the queue state and the
+//! per-tenant cache statistics into one JSON object — served by the
+//! transport's `metrics` request and the periodic stderr snapshot.
+//!
+//! Everything here is atomics (`util::stats::LatencyHistogram` is
+//! lock-free), so recording from the worker pool never contends with a
+//! solve, and a `metrics` request stays cheap enough to answer inline even
+//! when the solve queue is saturated — observability must survive exactly
+//! the overload conditions it exists to diagnose.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cost::CacheStats;
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Solver letters with a latency-histogram slot, in `SolverKind::letter()`
+/// notation (B/S/R/M/K).
+const SOLVER_LETTERS: [&str; 5] = ["B", "S", "R", "M", "K"];
+
+#[derive(Default)]
+pub struct Metrics {
+    /// Connections the listeners accepted (including ones shed at the
+    /// connection cap).
+    pub connections_accepted: AtomicU64,
+    /// Connections currently being served.
+    pub connections_active: AtomicU64,
+    /// Requests answered through `handle_line` (any verdict).
+    pub requests: AtomicU64,
+    /// Structured `{"ok":false,...}` responses (malformed requests,
+    /// unschedulable nets) — excluding admission-control rejections.
+    pub errors: AtomicU64,
+    /// Admission-control rejections: solve queue full or connection cap.
+    pub overloads: AtomicU64,
+    solver_latency: [LatencyHistogram; SOLVER_LETTERS.len()],
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one completed request: verdict plus wall time, bucketed by
+    /// the solver letter echoed in the response (`"R:p=0.3"` folds knobs
+    /// after the letter, so only the first byte is keyed). Non-schedule
+    /// responses (`stats`) carry no solver and count only as requests.
+    pub fn record_response(&self, resp: &Json, secs: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if let Some(label) = resp.get("solver").and_then(|s| s.as_str()) {
+            let letter = label.get(..1).unwrap_or("");
+            if let Some(i) = SOLVER_LETTERS.iter().position(|&l| l == letter) {
+                self.solver_latency[i].record(secs);
+            }
+        }
+    }
+
+    /// Mean solve latency across every solver histogram, if any request
+    /// completed yet — feeds the transport's `retry_after_ms` hint.
+    pub fn mean_solve_ms(&self) -> Option<f64> {
+        let n: u64 = self.solver_latency.iter().map(|h| h.count()).sum();
+        if n == 0 {
+            return None;
+        }
+        let total: f64 = self.solver_latency.iter().map(|h| h.total_ms()).sum();
+        Some(total / n as f64)
+    }
+
+    /// One deterministic snapshot (keys sorted by `Json::Obj`'s BTreeMap):
+    /// queue depth/capacity, the counters, per-solver latency histograms
+    /// (only letters that served requests), and per-tenant cache stats.
+    pub fn to_json(
+        &self,
+        queue_depth: usize,
+        queue_capacity: usize,
+        tenants: &[(String, CacheStats)],
+    ) -> Json {
+        let mut queue = Json::obj();
+        queue.set("depth", queue_depth.into()).set("capacity", queue_capacity.into());
+        let mut solvers = Json::obj();
+        for (i, letter) in SOLVER_LETTERS.iter().enumerate() {
+            if self.solver_latency[i].count() > 0 {
+                solvers.set(letter, self.solver_latency[i].to_json());
+            }
+        }
+        let mut tj = Json::obj();
+        for (name, stats) in tenants {
+            tj.set(name, stats.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("ok", true.into())
+            .set("queue", queue)
+            .set("connections_accepted", self.connections_accepted.load(Ordering::Relaxed).into())
+            .set("connections_active", self.connections_active.load(Ordering::Relaxed).into())
+            .set("requests", self.requests.load(Ordering::Relaxed).into())
+            .set("errors", self.errors.load(Ordering::Relaxed).into())
+            .set("overloads", self.overloads.load(Ordering::Relaxed).into())
+            .set("solver_latency_ms", solvers)
+            .set("tenants", tj);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::err_json;
+
+    fn ok_resp(solver: &str) -> Json {
+        let mut o = Json::obj();
+        o.set("ok", true.into()).set("solver", solver.into());
+        o
+    }
+
+    #[test]
+    fn responses_bucket_by_solver_letter() {
+        let m = Metrics::new();
+        m.record_response(&ok_resp("K"), 0.004);
+        m.record_response(&ok_resp("R:p=0.3,seed=7"), 0.050);
+        m.record_response(&err_json("nope"), 0.001);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 1);
+        let mean = m.mean_solve_ms().unwrap();
+        assert!((mean - 27.0).abs() < 1.0, "mean {mean}");
+        let j = m.to_json(2, 8, &[]).to_string_compact();
+        assert!(j.contains("\"queue\":{\"capacity\":8,\"depth\":2}"), "{j}");
+        // Only the letters that served requests appear, knobs folded away.
+        assert!(j.contains("\"K\":{\"count\":1"), "{j}");
+        assert!(j.contains("\"R\":{\"count\":1"), "{j}");
+        assert!(!j.contains("\"B\":"), "{j}");
+    }
+
+    #[test]
+    fn stats_responses_count_but_do_not_bucket() {
+        let m = Metrics::new();
+        let mut stats = Json::obj();
+        stats.set("ok", true.into()).set("cache", Json::obj());
+        m.record_response(&stats, 0.001);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(m.mean_solve_ms(), None);
+    }
+}

@@ -12,9 +12,14 @@
 //! fingerprint guarantees sharing never aliases across hardware configs.
 //! The service mode makes the binary a long-running scheduler: one line
 //! per request, JSON out — the "real-time interactive compilation" use the
-//! paper motivates (NAS, MLaaS).
+//! paper motivates (NAS, MLaaS). `service` holds the pure line protocol
+//! (stdin loop included); `transport` serves it over concurrent TCP /
+//! unix-socket connections with per-tenant sessions, bounded-queue
+//! admission control, and the `metrics` surface assembled in `metrics`.
 
+pub mod metrics;
 pub mod service;
+pub mod transport;
 
 use crate::arch::ArchConfig;
 use crate::cost::{CacheBudget, EvalCache, SessionCache};

@@ -23,6 +23,13 @@
 //! §II-C) reuse detailed-simulator evaluations across requests. Each
 //! response reports the session's cache counters; `stats` reads them
 //! without scheduling anything.
+//!
+//! `handle_line` is deliberately pure (one line in, one JSON value out,
+//! no I/O): the stdin loop below and the concurrent network front end in
+//! `coordinator::transport` are both thin shells over it. Transport-level
+//! concerns — the `tenant=` knob, the `metrics` request, admission
+//! control — are stripped or answered in `transport` before a line
+//! reaches this module.
 
 use std::io::{BufRead, Write};
 
@@ -71,7 +78,7 @@ pub fn handle_line(arch: &ArchConfig, session: &SessionCache, line: &str) -> Opt
     }
 }
 
-fn err_json(msg: &str) -> Json {
+pub(crate) fn err_json(msg: &str) -> Json {
     let mut o = Json::obj();
     o.set("ok", false.into()).set("error", msg.into());
     o
@@ -213,9 +220,13 @@ fn handle_schedule(
     Ok(o)
 }
 
-/// Run the blocking stdin/stdout service loop with an unbounded session.
+/// Run the blocking stdin/stdout service loop with the same bounded
+/// default budget `run_jobs` batches get: a long-running service must not
+/// grow memory monotonically with distinct requests. The budget is purely
+/// a resource knob — schedules are byte-identical under any budget — and
+/// `--cache-budget` (including `unbounded`) overrides it.
 pub fn serve(arch: &ArchConfig) {
-    serve_with(arch, CacheBudget::UNBOUNDED)
+    serve_with(arch, CacheBudget::bytes(super::DEFAULT_SESSION_BYTES))
 }
 
 /// Run the blocking stdin/stdout service loop; all requests share one
@@ -319,6 +330,28 @@ mod tests {
         let r = handle_line(&arch, &s, "schedule mlp 8 kapla energy train").unwrap();
         assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
         assert!(r.get("network").unwrap().as_str().unwrap().contains("train"));
+    }
+
+    #[test]
+    fn train_name_and_flag_do_not_double_wrap() {
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        // `mlp-train` already names the training graph; the redundant
+        // `train` flag used to wrap it a second time (panicking on the
+        // backward kinds). Both spellings must yield the same solve.
+        let both =
+            handle_line(&arch, &s, "schedule mlp-train 4 kapla train threads=1 max_rounds=4")
+                .unwrap();
+        assert_eq!(both.get("ok"), Some(&Json::Bool(true)), "{}", both.to_string_compact());
+        assert_eq!(both.get("network").unwrap().as_str(), Some("mlp-train"));
+        let flag = handle_line(&arch, &s, "schedule mlp 4 kapla train threads=1 max_rounds=4")
+            .unwrap();
+        assert_eq!(flag.get("network").unwrap().as_str(), Some("mlp-train"));
+        assert_eq!(both.get("energy_pj"), flag.get("energy_pj"));
+        assert_eq!(
+            both.get("chain").unwrap().to_string_compact(),
+            flag.get("chain").unwrap().to_string_compact()
+        );
     }
 
     #[test]

@@ -1,0 +1,671 @@
+//! Network transport for the scheduling service: concurrent TCP and
+//! unix-socket connections speaking the `service` line protocol,
+//! multiplexed onto a bounded solve pool with admission control,
+//! per-tenant scheduling sessions, and a `metrics` surface.
+//!
+//! Layering: `service::handle_line` stays the pure request → response
+//! function (one line in, one JSON out, no I/O, no tenancy) — this module
+//! only wraps the concurrency shell around it:
+//!
+//! * **Listener threads** accept connections (non-blocking accept polled
+//!   against a stop flag, so shutdown never hangs in `accept`).
+//! * **Connection threads** frame lines, strip the transport-level
+//!   `tenant=` knob, resolve the request's `SessionCache`, and submit
+//!   solve work to the bounded queue. `stats`/`metrics`/`quit` answer
+//!   inline so observability survives a saturated queue.
+//! * **A worker pool** (`util::queue::BoundedQueue` drained by
+//!   `par_map`-style scoped threads) runs the solves. When the queue is
+//!   full the connection answers `{"ok":false,"error":"overloaded",
+//!   "retry_after_ms":...}` immediately instead of blocking the client.
+//!
+//! Tenancy: each `tenant=<name>` namespace gets its own `SessionCache`
+//! under an independent `CacheBudget`, so one tenant's NAS sweep can
+//! neither read another's warm cache (isolation is pinned by
+//! `tests/service_transport.rs`) nor evict it (budgets are per-session by
+//! construction). Requests without the knob share a per-connection
+//! anonymous session — exactly the old stdin-loop behavior.
+//!
+//! Every solver is pure per (arch, request, session), so concurrency
+//! changes *when* requests run, never what a client gets back: a schedule
+//! computed over TCP is byte-identical to the same request through the
+//! stdin loop.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::arch::ArchConfig;
+use crate::cost::{CacheBudget, CacheStats, EvalCache as _, SessionCache};
+use crate::util::json::Json;
+use crate::util::queue::BoundedQueue;
+use crate::util::Timer;
+
+use super::metrics::Metrics;
+use super::service;
+
+/// A client line longer than this is judged hostile and the connection is
+/// closed (the longest legitimate request is well under 1 KB).
+const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// How long a connection thread blocks in `read` before re-checking the
+/// stop flag; bounds shutdown latency for idle connections.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Accept-loop poll interval while no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+pub struct ServiceConfig {
+    /// Budget for *each* tenant namespace and each anonymous
+    /// per-connection session, independently (not a shared pool: an
+    /// aggressive tenant must not be able to evict a quiet one).
+    pub budget: CacheBudget,
+    /// Bounded solve-queue depth; a full queue sheds load.
+    pub queue_depth: usize,
+    /// Worker threads draining the solve queue.
+    pub workers: usize,
+    /// Maximum distinct named tenant namespaces (each holds up to
+    /// `budget` of cache, so this caps service memory).
+    pub max_tenants: usize,
+    /// Maximum concurrently served connections; excess connections get a
+    /// structured overload response and are closed.
+    pub max_connections: usize,
+    /// Emit a compact metrics JSON line to stderr at this interval.
+    pub metrics_interval: Option<Duration>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            budget: CacheBudget::bytes(super::DEFAULT_SESSION_BYTES),
+            queue_depth: 64,
+            workers: crate::util::available_threads(),
+            max_tenants: 64,
+            max_connections: 256,
+            metrics_interval: None,
+        }
+    }
+}
+
+/// Named per-tenant `SessionCache` namespaces, created lazily on first
+/// use, each under its own independent budget.
+pub struct TenantRegistry {
+    budget: CacheBudget,
+    max_tenants: usize,
+    map: Mutex<HashMap<String, Arc<SessionCache>>>,
+}
+
+impl TenantRegistry {
+    pub fn new(budget: CacheBudget, max_tenants: usize) -> TenantRegistry {
+        TenantRegistry { budget, max_tenants, map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Tenant names come from untrusted request lines: short alnum plus
+    /// `. _ -` only (they become JSON keys in `metrics` output).
+    pub fn valid_name(name: &str) -> bool {
+        !name.is_empty()
+            && name.len() <= 64
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+    }
+
+    /// The tenant's session, created on first use. The namespace count is
+    /// capped: a request naming a new tenant past the cap is rejected
+    /// (existing tenants keep working — the cap bounds memory, it is not
+    /// an eviction policy).
+    pub fn session(&self, name: &str) -> Result<Arc<SessionCache>, String> {
+        if !Self::valid_name(name) {
+            return Err(format!("bad tenant name {name:?}: use 1-64 chars of [a-zA-Z0-9._-]"));
+        }
+        let mut map = self.map.lock().unwrap();
+        if let Some(s) = map.get(name) {
+            return Ok(Arc::clone(s));
+        }
+        if map.len() >= self.max_tenants {
+            return Err(format!(
+                "tenant limit reached ({}): tenant {name:?} not admitted",
+                self.max_tenants
+            ));
+        }
+        let s = Arc::new(SessionCache::new(self.budget));
+        map.insert(name.to_string(), Arc::clone(&s));
+        Ok(s)
+    }
+
+    /// Per-tenant cache-stats snapshot, name-sorted so `metrics` output is
+    /// deterministic.
+    pub fn snapshot(&self) -> Vec<(String, CacheStats)> {
+        let map = self.map.lock().unwrap();
+        let mut v: Vec<(String, CacheStats)> =
+            map.iter().map(|(name, s)| (name.clone(), s.stats())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Split the transport-level `tenant=` knob out of a request line, so
+/// `handle_line` (which rejects unknown knobs) sees the plain protocol.
+/// A token carrying `:` is a solver spec (`random:p=0.3`), never a tenant
+/// knob; repeating the knob is ambiguous and rejected.
+pub fn split_tenant(line: &str) -> Result<(Option<&str>, String), String> {
+    let mut tenant = None;
+    let mut rest: Vec<&str> = Vec::new();
+    for tok in line.split_whitespace() {
+        match tok.strip_prefix("tenant=") {
+            Some(name) if !tok.contains(':') => {
+                if tenant.replace(name).is_some() {
+                    return Err("repeated tenant= knob".to_string());
+                }
+            }
+            _ => rest.push(tok),
+        }
+    }
+    Ok((tenant, rest.join(" ")))
+}
+
+/// One admitted solve: the plain request line, the resolved session, and
+/// the channel the connection thread blocks on for the response.
+struct SolveRequest {
+    line: String,
+    session: Arc<SessionCache>,
+    resp: mpsc::Sender<Json>,
+}
+
+/// Shared state of one running service instance.
+struct ServeCtx {
+    arch: ArchConfig,
+    cfg: ServiceConfig,
+    tenants: TenantRegistry,
+    queue: BoundedQueue<SolveRequest>,
+    metrics: Metrics,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServeCtx {
+    fn metrics_json(&self) -> Json {
+        self.metrics.to_json(self.queue.len(), self.queue.capacity(), &self.tenants.snapshot())
+    }
+
+    /// Structured backpressure response. The retry hint scales with the
+    /// backlog: mean observed solve latency × (queued + 1), clamped to
+    /// [25 ms, 10 s]; 100 ms per queued item before any solve completed.
+    fn overloaded_json(&self, reason: &str) -> Json {
+        self.metrics.overloads.fetch_add(1, Ordering::Relaxed);
+        let depth = self.queue.len();
+        let per_item_ms = self.metrics.mean_solve_ms().unwrap_or(100.0);
+        let retry = (per_item_ms * (depth as f64 + 1.0)).clamp(25.0, 10_000.0);
+        let mut o = Json::obj();
+        o.set("ok", false.into())
+            .set("error", "overloaded".into())
+            .set("reason", reason.into())
+            .set("queue_depth", depth.into())
+            .set("retry_after_ms", retry.into());
+        o
+    }
+}
+
+enum Flow {
+    Respond(Json),
+    Quit,
+}
+
+/// Route one framed request line: resolve tenancy, then either answer
+/// inline (`metrics`, `stats`, errors) or go through solve admission.
+fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) -> Flow {
+    let (tenant, plain) = match split_tenant(req) {
+        Ok(split) => split,
+        Err(e) => return Flow::Respond(service::err_json(&e)),
+    };
+    let session = match tenant {
+        Some(name) => match ctx.tenants.session(name) {
+            Ok(s) => s,
+            Err(e) => return Flow::Respond(service::err_json(&e)),
+        },
+        None => Arc::clone(default_session),
+    };
+    match plain.split_whitespace().next().unwrap_or("") {
+        // The metrics surface lives above the pure line protocol.
+        "metrics" => Flow::Respond(ctx.metrics_json()),
+        // Solves are the only expensive requests: they alone pass through
+        // admission control.
+        "schedule" => {
+            let (tx, rx) = mpsc::channel();
+            match ctx.queue.try_push(SolveRequest { line: plain, session, resp: tx }) {
+                Ok(()) => match rx.recv() {
+                    Ok(resp) => Flow::Respond(resp),
+                    // Workers only drop a pending sender at shutdown.
+                    Err(_) => Flow::Respond(service::err_json("service shutting down")),
+                },
+                Err(_) if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() => {
+                    Flow::Respond(service::err_json("service shutting down"))
+                }
+                Err(_) => Flow::Respond(ctx.overloaded_json("solve queue full")),
+            }
+        }
+        // Everything else (stats, quit, malformed lines) is cheap: answer
+        // inline so error reporting and cache observability survive a
+        // saturated solve queue.
+        _ => {
+            let t = Timer::start();
+            match service::handle_line(&ctx.arch, &session, &plain) {
+                Some(resp) => {
+                    ctx.metrics.record_response(&resp, t.elapsed_s());
+                    Flow::Respond(resp)
+                }
+                None => Flow::Quit,
+            }
+        }
+    }
+}
+
+/// Drain the solve queue until it closes. `handle_line` already maps
+/// malformed requests and solver failures to structured errors; the
+/// `catch_unwind` is the last line of defense so a latent panic costs one
+/// response, never the worker (acceptance: never a hang or panic).
+fn worker_loop(ctx: &ServeCtx) {
+    while let Some(req) = ctx.queue.pop() {
+        let t = Timer::start();
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            service::handle_line(&ctx.arch, &req.session, &req.line)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&'static str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Some(service::err_json(&format!("internal error: {msg}")))
+        })
+        // `quit` never reaches the queue; guard anyway.
+        .unwrap_or_else(|| service::err_json("quit is a connection-level request"));
+        ctx.metrics.record_response(&resp, t.elapsed_s());
+        // The connection may have vanished while the solve ran.
+        let _ = req.resp.send(resp);
+    }
+}
+
+/// Either transport's accepted stream, unified so the connection loop is
+/// written once.
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+}
+
+impl Stream {
+    fn configure(&self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(READ_POLL))?;
+                s.set_write_timeout(Some(Duration::from_secs(10)))
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(READ_POLL))?;
+                s.set_write_timeout(Some(Duration::from_secs(10)))
+            }
+        }
+    }
+}
+
+// `TcpStream`/`UnixStream` implement `Read`/`Write` on shared references,
+// so one connection thread can hold a `BufReader` over the stream while
+// writing responses through a second shared borrow.
+impl Read for &Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => {
+                let mut s: &TcpStream = s;
+                s.read(buf)
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let mut s: &std::os::unix::net::UnixStream = s;
+                s.read(buf)
+            }
+        }
+    }
+}
+
+impl Write for &Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => {
+                let mut s: &TcpStream = s;
+                s.write(buf)
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let mut s: &std::os::unix::net::UnixStream = s;
+                s.write(buf)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => {
+                let mut s: &TcpStream = s;
+                s.flush()
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let mut s: &std::os::unix::net::UnixStream = s;
+                s.flush()
+            }
+        }
+    }
+}
+
+fn write_response(mut w: impl Write, resp: &Json) -> std::io::Result<()> {
+    let mut line = resp.to_string_compact();
+    line.push('\n');
+    w.write_all(line.as_bytes())
+}
+
+/// Serve one connection: line framing with a read-timeout poll on the
+/// stop flag, one anonymous session for `tenant=`-less requests.
+fn handle_conn(stream: Stream, ctx: &ServeCtx) {
+    if stream.configure().is_err() {
+        return;
+    }
+    let default_session = Arc::new(SessionCache::new(ctx.cfg.budget));
+    let mut reader = BufReader::new(&stream);
+    let mut line = String::new();
+    loop {
+        if ctx.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF (a final unterminated fragment is dropped)
+            Ok(_) => {
+                if line.len() > MAX_LINE_BYTES {
+                    let _ = write_response(&stream, &service::err_json("request line too long"));
+                    break;
+                }
+                let req = line.trim().to_string();
+                line.clear();
+                match serve_line(&req, &default_session, ctx) {
+                    Flow::Respond(resp) => {
+                        if write_response(&stream, &resp).is_err() {
+                            break;
+                        }
+                    }
+                    Flow::Quit => break,
+                }
+            }
+            // Timeout while idle (or mid-line — the partial stays buffered
+            // in `line`): just re-check the stop flag and keep reading.
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if line.len() > MAX_LINE_BYTES {
+                    let _ = write_response(&stream, &service::err_json("request line too long"));
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Either transport's listener.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(true),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(true),
+        }
+    }
+
+    fn accept_stream(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+/// Bind a listen spec: `"host:port"` for TCP (port 0 picks a free port —
+/// see [`ServiceHandle::tcp_addr`]) or `"unix:/path/to.sock"`.
+pub fn bind(spec: &str) -> std::io::Result<Listener> {
+    match spec.strip_prefix("unix:") {
+        Some(path) => {
+            #[cfg(unix)]
+            {
+                // A stale socket file from a dead process refuses to bind.
+                let _ = std::fs::remove_file(path);
+                std::os::unix::net::UnixListener::bind(path).map(Listener::Unix)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix sockets are not available on this platform",
+                ))
+            }
+        }
+        None => TcpListener::bind(spec).map(Listener::Tcp),
+    }
+}
+
+fn accept_loop<'scope>(
+    listener: &Listener,
+    ctx: &'scope ServeCtx,
+    scope: &'scope std::thread::Scope<'scope, '_>,
+) {
+    if listener.set_nonblocking().is_err() {
+        return;
+    }
+    while !ctx.stop.load(Ordering::Relaxed) {
+        match listener.accept_stream() {
+            Ok(stream) => {
+                ctx.metrics.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                let active = ctx.metrics.connections_active.fetch_add(1, Ordering::Relaxed) + 1;
+                if active as usize > ctx.cfg.max_connections {
+                    // Connection-level admission control: answer with the
+                    // structured overload, then close (drop).
+                    if stream.configure().is_ok() {
+                        let _ = write_response(&stream, &ctx.overloaded_json("connection limit"));
+                    }
+                    ctx.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                scope.spawn(move || {
+                    handle_conn(stream, ctx);
+                    ctx.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            // Transient accept errors (e.g. a client resetting mid-
+            // handshake) must not kill the listener.
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+fn metrics_ticker(ctx: &ServeCtx, interval: Duration) {
+    let mut elapsed = Duration::ZERO;
+    while !ctx.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(ACCEPT_POLL);
+        elapsed += ACCEPT_POLL;
+        if elapsed >= interval {
+            elapsed = Duration::ZERO;
+            eprintln!("kapla metrics {}", ctx.metrics_json().to_string_compact());
+        }
+    }
+}
+
+/// Serve until `stop` is set: workers, listeners, connections and the
+/// optional metrics ticker all run as scoped threads, so this returns
+/// only after every admitted request has been answered.
+pub fn run(arch: &ArchConfig, cfg: ServiceConfig, listeners: Vec<Listener>, stop: Arc<AtomicBool>) {
+    let queue_depth = cfg.queue_depth.max(1);
+    let workers = cfg.workers.max(1);
+    let ctx = ServeCtx {
+        arch: arch.clone(),
+        tenants: TenantRegistry::new(cfg.budget, cfg.max_tenants.max(1)),
+        queue: BoundedQueue::new(queue_depth),
+        metrics: Metrics::new(),
+        stop,
+        cfg,
+    };
+    let ctx = &ctx;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(move || worker_loop(ctx));
+        }
+        if let Some(interval) = ctx.cfg.metrics_interval {
+            scope.spawn(move || metrics_ticker(ctx, interval));
+        }
+        for listener in &listeners {
+            scope.spawn(move || accept_loop(listener, ctx, scope));
+        }
+        // Shutdown sequencing: once the stop flag is set, give connection
+        // threads one read-poll to observe it (they stop submitting), then
+        // close the queue — workers drain the admitted backlog and exit.
+        scope.spawn(move || {
+            while !ctx.stop.load(Ordering::Relaxed) {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            std::thread::sleep(READ_POLL + READ_POLL);
+            ctx.queue.close();
+        });
+    });
+}
+
+/// A service running in background threads; the handle is how tests and
+/// the CLI stop it (or block on it).
+pub struct ServiceHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    tcp_addr: Option<SocketAddr>,
+    label: String,
+}
+
+impl ServiceHandle {
+    /// The bound TCP address — the real port when the spec asked for :0.
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.tcp_addr
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Block until the service exits (the CLI serve path).
+    pub fn join(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+
+    /// Signal stop and wait for every in-flight request to be answered.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        // Leaked handles (test early-exit paths) still stop the threads;
+        // no join here, so dropping never blocks.
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Bind `spec` synchronously (so the caller sees bind errors and the
+/// ephemeral port), then serve it on background threads.
+pub fn spawn(arch: &ArchConfig, cfg: ServiceConfig, spec: &str) -> std::io::Result<ServiceHandle> {
+    let listener = bind(spec)?;
+    let tcp_addr = match &listener {
+        Listener::Tcp(l) => Some(l.local_addr()?),
+        #[cfg(unix)]
+        Listener::Unix(_) => None,
+    };
+    let label = match tcp_addr {
+        Some(addr) => addr.to_string(),
+        None => spec.to_string(),
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = Arc::clone(&stop);
+    let arch = arch.clone();
+    let join = std::thread::Builder::new()
+        .name("kapla-service".to_string())
+        .spawn(move || run(&arch, cfg, vec![listener], thread_stop))?;
+    Ok(ServiceHandle { stop, join: Some(join), tcp_addr, label })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_knob_splits_out_of_the_line() {
+        let (t, rest) = split_tenant("schedule mlp 8 kapla tenant=acme threads=1").unwrap();
+        assert_eq!(t, Some("acme"));
+        assert_eq!(rest, "schedule mlp 8 kapla threads=1");
+
+        let (t, rest) = split_tenant("stats").unwrap();
+        assert_eq!(t, None);
+        assert_eq!(rest, "stats");
+
+        // A ':' marks a solver spec, not a tenant knob — leave it in place
+        // for handle_line to reject.
+        let (t, rest) = split_tenant("schedule mlp tenant=a:b").unwrap();
+        assert_eq!(t, None);
+        assert_eq!(rest, "schedule mlp tenant=a:b");
+
+        assert!(split_tenant("stats tenant=a tenant=b").is_err());
+    }
+
+    #[test]
+    fn tenant_registry_validates_and_caps() {
+        let reg = TenantRegistry::new(CacheBudget::entries(64), 2);
+        assert!(reg.session("alpha").is_ok());
+        // Same name returns the same session (no double-create).
+        assert!(reg.session("alpha").is_ok());
+        assert!(reg.session("beta-2.x").is_ok());
+        assert_eq!(reg.len(), 2);
+        let err = reg.session("gamma").unwrap_err();
+        assert!(err.contains("tenant limit"), "{err}");
+        for bad in ["", "has space", "semi;colon", "sl/ash", &"x".repeat(65)] {
+            let err = reg.session(bad).unwrap_err();
+            assert!(err.contains("bad tenant name"), "{bad:?}: {err}");
+        }
+        // Rejections must not consume namespace slots.
+        assert_eq!(reg.len(), 2);
+        let names: Vec<String> = reg.snapshot().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["alpha", "beta-2.x"]);
+    }
+}

@@ -12,7 +12,7 @@
 //! flags are `--key value` pairs.
 
 use kapla::arch::{presets, ArchConfig};
-use kapla::coordinator::{self, service, Job, SolverKind};
+use kapla::coordinator::{self, service, transport, Job, SolverKind};
 use kapla::cost::{CacheBudget, CacheStats, EvalCache as _, SessionCache};
 use kapla::directives::emit::emit_layer;
 use kapla::interlayer::dp::DpConfig;
@@ -36,17 +36,7 @@ fn main() -> ExitCode {
         "directives" => cmd_schedule(&flags, true),
         "compare" => cmd_compare(&flags),
         "validate" => cmd_validate(rest),
-        "serve" => {
-            let budget = match budget_of(&flags) {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("{e}");
-                    return ExitCode::FAILURE;
-                }
-            };
-            service::serve_with(&arch_of(&flags), budget);
-            ExitCode::SUCCESS
-        }
+        "serve" => cmd_serve(&flags),
         "info" => cmd_info(),
         _ => {
             usage();
@@ -61,8 +51,75 @@ fn usage() {
          [--net NAME] [--batch N] [--arch multi|edge|bench] \
          [--solver k|b|s|r[:p=P,seed=S]|m[:rounds=R,batch=B,seed=S]] \
          [--objective energy|latency] [--train] \
-         [--threads N] [--cache-budget N|unbounded|64mb]"
+         [--threads N] [--cache-budget N|unbounded|64mb]\n\
+         serve only: [--listen HOST:PORT|unix:PATH] [--tenants N] \
+         [--queue-depth N] [--workers N] [--max-connections N] \
+         [--metrics-interval SECS]"
     );
+}
+
+/// serve: the stdin/stdout line loop by default, or — with `--listen` —
+/// the concurrent TCP / unix-socket front end with per-tenant sessions,
+/// bounded-queue admission control and the `metrics` surface. Either way
+/// the session budget defaults to the bounded `run_jobs` default (a
+/// long-running service must not grow memory monotonically);
+/// `--cache-budget unbounded` restores the old behavior explicitly.
+fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
+    let budget = match flags.get("cache-budget") {
+        Some(s) => match CacheBudget::parse(s) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => CacheBudget::bytes(coordinator::DEFAULT_SESSION_BYTES),
+    };
+    let arch = arch_of(flags);
+    let Some(spec) = flags.get("listen") else {
+        service::serve_with(&arch, budget);
+        return ExitCode::SUCCESS;
+    };
+
+    let mut cfg = transport::ServiceConfig { budget, ..Default::default() };
+    for (key, slot) in [
+        ("queue-depth", &mut cfg.queue_depth),
+        ("tenants", &mut cfg.max_tenants),
+        ("workers", &mut cfg.workers),
+        ("max-connections", &mut cfg.max_connections),
+    ] {
+        if let Some(v) = flags.get(key) {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => *slot = n,
+                _ => {
+                    eprintln!("bad --{key} {v:?}: want a count >= 1");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+    }
+    if let Some(v) = flags.get("metrics-interval") {
+        match v.parse::<f64>() {
+            Ok(s) if s > 0.0 && s.is_finite() => {
+                cfg.metrics_interval = Some(std::time::Duration::from_secs_f64(s))
+            }
+            _ => {
+                eprintln!("bad --metrics-interval {v:?}: want seconds > 0");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    match transport::spawn(&arch, cfg, spec) {
+        Ok(handle) => {
+            eprintln!("kapla service listening on {}", handle.label());
+            handle.join();
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("cannot listen on {spec}: {e}");
+            ExitCode::FAILURE
+        }
+    }
 }
 
 /// Session-cache budget from `--cache-budget` (entries, `kb/mb/gb` byte

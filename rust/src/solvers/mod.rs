@@ -174,6 +174,13 @@ impl SolverKind {
                         None => p = part.parse().ok()?,
                     }
                 }
+                // A keep-probability outside (0, 1] is degenerate: p <= 0
+                // samples nothing (the solver would reject every scheme and
+                // "find" no schedule), p > 1 is meaningless, and NaN fails
+                // both comparisons. Reject rather than run a useless solve.
+                if !(p > 0.0 && p <= 1.0) {
+                    return None;
+                }
                 Some(SolverKind::Random { p, seed })
             }
             "m" | "ml" => {
@@ -187,6 +194,12 @@ impl SolverKind {
                         Some(_) => return None,
                         None => rounds = part.parse().ok()?,
                     }
+                }
+                // Zero rounds or a zero candidate batch trains on nothing —
+                // the same degenerate-count class the DP knobs already
+                // reject (`threads=0`, `ks=0`, ...).
+                if rounds == 0 || batch == 0 {
+                    return None;
                 }
                 Some(SolverKind::Ml { seed, rounds, batch })
             }
@@ -491,6 +504,35 @@ mod tests {
         assert_eq!(SolverKind::parse("random:q=0.5"), None);
         assert_eq!(SolverKind::parse("random:p=zero"), None);
         assert_eq!(SolverKind::parse("ml:rounds=many"), None);
+    }
+
+    #[test]
+    fn degenerate_stochastic_knobs_are_rejected() {
+        // Values that parse as numbers but make the solver useless: a
+        // keep-probability outside (0, 1] (including NaN/inf) or zero
+        // rounds/batch. All must come back `None` so front ends surface a
+        // structured error.
+        for s in [
+            "random:p=0",
+            "random:0",
+            "random:p=-1",
+            "random:p=nan",
+            "random:p=1.5",
+            "r:p=inf",
+            "ml:rounds=0",
+            "ml:0",
+            "ml:batch=0",
+            "ml:rounds=8,batch=0",
+        ] {
+            assert_eq!(SolverKind::parse(s), None, "{s} must be rejected");
+        }
+        // The boundaries stay legal: p=1 keeps every sample, 1-round/
+        // 1-candidate ML is slow but well-defined.
+        assert!(matches!(SolverKind::parse("random:p=1"), Some(SolverKind::Random { p, .. }) if p == 1.0));
+        assert_eq!(
+            SolverKind::parse("ml:rounds=1,batch=1"),
+            Some(SolverKind::Ml { seed: DEFAULT_ML_SEED, rounds: 1, batch: 1 })
+        );
     }
 
     #[test]

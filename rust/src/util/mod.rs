@@ -7,6 +7,7 @@
 
 pub mod json;
 pub mod prng;
+pub mod queue;
 pub mod stats;
 
 pub use prng::SplitMix64;

@@ -1,0 +1,165 @@
+//! A bounded multi-producer multi-consumer queue for the service's solve
+//! pool (Mutex + Condvar, mirroring `par_map`'s zero-dependency idiom).
+//!
+//! The shape is dictated by admission control: producers never block —
+//! `try_push` fails immediately when the queue is full so the transport
+//! can answer `{"ok":false,"error":"overloaded"}` instead of hanging a
+//! connection thread — while consumers block in `pop` until work arrives
+//! or the queue is closed. `close` is the shutdown edge: queued items are
+//! still drained (every admitted request gets a real response), then every
+//! blocked consumer wakes up with `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> BoundedQueue<T> {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(cap.min(1024)), closed: false }),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current depth (racy by nature; used for metrics and retry hints).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking admission: `Err` hands the item back when the queue is
+    /// full or closed, so the caller can shed load with a structured error.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= self.cap {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available; `None` once the queue is closed
+    /// *and* fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Stop admitting; wake every blocked consumer once the backlog drains.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_and_full_rejection() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "full queue hands the item back");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_backlog_then_wakes_consumers() {
+        let q = BoundedQueue::new(4);
+        q.try_push(10).unwrap();
+        q.try_push(11).unwrap();
+        q.close();
+        assert_eq!(q.try_push(12), Err(12), "closed queue admits nothing");
+        // Admitted items still come out, then the terminal None.
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_conserve_items() {
+        const PER_PRODUCER: usize = 200;
+        let q = BoundedQueue::new(8);
+        let consumed = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for p in 0..3 {
+                let q = &q;
+                scope.spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        let mut item = p * PER_PRODUCER + i;
+                        // Producers in this test *want* delivery: spin on
+                        // the non-blocking push until admitted.
+                        while let Err(back) = q.try_push(item) {
+                            item = back;
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let (q, consumed, sum) = (&q, &consumed, &sum);
+                scope.spawn(move || {
+                    while let Some(item) = q.pop() {
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                        sum.fetch_add(item, Ordering::Relaxed);
+                    }
+                });
+            }
+            // Producers finish first (consumers outpace a depth-8 queue
+            // only after close); close once all items are in flight.
+            scope.spawn(|| {
+                while consumed.load(Ordering::Relaxed) < 3 * PER_PRODUCER {
+                    std::thread::yield_now();
+                }
+                q.close();
+            });
+        });
+        let n = 3 * PER_PRODUCER;
+        assert_eq!(consumed.load(Ordering::Relaxed), n);
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
+    }
+}

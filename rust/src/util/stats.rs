@@ -1,4 +1,10 @@
-//! Lightweight summary statistics used by the benchmark harnesses.
+//! Lightweight summary statistics used by the benchmark harnesses, plus
+//! the fixed-bucket latency histogram backing the service's `metrics`
+//! surface.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
 
 /// Arithmetic mean; 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -59,6 +65,81 @@ pub fn fmt_duration(secs: f64) -> String {
     }
 }
 
+/// Bucket upper bounds (milliseconds) for [`LatencyHistogram`]. Chosen to
+/// straddle the solve times the paper's Table IV spans: sub-ms warm-cache
+/// replays up to multi-second cold exhaustive scans. One implicit overflow
+/// bucket sits past the last bound.
+pub const LATENCY_BUCKETS_MS: [f64; 12] =
+    [1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0];
+
+/// Lock-free fixed-bucket latency histogram: concurrent `record` from the
+/// service worker pool, snapshot via `to_json` at any time. Counters only —
+/// no allocation after construction, so a recording never contends with a
+/// solve.
+pub struct LatencyHistogram {
+    /// One count per bucket in `LATENCY_BUCKETS_MS`, plus the overflow.
+    counts: [AtomicU64; LATENCY_BUCKETS_MS.len() + 1],
+    total_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub const fn new() -> LatencyHistogram {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        LatencyHistogram {
+            counts: [ZERO; LATENCY_BUCKETS_MS.len() + 1],
+            total_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation, in seconds (the unit `util::Timer` yields).
+    pub fn record(&self, secs: f64) {
+        let ms = secs * 1e3;
+        let idx = LATENCY_BUCKETS_MS
+            .iter()
+            .position(|&ub| ms <= ub)
+            .unwrap_or(LATENCY_BUCKETS_MS.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total_us.fetch_add((secs * 1e6).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_ms() / n as f64
+        }
+    }
+
+    /// `{"count":N,"counts":[...],"le_ms":[...],"mean_ms":x}` — `counts`
+    /// has one extra trailing entry (observations past the last bound).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count().into())
+            .set("mean_ms", self.mean_ms().into())
+            .set("le_ms", Json::Arr(LATENCY_BUCKETS_MS.iter().map(|&b| b.into()).collect()))
+            .set(
+                "counts",
+                Json::Arr(self.counts.iter().map(|c| c.load(Ordering::Relaxed).into()).collect()),
+            );
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +165,38 @@ mod tests {
         assert_eq!(fmt_duration(32.0), "32.0 s");
         assert_eq!(fmt_duration(276.0), "4.6 min");
         assert_eq!(fmt_duration(31320.0), "8.7 h");
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let h = LatencyHistogram::new();
+        h.record(0.0005); // 0.5 ms -> bucket 0 (le 1 ms)
+        h.record(0.003); // 3 ms -> le 5 ms
+        h.record(0.003);
+        h.record(9.0); // 9 s -> overflow
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ms() - (0.5 + 3.0 + 3.0 + 9000.0) / 4.0).abs() < 0.1);
+        let j = h.to_json().to_string_compact();
+        assert!(j.contains("\"count\":4"), "{j}");
+        // counts carries one more entry than le_ms (the overflow bucket):
+        // 0.5 ms in bucket 0, both 3 ms in the le-5 bucket, 9 s overflowed.
+        assert!(j.contains("\"counts\":[1,0,2,0,0,0,0,0,0,0,0,0,1]"), "{j}");
+        assert!(j.contains("\"le_ms\":[1,2,5,10,25,50,100,250,500,1000,2500,5000]"), "{j}");
+    }
+
+    #[test]
+    fn histogram_is_concurrency_safe() {
+        let h = LatencyHistogram::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let h = &h;
+                scope.spawn(move || {
+                    for i in 0..250 {
+                        h.record(i as f64 * 1e-4); // 0 .. 25 ms
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 1000);
     }
 }

@@ -56,6 +56,16 @@ impl Network {
         }
     }
 
+    /// True if this network is already a training graph: it contains
+    /// backward layer kinds, or carries `training_graph`'s `-train` name
+    /// suffix (the suffix alone covers degenerate weightless graphs whose
+    /// backward passes are all pool/eltwise). Front ends can reach the
+    /// training graph two ways — a `-train` net name or a `train` flag —
+    /// and this predicate is what keeps applying both idempotent.
+    pub fn is_training(&self) -> bool {
+        self.name.ends_with("-train") || self.layers.iter().any(|l| l.kind.is_backward())
+    }
+
     /// Append a layer whose input comes from the given producers. Returns
     /// the layer index. Panics on structural inconsistency (wrong channel
     /// sum) — networks are static, so this is a programming error.

@@ -41,6 +41,15 @@ pub enum LayerKind {
     DWConvBwAct,
 }
 
+impl LayerKind {
+    /// True for the training-only backward kinds `workloads::training_graph`
+    /// emits; forward (inference) networks never contain them, which is
+    /// what makes "is this already a training graph?" decidable.
+    pub fn is_backward(self) -> bool {
+        matches!(self, LayerKind::ConvBwWeight | LayerKind::ConvBwAct | LayerKind::DWConvBwAct)
+    }
+}
+
 /// A single layer. Batch size N is a property of the scheduling run, not
 /// the layer (paper evaluates the same nets at batch 64 and batch 1).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]

@@ -22,7 +22,17 @@ use super::dag::{Network, PrevRef};
 use super::layer::{Layer, LayerKind};
 
 /// Extend a forward (inference) network into its training graph.
+///
+/// Idempotent: `workloads::by_name` already resolves `-train` names to
+/// training graphs, and a service request may redundantly stack a `train`
+/// flag on top (`schedule mlp-train … train`). Re-extending would hit the
+/// backward-kind arm below (formerly an `unreachable!` that panicked the
+/// serve loop) and mint a nonsense `*-train-train` net, so an
+/// already-training input is returned as-is.
 pub fn training_graph(fwd: &Network) -> Network {
+    if fwd.is_training() {
+        return fwd.clone();
+    }
     let mut net = fwd.clone();
     net.name = format!("{}-train", fwd.name);
     let n_fwd = fwd.len();
@@ -181,6 +191,23 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn training_graph_is_idempotent() {
+        for f in nets::all_networks() {
+            let once = training_graph(&f);
+            assert!(once.is_training());
+            assert!(!f.is_training(), "{} must stay a forward net", f.name);
+            let twice = training_graph(&once);
+            // Re-extending an already-training graph is the double-wrap
+            // regression: it used to panic on the backward kinds and would
+            // have produced a `*-train-train` net.
+            assert_eq!(twice.name, once.name);
+            assert_eq!(twice.len(), once.len());
+            assert_eq!(twice.layers, once.layers);
+            assert_eq!(twice.prevs, once.prevs);
         }
     }
 

@@ -1,0 +1,323 @@
+//! Integration tests for the concurrent network front end
+//! (`coordinator::transport`): real TCP/unix-socket connections against an
+//! in-process service, pinning the three properties the transport must
+//! preserve under concurrency —
+//!
+//! 1. **determinism**: a schedule computed over N concurrent connections
+//!    is byte-identical to the same request through the pure
+//!    `handle_line` stdin path;
+//! 2. **tenant isolation**: one tenant's warm cache never shows up in
+//!    another tenant's responses or stats;
+//! 3. **admission control**: a saturated solve queue answers with a
+//!    structured overload error — never a hang, never a dropped
+//!    connection — and the service keeps serving afterwards.
+//!
+//! Responses arrive as raw JSON lines (the crate's `util::json` is a
+//! writer, not a parser), so assertions work on substrings rendered by
+//! the same writer — byte-exact by construction.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use kapla::arch::presets;
+use kapla::coordinator::service::handle_line;
+use kapla::coordinator::transport::{self, ServiceConfig};
+use kapla::cost::{CacheBudget, SessionCache};
+
+/// The workhorse request: small net, capped rounds, one thread — fast and
+/// fully deterministic.
+const LINE: &str = "schedule mlp 8 kapla threads=1 max_rounds=4";
+
+fn send(conn: &mut TcpStream, line: &str) {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+}
+
+fn recv(reader: &mut BufReader<TcpStream>) -> String {
+    let mut s = String::new();
+    reader.read_line(&mut s).unwrap();
+    assert!(s.ends_with('\n'), "truncated response: {s:?}");
+    s.trim_end().to_string()
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let reader = BufReader::new(conn.try_clone().unwrap());
+    (conn, reader)
+}
+
+/// Extract the raw numeric token after `"key":` (keys are unique enough
+/// within one response line for every field asserted here).
+fn num_field(line: &str, key: &str) -> f64 {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat).unwrap_or_else(|| panic!("missing {key} in {line}"));
+    let rest = &line[i + pat.len()..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|e| panic!("bad number for {key} in {line}: {e}"))
+}
+
+#[test]
+fn concurrent_clients_get_stdin_identical_schedules() {
+    let arch = presets::bench_multi_node();
+    let h = transport::spawn(
+        &arch,
+        ServiceConfig { queue_depth: 16, workers: 2, ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = h.tcp_addr().unwrap();
+
+    // Reference: the pure stdin path against a fresh bounded session (the
+    // transport gives every tenant the same default budget).
+    let reference = {
+        let s = SessionCache::new(CacheBudget::bytes(kapla::coordinator::DEFAULT_SESSION_BYTES));
+        handle_line(&arch, &s, LINE).unwrap()
+    };
+    let want_chain = format!("\"chain\":{}", reference.get("chain").unwrap().to_string_compact());
+    let want_energy =
+        format!("\"energy_pj\":{}", reference.get("energy_pj").unwrap().to_string_compact());
+
+    let responses: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                scope.spawn(move || {
+                    // Two clients per tenant, racing on two workers.
+                    let tenant = if i % 2 == 0 { "atenant" } else { "btenant" };
+                    let (mut conn, mut reader) = connect(addr);
+                    send(&mut conn, &format!("{LINE} tenant={tenant}"));
+                    recv(&mut reader)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    for r in &responses {
+        assert!(r.contains("\"ok\":true"), "{r}");
+        assert!(r.contains(&want_chain), "transport schedule diverged from stdin loop: {r}");
+        assert!(r.contains(&want_energy), "{r}");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn tenant_sessions_are_isolated() {
+    let arch = presets::bench_multi_node();
+    let h = transport::spawn(&arch, ServiceConfig::default(), "127.0.0.1:0").unwrap();
+    let (mut conn, mut reader) = connect(h.tcp_addr().unwrap());
+
+    // What one cold request looks like against a fresh session (threads=1
+    // makes the counter trace deterministic, not just the schedule).
+    let cold_cache = {
+        let s = SessionCache::new(CacheBudget::bytes(kapla::coordinator::DEFAULT_SESSION_BYTES));
+        let r = handle_line(&arch, &s, LINE).unwrap();
+        format!("\"cache\":{}", r.get("cache").unwrap().to_string_compact())
+    };
+
+    // Warm tenant `warm` with the identical request twice: the repeat must
+    // replay recorded argmins (intra_hits > 0) without new evaluations.
+    send(&mut conn, &format!("{LINE} tenant=warm"));
+    let first = recv(&mut reader);
+    assert!(first.contains("\"ok\":true"), "{first}");
+    assert!(first.contains(&cold_cache), "fresh tenant must start cold: {first}");
+    send(&mut conn, &format!("{LINE} tenant=warm"));
+    let warmed = recv(&mut reader);
+    assert!(num_field(&warmed, "intra_hits") > 0.0, "repeat must replay argmins: {warmed}");
+
+    // The same request under a different tenant is stone cold again: its
+    // whole counter trace must be byte-identical to a fresh session's —
+    // any cross-namespace leak (shared evaluations, replayed argmins,
+    // shared eviction pressure) would shift some counter.
+    send(&mut conn, &format!("{LINE} tenant=other"));
+    let cold = recv(&mut reader);
+    assert!(cold.contains("\"ok\":true"), "{cold}");
+    assert!(cold.contains(&cold_cache), "cache leak across tenants: {cold}");
+
+    // Per-tenant `stats` agree: the warm tenant shows replays, the other
+    // tenant's counters still match one cold request exactly, and a tenant
+    // named for the first time has an empty session.
+    send(&mut conn, "stats tenant=warm");
+    let s_warm = recv(&mut reader);
+    assert!(num_field(&s_warm, "intra_hits") > 0.0, "{s_warm}");
+    send(&mut conn, "stats tenant=other");
+    let s_other = recv(&mut reader);
+    assert!(s_other.contains(&cold_cache), "{s_other}");
+    send(&mut conn, "stats tenant=fresh");
+    let s_fresh = recv(&mut reader);
+    assert_eq!(num_field(&s_fresh, "lookups"), 0.0, "{s_fresh}");
+    h.shutdown();
+}
+
+#[test]
+fn anonymous_sessions_are_per_connection() {
+    let arch = presets::bench_multi_node();
+    let h = transport::spawn(&arch, ServiceConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = h.tcp_addr().unwrap();
+
+    // Without a tenant= knob the connection is its own session (the old
+    // stdin-loop behavior): warm within, cold across.
+    let (mut conn, mut reader) = connect(addr);
+    send(&mut conn, LINE);
+    recv(&mut reader);
+    send(&mut conn, LINE);
+    let warmed = recv(&mut reader);
+    assert!(num_field(&warmed, "intra_hits") > 0.0, "{warmed}");
+
+    let (mut conn2, mut reader2) = connect(addr);
+    send(&mut conn2, LINE);
+    let cold = recv(&mut reader2);
+    assert_eq!(num_field(&cold, "intra_hits"), 0.0, "{cold}");
+    h.shutdown();
+}
+
+#[test]
+fn saturated_queue_returns_structured_overload() {
+    let arch = presets::bench_multi_node();
+    // One worker, one queue slot: the third concurrent solve must shed.
+    let h = transport::spawn(
+        &arch,
+        ServiceConfig { queue_depth: 1, workers: 1, ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = h.tcp_addr().unwrap();
+
+    // Occupy the worker and the queue slot with two slow solves (alexnet
+    // is orders of magnitude more work than the probe request), then
+    // burst cheap probes: with the worker busy and the queue full, every
+    // probe must get the structured overload response immediately.
+    let filler_line = "schedule alexnet 64 kapla threads=1 tenant=filler";
+    let mut fillers: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::new();
+    for _ in 0..2 {
+        let (mut conn, reader) = connect(addr);
+        send(&mut conn, filler_line);
+        fillers.push((conn, reader));
+    }
+    // Let the fillers reach the worker and the queue slot.
+    std::thread::sleep(Duration::from_millis(200));
+
+    let probes: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                scope.spawn(move || {
+                    let (mut conn, mut reader) = connect(addr);
+                    send(&mut conn, LINE);
+                    recv(&mut reader)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    let overloads =
+        probes.iter().filter(|r| r.contains("\"error\":\"overloaded\"")).count();
+    let oks = probes.iter().filter(|r| r.contains("\"ok\":true")).count();
+    assert_eq!(oks + overloads, probes.len(), "unstructured response: {probes:?}");
+    assert!(overloads > 0, "1-deep queue under a burst must shed load: {probes:?}");
+    for r in probes.iter().filter(|r| r.contains("overloaded")) {
+        assert!(r.contains("\"retry_after_ms\":"), "{r}");
+        assert!(r.contains("\"reason\":\"solve queue full\""), "{r}");
+    }
+
+    // Observability survives saturation: `stats` and `metrics` answer
+    // inline even while the fillers still hold the solve queue.
+    let (mut conn, mut reader) = connect(addr);
+    send(&mut conn, "stats");
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+    send(&mut conn, "metrics");
+    let m = recv(&mut reader);
+    assert!(num_field(&m, "overloads") >= overloads as f64, "{m}");
+
+    // Both admitted fillers complete with real schedules (no request that
+    // entered the queue is ever dropped)...
+    for (_conn, reader) in fillers.iter_mut() {
+        let r = recv(reader);
+        assert!(r.contains("\"ok\":true"), "admitted solve was dropped: {r}");
+    }
+    // ...and the service still solves afterwards.
+    send(&mut conn, LINE);
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+    h.shutdown();
+}
+
+#[test]
+fn tenant_limits_and_metrics_schema() {
+    let arch = presets::bench_multi_node();
+    let h = transport::spawn(
+        &arch,
+        ServiceConfig { max_tenants: 2, ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let (mut conn, mut reader) = connect(h.tcp_addr().unwrap());
+
+    send(&mut conn, &format!("{LINE} tenant=first"));
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+    send(&mut conn, "stats tenant=second");
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+    // The namespace cap rejects the third tenant with a structured error;
+    // existing tenants keep working.
+    send(&mut conn, "stats tenant=third");
+    let r = recv(&mut reader);
+    assert!(r.contains("\"ok\":false") && r.contains("tenant limit"), "{r}");
+    send(&mut conn, "stats tenant=first");
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+
+    // Malformed tenancy is rejected, not guessed at.
+    send(&mut conn, "stats tenant=bad/name");
+    assert!(recv(&mut reader).contains("bad tenant name"));
+    send(&mut conn, "stats tenant=first tenant=second");
+    assert!(recv(&mut reader).contains("repeated tenant="));
+
+    // The metrics snapshot carries the queue state, the per-solver
+    // latency histogram of the one K solve, and both tenant namespaces.
+    send(&mut conn, "metrics");
+    let m = recv(&mut reader);
+    assert!(m.contains("\"queue\":{\"capacity\":"), "{m}");
+    assert!(m.contains("\"solver_latency_ms\":{\"K\":{\"count\":1"), "{m}");
+    assert!(m.contains("\"first\":{"), "{m}");
+    assert!(m.contains("\"second\":{"), "{m}");
+    assert!(num_field(&m, "requests") >= 1.0, "{m}");
+
+    // `quit` closes this connection but not the service.
+    send(&mut conn, "quit");
+    let mut leftover = String::new();
+    assert_eq!(reader.read_line(&mut leftover).unwrap(), 0, "quit must close: {leftover:?}");
+    let (mut conn2, mut reader2) = connect(h.tcp_addr().unwrap());
+    send(&mut conn2, "stats");
+    assert!(recv(&mut reader2).contains("\"ok\":true"));
+    h.shutdown();
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_speaks_the_same_protocol() {
+    use std::os::unix::net::UnixStream;
+
+    let arch = presets::bench_multi_node();
+    let path = std::env::temp_dir().join(format!("kapla-transport-{}.sock", std::process::id()));
+    let spec = format!("unix:{}", path.display());
+    let h = transport::spawn(&arch, ServiceConfig::default(), &spec).unwrap();
+    assert!(h.tcp_addr().is_none());
+
+    let reference = {
+        let s = SessionCache::new(CacheBudget::bytes(kapla::coordinator::DEFAULT_SESSION_BYTES));
+        handle_line(&arch, &s, LINE).unwrap()
+    };
+    let want_chain = format!("\"chain\":{}", reference.get("chain").unwrap().to_string_compact());
+
+    let conn = UnixStream::connect(&path).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    writer.write_all(format!("{LINE} tenant=ux\n").as_bytes()).unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+    assert!(resp.contains(&want_chain), "unix transport diverged: {resp}");
+
+    h.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
