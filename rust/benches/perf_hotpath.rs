@@ -260,6 +260,68 @@ fn main() {
         bk::save_json("perf_hotpath_l3c", &row);
     }
 
+    // L3c-part: the partition-level admissible floor — the same staged
+    // B&B argmin with the partition check on vs off. The floor equals the
+    // prefix bound at gq == totals, so the visited stream and the argmin
+    // are provably unchanged; the saving is skipping capacity probes,
+    // blocking enumeration and per-prefix bound evaluations of partitions
+    // no blocking of which can beat the incumbent. The checksum equality
+    // is a CI divergence gate like the L3c staged/naive one.
+    {
+        let layer = Layer::conv("bench_l3cp", 64, 64, 28, 3, 1);
+        let ctx =
+            IntraCtx { region: (2, 2), rb: 8, ifm_on_chip: false, objective: Objective::Energy };
+        let model = TieredCost::fresh();
+        let run = |part_floor: bool| {
+            let counters = BnbCounters::new();
+            let q = StagedQuery::for_ctx(&arch, &layer, &ctx, true, &model)
+                .counters(&counters)
+                .part_floor(part_floor);
+            let t = Timer::start();
+            let mut best: Option<(f64, String)> = None;
+            visit_schemes_staged(&q, |s, est| {
+                let c = est.energy_pj;
+                if best.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                    best = Some((c, format!("{s:?}")));
+                }
+                Some(best.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
+            });
+            let secs = t.elapsed_s();
+            let (cost, scheme) = best.expect("non-empty space");
+            let checksum =
+                kapla::util::fnv1a(scheme.bytes().map(u64::from).chain([cost.to_bits()]));
+            let mut st = counters.snapshot();
+            st.part_floor = part_floor;
+            (secs, checksum, st)
+        };
+        let (t_on, sum_on, st_on) = run(true);
+        let (t_off, sum_off, st_off) = run(false);
+        assert_eq!(
+            sum_on, sum_off,
+            "partition floor changed the argmin: {sum_on:x} vs {sum_off:x}"
+        );
+        assert!(st_on.parts_pruned > 0, "partition floor never fired: {st_on:?}");
+        assert_eq!(st_off.parts_pruned, 0, "disabled floor still pruned: {st_off:?}");
+        lines.push(format!(
+            "L3c partition floor on/off: {:.2} s -> {:.2} s ({:.1}x; {} of {} partitions \
+             pruned, checksum {sum_on:x})",
+            t_off,
+            t_on,
+            t_off / t_on.max(1e-9),
+            st_on.parts_pruned,
+            st_on.parts_visited + st_on.parts_pruned,
+        ));
+        let mut row = Json::obj();
+        row.set("layer", "conv 64x64x28 r3 @(2,2) rb8 sharing".into())
+            .set("floor_on_s", t_on.into())
+            .set("floor_off_s", t_off.into())
+            .set("speedup", (t_off / t_on.max(1e-9)).into())
+            .set("checksum", format!("{sum_on:x}").into())
+            .set("bnb_on", st_on.to_json())
+            .set("bnb_off", st_off.to_json());
+        bk::save_json("perf_hotpath_l3c_part", &row);
+    }
+
     // L3d: inter-layer DP (estimate tier of the cost model only).
     {
         let cfg = DpConfig::default();
@@ -271,6 +333,57 @@ fn main() {
             std::hint::black_box(c);
         }
         lines.push(format!("L3d inter-layer DP (alexnet, 16x16): {:.1} ms/net", t.elapsed_ms() / n as f64));
+    }
+
+    // L3d-spec: the speculative span pipeline — the sequential planner
+    // (1 thread, tables built inline at stream time) vs the speculative
+    // one (4 threads: main thread streams against the live incumbent,
+    // workers prebuild the tables of the next `spec_window` spans).
+    // Chains and counters must be byte-identical; only wall-clock moves.
+    {
+        let model = TieredCost::fresh();
+        let reps = 10u32;
+        let run = |threads: usize| {
+            let cfg = DpConfig { solve_threads: threads, ..DpConfig::default() };
+            let t = Timer::start();
+            let mut last = None;
+            for _ in 0..reps {
+                last = Some(best_chains(&arch, &net, 64, &cfg, &model).expect("chains"));
+            }
+            (t.elapsed_s() / reps as f64, last.unwrap())
+        };
+        let (t_seq, (seq_chains, seq_stats)) = run(1);
+        let (t_spec, (spec_chains, spec_stats)) = run(4);
+        assert_eq!(
+            format!("{seq_chains:?}"),
+            format!("{spec_chains:?}"),
+            "speculative planner changed the chains"
+        );
+        assert_eq!(
+            format!("{seq_stats:?}"),
+            format!("{spec_stats:?}"),
+            "speculative planner changed the prune counters"
+        );
+        lines.push(format!(
+            "L3d speculative planner (alexnet, 1 -> 4 threads, window {}): \
+             {:.1} -> {:.1} ms/net ({:.2}x; {} tables, {} of {} spans pruned)",
+            DpConfig::default().spec_window,
+            t_seq * 1e3,
+            t_spec * 1e3,
+            t_seq / t_spec.max(1e-9),
+            seq_stats.tables_built,
+            seq_stats.spans_pruned,
+            seq_stats.spans_total,
+        ));
+        let mut row = Json::obj();
+        row.set("net", "alexnet".into())
+            .set("batch", 64u64.into())
+            .set("spec_window", DpConfig::default().spec_window.into())
+            .set("sequential_ms", (t_seq * 1e3).into())
+            .set("speculative_ms_4t", (t_spec * 1e3).into())
+            .set("speedup", (t_seq / t_spec.max(1e-9)).into())
+            .set("prune", seq_stats.to_json());
+        bk::save_json("perf_hotpath_l3d_spec", &row);
     }
 
     // L3d2: the lazy inter-layer span machinery — the iterative

@@ -40,6 +40,10 @@ pub struct JobKnobs {
     pub max_seg_len: Option<usize>,
     pub max_rounds: Option<u64>,
     pub top_per_span: Option<usize>,
+    /// Partition-level admissible floor in the staged intra-layer scans
+    /// (`part_floor=on|off`; on by default). Exact either way — `off`
+    /// exists for triage and for measuring the floor's own benefit.
+    pub part_floor: Option<bool>,
 }
 
 impl JobKnobs {
@@ -79,6 +83,13 @@ impl JobKnobs {
             "max_seg_len" => self.max_seg_len = Some(positive(key, val)?),
             "max_rounds" => self.max_rounds = Some(positive(key, val)?),
             "top_per_span" => self.top_per_span = Some(positive(key, val)?),
+            "part_floor" => {
+                self.part_floor = Some(match val {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => return Err(format!("bad value for knob part_floor: {val:?}")),
+                });
+            }
             _ => return Err(format!("unknown knob {key:?}")),
         }
         Ok(true)
@@ -92,6 +103,9 @@ impl JobKnobs {
             max_rounds: self.max_rounds.unwrap_or(base.max_rounds),
             top_per_span: self.top_per_span.unwrap_or(base.top_per_span),
             solve_threads: self.threads.unwrap_or(base.solve_threads),
+            parallel_table_min: base.parallel_table_min,
+            spec_window: base.spec_window,
+            part_floor: self.part_floor.unwrap_or(base.part_floor),
         }
     }
 }
@@ -194,12 +208,23 @@ mod tests {
         assert_eq!(k.parse_token("objective=latency"), Ok(true));
         assert_eq!(k.parse_token("ks=2"), Ok(true));
         assert_eq!(k.parse_token("max_rounds=16"), Ok(true));
+        assert_eq!(k.parse_token("part_floor=off"), Ok(true));
         let dp = k.apply(DpConfig::default());
         assert_eq!(dp.solve_threads, 3);
         assert_eq!(dp.ks, 2);
         assert_eq!(dp.max_rounds, 16);
         assert_eq!(dp.max_seg_len, DpConfig::default().max_seg_len);
+        assert!(!dp.part_floor);
+        assert_eq!(dp.spec_window, DpConfig::default().spec_window);
+        assert_eq!(dp.parallel_table_min, DpConfig::default().parallel_table_min);
         assert_eq!(k.objective, Some(Objective::Latency));
+
+        // part_floor accepts the boolean spellings and defaults to on.
+        let mut on = JobKnobs::default();
+        assert_eq!(on.parse_token("part_floor=1"), Ok(true));
+        assert!(on.apply(DpConfig::default()).part_floor);
+        assert!(JobKnobs::default().apply(DpConfig::default()).part_floor);
+        assert!(JobKnobs::default().parse_token("part_floor=maybe").is_err());
 
         assert!(JobKnobs::default().parse_token("threads=0").is_err());
         assert!(JobKnobs::default().parse_token("threads=two").is_err());

@@ -12,7 +12,8 @@
 //! Positional fields keep their legacy order; `key=value` knobs may appear
 //! anywhere after the network and set per-request solver parameters
 //! (`threads=4`, `objective=latency`, `ks=2`, `max_seg_len=3`,
-//! `max_rounds=16`, `top_per_span=1`). Malformed requests — unknown
+//! `max_rounds=16`, `top_per_span=1`, `part_floor=off`). Malformed
+//! requests — unknown
 //! network/solver/knob, unparseable value — get a structured
 //! `{"ok":false,"error":...}` response instead of silently falling back to
 //! defaults.
@@ -301,6 +302,25 @@ mod tests {
         let bnb = r.get("bnb").expect("exhaustive response carries bnb counters");
         assert!(bnb.get("schemes_visited").unwrap().as_f64().unwrap() > 0.0);
         assert!(bnb.get("prune_rate").unwrap().as_f64().is_some());
+        // The partition-floor knob is on by default and surfaced in the
+        // bnb object (SolverKind labels are unit tags, so the flag rides
+        // the counters instead).
+        assert_eq!(bnb.get("part_floor"), Some(&Json::Bool(true)));
+        assert!(bnb.get("parts_visited").unwrap().as_f64().is_some());
+        assert!(bnb.get("parts_pruned").unwrap().as_f64().is_some());
+        // `part_floor=off` disables the check — same schedule (the floor
+        // is exact), zero partitions pruned, flag reported off.
+        let off = handle_line(
+            &arch,
+            &s,
+            "schedule mlp 4 b max_rounds=4 max_seg_len=2 threads=1 part_floor=off",
+        )
+        .unwrap();
+        assert_eq!(off.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(off.get("energy_pj"), r.get("energy_pj"));
+        let obnb = off.get("bnb").unwrap();
+        assert_eq!(obnb.get("part_floor"), Some(&Json::Bool(false)));
+        assert_eq!(obnb.get("parts_pruned").unwrap().as_f64(), Some(0.0));
         // The KAPLA path doesn't subtree-prune: no bnb object.
         let k = handle_line(&arch, &s, "schedule mlp 4 kapla max_rounds=4 threads=1").unwrap();
         assert!(k.get("bnb").is_none());

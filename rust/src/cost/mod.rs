@@ -7,6 +7,14 @@
 //! estimated cost [is] a (relatively tight) lower bound" — good enough to
 //! *prioritize* candidates, with DP keeping top-k chains to absorb errors.
 //!
+//! The lower-bound discipline extends below the estimate tier into the
+//! scan itself: `CostModel::bound_partition` (floor over every blocking
+//! of a partition) and `CostModel::bound_prefix` (floor over every
+//! completion of a `(part, gbuf)` prefix) are the bottom two levels of
+//! the solvers' partition → prefix → span bound hierarchy, and the same
+//! admissibility invariant — bound never exceeds the detailed evaluation
+//! of anything it stands for — makes their pruning exact.
+//!
 //! The same per-candidate formula is exported as a feature vector
 //! (`features()`), mirrored bit-for-bit by the AOT-compiled JAX/Pallas
 //! batched cost kernel (`python/compile/kernels/cost_batch.py`) that the

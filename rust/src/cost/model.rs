@@ -88,6 +88,19 @@ pub trait CostModel: Sync {
         staged.bound_prefix(gq)
     }
 
+    /// Admissible lower bound on `evaluate` over *every* blocking of a
+    /// `(part, unit)` enumeration prefix — the partition level of the
+    /// bound hierarchy (partition → prefix → span), one level above
+    /// [`CostModel::bound_prefix`]: gq/go-independent, so the scan can
+    /// skip a whole partition before enumerating a single blocking. Like
+    /// `bound_prefix`, only consulted when [`CostModel::staged`] returned
+    /// `Some`, so the default (the staged partition floor of the detailed
+    /// simulator) is admissible exactly when the staged evaluator is the
+    /// detailed simulator.
+    fn bound_partition(&self, staged: &StagedEval<'_>) -> CostEstimate {
+        staged.bound_partition()
+    }
+
     /// Cross-job intra-layer argmin memo, consulted by the solver engine
     /// before running a full intra-layer scan (see
     /// [`EvalCache::intra_argmin`] for the contract). The default `None`
@@ -252,6 +265,11 @@ mod tests {
             let bound = model.bound_prefix(&staged, s.gbuf.qty);
             assert!(bound.energy_pj <= via_staged.energy_pj);
             assert!(bound.latency_cycles <= via_staged.latency_cycles);
+            // And the partition bound never exceeds the prefix bound — the
+            // full hierarchy: partition <= prefix <= evaluation.
+            let pb = model.bound_partition(&staged);
+            assert!(pb.energy_pj <= bound.energy_pj + 1e-9);
+            assert!(pb.latency_cycles <= bound.latency_cycles + 1e-9);
         }
     }
 

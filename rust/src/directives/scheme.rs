@@ -220,6 +220,24 @@ impl PartAccess {
         self.finish_gbuf(gq, tg, ifm_min, wgt_min, ofm_unique, ofm_unique, ifm_on_chip)
     }
 
+    /// Partition-level floor: the stage-2/stage-3 floor chain evaluated at
+    /// `gq == unit.totals` — a gq/go-independent lower bound over *every*
+    /// blocking of this `(part, unit)` prefix. Admissibility: each
+    /// per-node stream is a product of member-group tensor words and
+    /// ceil-div trip counts, and `gq.g * trips_over(g) >= totals.g` for
+    /// every group, so the stream at any `gq` dominates the stream at the
+    /// totals (one trip, the whole tensor resident); likewise
+    /// `gbuf_iters = tg.product() >= 1` keeps every stage-3 drain term
+    /// above the single-pass floor. `gq == totals` may overflow the GBUF —
+    /// irrelevant: a relaxation's floor still lower-bounds the feasible
+    /// subset. Monotone assembly (`finish_gbuf`/`assemble` have
+    /// nonnegative coefficients in every stream) then gives
+    /// `partition_floor <= gbuf_floor(gq).counts_floor() <= counts(..)`
+    /// for every `(gq, go, rq, ro)` completion.
+    pub fn partition_floor(&self, ifm_on_chip: bool) -> AccessCounts {
+        self.gbuf_floor(self.unit.totals, ifm_on_chip).counts_floor()
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn finish_gbuf(
         &self,
@@ -502,6 +520,40 @@ mod tests {
         // and its DRAM ofm volume is the reduced single copy
         let no_red = mk(1, 4).access_counts(false);
         assert!(with_red.dram[1] <= no_red.dram[1] * 4);
+    }
+
+    #[test]
+    fn partition_floor_dominated_by_every_blocking() {
+        // The gq-independent partition floor lower-bounds every stream of
+        // every (gq, go, rq, ro) completion — the per-component property
+        // the cost-level admissibility of `StagedEval::bound_partition`
+        // rests on (energy/latency assembly is monotone in each stream).
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 64, 64, 28, 3, 1);
+        let part = PartitionScheme { region: (2, 2), pk: 2, pn: 2, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 8));
+        let pa = PartAccess::new(part, unit);
+        for ifm_on_chip in [false, true] {
+            let floor = pa.partition_floor(ifm_on_chip);
+            for gq in [Qty::new(1, 2, 2), Qty::new(2, 8, 16), unit.totals] {
+                for go in LoopOrder::all() {
+                    let g = pa.gbuf(gq, go, ifm_on_chip);
+                    for rq in [Qty::new(1, 1, 1), Qty::new(1, 2, 2), gq] {
+                        for ro in LoopOrder::all() {
+                            let c = g.counts(rq, ro);
+                            for t in 0..3 {
+                                assert!(floor.dram[t] <= c.dram[t], "dram[{t}]");
+                                assert!(floor.gbuf[t] <= c.gbuf[t], "gbuf[{t}]");
+                            }
+                            assert!(floor.gbuf_regf_side <= c.gbuf_regf_side);
+                            assert!(floor.regf <= c.regf);
+                            assert!(floor.noc_word_hops <= c.noc_word_hops + 1e-9);
+                            assert_eq!(floor.macs, c.macs);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

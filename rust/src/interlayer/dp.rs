@@ -36,11 +36,36 @@ pub struct DpConfig {
     /// 1 runs fully inline. Use `util::available_threads()` to saturate
     /// the host.
     pub solve_threads: usize,
+    /// Minimum context-table key count before a span's table build shards
+    /// across the worker pool — below it the per-solve work doesn't amortise
+    /// thread startup (previously a hardcoded planner constant).
+    pub parallel_table_min: usize,
+    /// Speculation window: while span `i` streams its schemes against the
+    /// live incumbent, context tables and admissible span floors for spans
+    /// `i+1..i+W` are prebuilt on the worker pool. Tables and floors depend
+    /// only on the span shape and the cost model — never on the incumbent —
+    /// so speculation changes wall-clock only, not the visited stream or
+    /// the chains. `0` disables speculation; it is also inert when
+    /// `solve_threads <= 1`.
+    pub spec_window: usize,
+    /// Check the partition-level admissible floor in the staged intra-layer
+    /// scans before enumerating a partition's blockings (`off` for triage;
+    /// the argmin is provably identical either way).
+    pub part_floor: bool,
 }
 
 impl Default for DpConfig {
     fn default() -> Self {
-        DpConfig { ks: 4, max_seg_len: 4, max_rounds: 64, top_per_span: 2, solve_threads: 1 }
+        DpConfig {
+            ks: 4,
+            max_seg_len: 4,
+            max_rounds: 64,
+            top_per_span: 2,
+            solve_threads: 1,
+            parallel_table_min: 1024,
+            spec_window: 8,
+            part_floor: true,
+        }
     }
 }
 

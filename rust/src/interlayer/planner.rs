@@ -45,13 +45,27 @@
 //! schedules byte-identical against a reference copy of the eager
 //! pipeline.
 //!
-//! Threading: span processing is inherently sequential (the incumbent
-//! flows span to span), so with `solve_threads > 1` only a span's context
-//! table is sharded across the scoped worker pool — and only for large
-//! tables, where the estimates outweigh the pool spawn. Pruning never
-//! depends on thread count, so chains are byte-identical for any value.
+//! Threading: the incumbent flows span to span, so the *stream* is
+//! inherently sequential — but a span's context table and admissible floor
+//! depend only on the span shape and the cost model, never on the
+//! incumbent. With `solve_threads > 1` the planner therefore runs a
+//! **speculative pipeline**: while span `i` streams its schemes against
+//! the live incumbent on the main thread, scoped workers prebuild the
+//! tables of spans `i+1..i+spec_window` (`DpConfig::spec_window`, in DP
+//! order, bounded so speculation never races arbitrarily far ahead). The
+//! floor *check* — the only incumbent-dependent step — still happens at
+//! stream time on the main thread, and every multi-layer span's table is
+//! built in both modes, so the visited stream, the pruning decisions, the
+//! chains and even the `PruneStats` counters are byte-identical for any
+//! thread count (pinned by `dp::tests::parallel_span_scoring_is_byte_identical`).
+//! Sequentially (`solve_threads <= 1` or `spec_window == 0`) a large
+//! table's estimate stage instead shards across the pool
+//! (`DpConfig::parallel_table_min`); speculative workers build tables
+//! inline so the pools never nest.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 use super::dp::{ChainCand, DpConfig};
 use super::prune::{conservative_valid, pareto_rank, CtxKey, PruneStats, RankedSegment};
@@ -60,10 +74,6 @@ use crate::arch::ArchConfig;
 use crate::cost::{segment_lower_bound_with, CostEstimate, CostModel, LayerCtx};
 use crate::solvers::SolveError;
 use crate::workloads::Network;
-
-/// Context-table size at which the estimate stage shards across the
-/// worker pool: an estimate costs ~1us, the scoped pool ~100us to spawn.
-const PARALLEL_TABLE_MIN: usize = 1024;
 
 /// One chain-candidate node of the DP table.
 struct Node {
@@ -79,6 +89,36 @@ struct SpanTable {
     index: HashMap<CtxKey, usize>,
     ests: Vec<CostEstimate>,
     floor: f64,
+}
+
+/// One slot of the speculative pipeline: a worker parks the span's table
+/// (`None` when the span shape has no scheme at all), the main thread
+/// blocks on [`SpecSlot::take`] until it lands. Outer `Option` = "has the
+/// worker filled this slot yet", inner = `span_table`'s own result.
+struct SpecSlot {
+    filled: Mutex<Option<Option<SpanTable>>>,
+    ready: Condvar,
+}
+
+impl SpecSlot {
+    fn new() -> SpecSlot {
+        SpecSlot { filled: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    fn fill(&self, tbl: Option<SpanTable>) {
+        *self.filled.lock().unwrap() = Some(tbl);
+        self.ready.notify_one();
+    }
+
+    fn take(&self) -> Option<SpanTable> {
+        let mut g = self.filled.lock().unwrap();
+        loop {
+            if let Some(t) = g.take() {
+                return t;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
 }
 
 /// The staged inter-layer segment-chain planner. Build with
@@ -117,50 +157,125 @@ impl<'a> Planner<'a> {
     /// statistics, or a structured error when no valid chain covers the
     /// network (a degenerate net/arch combination must not panic a
     /// long-running service).
+    ///
+    /// With `solve_threads > 1` and a nonzero `spec_window`, span context
+    /// tables are built speculatively ahead of the stream (module docs);
+    /// the DP itself and every pruning decision run on this thread either
+    /// way, so the result is byte-identical for any configuration.
     pub fn chains(&self) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
+        // The flat span worklist in DP order — the stream the main thread
+        // consumes and the speculation slots line up with, one entry per
+        // (end layer, span) pair.
+        let mut flat: Vec<Vec<usize>> = Vec::new();
+        for i in 0..self.net.len() {
+            flat.extend(candidate_spans(i, self.cfg.max_seg_len));
+        }
+
+        let window = self.cfg.spec_window;
+        if self.cfg.solve_threads <= 1 || window == 0 || flat.is_empty() {
+            // Sequential: tables built inline at stream time; a large
+            // table's estimate stage may itself shard across the pool.
+            return self.run_dp(&flat, |_, span| {
+                self.span_table(span, self.cfg.solve_threads)
+            });
+        }
+
+        // Speculative pipeline. Workers claim flat indices in order via an
+        // atomic cursor, build each span's table inline (threads=1 — the
+        // pipeline is the parallelism; nesting pools would oversubscribe),
+        // and park it in the span's slot. The `consumed` counter + condvar
+        // bound claims to `window` ahead of the stream so speculation
+        // cannot run arbitrarily far past the incumbent.
+        let slots: Vec<SpecSlot> = flat.iter().map(|_| SpecSlot::new()).collect();
+        let cursor = AtomicUsize::new(0);
+        let consumed = Mutex::new(0usize);
+        let advanced = Condvar::new();
+        let workers = (self.cfg.solve_threads - 1).clamp(1, flat.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= flat.len() {
+                        break;
+                    }
+                    {
+                        let mut c = consumed.lock().unwrap();
+                        while j >= *c + window {
+                            c = advanced.wait(c).unwrap();
+                        }
+                    }
+                    slots[j].fill(self.span_table(&flat[j], 1));
+                });
+            }
+            let result = self.run_dp(&flat, |j, _| {
+                let tbl = slots[j].take();
+                *consumed.lock().unwrap() = j + 1;
+                advanced.notify_all();
+                tbl
+            });
+            // On an early error return some slots were never consumed;
+            // release any worker parked on the window so the scope joins
+            // (it drains the remaining cheap table builds and exits).
+            *consumed.lock().unwrap() = flat.len();
+            advanced.notify_all();
+            result
+        })
+    }
+
+    /// The sequential DP over the flat span worklist. `get_table` supplies
+    /// each span's context table (inline build or speculative slot) and is
+    /// called exactly once per span, in stream order — single-layer spans
+    /// included, so the speculation window's consumed counter advances
+    /// uniformly.
+    fn run_dp(
+        &self,
+        flat: &[Vec<usize>],
+        mut get_table: impl FnMut(usize, &[usize]) -> Option<SpanTable>,
+    ) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
         let n = self.net.len();
         let ks = self.cfg.ks.max(1);
         let mut table: Vec<Vec<Node>> = Vec::with_capacity(n);
         let mut stats = PruneStats::default();
 
-        for i in 0..n {
-            let mut cands: Vec<Node> = Vec::new();
-            for span in candidate_spans(i, self.cfg.max_seg_len) {
-                let start = span[0];
-                stats.spans_total += 1;
-                // The cheapest chain this span's candidates can extend
-                // anchors both bounds; a missing prefix row cannot happen
-                // (every processed layer has at least one chain or the DP
-                // already returned an error).
-                let prev_best = if start == 0 { 0.0 } else { table[start - 1][0].cost };
-                let incumbent =
-                    if cands.len() >= ks { cands[ks - 1].cost } else { f64::INFINITY };
-                let ranked = self.rank_span(&span, prev_best, incumbent, &mut stats);
-                for RankedSegment { seg, est } in ranked {
-                    if start == 0 {
+        let mut cands: Vec<Node> = Vec::new();
+        for (j, span) in flat.iter().enumerate() {
+            let (start, end) = (span[0], *span.last().unwrap());
+            stats.spans_total += 1;
+            // The cheapest chain this span's candidates can extend
+            // anchors both bounds; a missing prefix row cannot happen
+            // (every processed layer has at least one chain or the DP
+            // already returned an error).
+            let prev_best = if start == 0 { 0.0 } else { table[start - 1][0].cost };
+            let incumbent = if cands.len() >= ks { cands[ks - 1].cost } else { f64::INFINITY };
+            let tbl = get_table(j, span);
+            if span.len() > 1 && tbl.is_some() {
+                stats.tables_built += 1;
+            }
+            let ranked = self.rank_span(span, tbl, prev_best, incumbent, &mut stats);
+            for RankedSegment { seg, est } in ranked {
+                if start == 0 {
+                    insert_top(&mut cands, ks, Node { cost: est.score(), seg, parent: None });
+                } else {
+                    for rank in 0..table[start - 1].len() {
                         insert_top(&mut cands, ks, Node {
-                            cost: est.score(),
-                            seg,
-                            parent: None,
+                            cost: est.score() + table[start - 1][rank].cost,
+                            seg: seg.clone(),
+                            parent: Some((start - 1, rank)),
                         });
-                    } else {
-                        for rank in 0..table[start - 1].len() {
-                            insert_top(&mut cands, ks, Node {
-                                cost: est.score() + table[start - 1][rank].cost,
-                                seg: seg.clone(),
-                                parent: Some((start - 1, rank)),
-                            });
-                        }
                     }
                 }
             }
-            if cands.is_empty() {
-                return Err(SolveError::NoChain {
-                    layer: i,
-                    layer_name: self.net.layers[i].name.clone(),
-                });
+            // Last span ending at this layer: commit the layer's top-k_S.
+            let layer_done = flat.get(j + 1).map(|next| *next.last().unwrap() != end).unwrap_or(true);
+            if layer_done {
+                if cands.is_empty() {
+                    return Err(SolveError::NoChain {
+                        layer: end,
+                        layer_name: self.net.layers[end].name.clone(),
+                    });
+                }
+                table.push(std::mem::take(&mut cands));
             }
-            table.push(cands);
         }
 
         // Reconstruct the top-ks chains ending at the last layer.
@@ -180,12 +295,16 @@ impl<'a> Planner<'a> {
         Ok((out, stats))
     }
 
-    /// Rank one span: context table + floor, bounded streaming, Pareto +
-    /// sort + top-per-span truncation. Returns the ranked survivors (empty
-    /// when the span floor pruned everything).
+    /// Rank one span: admissible floor check against the live incumbent,
+    /// bounded streaming, Pareto + sort + top-per-span truncation. Returns
+    /// the ranked survivors (empty when the span floor pruned everything).
+    /// `tbl` is the span's prebuilt context table — `None` means no scheme
+    /// exists for the span shape; single-layer spans ignore it (their one
+    /// scheme is scored exactly, no table needed).
     fn rank_span(
         &self,
         span: &[usize],
+        tbl: Option<SpanTable>,
         prev_best: f64,
         incumbent: f64,
         stats: &mut PruneStats,
@@ -208,7 +327,7 @@ impl<'a> Planner<'a> {
             return vec![RankedSegment { seg, est }];
         }
 
-        let Some(tbl) = self.span_table(span) else {
+        let Some(tbl) = tbl else {
             return Vec::new(); // no scheme exists for this span shape
         };
         if self.prunes(tbl.floor, prev_best, incumbent) {
@@ -281,8 +400,16 @@ impl<'a> Planner<'a> {
     /// `min_rounds [ max_layer( min_width latency ) * (rounds + len - 1) ]`;
     /// and `CostEstimate::score` is monotone in both, so the floor score
     /// never exceeds any scheme's score.
-    fn span_table(&self, span: &[usize]) -> Option<SpanTable> {
+    ///
+    /// `max_threads` caps the estimate stage's sharding: the sequential
+    /// planner passes `cfg.solve_threads`, speculative workers pass 1 so
+    /// worker pools never nest. The table's contents are identical either
+    /// way (`util::par_map` preserves order).
+    fn span_table(&self, span: &[usize], max_threads: usize) -> Option<SpanTable> {
         let len = span.len();
+        if len <= 1 {
+            return None; // single-layer spans are scored exactly, no table
+        }
         if !self.arch.spatial_layer_pipe {
             return None;
         }
@@ -326,8 +453,8 @@ impl<'a> Planner<'a> {
 
         // Stage 2: score each distinct context once (sharded only when
         // the table is large enough to amortize the pool spawn).
-        let threads = if self.cfg.solve_threads > 1 && keys.len() >= PARALLEL_TABLE_MIN {
-            self.cfg.solve_threads
+        let threads = if max_threads > 1 && keys.len() >= self.cfg.parallel_table_min {
+            max_threads
         } else {
             1
         };
@@ -451,7 +578,7 @@ mod tests {
         let cfg = DpConfig::default();
         let planner = Planner::new(&arch, &net, 64, &cfg, &model);
         for span in [vec![2usize, 3], vec![2, 3, 4]] {
-            let tbl = planner.span_table(&span).expect("pipelinable span");
+            let tbl = planner.span_table(&span, 1).expect("pipelinable span");
             for seg in enumerate_segment_schemes(&net, &arch, 64, &span, cfg.max_rounds) {
                 let staged =
                     segment_lower_bound_with(&net, 64, &seg, &mut |li, ctx| {
@@ -467,6 +594,38 @@ mod tests {
                     staged.score()
                 );
             }
+        }
+    }
+
+    #[test]
+    fn speculation_never_changes_chains_or_counters() {
+        // Tables and floors depend only on span shape + model, never the
+        // incumbent, so the speculative pipeline must reproduce the
+        // sequential planner exactly — chains AND PruneStats (tables_built
+        // is counted at consume time, so it too is identical) — for every
+        // window size and thread count.
+        let arch = presets::multi_node_eyeriss();
+        let net = nets::alexnet();
+        let model = TieredCost::fresh();
+        let base = DpConfig::default();
+        let seq_cfg = DpConfig { solve_threads: 1, ..base };
+        let (seq_chains, seq_stats) =
+            Planner::new(&arch, &net, 64, &seq_cfg, &model).chains().unwrap();
+        assert!(seq_stats.tables_built > 0, "alexnet must build some span tables");
+        for (threads, window) in [(4usize, 0usize), (2, 1), (4, 3), (4, 8), (4, 1024)] {
+            let cfg = DpConfig { solve_threads: threads, spec_window: window, ..base };
+            let (chains, stats) =
+                Planner::new(&arch, &net, 64, &cfg, &model).chains().unwrap();
+            assert_eq!(
+                chains_snapshot(&seq_chains),
+                chains_snapshot(&chains),
+                "threads={threads} window={window}: speculation changed the chains"
+            );
+            assert_eq!(
+                format!("{seq_stats:?}"),
+                format!("{stats:?}"),
+                "threads={threads} window={window}: counters diverged"
+            );
         }
     }
 

@@ -67,6 +67,11 @@ pub struct PruneStats {
     /// Individual streamed schemes dropped by the chain-level bound
     /// (`score + best_prev >= incumbent`) before Pareto ranking.
     pub schemes_bound_pruned: usize,
+    /// Multi-layer spans whose context table was built. Counted when the
+    /// planner *consumes* a table (never when a speculative worker produces
+    /// one), so the value is identical for any thread count / speculation
+    /// window — `tests` assert PruneStats equality across 1-vs-N threads.
+    pub tables_built: usize,
 }
 
 impl PruneStats {
@@ -78,7 +83,8 @@ impl PruneStats {
             .set("after_pareto", self.after_pareto.into())
             .set("spans_total", self.spans_total.into())
             .set("spans_pruned", self.spans_pruned.into())
-            .set("schemes_bound_pruned", self.schemes_bound_pruned.into());
+            .set("schemes_bound_pruned", self.schemes_bound_pruned.into())
+            .set("tables_built", self.tables_built.into());
         o
     }
 }

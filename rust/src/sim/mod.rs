@@ -155,6 +155,22 @@ impl<'a> StagedEval<'a> {
         let ev = eval_from_counts(self.arch, self.nodes, self.compute_cycles, a);
         CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
     }
+
+    /// Admissible lower bound over *every* blocking of this `(part, unit)`
+    /// prefix — the partition level of the bound hierarchy, one level above
+    /// [`StagedEval::bound_prefix`]. It is the floor chain evaluated at
+    /// `gq == totals` (one trip per group, whole tensors resident, single
+    /// drain pass); `PartAccess::partition_floor` carries the per-stream
+    /// domination argument, and `eval_from_counts` is monotone in every
+    /// stream while MACs and compute cycles are constants of the prefix, so
+    /// `bound_partition() <= bound_prefix(gq) <= evaluate(completion)` for
+    /// every realizable `(gq, go, rq, ro)`. Checking it before the blocking
+    /// loops lets the branch-and-bound scan skip whole partitions exactly.
+    pub fn bound_partition(&self) -> CostEstimate {
+        let a = self.part.partition_floor(self.ifm_on_chip);
+        let ev = eval_from_counts(self.arch, self.nodes, self.compute_cycles, a);
+        CostEstimate { energy_pj: ev.energy.total(), latency_cycles: ev.latency_cycles }
+    }
 }
 
 /// Stages 1+2 frozen; only the REGF-level suffix left to evaluate.
@@ -324,6 +340,41 @@ mod tests {
                             ev.energy.total()
                         );
                         assert!(bound.latency_cycles <= ev.latency_cycles + 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_bound_is_admissible() {
+        // bound_partition() never exceeds bound_prefix(gq) for any gbuf
+        // block, nor the detailed evaluation of any completion — the
+        // partition level of the bound hierarchy, for energy AND latency.
+        let arch = presets::multi_node_eyeriss();
+        let l = Layer::conv("c", 32, 64, 14, 3, 1);
+        let part = PartitionScheme { region: (2, 2), pn: 2, pk: 2, ..PartitionScheme::single() };
+        let unit = UnitMap::build(&arch, part.node_shape(&l, 8));
+        for ifm_on_chip in [false, true] {
+            let staged = StagedEval::new(&arch, part, unit, ifm_on_chip);
+            let pb = staged.bound_partition();
+            for gq in [Qty::new(1, 2, 2), Qty::new(2, 8, 16), Qty::new(4, 16, 32), unit.totals] {
+                let prefix = staged.bound_prefix(gq);
+                assert!(pb.energy_pj <= prefix.energy_pj + 1e-9);
+                assert!(pb.latency_cycles <= prefix.latency_cycles + 1e-9);
+                for go in LoopOrder::all() {
+                    let pre = staged.gbuf(gq, go);
+                    for rq in [Qty::new(1, 1, 1), Qty::new(1, 2, 2), gq] {
+                        for ro in LoopOrder::all() {
+                            let ev = pre.eval(rq, ro);
+                            assert!(
+                                pb.energy_pj <= ev.energy.total() + 1e-9,
+                                "energy bound {} > {}",
+                                pb.energy_pj,
+                                ev.energy.total()
+                            );
+                            assert!(pb.latency_cycles <= ev.latency_cycles + 1e-9);
+                        }
                     }
                 }
             }

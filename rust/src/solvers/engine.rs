@@ -145,9 +145,12 @@ impl<'a> SolveCtx<'a> {
                 let intra = ExhaustiveIntra {
                     with_sharing: kind == SolverKind::DirectiveExhaustive,
                     stats: Some(&counters),
+                    part_floor: self.dp.part_floor,
                 };
                 let mut r = self.exact_dp(net, batch, &intra)?;
-                r.bnb = Some(counters.snapshot());
+                let mut st = counters.snapshot();
+                st.part_floor = self.dp.part_floor;
+                r.bnb = Some(st);
                 Ok(r)
             }
             SolverKind::Random { p, seed } => self.exact_dp(net, batch, &RandomIntra::new(p, seed)),

@@ -25,18 +25,29 @@ use super::{IntraCtx, IntraSolver};
 /// evaluations are shared across the inner loops and subtrees whose
 /// admissible lower bound cannot strictly beat the incumbent are skipped —
 /// the returned optimum is provably the full scan's first minimum.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ExhaustiveIntra<'a> {
     /// Include buffer-sharing variants (S) or not (B).
     pub with_sharing: bool,
     /// Shared pruning counters (`SolveResult::bnb`); `None` skips the
     /// book-keeping, never the pruning.
     pub stats: Option<&'a BnbCounters>,
+    /// Check the partition-level admissible floor before enumerating a
+    /// partition's blockings (`DpConfig::part_floor`; on by default, `off`
+    /// for triage — the argmin is identical either way, so the solver
+    /// fingerprint and the cross-job argmin memo are unaffected).
+    pub part_floor: bool,
+}
+
+impl Default for ExhaustiveIntra<'_> {
+    fn default() -> Self {
+        ExhaustiveIntra { with_sharing: false, stats: None, part_floor: true }
+    }
 }
 
 impl ExhaustiveIntra<'_> {
     pub fn new(with_sharing: bool) -> ExhaustiveIntra<'static> {
-        ExhaustiveIntra { with_sharing, stats: None }
+        ExhaustiveIntra { with_sharing, stats: None, part_floor: true }
     }
 }
 
@@ -56,7 +67,8 @@ impl IntraSolver for ExhaustiveIntra<'_> {
         ctx: &IntraCtx,
         model: &dyn CostModel,
     ) -> Option<LayerScheme> {
-        let mut q = StagedQuery::for_ctx(arch, layer, ctx, self.with_sharing, model);
+        let mut q = StagedQuery::for_ctx(arch, layer, ctx, self.with_sharing, model)
+            .part_floor(self.part_floor);
         if let Some(c) = self.stats {
             q = q.counters(c);
         }
@@ -120,7 +132,7 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let counters = BnbCounters::new();
-        let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters) };
+        let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters), part_floor: true };
         let s = solver.solve(&arch, &l, &ctx((2, 2), 8), &TieredCost::fresh()).unwrap();
         s.validate(&arch).unwrap();
         let st = counters.snapshot();

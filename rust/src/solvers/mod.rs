@@ -18,6 +18,18 @@
 //! dispatches a [`SolverKind`] through `SolveCtx::run`. The per-family
 //! `*_schedule` free functions this module used to export are gone —
 //! coordinator, service, CLI, benches and tests all go through the engine.
+//!
+//! Exact pruning rests on a three-level hierarchy of admissible floors,
+//! coarsest first: the *partition* floor (`CostModel::bound_partition`,
+//! one check skips every blocking of a `PartitionScheme`), the *prefix*
+//! bound (`CostModel::bound_prefix`, skips all completions of a
+//! `(part, gbuf)` prefix), and the *span* floor in the inter-layer
+//! planner (skips whole candidate spans against the chain incumbent).
+//! Each floor lower-bounds everything beneath it, so pruning never moves
+//! any argmin. [`SolverKind`] variants are plain unit tags compared with
+//! `==`, so the `part_floor` toggle is *not* part of the solver label; it
+//! surfaces through the [`BnbStats`] counters (`bnb` JSON object)
+//! instead.
 
 pub mod engine;
 pub mod exhaustive;

@@ -123,6 +123,11 @@ pub fn count_schemes(
 /// any thread count).
 #[derive(Debug, Default)]
 pub struct BnbCounters {
+    /// Partitions whose blocking space was actually enumerated.
+    parts_visited: AtomicU64,
+    /// Partitions skipped whole: the gq-independent partition floor
+    /// (`CostModel::bound_partition`) already met the incumbent.
+    parts_pruned: AtomicU64,
     /// Gbuf-level prefixes whose subtree was actually enumerated.
     prefixes_visited: AtomicU64,
     /// Gbuf-level prefixes skipped because their admissible lower bound
@@ -149,9 +154,14 @@ impl BnbCounters {
         c.fetch_add(v, Ordering::Relaxed);
     }
 
-    /// Plain-value snapshot for reporting.
+    /// Plain-value snapshot for reporting. `part_floor` defaults to true
+    /// (the scan's default); callers that ran with the floor disabled stamp
+    /// the flag before publishing the stats.
     pub fn snapshot(&self) -> BnbStats {
         BnbStats {
+            part_floor: true,
+            parts_visited: self.parts_visited.load(Ordering::Relaxed),
+            parts_pruned: self.parts_pruned.load(Ordering::Relaxed),
             prefixes_visited: self.prefixes_visited.load(Ordering::Relaxed),
             prefixes_pruned: self.prefixes_pruned.load(Ordering::Relaxed),
             bound_evals: self.bound_evals.load(Ordering::Relaxed),
@@ -166,6 +176,14 @@ impl BnbCounters {
 /// `SolveResult::bnb`, bench/service JSON).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct BnbStats {
+    /// Whether the partition-level floor was enabled for the run these
+    /// stats describe (`DpConfig::part_floor` / the `part_floor=` knob).
+    /// `SolverKind` variants are field-less unit tags compared with `==`
+    /// throughout, so the knob is surfaced here — in the `bnb` object of
+    /// bench and service JSON — rather than folded into the solver label.
+    pub part_floor: bool,
+    pub parts_visited: u64,
+    pub parts_pruned: u64,
     pub prefixes_visited: u64,
     pub prefixes_pruned: u64,
     pub bound_evals: u64,
@@ -199,7 +217,10 @@ impl BnbStats {
     /// JSON object shared by bench reports and service responses.
     pub fn to_json(&self) -> crate::util::json::Json {
         let mut o = crate::util::json::Json::obj();
-        o.set("prefixes_visited", self.prefixes_visited.into())
+        o.set("part_floor", self.part_floor.into())
+            .set("parts_visited", self.parts_visited.into())
+            .set("parts_pruned", self.parts_pruned.into())
+            .set("prefixes_visited", self.prefixes_visited.into())
             .set("prefixes_pruned", self.prefixes_pruned.into())
             .set("bound_evals", self.bound_evals.into())
             .set("schemes_visited", self.schemes_visited.into())
@@ -223,6 +244,10 @@ pub struct StagedQuery<'a> {
     pub objective: Objective,
     pub model: &'a dyn CostModel,
     pub counters: Option<&'a BnbCounters>,
+    /// Check the gq-independent partition floor (`CostModel::bound_partition`)
+    /// before enumerating a partition's blockings (default on; `off` is a
+    /// debugging/triage mode — the argmin is identical either way).
+    pub part_floor: bool,
 }
 
 impl<'a> StagedQuery<'a> {
@@ -243,11 +268,17 @@ impl<'a> StagedQuery<'a> {
             objective: ctx.objective,
             model,
             counters: None,
+            part_floor: true,
         }
     }
 
     pub fn counters(mut self, counters: &'a BnbCounters) -> StagedQuery<'a> {
         self.counters = Some(counters);
+        self
+    }
+
+    pub fn part_floor(mut self, on: bool) -> StagedQuery<'a> {
+        self.part_floor = on;
         self
     }
 }
@@ -278,12 +309,16 @@ fn subtree_candidates(gq: Qty, granule: Qty) -> u64 {
 /// be in the same units and the incumbent must be achieved, not
 /// aspirational) — returning a value in other units, or below every
 /// real candidate, would prune subtrees unsoundly.
-/// At every `(part, gbuf block)` prefix the admissible
-/// `CostModel::bound_prefix` lower bound is checked against the incumbent:
-/// `bound >= incumbent` proves no completion can *strictly beat* the
-/// incumbent, so the whole subtree is skipped without changing the
-/// first-minimum argmin an exhaustive scan would return — byte-identical
-/// optima, orders of magnitude fewer evaluations
+/// Two bound levels guard the scan (the intra-layer half of the
+/// partition → prefix → span hierarchy). At every partition the
+/// gq-independent `CostModel::bound_partition` floor is checked first
+/// (when `q.part_floor` is on): `bound >= incumbent` proves no blocking of
+/// the partition can strictly beat the incumbent, so the whole partition
+/// is skipped before `qty_candidates` ever runs. At every surviving
+/// `(part, gbuf block)` prefix the admissible `CostModel::bound_prefix`
+/// lower bound is checked the same way and skips the subtree. Both prunes
+/// never change the first-minimum argmin an exhaustive scan would return —
+/// byte-identical optima, orders of magnitude fewer evaluations
 /// (`tests/staged_eval_equivalence.rs` pins the equality).
 pub fn visit_schemes_staged(
     q: &StagedQuery<'_>,
@@ -295,6 +330,25 @@ pub fn visit_schemes_staged(
     for part in parts {
         let unit = UnitMap::build(q.arch, part.node_shape(q.layer, q.rb));
         let staged = q.model.staged(q.arch, &part, &unit, q.ifm_on_chip);
+        // Partition-level branch-and-bound: the gq-independent floor over
+        // every blocking of this partition, checked before the blocking
+        // loops spawn. Admissible (bound_partition <= bound_prefix <=
+        // evaluate for every completion), so skipping cannot change the
+        // first-minimum argmin.
+        if q.part_floor && incumbent.is_finite() {
+            if let Some(st) = &staged {
+                let bound = q.model.bound_partition(st);
+                if q.objective.of(&bound) >= incumbent {
+                    if let Some(c) = q.counters {
+                        c.add(&c.parts_pruned, 1);
+                    }
+                    continue;
+                }
+            }
+        }
+        if let Some(c) = q.counters {
+            c.add(&c.parts_visited, 1);
+        }
         'gbuf: for gq in qty_candidates(unit.totals, unit.granule) {
             // Capacity pre-check before spawning the inner loops.
             let probe = LayerScheme {
@@ -560,6 +614,33 @@ mod tests {
                 st.prefixes_visited,
                 st.bound_evals
             );
+            assert!(
+                st.parts_pruned > 0,
+                "{}: expected some whole-partition pruning (parts visited {})",
+                l.name,
+                st.parts_visited
+            );
+
+            // With the partition floor disabled the scan walks every
+            // partition — and still lands on the exact same argmin.
+            let off_counters = BnbCounters::new();
+            let qo = StagedQuery::for_ctx(&arch, &l, &ctx, true, &model)
+                .counters(&off_counters)
+                .part_floor(false);
+            let mut off: Option<(f64, LayerScheme)> = None;
+            visit_schemes_staged(&qo, |s, est| {
+                let c = est.energy_pj;
+                if off.as_ref().map(|(b, _)| c < *b).unwrap_or(true) {
+                    off = Some((c, *s));
+                }
+                Some(off.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
+            });
+            let (oe, os) = off.unwrap();
+            assert_eq!(fe, oe, "{}: part_floor=off changed the optimum", l.name);
+            assert_eq!(format!("{fs:?}"), format!("{os:?}"), "{}: part_floor=off scheme", l.name);
+            let ost = off_counters.snapshot();
+            assert_eq!(ost.parts_pruned, 0);
+            assert!(ost.parts_visited >= st.parts_visited + st.parts_pruned);
         }
     }
 

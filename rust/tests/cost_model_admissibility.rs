@@ -17,13 +17,14 @@
 
 use kapla::arch::presets;
 use kapla::cost::{CostModel, LayerCtx, TieredCost};
-use kapla::directives::LayerScheme;
+use kapla::directives::{LayerScheme, LevelBlock, LoopOrder};
 use kapla::interlayer::prune::conservative_valid;
 use kapla::interlayer::{candidate_spans, enumerate_segment_schemes};
-use kapla::partition::PartitionScheme;
+use kapla::mapping::UnitMap;
+use kapla::partition::{enumerate_partitions, PartitionScheme};
 use kapla::sim::pipeline::evaluate_segment;
 use kapla::solvers::kapla::KaplaIntra;
-use kapla::solvers::space::minimal_scheme;
+use kapla::solvers::space::{minimal_scheme, qty_candidates};
 use kapla::solvers::{IntraCtx, IntraSolver, Objective};
 use kapla::util::SplitMix64;
 use kapla::workloads::{nets, training_graph, Layer};
@@ -113,6 +114,78 @@ fn layer_estimate_never_exceeds_detailed_evaluation() {
         }
         checked += 1;
     }
+}
+
+#[test]
+fn partition_floor_never_exceeds_any_blocking() {
+    // Soundness invariant of the partition-level admissible floor (the
+    // lowest tier of the bound hierarchy): for a fixed `(partition, unit)`
+    // prefix, `CostModel::bound_partition` lower-bounds the detailed
+    // evaluation of EVERY blocking of that partition — in energy and in
+    // latency simultaneously, so the partition-level check in
+    // `visit_schemes_staged` is exact for both objectives
+    // (`Objective::of` reads one of the two fields).
+    let mut rng = SplitMix64::new(0xF1_00F2);
+    let model = TieredCost::fresh();
+    let orders = LoopOrder::all();
+    let archs = [
+        ("bench_multi_node", presets::bench_multi_node(), (2u64, 2u64), 4u64),
+        ("multi_node_eyeriss", presets::multi_node_eyeriss(), (4, 4), 8),
+    ];
+    let mut checked = 0usize;
+    for (name, arch, region, rb) in archs {
+        let mut layers_drawn = 0usize;
+        while layers_drawn < 12 {
+            let layer = random_layer(&mut rng);
+            let parts = enumerate_partitions(&layer, rb, region, true);
+            if parts.is_empty() {
+                continue;
+            }
+            layers_drawn += 1;
+            let part = parts[rng.below(parts.len() as u64) as usize];
+            let unit = UnitMap::build(&arch, part.node_shape(&layer, rb));
+            for ifm_on_chip in [false, true] {
+                let staged = model
+                    .staged(&arch, &part, &unit, ifm_on_chip)
+                    .expect("tiered model opts into staging");
+                let floor = model.bound_partition(&staged);
+                let gqs = qty_candidates(unit.totals, unit.granule);
+                for _ in 0..6 {
+                    let gq = gqs[rng.below(gqs.len() as u64) as usize];
+                    let rqs = qty_candidates(gq, unit.granule);
+                    let rq = rqs[rng.below(rqs.len() as u64) as usize];
+                    let go = orders[rng.below(6) as usize];
+                    let ro = orders[rng.below(6) as usize];
+                    let s = LayerScheme {
+                        part,
+                        unit,
+                        regf: LevelBlock { qty: rq, order: ro },
+                        gbuf: LevelBlock { qty: gq, order: go },
+                    };
+                    if s.validate(&arch).is_err() {
+                        continue;
+                    }
+                    let ev = model.evaluate(&arch, &s, ifm_on_chip);
+                    assert!(
+                        floor.energy_pj <= ev.energy_pj + 1e-9,
+                        "{name}/{:?}: partition floor energy {} > blocking {}",
+                        layer.kind,
+                        floor.energy_pj,
+                        ev.energy_pj
+                    );
+                    assert!(
+                        floor.latency_cycles <= ev.latency_cycles + 1e-9,
+                        "{name}/{:?}: partition floor latency {} > blocking {}",
+                        layer.kind,
+                        floor.latency_cycles,
+                        ev.latency_cycles
+                    );
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked > 80, "property needs coverage, only {checked} blockings drawn");
 }
 
 #[test]

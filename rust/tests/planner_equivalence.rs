@@ -7,8 +7,9 @@
 //!    schemes, `prune_and_rank`, stable sort-and-truncate DP) — chains
 //!    byte-identical, on two nets;
 //! 2. every solver's *final schedule* byte-identical across pruned/full
-//!    planning, cold/warm sessions (the argmin memo replaying scans), and
-//!    1-vs-4 worker threads, on two nets x both objectives;
+//!    planning, partition-floor on/off, cold/warm sessions (the argmin
+//!    memo replaying scans), and 1-vs-4 worker threads (the speculative
+//!    span pipeline), on two nets x both objectives;
 //! 3. the acceptance counters: nonzero span-level prune counters and
 //!    nonzero warm-session memo hits on a zoo net.
 
@@ -150,7 +151,7 @@ fn schedules_identical_across_memo_threads_and_sessions() {
     for net in [nets::mlp(), tiny_net()] {
         for objective in [Objective::Energy, Objective::Latency] {
             for solver in [SolverKind::Kapla, SolverKind::Baseline] {
-                let job = |threads: usize| Job {
+                let job = |threads: usize, part_floor: bool| Job {
                     net: net.clone(),
                     batch: 4,
                     objective,
@@ -159,20 +160,41 @@ fn schedules_identical_across_memo_threads_and_sessions() {
                         max_rounds: 4,
                         max_seg_len: 3,
                         solve_threads: threads,
+                        part_floor,
                         ..DpConfig::default()
                     },
                 };
                 let tag = format!("{}/{objective:?}/{}", net.name, solver.letter());
                 // Cold solitary run: the golden reference.
-                let cold = run_job(&arch, &job(1)).unwrap();
-                // 1-vs-4 worker threads.
-                let par = run_job(&arch, &job(4)).unwrap();
+                let cold = run_job(&arch, &job(1, true)).unwrap();
+                // 1-vs-4 worker threads (4 threads exercises the planner's
+                // speculative span pipeline, on by default).
+                let par = run_job(&arch, &job(4, true)).unwrap();
                 assert_eq!(snapshot(&cold), snapshot(&par), "{tag}: threads diverged");
+                // Partition-level floor off, at both thread counts: the
+                // floor is exact, so schedules must not move.
+                for threads in [1usize, 4] {
+                    let off = run_job(&arch, &job(threads, false)).unwrap();
+                    assert_eq!(
+                        snapshot(&cold),
+                        snapshot(&off),
+                        "{tag}: part_floor=off diverged at {threads} threads"
+                    );
+                    if let Some(bnb) = &off.bnb {
+                        assert!(!bnb.part_floor, "{tag}: off-run must report the flag off");
+                        assert_eq!(bnb.parts_pruned, 0, "{tag}: disabled floor still pruned");
+                    }
+                }
+                if solver == SolverKind::Baseline {
+                    let bnb = cold.bnb.as_ref().expect("exhaustive runs report bnb");
+                    assert!(bnb.part_floor, "{tag}: default must report the flag on");
+                    assert!(bnb.parts_visited > 0, "{tag}: scan visited no partitions");
+                }
                 // Cold session, then a warm repeat replaying the recorded
                 // argmins.
                 let session = SessionCache::unbounded();
-                let s1 = run_job_with(&arch, &job(1), &session).unwrap();
-                let s2 = run_job_with(&arch, &job(1), &session).unwrap();
+                let s1 = run_job_with(&arch, &job(1, true), &session).unwrap();
+                let s2 = run_job_with(&arch, &job(1, true), &session).unwrap();
                 assert_eq!(snapshot(&cold), snapshot(&s1), "{tag}: session diverged");
                 assert_eq!(snapshot(&cold), snapshot(&s2), "{tag}: warm session diverged");
                 assert!(

@@ -167,7 +167,7 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
             let (full_cost, full_scheme) = full.expect("space non-empty");
 
             let counters = BnbCounters::new();
-            let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters) };
+            let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters), part_floor: true };
             let pruned = solver.solve(&arch, layer, &ctx, &TieredCost::fresh()).unwrap();
             assert_eq!(
                 format!("{full_scheme:?}"),
@@ -190,6 +190,19 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
                 layer.name,
                 st.prefixes_visited,
                 st.bound_evals
+            );
+            assert!(st.parts_visited > 0, "{}/{objective:?}", layer.name);
+
+            // The partition-level floor is exact too: disabling it returns
+            // the byte-identical scheme (only the work differs).
+            let off = ExhaustiveIntra { with_sharing: true, stats: None, part_floor: false }
+                .solve(&arch, layer, &ctx, &TieredCost::fresh())
+                .unwrap();
+            assert_eq!(
+                format!("{off:?}"),
+                format!("{pruned:?}"),
+                "{}/{objective:?}: part_floor=off changed the optimum",
+                layer.name
             );
         }
     }
