@@ -453,6 +453,7 @@ fn main() {
                 objective: if i % 2 == 0 { Objective::Energy } else { Objective::Latency },
                 solver: SolverKind::Kapla,
                 dp: DpConfig { max_rounds: 8, solve_threads: 1, ..DpConfig::default() },
+                deadline_ms: None,
             })
             .collect();
 

@@ -51,7 +51,7 @@ fn main() {
     for solver in solvers {
         println!("running {} ...", solver.letter());
         let job =
-            Job { net: net.clone(), batch, objective: Objective::Energy, solver, dp };
+            Job { net: net.clone(), batch, objective: Objective::Energy, solver, dp, deadline_ms: None };
         let r = run_job(&arch, &job).expect("schedulable");
         let e = r.eval.energy.total();
         if solver == SolverKind::Baseline {

@@ -27,6 +27,7 @@ fn main() {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
+            deadline_ms: None,
         };
         let r = run_job(&arch, &job).expect("schedulable");
         t.row(vec![

@@ -56,6 +56,7 @@ fn main() {
             objective: Objective::Latency,
             solver: SolverKind::Kapla,
             dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+            deadline_ms: None,
         })
         .collect();
 

@@ -33,6 +33,14 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Admission-control rejections: solve queue full or connection cap.
     pub overloads: AtomicU64,
+    /// Successful responses that carried a `degraded` object — solves
+    /// answered with a best-effort incumbent after their deadline tripped
+    /// (anytime semantics, still `ok:true`).
+    pub degraded: AtomicU64,
+    /// Structured deadline errors: requests whose budget expired with no
+    /// incumbent at all (counted within `errors` too), including requests
+    /// already expired when dequeued.
+    pub deadline_errors: AtomicU64,
     solver_latency: [LatencyHistogram; SOLVER_LETTERS.len()],
 }
 
@@ -49,7 +57,20 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
         if resp.get("ok") != Some(&Json::Bool(true)) {
             self.errors.fetch_add(1, Ordering::Relaxed);
+            // The engine's no-incumbent deadline error and the transport's
+            // expired-in-queue rejection share one Display prefix
+            // (`SolveError::Deadline`), so one substring keys both.
+            if resp
+                .get("error")
+                .and_then(|e| e.as_str())
+                .is_some_and(|e| e.starts_with("deadline exceeded"))
+            {
+                self.deadline_errors.fetch_add(1, Ordering::Relaxed);
+            }
             return;
+        }
+        if resp.get("degraded").is_some() {
+            self.degraded.fetch_add(1, Ordering::Relaxed);
         }
         if let Some(label) = resp.get("solver").and_then(|s| s.as_str()) {
             let letter = label.get(..1).unwrap_or("");
@@ -99,6 +120,8 @@ impl Metrics {
             .set("requests", self.requests.load(Ordering::Relaxed).into())
             .set("errors", self.errors.load(Ordering::Relaxed).into())
             .set("overloads", self.overloads.load(Ordering::Relaxed).into())
+            .set("degraded", self.degraded.load(Ordering::Relaxed).into())
+            .set("deadline_errors", self.deadline_errors.load(Ordering::Relaxed).into())
             .set("solver_latency_ms", solvers)
             .set("tenants", tj);
         o
@@ -132,6 +155,29 @@ mod tests {
         assert!(j.contains("\"K\":{\"count\":1"), "{j}");
         assert!(j.contains("\"R\":{\"count\":1"), "{j}");
         assert!(!j.contains("\"B\":"), "{j}");
+    }
+
+    #[test]
+    fn degraded_and_deadline_responses_are_counted() {
+        let m = Metrics::new();
+        // ok:true with a degraded object: counted as degraded, not error.
+        let mut deg = ok_resp("B");
+        let mut d = Json::obj();
+        d.set("reason", "deadline".into())
+            .set("elapsed_ms", 1.5.into())
+            .set("best_effort", true.into());
+        deg.set("degraded", d);
+        m.record_response(&deg, 0.002);
+        // No-incumbent deadline error (engine or expired-in-queue).
+        m.record_response(&err_json("deadline exceeded after 3 ms in the solve queue"), 0.0);
+        // An unrelated error must not count as a deadline error.
+        m.record_response(&err_json("unknown network zzz"), 0.0);
+        assert_eq!(m.degraded.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 2);
+        let j = m.to_json(0, 8, &[]).to_string_compact();
+        assert!(j.contains("\"degraded\":1"), "{j}");
+        assert!(j.contains("\"deadline_errors\":1"), "{j}");
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct JobKnobs {
     /// (`part_floor=on|off`; on by default). Exact either way — `off`
     /// exists for triage and for measuring the floor's own benefit.
     pub part_floor: Option<bool>,
+    /// Wall-clock budget for the solve (`deadline_ms=`). On expiry the
+    /// engine returns its best incumbent marked `degraded` (anytime
+    /// semantics) instead of erroring; the service additionally caps the
+    /// accepted value.
+    pub deadline_ms: Option<u64>,
 }
 
 impl JobKnobs {
@@ -90,6 +95,7 @@ impl JobKnobs {
                     _ => return Err(format!("bad value for knob part_floor: {val:?}")),
                 });
             }
+            "deadline_ms" => self.deadline_ms = Some(positive(key, val)?),
             _ => return Err(format!("unknown knob {key:?}")),
         }
         Ok(true)
@@ -118,13 +124,27 @@ pub struct Job {
     pub objective: Objective,
     pub solver: SolverKind,
     pub dp: DpConfig,
+    /// Optional wall-clock budget. `Some(ms)` arms a deadline token on the
+    /// engine: on expiry the solve returns its best incumbent as a
+    /// [`SolveResult`] marked degraded, never an error or a hang. `None`
+    /// (the default everywhere) is byte-identical to the pre-deadline
+    /// engine.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Job {
     /// The engine configured for this job over `arch` (private fresh
     /// evaluation cache; chain `.session(...)` for cross-job reuse).
+    /// `deadline_ms` arms a fresh deadline token per call — the budget
+    /// covers one solve, not the `Job` value's lifetime.
     pub fn engine<'a>(&self, arch: &'a ArchConfig) -> SolveCtx<'a> {
-        SolveCtx::new(arch).objective(self.objective).dp(self.dp)
+        let mut ctx = SolveCtx::new(arch).objective(self.objective).dp(self.dp);
+        if let Some(ms) = self.deadline_ms {
+            ctx = ctx.cancel(crate::util::cancel::CancelToken::with_deadline(
+                std::time::Duration::from_millis(ms),
+            ));
+        }
+        ctx
     }
 }
 
@@ -219,6 +239,14 @@ mod tests {
         assert_eq!(dp.parallel_table_min, DpConfig::default().parallel_table_min);
         assert_eq!(k.objective, Some(Objective::Latency));
 
+        // deadline_ms: recorded on the knobs (not a DpConfig field), must
+        // be a positive integer.
+        let mut d = JobKnobs::default();
+        assert_eq!(d.parse_token("deadline_ms=250"), Ok(true));
+        assert_eq!(d.deadline_ms, Some(250));
+        assert!(JobKnobs::default().parse_token("deadline_ms=0").is_err());
+        assert!(JobKnobs::default().parse_token("deadline_ms=soon").is_err());
+
         // part_floor accepts the boolean spellings and defaults to on.
         let mut on = JobKnobs::default();
         assert_eq!(on.parse_token("part_floor=1"), Ok(true));
@@ -246,6 +274,7 @@ mod tests {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+            deadline_ms: None,
         };
         let solo = run_job(&arch, &job).unwrap();
 
@@ -281,6 +310,7 @@ mod tests {
             objective: Objective::Energy,
             solver,
             dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+            deadline_ms: None,
         };
         let jobs = vec![
             mk(SolverKind::Kapla),

@@ -12,11 +12,19 @@
 //! Positional fields keep their legacy order; `key=value` knobs may appear
 //! anywhere after the network and set per-request solver parameters
 //! (`threads=4`, `objective=latency`, `ks=2`, `max_seg_len=3`,
-//! `max_rounds=16`, `top_per_span=1`, `part_floor=off`). Malformed
-//! requests — unknown
+//! `max_rounds=16`, `top_per_span=1`, `part_floor=off`, `deadline_ms=250`).
+//! Malformed requests — unknown
 //! network/solver/knob, unparseable value — get a structured
 //! `{"ok":false,"error":...}` response instead of silently falling back to
 //! defaults.
+//!
+//! `deadline_ms=` arms a wall-clock budget on the solve: on expiry the
+//! engine returns its best incumbent with a `degraded` object
+//! (`{"reason":"deadline","elapsed_ms":...,"best_effort":true}`) in the
+//! response — anytime semantics, never a hang or a panic. The test-only
+//! `chaos=seed:panic_permille:latency_us` knob (gated behind
+//! `KAPLA_CHAOS=1`) wraps the cost model in `cost::FaultInjector` for the
+//! chaos battery.
 //!
 //! The connection is a *scheduling session*: every request solves against
 //! one shared, budgeted `cost::SessionCache`, so repeated or
@@ -59,6 +67,51 @@ pub const MAX_REQUEST_KS: usize = 64;
 pub const MAX_REQUEST_TOP_PER_SPAN: usize = 64;
 pub const MAX_REQUEST_ROUNDS: u64 = 4096;
 
+/// Ceiling on the per-request `deadline_ms=` budget (10 minutes). A longer
+/// deadline is indistinguishable from no deadline at service scale, and a
+/// validated cap keeps the knob composable with queue admission (the
+/// transport compares it against wait time before dequeuing).
+pub const MAX_REQUEST_DEADLINE_MS: u64 = 600_000;
+
+/// Environment variable gating the `chaos=` fault-injection knob. The knob
+/// exists for the chaos battery only: unless the serving process sets
+/// `KAPLA_CHAOS=1`, a request carrying `chaos=` is rejected outright.
+pub const CHAOS_ENV: &str = "KAPLA_CHAOS";
+
+/// Parsed `chaos=seed:panic_permille:latency_us` knob.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct ChaosKnob {
+    pub seed: u64,
+    pub panic_permille: u64,
+    pub latency_us: u64,
+}
+
+impl ChaosKnob {
+    fn parse(val: &str) -> Result<ChaosKnob, String> {
+        let parts: Vec<&str> = val.split(':').collect();
+        let [seed, permille, latency] = parts.as_slice() else {
+            return Err(format!("bad chaos knob {val:?}: want seed:panic_permille:latency_us"));
+        };
+        let num = |name: &str, v: &str| -> Result<u64, String> {
+            v.parse().map_err(|_| format!("bad chaos {name}: {v:?}"))
+        };
+        let k = ChaosKnob {
+            seed: num("seed", seed)?,
+            panic_permille: num("panic_permille", permille)?,
+            latency_us: num("latency_us", latency)?,
+        };
+        if k.panic_permille > 1000 {
+            return Err(format!("bad chaos panic_permille: {} (max 1000)", k.panic_permille));
+        }
+        // Cap injected latency at 1s per evaluate: chaos must slow solves
+        // down, not wedge a worker indefinitely.
+        if k.latency_us > 1_000_000 {
+            return Err(format!("bad chaos latency_us: {} (max 1000000)", k.latency_us));
+        }
+        Ok(k)
+    }
+}
+
 /// Handle a single request line against the connection's scheduling
 /// session; `None` means "quit".
 pub fn handle_line(arch: &ArchConfig, session: &SessionCache, line: &str) -> Option<Json> {
@@ -98,8 +151,20 @@ fn handle_schedule(
     let mut objective = Objective::Energy;
     let mut train = false;
     let mut knobs = JobKnobs::default();
+    let mut chaos: Option<ChaosKnob> = None;
     let mut pos = 0usize;
     for tok in rest {
+        // The chaos knob is service-level (it wraps the cost model, not
+        // the DP), carries ':'-separated fields, and is refused unless the
+        // process opted in via KAPLA_CHAOS=1 — a public endpoint must not
+        // let clients crash or slow workers at will.
+        if let Some(val) = tok.strip_prefix("chaos=") {
+            if std::env::var(CHAOS_ENV).map(|v| v == "1").unwrap_or(false) {
+                chaos = Some(ChaosKnob::parse(val)?);
+                continue;
+            }
+            return Err(format!("chaos knob disabled (set {CHAOS_ENV}=1 to enable)"));
+        }
         // Solver tokens may carry their own `key=value` knobs after a ':'
         // ("random:p=0.3,seed=7"), so anything with a ':' is positional.
         if !tok.contains(':') && knobs.parse_token(tok)? {
@@ -157,6 +222,13 @@ fn handle_schedule(
             return Err(format!("knob max_rounds too large: {r} (max {MAX_REQUEST_ROUNDS})"));
         }
     }
+    if let Some(d) = knobs.deadline_ms {
+        if d > MAX_REQUEST_DEADLINE_MS {
+            return Err(format!(
+                "knob deadline_ms too large: {d} (max {MAX_REQUEST_DEADLINE_MS})"
+            ));
+        }
+    }
 
     // Service requests are latency-sensitive: saturate the host for the
     // intra-layer sweep unless the request caps it (results are identical
@@ -166,11 +238,23 @@ fn handle_schedule(
     dp.solve_threads = dp.solve_threads.min(MAX_REQUEST_THREADS);
     let objective = knobs.objective.unwrap_or(objective);
     let net = if train { workloads::training_graph(&fwd) } else { fwd };
-    let job = Job { net, batch, objective, solver, dp };
+    let job = Job { net, batch, objective, solver, dp, deadline_ms: knobs.deadline_ms };
     // A degenerate request (net/arch combination no solver can realize)
     // comes back as a structured SolveError — report it like any other
     // malformed request instead of letting a panic kill the serve loop.
-    let r = run_job_with(arch, &job, session).map_err(|e| e.to_string())?;
+    // Under `chaos=` the session's model is wrapped in a FaultInjector;
+    // injected panics unwind past this call into the transport worker's
+    // catch_unwind (the stdin loop intentionally dies — chaos is opt-in).
+    let r = match chaos {
+        None => run_job_with(arch, &job, session),
+        Some(c) => {
+            let tiered = crate::cost::TieredCost::over(session);
+            let inj =
+                crate::cost::FaultInjector::new(&tiered, c.seed, c.panic_permille, c.latency_us);
+            job.engine(arch).model(&inj).run(&job.net, job.batch, job.solver)
+        }
+    }
+    .map_err(|e| e.to_string())?;
 
     let mut o = Json::obj();
     o.set("ok", true.into())
@@ -187,6 +271,15 @@ fn handle_schedule(
         .set("solve_s", r.solve_s.into())
         .set("segments", r.schedule.segments.len().into())
         .set("cache", r.cache.to_json());
+    // A solve whose deadline tripped answers with its best incumbent and
+    // says so: anytime semantics, surfaced per response.
+    if let Some(d) = &r.degraded {
+        let mut dj = Json::obj();
+        dj.set("reason", d.reason.into())
+            .set("elapsed_ms", d.elapsed_ms.into())
+            .set("best_effort", d.best_effort.into());
+        o.set("degraded", dj);
+    }
     // Exhaustive (B/S) requests ran the staged branch-and-bound scan;
     // surface its pruning counters next to the cache stats.
     if let Some(b) = &r.bnb {
@@ -372,6 +465,78 @@ mod tests {
             both.get("chain").unwrap().to_string_compact(),
             flag.get("chain").unwrap().to_string_compact()
         );
+    }
+
+    #[test]
+    fn deadline_knob_validates_caps_and_degrades() {
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        // Over the cap: rejected, not clamped (it changes semantics).
+        let r = handle_line(&arch, &s, "schedule mlp 4 kapla deadline_ms=600001").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("deadline_ms too large"));
+        // Zero/garbage rejected by the knob parser.
+        let r = handle_line(&arch, &s, "schedule mlp 4 kapla deadline_ms=0").unwrap();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+        // A generous deadline answers byte-identically to no deadline and
+        // is NOT marked degraded.
+        let free = handle_line(&arch, &s, "schedule mlp 4 kapla threads=1 max_rounds=4").unwrap();
+        let capped = handle_line(
+            &arch,
+            &s,
+            "schedule mlp 4 kapla threads=1 max_rounds=4 deadline_ms=600000",
+        )
+        .unwrap();
+        assert_eq!(capped.get("ok"), Some(&Json::Bool(true)));
+        assert!(capped.get("degraded").is_none(), "untripped deadline must not degrade");
+        assert_eq!(capped.get("energy_pj"), free.get("energy_pj"));
+        assert_eq!(
+            capped.get("chain").unwrap().to_string_compact(),
+            free.get("chain").unwrap().to_string_compact()
+        );
+        // A 1ms budget on an exhaustive alexnet solve trips immediately:
+        // still ok:true, with the anytime incumbent marked degraded.
+        let d = handle_line(
+            &arch,
+            &s,
+            "schedule alexnet 8 b threads=1 max_rounds=4 max_seg_len=2 deadline_ms=1",
+        )
+        .unwrap();
+        assert_eq!(d.get("ok"), Some(&Json::Bool(true)), "{}", d.to_string_compact());
+        let deg = d.get("degraded").expect("1ms exhaustive alexnet must degrade");
+        assert_eq!(deg.get("reason").unwrap().as_str(), Some("deadline"));
+        assert_eq!(deg.get("best_effort"), Some(&Json::Bool(true)));
+        assert!(deg.get("elapsed_ms").unwrap().as_f64().unwrap() >= 0.5);
+        assert!(d.get("energy_pj").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn chaos_knob_is_gated_and_validated() {
+        // Pure parser checks (no env involvement).
+        assert_eq!(
+            ChaosKnob::parse("7:250:1000"),
+            Ok(ChaosKnob { seed: 7, panic_permille: 250, latency_us: 1000 })
+        );
+        assert!(ChaosKnob::parse("7:1001:0").is_err(), "permille over 1000");
+        assert!(ChaosKnob::parse("7:0:2000000").is_err(), "latency over 1s");
+        assert!(ChaosKnob::parse("7:0").is_err(), "missing field");
+        assert!(ChaosKnob::parse("x:0:0").is_err(), "non-numeric seed");
+
+        let arch = presets::bench_multi_node();
+        let s = SessionCache::unbounded();
+        let r = handle_line(&arch, &s, "schedule mlp 4 kapla threads=1 max_rounds=4 chaos=1:0:0")
+            .unwrap();
+        if std::env::var(CHAOS_ENV).map(|v| v == "1").unwrap_or(false) {
+            // Opted-in process (the chaos battery runs this way): a
+            // fault-free injector answers like the plain model.
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        } else {
+            assert!(
+                r.get("error").unwrap().as_str().unwrap().contains("chaos knob disabled"),
+                "{}",
+                r.to_string_compact()
+            );
+        }
     }
 
     #[test]

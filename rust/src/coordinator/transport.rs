@@ -74,6 +74,14 @@ pub struct ServiceConfig {
     pub max_connections: usize,
     /// Emit a compact metrics JSON line to stderr at this interval.
     pub metrics_interval: Option<Duration>,
+    /// Close a connection that completes no request line for this long —
+    /// the slowloris defense (`--idle-timeout`). Measured from the last
+    /// *completed* line, so a client dribbling bytes without ever sending
+    /// a newline times out like a silent one. The close is structured: an
+    /// `{"ok":false,"error":"idle timeout..."}` line precedes the
+    /// disconnect. `None` (the default) keeps connections open
+    /// indefinitely, the pre-flag behavior.
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -85,6 +93,7 @@ impl Default for ServiceConfig {
             max_tenants: 64,
             max_connections: 256,
             metrics_interval: None,
+            idle_timeout: None,
         }
     }
 }
@@ -178,6 +187,27 @@ struct SolveRequest {
     line: String,
     session: Arc<SessionCache>,
     resp: mpsc::Sender<Json>,
+    /// Started at admission, so workers can see how long the request sat
+    /// in the queue.
+    admitted: Timer,
+    /// The request's `deadline_ms=` budget, pre-scanned at admission (the
+    /// authoritative parse/validation still happens in `handle_line`).
+    /// A request whose budget already expired while queued is answered
+    /// with a structured deadline error *before* any solve work starts —
+    /// the deadline knob composes with queue admission instead of
+    /// spending a worker on a result the client has given up on.
+    deadline_ms: Option<u64>,
+}
+
+/// Best-effort scan for the `deadline_ms=` knob at admission time. Returns
+/// `None` for malformed values — `handle_line` rejects those with a proper
+/// parse error, which must win over a spurious queue-expiry answer.
+fn scan_deadline_ms(line: &str) -> Option<u64> {
+    line.split_whitespace()
+        .filter(|tok| !tok.contains(':'))
+        .find_map(|tok| tok.strip_prefix("deadline_ms="))
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
 }
 
 /// Shared state of one running service instance.
@@ -239,7 +269,10 @@ fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) ->
         // admission control.
         "schedule" => {
             let (tx, rx) = mpsc::channel();
-            match ctx.queue.try_push(SolveRequest { line: plain, session, resp: tx }) {
+            let deadline_ms = scan_deadline_ms(&plain);
+            let req =
+                SolveRequest { line: plain, session, resp: tx, admitted: Timer::start(), deadline_ms };
+            match ctx.queue.try_push(req) {
                 Ok(()) => match rx.recv() {
                     Ok(resp) => Flow::Respond(resp),
                     // Workers only drop a pending sender at shutdown.
@@ -274,6 +307,22 @@ fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) ->
 fn worker_loop(ctx: &ServeCtx) {
     while let Some(req) = ctx.queue.pop() {
         let t = Timer::start();
+        // Deadline already expired while queued: answer the structured
+        // deadline error immediately (same Display prefix as the engine's
+        // no-incumbent `SolveError::Deadline`, so metrics key both) and
+        // move on to work that can still meet its budget.
+        if let Some(ms) = req.deadline_ms {
+            let waited_ms = req.admitted.elapsed_s() * 1e3;
+            if waited_ms >= ms as f64 {
+                let resp = service::err_json(&format!(
+                    "deadline exceeded after {:.0} ms in the solve queue (budget {ms} ms)",
+                    waited_ms
+                ));
+                ctx.metrics.record_response(&resp, t.elapsed_s());
+                let _ = req.resp.send(resp);
+                continue;
+            }
+        }
         let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             service::handle_line(&ctx.arch, &req.session, &req.line)
         }))
@@ -383,6 +432,14 @@ fn handle_conn(stream: Stream, ctx: &ServeCtx) {
     let default_session = Arc::new(SessionCache::new(ctx.cfg.budget));
     let mut reader = BufReader::new(&stream);
     let mut line = String::new();
+    // When the last *complete* request line arrived. Resetting only on a
+    // full line (not on every byte) is what makes the idle timeout a
+    // slowloris defense: a client dribbling bytes without a newline ages
+    // exactly like a silent one. Detection granularity is the read poll —
+    // the check runs when `read_line` returns, so bytes arriving faster
+    // than `READ_POLL` keep it from returning and evade the check; the
+    // poll interval bounds how slow a dribble must be to get caught.
+    let mut last_line = std::time::Instant::now();
     loop {
         if ctx.stop.load(Ordering::Relaxed) {
             break;
@@ -390,6 +447,7 @@ fn handle_conn(stream: Stream, ctx: &ServeCtx) {
         match reader.read_line(&mut line) {
             Ok(0) => break, // EOF (a final unterminated fragment is dropped)
             Ok(_) => {
+                last_line = std::time::Instant::now();
                 if line.len() > MAX_LINE_BYTES {
                     let _ = write_response(&stream, &service::err_json("request line too long"));
                     break;
@@ -401,12 +459,17 @@ fn handle_conn(stream: Stream, ctx: &ServeCtx) {
                         if write_response(&stream, &resp).is_err() {
                             break;
                         }
+                        // A solve may legitimately outlast the idle limit;
+                        // the clock measures client silence, so it restarts
+                        // once the response is on the wire.
+                        last_line = std::time::Instant::now();
                     }
                     Flow::Quit => break,
                 }
             }
             // Timeout while idle (or mid-line — the partial stays buffered
-            // in `line`): just re-check the stop flag and keep reading.
+            // in `line`): age the connection, then re-check the stop flag
+            // and keep reading.
             Err(e)
                 if matches!(
                     e.kind(),
@@ -418,6 +481,20 @@ fn handle_conn(stream: Stream, ctx: &ServeCtx) {
                 if line.len() > MAX_LINE_BYTES {
                     let _ = write_response(&stream, &service::err_json("request line too long"));
                     break;
+                }
+                if let Some(limit) = ctx.cfg.idle_timeout {
+                    if last_line.elapsed() >= limit {
+                        // Structured close: tell the client why before
+                        // dropping the connection.
+                        let _ = write_response(
+                            &stream,
+                            &service::err_json(&format!(
+                                "idle timeout: no complete request in {:.0} s, closing connection",
+                                limit.as_secs_f64()
+                            )),
+                        );
+                        break;
+                    }
                 }
             }
             Err(_) => break,
@@ -647,6 +724,18 @@ mod tests {
         assert_eq!(rest, "schedule mlp tenant=a:b");
 
         assert!(split_tenant("stats tenant=a tenant=b").is_err());
+    }
+
+    #[test]
+    fn deadline_scan_is_tolerant() {
+        assert_eq!(scan_deadline_ms("schedule mlp 8 kapla deadline_ms=250"), Some(250));
+        assert_eq!(scan_deadline_ms("schedule mlp deadline_ms=1 threads=2"), Some(1));
+        // Malformed or zero values are left for handle_line to reject.
+        assert_eq!(scan_deadline_ms("schedule mlp deadline_ms=soon"), None);
+        assert_eq!(scan_deadline_ms("schedule mlp deadline_ms=0"), None);
+        // ':'-bearing tokens are solver specs, never knobs.
+        assert_eq!(scan_deadline_ms("schedule mlp custom:deadline_ms=9"), None);
+        assert_eq!(scan_deadline_ms("schedule mlp 8 kapla"), None);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Chaos-testing cost-model wrapper: seeded probabilistic panics and
+//! injected latency over any [`CostModel`].
+//!
+//! The service stack promises that every *admitted* request gets exactly
+//! one answer — complete, degraded, or a structured error — no matter what
+//! the cost model does underneath. [`FaultInjector`] is how the chaos
+//! battery (`tests/service_chaos.rs`) exercises that promise: it wraps the
+//! real model, forwards every call, and on a deterministic per-call
+//! schedule panics out of `evaluate` or sleeps inside it. Panics unwind
+//! through the solver into the transport worker's `catch_unwind` and come
+//! back as `{"ok":false,"error":"internal error: ..."}`; injected latency
+//! pushes solves past their `deadline_ms=` budgets and forces the anytime
+//! degraded path.
+//!
+//! Determinism: faults fire on a pure function of `(seed, call counter)`
+//! — a [`SplitMix64`]-mixed hash, no clocks, no global RNG — so a failing
+//! chaos run replays exactly from its seed.
+//!
+//! [`CostModel::staged`] deliberately forwards as `None`: the staged
+//! evaluator scores candidates *outside* the model (that is the point of
+//! staging), which would let the hot path bypass the injection site. With
+//! staging off every candidate scores through [`FaultInjector::evaluate`],
+//! and since the staged path is pinned bit-identical to `evaluate`
+//! (`tests/staged_eval_equivalence.rs`), disabling it changes wall-clock
+//! only — a fault-free injector returns exactly the wrapped model's
+//! results.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::arch::ArchConfig;
+use crate::directives::LayerScheme;
+use crate::interlayer::Segment;
+use crate::workloads::{Layer, Network};
+
+use super::model::CostModel;
+use super::{CacheStats, CostEstimate, IntraKey, LayerCtx};
+
+/// A [`CostModel`] wrapper that injects deterministic, seeded faults into
+/// the detailed tier. Test-only by intent: the service refuses the
+/// `chaos=` request knob unless `KAPLA_CHAOS=1` is set in the process
+/// environment.
+pub struct FaultInjector<'a> {
+    inner: &'a dyn CostModel,
+    seed: u64,
+    /// Per-`evaluate` panic probability in permille (0..=1000).
+    panic_permille: u64,
+    /// Sleep injected into every `evaluate` call, in microseconds.
+    latency_us: u64,
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl<'a> FaultInjector<'a> {
+    pub fn new(
+        inner: &'a dyn CostModel,
+        seed: u64,
+        panic_permille: u64,
+        latency_us: u64,
+    ) -> FaultInjector<'a> {
+        FaultInjector {
+            inner,
+            seed,
+            panic_permille: panic_permille.min(1000),
+            latency_us,
+            calls: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Total `evaluate` calls observed.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Panics actually fired (counted just before unwinding).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Whether call number `n` (0-based) draws a panic. Pure in
+    /// `(seed, n)`; exposed so tests can predict the fault schedule.
+    pub fn fires_at(&self, n: u64) -> bool {
+        if self.panic_permille == 0 {
+            return false;
+        }
+        // One SplitMix64 scramble of seed^n: full-avalanche, so permille
+        // thresholds hold even for sequential n.
+        let mut rng = crate::util::SplitMix64::new(self.seed ^ n.wrapping_mul(0x9E3779B97F4A7C15));
+        rng.below(1000) < self.panic_permille
+    }
+}
+
+impl CostModel for FaultInjector<'_> {
+    fn estimate_layer(&self, arch: &ArchConfig, layer: &Layer, ctx: &LayerCtx) -> CostEstimate {
+        self.inner.estimate_layer(arch, layer, ctx)
+    }
+
+    fn estimate_segment(
+        &self,
+        arch: &ArchConfig,
+        net: &Network,
+        batch: u64,
+        seg: &Segment,
+    ) -> CostEstimate {
+        self.inner.estimate_segment(arch, net, batch, seg)
+    }
+
+    fn evaluate(&self, arch: &ArchConfig, s: &LayerScheme, ifm_on_chip: bool) -> CostEstimate {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if self.latency_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.latency_us));
+        }
+        if self.fires_at(n) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected cost-model fault #{n}");
+        }
+        self.inner.evaluate(arch, s, ifm_on_chip)
+    }
+
+    // No staged shortcut: force every candidate through `evaluate` so the
+    // injection site sees the whole scoring stream (see module docs).
+
+    fn intra_argmin(&self, key: &IntraKey) -> Option<Option<LayerScheme>> {
+        self.inner.intra_argmin(key)
+    }
+
+    fn record_intra_argmin(&self, key: IntraKey, argmin: Option<LayerScheme>) {
+        self.inner.record_intra_argmin(key, argmin)
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::TieredCost;
+    use crate::coordinator::{run_job, Job, SolverKind};
+    use crate::interlayer::dp::DpConfig;
+    use crate::solvers::{Objective, SolveCtx, SolverKind as SK};
+    use crate::workloads::nets;
+
+    #[test]
+    fn fault_free_injector_is_transparent() {
+        // panic_permille=0, latency=0: schedules and costs are identical
+        // to the unwrapped engine (staging off is a perf knob only).
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let dp = DpConfig { max_rounds: 4, ..DpConfig::default() };
+        let job = Job {
+            net: net.clone(),
+            batch: 4,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp,
+            deadline_ms: None,
+        };
+        let plain = run_job(&arch, &job).unwrap();
+        let tiered = TieredCost::fresh();
+        let inj = FaultInjector::new(&tiered, 7, 0, 0);
+        let wrapped = SolveCtx::new(&arch)
+            .objective(Objective::Energy)
+            .dp(dp)
+            .model(&inj)
+            .run(&net, 4, SK::Kapla)
+            .unwrap();
+        assert_eq!(format!("{:?}", wrapped.schedule), format!("{:?}", plain.schedule));
+        assert_eq!(wrapped.eval.energy.total(), plain.eval.energy.total());
+        assert!(inj.calls() > 0, "evaluate must be consulted with staging off");
+        assert_eq!(inj.injected(), 0);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_roughly_calibrated() {
+        let tiered = TieredCost::fresh();
+        let a = FaultInjector::new(&tiered, 42, 100, 0);
+        let b = FaultInjector::new(&tiered, 42, 100, 0);
+        let hits: u64 = (0..10_000).filter(|&n| a.fires_at(n)).count() as u64;
+        for n in 0..10_000 {
+            assert_eq!(a.fires_at(n), b.fires_at(n), "schedule must be pure in (seed, n)");
+        }
+        // 100 permille over 10k draws: expect ~1000, allow wide slack.
+        assert!((500..=1500).contains(&hits), "permille calibration off: {hits}/10000");
+        // permille=0 never fires; different seeds differ somewhere.
+        let z = FaultInjector::new(&tiered, 42, 0, 0);
+        assert!((0..1000).all(|n| !z.fires_at(n)));
+        let c = FaultInjector::new(&tiered, 43, 100, 0);
+        assert!((0..1000).any(|n| a.fires_at(n) != c.fires_at(n)));
+    }
+
+    #[test]
+    fn injected_panic_unwinds_with_chaos_message() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let tiered = TieredCost::fresh();
+        // permille=1000: the very first evaluate panics.
+        let inj = FaultInjector::new(&tiered, 1, 1000, 0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            SolveCtx::new(&arch)
+                .dp(DpConfig { max_rounds: 4, ..DpConfig::default() })
+                .model(&inj)
+                .run(&net, 4, SK::Kapla)
+        }));
+        let err = res.expect_err("all-faults injector must panic the solve");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("chaos: injected cost-model fault"), "got: {msg}");
+        assert!(inj.injected() >= 1);
+    }
+}

@@ -21,10 +21,12 @@
 //! runtime can invoke to score large candidate batches in one call.
 
 pub mod cache;
+pub mod fault;
 pub mod model;
 pub mod session;
 
 pub use cache::{CacheStats, CostCache, EvalCache};
+pub use fault::FaultInjector;
 pub use model::{CostModel, TieredCost};
 pub use session::{CacheBudget, IntraKey, SessionCache};
 

@@ -92,7 +92,24 @@ pub fn best_chains(
     cfg: &DpConfig,
     model: &dyn CostModel,
 ) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
-    Planner::new(arch, net, batch, cfg, model).chains()
+    best_chains_cancellable(arch, net, batch, cfg, model, None)
+}
+
+/// [`best_chains`] with a cooperative cancellation token threaded into the
+/// planner's span stream and speculative workers. A trip mid-DP returns
+/// `SolveError::Deadline` — the partial table is not a complete chain, so
+/// the caller (the engine's KAPLA path) degrades to its all-singleton
+/// fallback instead. `None` (or an untripped token) is byte-identical to
+/// [`best_chains`].
+pub fn best_chains_cancellable(
+    arch: &ArchConfig,
+    net: &Network,
+    batch: u64,
+    cfg: &DpConfig,
+    model: &dyn CostModel,
+    cancel: Option<&crate::util::cancel::CancelToken>,
+) -> Result<(Vec<ChainCand>, PruneStats), SolveError> {
+    Planner::new(arch, net, batch, cfg, model).cancel(cancel).chains()
 }
 
 #[cfg(test)]

@@ -122,6 +122,7 @@ mod tests {
                 objective: Objective::Energy,
                 solver: SolverKind::Kapla,
                 dp: DpConfig::default(),
+                deadline_ms: None,
             };
             let r = run_job(&arch, &j).expect("schedulable");
             let violations = check_schedule(&net, &r.schedule);

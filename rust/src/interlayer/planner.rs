@@ -132,6 +132,7 @@ pub struct Planner<'a> {
     cfg: &'a DpConfig,
     model: &'a dyn CostModel,
     bound_prune: bool,
+    cancel: Option<&'a crate::util::cancel::CancelToken>,
 }
 
 impl<'a> Planner<'a> {
@@ -142,7 +143,7 @@ impl<'a> Planner<'a> {
         cfg: &'a DpConfig,
         model: &'a dyn CostModel,
     ) -> Planner<'a> {
-        Planner { arch, net, batch, cfg, model, bound_prune: true }
+        Planner { arch, net, batch, cfg, model, bound_prune: true, cancel: None }
     }
 
     /// Enable/disable the chain-level branch-and-bound (default on).
@@ -150,6 +151,17 @@ impl<'a> Planner<'a> {
     /// identical by construction; only the work differs.
     pub fn bound_prune(mut self, on: bool) -> Planner<'a> {
         self.bound_prune = on;
+        self
+    }
+
+    /// Cooperative cancellation for the span stream and the speculative
+    /// table workers. A trip makes [`Planner::chains`] return
+    /// `SolveError::Deadline` — the DP's partial table is not a complete
+    /// chain, so the *caller* (the KAPLA engine path) supplies the anytime
+    /// fallback. Untripped tokens never change the stream, the chains or
+    /// the counters.
+    pub fn cancel(mut self, tok: Option<&'a crate::util::cancel::CancelToken>) -> Planner<'a> {
+        self.cancel = tok;
         self
     }
 
@@ -194,6 +206,16 @@ impl<'a> Planner<'a> {
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| loop {
+                    // Cancellation check BEFORE claiming a slot: a claimed
+                    // slot is always filled (the main thread may already
+                    // have passed its own cancellation check for that span
+                    // and would block on `take` forever otherwise), so a
+                    // tripped worker simply stops claiming and exits; the
+                    // post-`run_dp` drain below releases any worker still
+                    // parked on the speculation window.
+                    if self.cancel.is_some_and(|c| c.is_cancelled()) {
+                        break;
+                    }
                     let j = cursor.fetch_add(1, Ordering::Relaxed);
                     if j >= flat.len() {
                         break;
@@ -239,6 +261,16 @@ impl<'a> Planner<'a> {
 
         let mut cands: Vec<Node> = Vec::new();
         for (j, span) in flat.iter().enumerate() {
+            // Cancellation yield point, checked BEFORE `get_table` claims
+            // this span's speculative slot: on a trip the function returns
+            // without ever taking another slot, so workers that observed
+            // the same trip and stopped filling cannot strand this thread
+            // on a Condvar. Purely an early exit — untripped runs stream
+            // the byte-identical span sequence.
+            if self.cancel.is_some_and(|c| c.is_cancelled()) {
+                let tok = self.cancel.unwrap();
+                return Err(SolveError::Deadline { elapsed_ms: tok.elapsed_ms() as u64 });
+            }
             let (start, end) = (span[0], *span.last().unwrap());
             stats.spans_total += 1;
             // The cheapest chain this span's candidates can extend

@@ -51,10 +51,11 @@ fn usage() {
          [--net NAME] [--batch N] [--arch multi|edge|bench] \
          [--solver k|b|s|r[:p=P,seed=S]|m[:rounds=R,batch=B,seed=S]] \
          [--objective energy|latency] [--train] \
-         [--threads N] [--cache-budget N|unbounded|64mb]\n\
+         [--threads N] [--cache-budget N|unbounded|64mb] \
+         [--deadline-ms MS]\n\
          serve only: [--listen HOST:PORT|unix:PATH] [--tenants N] \
          [--queue-depth N] [--workers N] [--max-connections N] \
-         [--metrics-interval SECS]"
+         [--metrics-interval SECS] [--idle-timeout SECS]"
     );
 }
 
@@ -105,6 +106,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
             }
             _ => {
                 eprintln!("bad --metrics-interval {v:?}: want seconds > 0");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if let Some(v) = flags.get("idle-timeout") {
+        match v.parse::<f64>() {
+            Ok(s) if s > 0.0 && s.is_finite() => {
+                cfg.idle_timeout = Some(std::time::Duration::from_secs_f64(s))
+            }
+            _ => {
+                eprintln!("bad --idle-timeout {v:?}: want seconds > 0");
                 return ExitCode::FAILURE;
             }
         }
@@ -226,7 +238,17 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let job = Job { net, batch, objective, solver, dp: dp_of(flags) };
+    let deadline_ms = match flags.get("deadline-ms") {
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) if ms >= 1 => Some(ms),
+            _ => {
+                eprintln!("bad --deadline-ms {v:?}: want milliseconds >= 1");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
+    let job = Job { net, batch, objective, solver, dp: dp_of(flags), deadline_ms };
     println!(
         "scheduling {} (batch {batch}) on {} with {}...",
         job.net.name,
@@ -242,6 +264,13 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         }
     };
     print_cache_stats("evaluation cache", &r.cache);
+    if let Some(d) = &r.degraded {
+        println!(
+            "note: best-effort schedule — {} tripped after {:.1} ms, \
+             search stopped at the current incumbent",
+            d.reason, d.elapsed_ms
+        );
+    }
 
     println!(
         "energy {} | latency {} cycles ({:.3} ms) | solved in {}",
@@ -315,7 +344,14 @@ fn cmd_compare(flags: &HashMap<String, String>) -> ExitCode {
     };
     let jobs: Vec<Job> = solvers
         .iter()
-        .map(|&solver| Job { net: net.clone(), batch, objective: obj, solver, dp: DpConfig::default() })
+        .map(|&solver| Job {
+            net: net.clone(),
+            batch,
+            objective: obj,
+            solver,
+            dp: DpConfig::default(),
+            deadline_ms: None,
+        })
         .collect();
     // One scheduling session for the whole comparison: solvers exploring
     // overlapping candidate spaces (B ⊂ S, R/M ⊂ B) reuse each other's

@@ -140,7 +140,7 @@ pub fn run_cell(
     obj: Objective,
     solver: SolverKind,
 ) -> SolveResult {
-    let job = Job { net: net.clone(), batch, objective: obj, solver, dp: bench_dp() };
+    let job = Job { net: net.clone(), batch, objective: obj, solver, dp: bench_dp(), deadline_ms: None };
     run_job(arch, &job)
         .unwrap_or_else(|e| panic!("bench cell {}/{}: {e}", net.name, solver.label()))
 }
@@ -162,6 +162,13 @@ pub fn result_json(net: &str, solver: SolverKind, r: &SolveResult) -> Json {
         .set("latency_cycles", r.eval.latency_cycles.into())
         .set("solve_s", r.solve_s.into())
         .set("cache", r.cache.to_json());
+    if let Some(d) = &r.degraded {
+        let mut dj = Json::obj();
+        dj.set("reason", d.reason.into())
+            .set("elapsed_ms", d.elapsed_ms.into())
+            .set("best_effort", d.best_effort.into());
+        o.set("degraded", dj);
+    }
     if let Some(b) = &r.bnb {
         o.set("bnb", b.to_json());
     }
@@ -225,6 +232,7 @@ mod tests {
             objective: Objective::Energy,
             solver: SolverKind::Random { p: 0.3, seed: 7 },
             dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
+            deadline_ms: None,
         };
         let r = run_job(&arch, &job).unwrap();
         let j = result_json(&net.name, job.solver, &r);
@@ -241,6 +249,7 @@ mod tests {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
+            deadline_ms: None,
         };
         let r = run_job(&arch, &job).unwrap();
         let j = result_json(&net.name, job.solver, &r);

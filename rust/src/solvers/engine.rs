@@ -22,7 +22,7 @@ use std::collections::HashMap;
 use crate::arch::ArchConfig;
 use crate::cost::{CostModel, EvalCache, TieredCost};
 use crate::directives::LayerScheme;
-use crate::interlayer::dp::{best_chains, DpConfig};
+use crate::interlayer::dp::{best_chains_cancellable, DpConfig};
 use crate::interlayer::prune::conservative_valid;
 use crate::interlayer::{candidate_spans, enumerate_segment_schemes, Schedule, Segment};
 use crate::sim::pipeline::{evaluate_schedule, evaluate_segment};
@@ -33,9 +33,10 @@ use super::kapla::KaplaIntra;
 use super::ml::MlIntra;
 use super::random::RandomIntra;
 use super::{
-    collect_intra_keys, presolve_contexts, seg_objective, solve_segment_layers, IntraCache,
-    IntraSolver, Objective, SolveError, SolveResult, SolverKind,
+    collect_intra_keys, presolve_contexts, seg_objective, solve_segment_layers, Degraded,
+    IntraCache, IntraSolver, Objective, SolveError, SolveResult, SolverKind,
 };
+use crate::util::cancel::CancelToken;
 
 enum Model<'a> {
     /// The default tiered model over a private or shared evaluation cache.
@@ -62,6 +63,7 @@ pub struct SolveCtx<'a> {
     objective: Objective,
     dp: DpConfig,
     model: Model<'a>,
+    cancel: CancelToken,
 }
 
 impl<'a> SolveCtx<'a> {
@@ -73,6 +75,7 @@ impl<'a> SolveCtx<'a> {
             objective: Objective::Energy,
             dp: DpConfig::default(),
             model: Model::Tiered(TieredCost::fresh()),
+            cancel: CancelToken::none(),
         }
     }
 
@@ -86,6 +89,35 @@ impl<'a> SolveCtx<'a> {
     pub fn dp(mut self, dp: DpConfig) -> Self {
         self.dp = dp;
         self
+    }
+
+    /// Attach a cooperative cancellation token (deadline or manual). The
+    /// engine threads it into every cancellable solver and the inter-layer
+    /// planner; on a trip the run returns its best incumbent as a
+    /// [`SolveResult`] with [`SolveResult::degraded`] set (anytime
+    /// semantics) rather than an error. An untripped token never changes
+    /// any result — pinned by `tests/deadline_anytime.rs`.
+    pub fn cancel(mut self, tok: CancelToken) -> Self {
+        self.cancel = tok;
+        self
+    }
+
+    /// The degraded marker for the current token state, stamped onto
+    /// results after the solve finishes. Conservative by design: a
+    /// deadline that expires between the last yield point and this check
+    /// still marks the (complete) result `best_effort` — callers may
+    /// treat `degraded` as "the budget was exhausted", never the reverse.
+    fn degraded_mark(&self) -> Option<Degraded> {
+        let tok = self.cancel.active()?;
+        if tok.is_cancelled() {
+            Some(Degraded {
+                reason: tok.reason().unwrap_or("cancelled"),
+                elapsed_ms: tok.elapsed_ms(),
+                best_effort: true,
+            })
+        } else {
+            None
+        }
     }
 
     /// Run the detailed tier through a shared evaluation cache — the hook
@@ -146,6 +178,7 @@ impl<'a> SolveCtx<'a> {
                     with_sharing: kind == SolverKind::DirectiveExhaustive,
                     stats: Some(&counters),
                     part_floor: self.dp.part_floor,
+                    cancel: self.cancel.active(),
                 };
                 let mut r = self.exact_dp(net, batch, &intra)?;
                 let mut st = counters.snapshot();
@@ -153,10 +186,16 @@ impl<'a> SolveCtx<'a> {
                 r.bnb = Some(st);
                 Ok(r)
             }
-            SolverKind::Random { p, seed } => self.exact_dp(net, batch, &RandomIntra::new(p, seed)),
-            SolverKind::Ml { seed, rounds, batch: sa_batch } => {
-                self.exact_dp(net, batch, &MlIntra::native(seed, rounds, sa_batch))
-            }
+            SolverKind::Random { p, seed } => self.exact_dp(
+                net,
+                batch,
+                &RandomIntra::new(p, seed).with_cancel(self.cancel.clone()),
+            ),
+            SolverKind::Ml { seed, rounds, batch: sa_batch } => self.exact_dp(
+                net,
+                batch,
+                &MlIntra::native(seed, rounds, sa_batch).with_cancel(self.cancel.clone()),
+            ),
         }
     }
 
@@ -277,6 +316,7 @@ impl<'a> SolveCtx<'a> {
             cache: model.stats(),
             prune: None,
             bnb: None,
+            degraded: self.degraded_mark(),
         })
     }
 
@@ -292,7 +332,22 @@ impl<'a> SolveCtx<'a> {
         let timer = crate::util::Timer::start();
         let (arch, obj, cfg) = (self.arch, self.objective, &self.dp);
         let model = self.cost_model();
-        let (chains, stats) = best_chains(arch, net, batch, cfg, model)?;
+        // A deadline trip mid-DP means the planner's partial table holds no
+        // complete chain to return — degrade to the all-singleton fallback
+        // below (KaplaIntra descent is fast and always terminates), so the
+        // caller still gets a valid best-effort schedule, not an error.
+        let (chains, stats) = match best_chains_cancellable(
+            arch,
+            net,
+            batch,
+            cfg,
+            model,
+            self.cancel.active(),
+        ) {
+            Ok(r) => r,
+            Err(SolveError::Deadline { .. }) => (Vec::new(), Default::default()),
+            Err(e) => return Err(e),
+        };
         let intra = KaplaIntra;
         let mut cache: IntraCache = HashMap::new();
 
@@ -359,6 +414,7 @@ impl<'a> SolveCtx<'a> {
             cache: model.stats(),
             prune: Some(stats),
             bnb: None,
+            degraded: self.degraded_mark(),
         })
     }
 }

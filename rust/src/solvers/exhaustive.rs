@@ -37,17 +37,26 @@ pub struct ExhaustiveIntra<'a> {
     /// for triage — the argmin is identical either way, so the solver
     /// fingerprint and the cross-job argmin memo are unaffected).
     pub part_floor: bool,
+    /// Cooperative cancellation, polled by the staged scan at its
+    /// partition/prefix yield points. A trip returns the scan's current
+    /// incumbent — or, with no incumbent yet, the always-valid
+    /// `minimal_scheme` fallback — so the surrounding DP still assembles
+    /// a (degraded) schedule. Not part of the solver fingerprint: a
+    /// cancelled scan's partial argmin is never recorded in the cross-job
+    /// memo (see `solve_ctx_memoized`), so the memo only ever holds full
+    /// scans.
+    pub cancel: Option<&'a crate::util::cancel::CancelToken>,
 }
 
 impl Default for ExhaustiveIntra<'_> {
     fn default() -> Self {
-        ExhaustiveIntra { with_sharing: false, stats: None, part_floor: true }
+        ExhaustiveIntra { with_sharing: false, stats: None, part_floor: true, cancel: None }
     }
 }
 
 impl ExhaustiveIntra<'_> {
     pub fn new(with_sharing: bool) -> ExhaustiveIntra<'static> {
-        ExhaustiveIntra { with_sharing, stats: None, part_floor: true }
+        ExhaustiveIntra { with_sharing, stats: None, part_floor: true, cancel: None }
     }
 }
 
@@ -68,7 +77,8 @@ impl IntraSolver for ExhaustiveIntra<'_> {
         model: &dyn CostModel,
     ) -> Option<LayerScheme> {
         let mut q = StagedQuery::for_ctx(arch, layer, ctx, self.with_sharing, model)
-            .part_floor(self.part_floor);
+            .part_floor(self.part_floor)
+            .cancel(self.cancel);
         if let Some(c) = self.stats {
             q = q.counters(c);
         }
@@ -80,7 +90,20 @@ impl IntraSolver for ExhaustiveIntra<'_> {
             }
             Some(best.as_ref().map(|(b, _)| *b).unwrap_or(f64::INFINITY))
         });
-        best.map(|(_, s)| s)
+        best.map(|(_, s)| s).or_else(|| {
+            // Anytime fallback: a scan cancelled before its first candidate
+            // still hands the DP a valid scheme so the solve completes
+            // degraded instead of reporting a spurious "unschedulable".
+            if self.cancel.is_some_and(|c| c.is_cancelled()) {
+                super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
+            } else {
+                None
+            }
+        })
+    }
+
+    fn cancel_token(&self) -> Option<&crate::util::cancel::CancelToken> {
+        self.cancel
     }
 }
 
@@ -132,7 +155,12 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let counters = BnbCounters::new();
-        let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters), part_floor: true };
+        let solver = ExhaustiveIntra {
+            with_sharing: true,
+            stats: Some(&counters),
+            part_floor: true,
+            cancel: None,
+        };
         let s = solver.solve(&arch, &l, &ctx((2, 2), 8), &TieredCost::fresh()).unwrap();
         s.validate(&arch).unwrap();
         let st = counters.snapshot();

@@ -134,6 +134,12 @@ pub struct MlIntra<P: CostPredictor> {
     pub evals_per_round: usize,
     seed: u64,
     make_predictor: fn(u64) -> P,
+    /// Cooperative cancellation, polled once per annealing round. A trip
+    /// returns the best scheme found so far (or the minimal fallback) —
+    /// anytime semantics. Not part of [`MlIntra::fingerprint`]: an
+    /// untripped token never changes the trajectory, and tripped (partial)
+    /// solves never enter the cross-job argmin memo.
+    cancel: crate::util::cancel::CancelToken,
 }
 
 impl MlIntra<NativeMlp> {
@@ -152,7 +158,19 @@ impl<P: CostPredictor> MlIntra<P> {
         rounds: usize,
         batch: usize,
     ) -> MlIntra<P> {
-        MlIntra { rounds, batch, evals_per_round: (batch / 4).max(4), seed, make_predictor }
+        MlIntra {
+            rounds,
+            batch,
+            evals_per_round: (batch / 4).max(4),
+            seed,
+            make_predictor,
+            cancel: crate::util::cancel::CancelToken::none(),
+        }
+    }
+
+    pub fn with_cancel(mut self, cancel: crate::util::cancel::CancelToken) -> MlIntra<P> {
+        self.cancel = cancel;
+        self
     }
 }
 
@@ -315,6 +333,13 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
 
         let mut temp: f64 = 1.0;
         for _round in 0..self.rounds {
+            // Cancellation yield point (once per annealing round): keep the
+            // incumbent and stop proposing. Purely an early exit — the RNG
+            // and annealing trajectory are untouched while the token stays
+            // live.
+            if self.cancel.is_cancelled() {
+                break;
+            }
             // Propose a batch of mutations.
             let mut proposals: Vec<LayerScheme> = Vec::with_capacity(self.batch);
             while proposals.len() < self.batch {
@@ -363,6 +388,10 @@ impl<P: CostPredictor> IntraSolver for MlIntra<P> {
         }
 
         best.map(|(_, s)| s).or_else(|| super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb))
+    }
+
+    fn cancel_token(&self) -> Option<&crate::util::cancel::CancelToken> {
+        self.cancel.active()
     }
 }
 

@@ -232,6 +232,11 @@ pub enum SolveError {
     /// No intra-layer scheme realizes `layer` on this hardware — even the
     /// minimal unit-block mapping overflows the buffers.
     Unschedulable { layer: usize, layer_name: String },
+    /// The solve was cancelled (deadline or manual trip) before *any*
+    /// schedule existed to degrade to. A solve holding an incumbent never
+    /// takes this path — it returns the incumbent with
+    /// [`SolveResult::degraded`] set instead (anytime semantics).
+    Deadline { elapsed_ms: u64 },
 }
 
 impl std::fmt::Display for SolveError {
@@ -245,6 +250,9 @@ impl std::fmt::Display for SolveError {
                 "no valid schedule ends at layer {layer} ({layer_name}): no intra-layer \
                  scheme fits the hardware"
             ),
+            SolveError::Deadline { elapsed_ms } => {
+                write!(f, "deadline exceeded after {elapsed_ms} ms before any schedule was found")
+            }
         }
     }
 }
@@ -297,6 +305,14 @@ pub trait IntraSolver: Sync {
     fn fingerprint(&self) -> u64 {
         crate::util::fnv1a(self.name().bytes().map(u64::from))
     }
+
+    /// The cancellation token this solver polls mid-scan, if it carries
+    /// one. The memoization layer consults it to keep cancelled (partial)
+    /// scans out of the cross-job argmin memo; the default covers solvers
+    /// without cancellation support.
+    fn cancel_token(&self) -> Option<&crate::util::cancel::CancelToken> {
+        None
+    }
 }
 
 /// Deterministic fingerprint of one (layer, context) solve. The stochastic
@@ -322,6 +338,23 @@ pub fn ctx_fingerprint(layer: &Layer, ctx: &IntraCtx) -> u64 {
     ])
 }
 
+/// How a solve fell short of its full search: the anytime marker stamped
+/// on results whose scans were cut off by a [`CancelToken`] trip
+/// (deadline or manual cancel). The schedule is still *valid* — every
+/// scheme fits the hardware and the evaluation is exact — it is just the
+/// best found before the trip rather than the search's full answer.
+///
+/// [`CancelToken`]: crate::util::cancel::CancelToken
+#[derive(Debug, Clone, PartialEq)]
+pub struct Degraded {
+    /// `"deadline"` or `"cancelled"` — the latched trip reason.
+    pub reason: &'static str,
+    /// Milliseconds from token arming to result assembly.
+    pub elapsed_ms: f64,
+    /// Always `true`: kept explicit so the JSON surface is self-describing.
+    pub best_effort: bool,
+}
+
 /// Result of scheduling a whole network.
 pub struct SolveResult {
     pub schedule: Schedule,
@@ -342,6 +375,9 @@ pub struct SolveResult {
     /// Populated by the exhaustive B/S solvers; the other families don't
     /// subtree-prune, so they report `None`.
     pub bnb: Option<BnbStats>,
+    /// `Some` when a cancellation trip cut the search short and this
+    /// result is the best-effort incumbent; `None` for a full solve.
+    pub degraded: Option<Degraded>,
 }
 
 impl SolveResult {
@@ -385,7 +421,12 @@ pub(crate) fn solve_ctx_memoized(
         return recorded;
     }
     let s = intra.solve(arch, layer, ctx, model);
-    model.record_intra_argmin(key, s);
+    // A scan cut short by a cancellation trip covers only a prefix of the
+    // candidate stream; recording its argmin would poison warm sessions
+    // with degraded schemes long after the deadline pressure is gone.
+    if !intra.cancel_token().is_some_and(|c| c.is_cancelled()) {
+        model.record_intra_argmin(key, s);
+    }
     s
 }
 

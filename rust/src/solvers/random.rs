@@ -29,11 +29,23 @@ pub struct RandomIntra {
     /// Retry budget when a sample has no valid scheme.
     pub retries: usize,
     seed: u64,
+    /// Cooperative cancellation, polled at the retry/partition yield
+    /// points. A trip returns the best sampled scheme so far (or the
+    /// minimal fallback) — anytime semantics. Deliberately *not* part of
+    /// [`RandomIntra::fingerprint`]: the token never changes what an
+    /// untripped solve returns, and tripped (partial) solves are excluded
+    /// from the cross-job argmin memo via `IntraSolver::cancel_token`.
+    cancel: crate::util::cancel::CancelToken,
 }
 
 impl RandomIntra {
     pub fn new(p: f64, seed: u64) -> RandomIntra {
-        RandomIntra { p, retries: 8, seed }
+        RandomIntra { p, retries: 8, seed, cancel: crate::util::cancel::CancelToken::none() }
+    }
+
+    pub fn with_cancel(mut self, cancel: crate::util::cancel::CancelToken) -> RandomIntra {
+        self.cancel = cancel;
+        self
     }
 }
 
@@ -75,9 +87,19 @@ impl IntraSolver for RandomIntra {
         let parts = enumerate_partitions(layer, ctx.rb, ctx.region, false);
         let orders = LoopOrder::all();
 
-        for _ in 0..self.retries.max(1) {
+        'retry: for _ in 0..self.retries.max(1) {
             let mut best: Option<(f64, LayerScheme)> = None;
             for &part in sample(rng, &parts, self.p) {
+                // Cancellation yield point: keep the partial best (anytime)
+                // or fall through to the minimal fallback below. Purely an
+                // early exit — the sampling stream is untouched while the
+                // token stays live.
+                if self.cancel.is_cancelled() {
+                    if best.is_some() {
+                        return best.map(|(_, s)| s);
+                    }
+                    break 'retry;
+                }
                 let unit = UnitMap::build(arch, part.node_shape(layer, ctx.rb));
                 // Staged scoring: the sampled cross product under one
                 // partition shares its stage-1/2 prefix evaluations, and
@@ -120,9 +142,16 @@ impl IntraSolver for RandomIntra {
             if best.is_some() {
                 return best.map(|(_, s)| s);
             }
+            if self.cancel.is_cancelled() {
+                break;
+            }
         }
         // Final fallback: deterministic minimal scheme.
         super::space::minimal_scheme(arch, layer, ctx.region, ctx.rb)
+    }
+
+    fn cancel_token(&self) -> Option<&crate::util::cancel::CancelToken> {
+        self.cancel.active()
     }
 }
 

@@ -248,6 +248,11 @@ pub struct StagedQuery<'a> {
     /// before enumerating a partition's blockings (default on; `off` is a
     /// debugging/triage mode — the argmin is identical either way).
     pub part_floor: bool,
+    /// Cooperative cancellation: polled at the partition and gbuf-prefix
+    /// yield points; a trip abandons the remaining scan (the caller keeps
+    /// whatever incumbent its visitor accumulated — anytime semantics).
+    /// `None` (the default) costs one branch per yield point.
+    pub cancel: Option<&'a crate::util::cancel::CancelToken>,
 }
 
 impl<'a> StagedQuery<'a> {
@@ -269,6 +274,7 @@ impl<'a> StagedQuery<'a> {
             model,
             counters: None,
             part_floor: true,
+            cancel: None,
         }
     }
 
@@ -279,6 +285,11 @@ impl<'a> StagedQuery<'a> {
 
     pub fn part_floor(mut self, on: bool) -> StagedQuery<'a> {
         self.part_floor = on;
+        self
+    }
+
+    pub fn cancel(mut self, tok: Option<&'a crate::util::cancel::CancelToken>) -> StagedQuery<'a> {
+        self.cancel = tok;
         self
     }
 }
@@ -328,6 +339,13 @@ pub fn visit_schemes_staged(
     let orders = LoopOrder::all();
     let mut incumbent = f64::INFINITY;
     for part in parts {
+        // Cancellation yield point (partition granularity): a tripped token
+        // abandons the rest of the scan. Purely an early exit — iteration
+        // order and scoring are untouched when the token stays live, so
+        // untripped runs are byte-identical to a build without the check.
+        if q.cancel.is_some_and(|c| c.is_cancelled()) {
+            return;
+        }
         let unit = UnitMap::build(q.arch, part.node_shape(q.layer, q.rb));
         let staged = q.model.staged(q.arch, &part, &unit, q.ifm_on_chip);
         // Partition-level branch-and-bound: the gq-independent floor over
@@ -350,6 +368,12 @@ pub fn visit_schemes_staged(
             c.add(&c.parts_visited, 1);
         }
         'gbuf: for gq in qty_candidates(unit.totals, unit.granule) {
+            // Cancellation yield point (gbuf-prefix granularity): bounds
+            // the post-trip latency to one prefix subtree even inside a
+            // partition with a huge blocking space.
+            if q.cancel.is_some_and(|c| c.is_cancelled()) {
+                return;
+            }
             // Capacity pre-check before spawning the inner loops.
             let probe = LayerScheme {
                 part,

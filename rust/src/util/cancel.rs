@@ -1,0 +1,195 @@
+//! Cooperative cancellation for the solve path (deadline + manual trip).
+//!
+//! A [`CancelToken`] is carried by `solvers::SolveCtx` and threaded into
+//! every long-running loop of the solver stack — the staged intra-layer
+//! scans, the inter-layer planner's span stream and its speculative table
+//! workers, and the R/M stochastic round loops. Each of those loops polls
+//! [`CancelToken::is_cancelled`] at its natural yield points and, on a
+//! trip, unwinds *cooperatively*: scans return their current incumbent,
+//! the planner abandons the remaining spans, and the engine stamps the
+//! result `degraded` instead of erroring (anytime semantics).
+//!
+//! The contract that keeps the solver determinism pin intact: a token
+//! check may only cause an early exit. It never reorders iteration,
+//! never changes scoring, and a token that never trips
+//! ([`CancelToken::none`], the default) is a branch on an always-`false`
+//! bool — so untripped runs stay byte-identical to a build without the
+//! checks (pinned by `tests/deadline_anytime.rs` and the golden battery).
+//!
+//! The hot check is a single relaxed atomic load; the deadline clock is
+//! only consulted while the token is still live, and the first trip
+//! latches the reason (`"deadline"` vs `"cancelled"`) so later polls and
+//! the degraded-result JSON agree on why the solve stopped.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const LIVE: u8 = 0;
+const CANCELLED: u8 = 1;
+const DEADLINE: u8 = 2;
+
+/// A cheaply clonable cancellation handle. Clones share one trip flag:
+/// cancelling any clone trips them all (that is how the transport-side
+/// owner reaches a solve running deep in a worker).
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    /// `None` is the never-trips token — the default for every solve that
+    /// has no deadline, costing one `Option` branch per poll.
+    inner: Option<Arc<Inner>>,
+}
+
+struct Inner {
+    state: AtomicU8,
+    deadline: Option<Instant>,
+    started: Instant,
+}
+
+impl CancelToken {
+    /// The inert token: never trips, near-zero poll cost.
+    pub fn none() -> CancelToken {
+        CancelToken { inner: None }
+    }
+
+    /// A token with no deadline that only trips via [`CancelToken::cancel`]
+    /// (manual cancellation, fault-injection harnesses).
+    pub fn manual() -> CancelToken {
+        CancelToken::armed(None)
+    }
+
+    /// A token that trips once `budget` wall-clock time has elapsed (and
+    /// can still be tripped earlier via [`CancelToken::cancel`]).
+    pub fn with_deadline(budget: Duration) -> CancelToken {
+        CancelToken::armed(Instant::now().checked_add(budget))
+    }
+
+    fn armed(deadline: Option<Instant>) -> CancelToken {
+        CancelToken {
+            inner: Some(Arc::new(Inner {
+                state: AtomicU8::new(LIVE),
+                deadline,
+                started: Instant::now(),
+            })),
+        }
+    }
+
+    /// `Some(self)` when the token can ever trip, `None` for the inert
+    /// token — the form the scan structs store so the inert default costs
+    /// nothing at the yield points.
+    pub fn active(&self) -> Option<&CancelToken> {
+        self.inner.as_ref().map(|_| self)
+    }
+
+    /// Trip the token manually. First trip wins: a manual cancel after the
+    /// deadline already fired does not rewrite the latched reason.
+    pub fn cancel(&self) {
+        if let Some(i) = &self.inner {
+            let _ = i.state.compare_exchange(LIVE, CANCELLED, Ordering::Relaxed, Ordering::Relaxed);
+        }
+    }
+
+    /// The cooperative poll: relaxed atomic load first, deadline clock only
+    /// while still live. The first deadline observation latches the state
+    /// so every later poll (and the degraded JSON) sees the same reason.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        let Some(i) = &self.inner else { return false };
+        if i.state.load(Ordering::Relaxed) != LIVE {
+            return true;
+        }
+        if let Some(d) = i.deadline {
+            if Instant::now() >= d {
+                let _ =
+                    i.state.compare_exchange(LIVE, DEADLINE, Ordering::Relaxed, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Why the token tripped: `"deadline"` or `"cancelled"`, `None` while
+    /// live (or for the inert token). Poll [`CancelToken::is_cancelled`]
+    /// first if the deadline may have passed without an intervening poll —
+    /// the deadline latches lazily.
+    pub fn reason(&self) -> Option<&'static str> {
+        match self.inner.as_ref()?.state.load(Ordering::Relaxed) {
+            CANCELLED => Some("cancelled"),
+            DEADLINE => Some("deadline"),
+            _ => None,
+        }
+    }
+
+    /// Milliseconds since the token was armed (0 for the inert token) —
+    /// the `elapsed_ms` the degraded result reports.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.inner.as_ref().map_or(0.0, |i| i.started.elapsed().as_secs_f64() * 1e3)
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.inner {
+            None => write!(f, "CancelToken::none"),
+            Some(i) => write!(
+                f,
+                "CancelToken {{ state: {}, deadline: {} }}",
+                match i.state.load(Ordering::Relaxed) {
+                    CANCELLED => "cancelled",
+                    DEADLINE => "deadline",
+                    _ => "live",
+                },
+                i.deadline.is_some()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_token_never_trips() {
+        let t = CancelToken::none();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.reason(), None);
+        assert!(t.active().is_none());
+        assert_eq!(t.elapsed_ms(), 0.0);
+    }
+
+    #[test]
+    fn manual_cancel_trips_all_clones_with_latched_reason() {
+        let t = CancelToken::manual();
+        let clone = t.clone();
+        assert!(!clone.is_cancelled());
+        assert!(t.active().is_some());
+        t.cancel();
+        assert!(clone.is_cancelled(), "clones share the trip flag");
+        assert_eq!(t.reason(), Some("cancelled"));
+        assert_eq!(clone.reason(), Some("cancelled"));
+    }
+
+    #[test]
+    fn zero_deadline_trips_immediately_as_deadline() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some("deadline"));
+        // A later manual cancel does not rewrite the latched reason.
+        t.cancel();
+        assert_eq!(t.reason(), Some("deadline"));
+        assert!(t.elapsed_ms() >= 0.0);
+    }
+
+    #[test]
+    fn long_deadline_stays_live() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        assert_eq!(t.reason(), None);
+        // Manual cancel still works under an unexpired deadline.
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some("cancelled"));
+    }
+}

@@ -5,6 +5,7 @@
 //! The vendored crate set does not include `rand`, `serde` or `proptest`, so
 //! the pieces we need are implemented here (deterministic and tested).
 
+pub mod cancel;
 pub mod json;
 pub mod prng;
 pub mod queue;

@@ -1,0 +1,112 @@
+//! Deadline/anytime invariants across the whole solver battery.
+//!
+//! Two promises pin the cancellation layer:
+//!
+//! 1. **A deadline that never trips is free.** With a huge `deadline_ms`
+//!    the cancel token is carried through every yield point but never
+//!    fires, and results must be byte-identical to a deadline-free run —
+//!    the checks may only cause early exit, never reorder or perturb the
+//!    untripped search.
+//! 2. **A deadline that trips immediately still answers.** With
+//!    `deadline_ms=1` every family returns a *valid* best-effort schedule
+//!    (never a hang, never a panic, never a spurious Unschedulable),
+//!    marked `degraded`, and — since cancellation only truncates a search
+//!    that takes running minima — its cost is bounded below by the
+//!    unbounded optimum of the same space.
+
+use kapla::arch::presets;
+use kapla::coordinator::{run_job, Job, SolverKind};
+use kapla::interlayer::dp::DpConfig;
+use kapla::solvers::Objective;
+use kapla::workloads::by_name;
+
+fn battery() -> [SolverKind; 5] {
+    [
+        SolverKind::Baseline,
+        SolverKind::DirectiveExhaustive,
+        SolverKind::Random { p: 0.15, seed: 7 },
+        SolverKind::Ml { seed: 7, rounds: 4, batch: 16 },
+        SolverKind::Kapla,
+    ]
+}
+
+fn job(net_name: &str, batch: u64, solver: SolverKind, deadline_ms: Option<u64>) -> Job {
+    Job {
+        net: by_name(net_name).unwrap(),
+        batch,
+        objective: Objective::Energy,
+        solver,
+        dp: DpConfig { max_rounds: 4, ..DpConfig::default() },
+        deadline_ms,
+    }
+}
+
+#[test]
+fn huge_deadline_is_byte_identical_across_battery() {
+    let arch = presets::bench_multi_node();
+    for solver in battery() {
+        let free = run_job(&arch, &job("mlp", 4, solver, None)).unwrap();
+        let capped = run_job(&arch, &job("mlp", 4, solver, Some(600_000))).unwrap();
+        assert_eq!(
+            format!("{:?}", capped.schedule),
+            format!("{:?}", free.schedule),
+            "{solver:?}: untripped deadline must not perturb the schedule"
+        );
+        assert_eq!(
+            capped.eval.energy.total(),
+            free.eval.energy.total(),
+            "{solver:?}: untripped deadline must not perturb the cost"
+        );
+        assert_eq!(capped.eval.latency_cycles, free.eval.latency_cycles, "{solver:?}");
+        assert!(capped.degraded.is_none(), "{solver:?}: untripped run must not be degraded");
+    }
+}
+
+#[test]
+fn tiny_deadline_on_alexnet_degrades_but_always_answers() {
+    let arch = presets::bench_multi_node();
+    let layers = by_name("alexnet").unwrap().len();
+    for solver in battery() {
+        let r = run_job(&arch, &job("alexnet", 8, solver, Some(1)))
+            .unwrap_or_else(|e| panic!("{solver:?}: tiny deadline must still answer, got {e}"));
+        // The answer is a complete, valid schedule of the whole network.
+        assert_eq!(r.schedule.num_layers(), layers, "{solver:?}");
+        assert!(r.eval.energy.total() > 0.0, "{solver:?}");
+        for (_, schemes) in &r.schedule.segments {
+            for s in schemes {
+                s.validate(&arch).unwrap();
+            }
+        }
+        // ... and it is marked as best-effort with the deadline reason.
+        let d = r.degraded.as_ref().unwrap_or_else(|| {
+            panic!("{solver:?}: a 1 ms budget on alexnet must trip the deadline")
+        });
+        assert_eq!(d.reason, "deadline", "{solver:?}");
+        assert!(d.best_effort, "{solver:?}");
+        assert!(d.elapsed_ms > 0.0, "{solver:?}");
+    }
+}
+
+#[test]
+fn degraded_cost_is_bounded_below_by_unbounded_optimum() {
+    // On a net where the exhaustive optimum is affordable, every family's
+    // 1 ms best-effort schedule lives in the same directive space, so its
+    // cost can never beat the unbounded exhaustive optimum. (This is the
+    // sound version of "degradation only costs you quality": a truncated
+    // search returns a valid point of the same space, and B's unbounded
+    // DP is that space's global minimum.)
+    let arch = presets::bench_multi_node();
+    let optimum = run_job(&arch, &job("mlp", 4, SolverKind::Baseline, None))
+        .unwrap()
+        .eval
+        .energy
+        .total();
+    for solver in battery() {
+        let r = run_job(&arch, &job("mlp", 4, solver, Some(1))).unwrap();
+        let cost = r.eval.energy.total();
+        assert!(
+            cost >= optimum * (1.0 - 1e-9),
+            "{solver:?}: degraded cost {cost} beats the exhaustive optimum {optimum}"
+        );
+    }
+}

@@ -28,6 +28,7 @@ fn job(net: Network, solver: SolverKind) -> Job {
         objective: Objective::Energy,
         solver,
         dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        deadline_ms: None,
     }
 }
 
@@ -133,6 +134,7 @@ fn all_nets_schedule_with_kapla_on_paper_arch() {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
+            deadline_ms: None,
         };
         let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{}", net.name);
@@ -153,6 +155,7 @@ fn training_graphs_schedule_with_kapla() {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
+            deadline_ms: None,
         };
         let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{name}");
@@ -169,6 +172,7 @@ fn edge_arch_schedules_all_nets_batch1() {
             objective: Objective::Energy,
             solver: SolverKind::Kapla,
             dp: DpConfig::default(),
+            deadline_ms: None,
         };
         let r = run_job(&arch, &j).unwrap();
         assert_eq!(r.schedule.num_layers(), net.len(), "{}", net.name);

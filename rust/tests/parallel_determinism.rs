@@ -34,6 +34,7 @@ fn job(solver: SolverKind, threads: usize) -> Job {
         objective: Objective::Energy,
         solver,
         dp: DpConfig { max_rounds: 8, solve_threads: threads, ..DpConfig::default() },
+        deadline_ms: None,
     }
 }
 
@@ -168,6 +169,7 @@ fn run_battery(session: Option<&SessionCache>, threads: usize) -> String {
                 objective: Objective::Energy,
                 solver,
                 dp: golden_dp(threads),
+                deadline_ms: None,
             };
             let r = match session {
                 Some(s) => run_job_with(&arch, &job, s),
@@ -287,6 +289,7 @@ fn golden_array_mapping_training_battery() {
                 objective: Objective::Energy,
                 solver: SolverKind::Kapla,
                 dp: golden_dp(1),
+                deadline_ms: None,
             };
             let r = run_job(&arch, &job).expect("battery job must schedule");
             if let Some(base_name) = name.strip_suffix("-train") {

@@ -163,6 +163,7 @@ fn schedules_identical_across_memo_threads_and_sessions() {
                         part_floor,
                         ..DpConfig::default()
                     },
+                    deadline_ms: None,
                 };
                 let tag = format!("{}/{objective:?}/{}", net.name, solver.letter());
                 // Cold solitary run: the golden reference.
@@ -223,6 +224,7 @@ fn span_prune_counters_fire_on_a_zoo_net() {
         objective: Objective::Energy,
         solver: SolverKind::Kapla,
         dp: DpConfig { ks: 1, top_per_span: 1, ..DpConfig::default() },
+        deadline_ms: None,
     };
     let r = run_job(&arch, &job).unwrap();
     let prune = r.prune.expect("kapla path reports planner stats");
@@ -255,6 +257,7 @@ fn warm_session_reports_memo_hits_on_a_zoo_net() {
         objective: Objective::Energy,
         solver: SolverKind::Kapla,
         dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        deadline_ms: None,
     };
     let session = SessionCache::unbounded();
     let cold = run_job_with(&arch, &job, &session).unwrap();

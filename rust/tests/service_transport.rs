@@ -291,6 +291,49 @@ fn tenant_limits_and_metrics_schema() {
     h.shutdown();
 }
 
+#[test]
+fn idle_timeout_closes_stalled_connections_with_structured_error() {
+    let arch = presets::bench_multi_node();
+    let h = transport::spawn(
+        &arch,
+        ServiceConfig { idle_timeout: Some(Duration::from_millis(500)), ..Default::default() },
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = h.tcp_addr().unwrap();
+
+    // A connection that keeps completing requests inside the window stays
+    // open indefinitely.
+    let (mut conn, mut reader) = connect(addr);
+    send(&mut conn, "stats");
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+    std::thread::sleep(Duration::from_millis(200));
+    send(&mut conn, "stats");
+    assert!(recv(&mut reader).contains("\"ok\":true"));
+
+    // A silent connection gets the structured idle-timeout error, then EOF
+    // — never a bare RST, never a hang.
+    let (_silent, mut silent_reader) = connect(addr);
+    let r = recv(&mut silent_reader);
+    assert!(r.contains("\"ok\":false") && r.contains("idle timeout"), "{r}");
+    let mut leftover = String::new();
+    assert_eq!(silent_reader.read_line(&mut leftover).unwrap(), 0, "expected close: {leftover:?}");
+
+    // The slowloris shape: bytes trickle in but no newline ever completes
+    // a request. The idle clock only resets on complete lines, so this
+    // connection times out exactly like the silent one.
+    let (mut dribbler, mut dribbler_reader) = connect(addr);
+    dribbler.write_all(b"sched").unwrap(); // partial line, no '\n'
+    let r = recv(&mut dribbler_reader);
+    assert!(r.contains("idle timeout"), "dribbled partial line must not hold the slot: {r}");
+
+    // The service itself is unaffected — fresh connections still solve.
+    let (mut conn2, mut reader2) = connect(addr);
+    send(&mut conn2, LINE);
+    assert!(recv(&mut reader2).contains("\"ok\":true"));
+    h.shutdown();
+}
+
 #[cfg(unix)]
 #[test]
 fn unix_socket_speaks_the_same_protocol() {

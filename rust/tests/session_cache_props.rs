@@ -165,6 +165,7 @@ fn cache_stress() {
         objective: Objective::Energy,
         solver: SolverKind::Kapla,
         dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+        deadline_ms: None,
     };
     let golden = run_job(&arch, &job).unwrap();
 

@@ -167,7 +167,12 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
             let (full_cost, full_scheme) = full.expect("space non-empty");
 
             let counters = BnbCounters::new();
-            let solver = ExhaustiveIntra { with_sharing: true, stats: Some(&counters), part_floor: true };
+            let solver = ExhaustiveIntra {
+                with_sharing: true,
+                stats: Some(&counters),
+                part_floor: true,
+                cancel: None,
+            };
             let pruned = solver.solve(&arch, layer, &ctx, &TieredCost::fresh()).unwrap();
             assert_eq!(
                 format!("{full_scheme:?}"),
@@ -195,7 +200,12 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
 
             // The partition-level floor is exact too: disabling it returns
             // the byte-identical scheme (only the work differs).
-            let off = ExhaustiveIntra { with_sharing: true, stats: None, part_floor: false }
+            let off = ExhaustiveIntra {
+                with_sharing: true,
+                stats: None,
+                part_floor: false,
+                cancel: None,
+            }
                 .solve(&arch, layer, &ctx, &TieredCost::fresh())
                 .unwrap();
             assert_eq!(
