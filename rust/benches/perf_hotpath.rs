@@ -24,7 +24,9 @@ use kapla::mapping::UnitMap;
 use kapla::partition::PartitionScheme;
 use kapla::report::benchkit as bk;
 use kapla::solvers::kapla::{solve_intra, solve_intra_cached};
-use kapla::solvers::space::{visit_schemes, visit_schemes_staged, BnbCounters, StagedQuery};
+use kapla::solvers::space::{
+    visit_schemes, visit_schemes_staged, BnbCounters, PartOrder, StagedQuery,
+};
 use kapla::solvers::{IntraCtx, Objective};
 use kapla::util::json::Json;
 use kapla::util::{available_threads, par_map, Timer};
@@ -322,6 +324,62 @@ fn main() {
         bk::save_json("perf_hotpath_l3c_part", &row);
     }
 
+    // L3c-ord: partition visit ordering — ascending admissible floor vs
+    // raw enumeration order. Sorting is a heuristic on top of the exact
+    // search: the argmin *value* is invariant (gated below), but the
+    // first-minimum identity may move between cost ties, so the gate is on
+    // cost, not scheme bytes. Visiting cheap-floor partitions first
+    // tightens the incumbent sooner, so later partitions prune harder.
+    {
+        let layer = Layer::conv("bench_l3co", 64, 64, 28, 3, 1);
+        let ctx =
+            IntraCtx { region: (2, 2), rb: 8, ifm_on_chip: false, objective: Objective::Energy };
+        let model = TieredCost::fresh();
+        let run = |order: PartOrder| {
+            let counters = BnbCounters::new();
+            let q = StagedQuery::for_ctx(&arch, &layer, &ctx, true, &model)
+                .counters(&counters)
+                .part_floor(true)
+                .part_order(order);
+            let t = Timer::start();
+            let mut best = f64::INFINITY;
+            visit_schemes_staged(&q, |_, est| {
+                if est.energy_pj < best {
+                    best = est.energy_pj;
+                }
+                Some(best)
+            });
+            (t.elapsed_s(), best, counters.snapshot())
+        };
+        let (t_floor, best_floor, st_floor) = run(PartOrder::Floor);
+        let (t_enum, best_enum, st_enum) = run(PartOrder::Enum);
+        assert_eq!(
+            best_floor.to_bits(),
+            best_enum.to_bits(),
+            "partition ordering changed the argmin value: {best_floor} vs {best_enum}"
+        );
+        lines.push(format!(
+            "L3c partition order enum -> floor: {:.2} s -> {:.2} s ({:.2}x; partitions pruned \
+             {} -> {}, schemes skipped {} -> {})",
+            t_enum,
+            t_floor,
+            t_enum / t_floor.max(1e-9),
+            st_enum.parts_pruned,
+            st_floor.parts_pruned,
+            st_enum.schemes_skipped,
+            st_floor.schemes_skipped,
+        ));
+        let mut row = Json::obj();
+        row.set("layer", "conv 64x64x28 r3 @(2,2) rb8 sharing".into())
+            .set("enum_s", t_enum.into())
+            .set("floor_s", t_floor.into())
+            .set("speedup", (t_enum / t_floor.max(1e-9)).into())
+            .set("best_energy_pj", best_floor.into())
+            .set("bnb_floor_order", st_floor.to_json())
+            .set("bnb_enum_order", st_enum.to_json());
+        bk::save_json("perf_hotpath_l3c_order", &row);
+    }
+
     // L3d: inter-layer DP (estimate tier of the cost model only).
     {
         let cfg = DpConfig::default();
@@ -519,6 +577,81 @@ fn main() {
             .map(|(j, r)| bk::result_json(&j.net.name, j.solver, r))
             .collect();
         bk::save_json("perf_hotpath_session", &Json::Arr(rows));
+    }
+
+    // L4c: eviction policy — the sharded clock vs the protected-segment
+    // (segmented-LRU) variant under a NAS-style sweep: repeated
+    // near-identical jobs whose working set exceeds the entry budget.
+    // Scan-heavy solver traffic touches most entries exactly once, so the
+    // protected segment only pays off if re-referenced entries dominate;
+    // clock stays the default unless this row shows an SLRU win. Purity
+    // gate: schedules must be byte-identical under either policy.
+    {
+        use kapla::coordinator::{run_jobs_with, Job, SolverKind};
+        use kapla::cost::{CacheBudget, CacheStats, EvalCache as _, EvictPolicy, SessionCache};
+
+        let sarch = presets::bench_multi_node();
+        let mut jobs: Vec<Job> = Vec::new();
+        for _rep in 0..2 {
+            for batch in [4u64, 8, 16] {
+                for objective in [Objective::Energy, Objective::Latency] {
+                    jobs.push(Job {
+                        net: nets::mlp(),
+                        batch,
+                        objective,
+                        solver: SolverKind::Kapla,
+                        dp: DpConfig { max_rounds: 8, solve_threads: 1, ..DpConfig::default() },
+                        deadline_ms: None,
+                    });
+                }
+            }
+        }
+        let run = |policy: EvictPolicy| {
+            let cache = SessionCache::with_policy(CacheBudget::entries(512), policy);
+            let t = Timer::start();
+            let rs: Vec<_> = run_jobs_with(&sarch, &jobs, 1, &cache)
+                .into_iter()
+                .map(|r| r.expect("sweep solve"))
+                .collect();
+            (t.elapsed_s(), rs, cache.stats())
+        };
+        let (t_clock, r_clock, st_clock) = run(EvictPolicy::Clock);
+        let (t_slru, r_slru, st_slru) = run(EvictPolicy::SegmentedLru);
+        for (a, b) in r_clock.iter().zip(&r_slru) {
+            assert_eq!(
+                format!("{:?}", a.schedule),
+                format!("{:?}", b.schedule),
+                "eviction policy changed a schedule"
+            );
+        }
+        lines.push(format!(
+            "L4c eviction policy (NAS sweep, {} jobs, 512 entries): clock hit rate {:.1}% \
+             ({} evictions, {:.2} s) vs slru {:.1}% ({} evictions, {:.2} s)",
+            jobs.len(),
+            100.0 * st_clock.hit_rate(),
+            st_clock.evictions,
+            t_clock,
+            100.0 * st_slru.hit_rate(),
+            st_slru.evictions,
+            t_slru,
+        ));
+        let policy_row = |name: &str, t: f64, st: &CacheStats| {
+            let mut r = Json::obj();
+            r.set("policy", name.into())
+                .set("seconds", t.into())
+                .set("hit_rate", st.hit_rate().into())
+                .set("lookups", st.lookups.into())
+                .set("hits", st.hits.into())
+                .set("evictions", st.evictions.into());
+            r
+        };
+        bk::save_json(
+            "perf_hotpath_l4_evict",
+            &Json::Arr(vec![
+                policy_row("clock", t_clock, &st_clock),
+                policy_row("slru", t_slru, &st_slru),
+            ]),
+        );
     }
 
     // L5: concurrent service connections — end-to-end request throughput

@@ -89,12 +89,8 @@ fn main() {
     for (name, layer) in [("alexnet/conv2", &anet.layers[2]), (mlp_name.as_str(), &mnet.layers[0])] {
         let ctx = IntraCtx { region: (2, 2), rb: 4, ifm_on_chip: false, objective: Objective::Energy };
         let counters = BnbCounters::new();
-        let solver = ExhaustiveIntra {
-            with_sharing: true,
-            stats: Some(&counters),
-            part_floor: true,
-            cancel: None,
-        };
+        let solver =
+            ExhaustiveIntra { with_sharing: true, stats: Some(&counters), ..Default::default() };
         let s = solver.solve(&barch, layer, &ctx, &Tiered::fresh()).expect("solvable layer");
         std::hint::black_box(s);
         let st = counters.snapshot();

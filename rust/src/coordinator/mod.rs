@@ -22,9 +22,10 @@ pub mod service;
 pub mod transport;
 
 use crate::arch::ArchConfig;
+use crate::cost::store::{net_fingerprint, ScheduleStore, StoreKey};
 use crate::cost::{CacheBudget, EvalCache, SessionCache};
 use crate::interlayer::dp::DpConfig;
-use crate::solvers::{Objective, SolveCtx, SolveResult};
+use crate::solvers::{Objective, PartOrder, SolveCtx, SolveResult};
 use crate::workloads::Network;
 
 pub use crate::solvers::{SolveError, SolverKind};
@@ -44,11 +45,21 @@ pub struct JobKnobs {
     /// (`part_floor=on|off`; on by default). Exact either way — `off`
     /// exists for triage and for measuring the floor's own benefit.
     pub part_floor: Option<bool>,
+    /// Partition visiting order in the staged scans
+    /// (`part_order=floor|enum`; floor by default). Exact on the optimum
+    /// value either way; the order is part of the content-addressed store
+    /// key because ties may resolve to different equal-cost schemes.
+    pub part_order: Option<PartOrder>,
     /// Wall-clock budget for the solve (`deadline_ms=`). On expiry the
     /// engine returns its best incumbent marked `degraded` (anytime
     /// semantics) instead of erroring; the service additionally caps the
     /// accepted value.
     pub deadline_ms: Option<u64>,
+    /// Persistent warm tier (`persist=on|off`; on by default wherever a
+    /// store is configured). `off` forces a cold solve and skips recording
+    /// — for triage and for benchmarking the store's own benefit. Inert
+    /// when no `--cache-dir` store exists.
+    pub persist: Option<bool>,
 }
 
 impl JobKnobs {
@@ -95,7 +106,20 @@ impl JobKnobs {
                     _ => return Err(format!("bad value for knob part_floor: {val:?}")),
                 });
             }
+            "part_order" => {
+                self.part_order = Some(
+                    PartOrder::parse(val)
+                        .map_err(|_| format!("bad value for knob part_order: {val:?}"))?,
+                );
+            }
             "deadline_ms" => self.deadline_ms = Some(positive(key, val)?),
+            "persist" => {
+                self.persist = Some(match val {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    _ => return Err(format!("bad value for knob persist: {val:?}")),
+                });
+            }
             _ => return Err(format!("unknown knob {key:?}")),
         }
         Ok(true)
@@ -112,6 +136,7 @@ impl JobKnobs {
             parallel_table_min: base.parallel_table_min,
             spec_window: base.spec_window,
             part_floor: self.part_floor.unwrap_or(base.part_floor),
+            part_order: self.part_order.unwrap_or(base.part_order),
         }
     }
 }
@@ -171,6 +196,96 @@ pub fn run_job_with(
     cost: &dyn EvalCache,
 ) -> Result<SolveResult, SolveError> {
     job.engine(arch).session(cost).run(&job.net, job.batch, job.solver)
+}
+
+/// The content address of a job against `arch` — the key of the on-disk
+/// schedule store. Folds everything the (deterministic) solver output
+/// depends on: the solver kind with its stochastic knobs, the objective,
+/// the batch, and the determinism-relevant DP knobs. Wall-clock-only knobs
+/// (threads, speculation window, parallel-table threshold, deadline) are
+/// excluded — they change how fast the same schedule is found, not which
+/// one. `part_floor` is excluded too (provably argmin-preserving within a
+/// fixed order) while `part_order` is folded (it can move ties).
+pub fn store_key_for(arch: &ArchConfig, job: &Job) -> StoreKey {
+    let solver_vals: Vec<u64> = match job.solver {
+        SolverKind::Baseline => vec![0],
+        SolverKind::DirectiveExhaustive => vec![1],
+        SolverKind::Random { p, seed } => vec![2, p.to_bits(), seed],
+        SolverKind::Ml { seed, rounds, batch } => vec![3, seed, rounds as u64, batch as u64],
+        SolverKind::Kapla => vec![4],
+    };
+    let objective = match job.objective {
+        Objective::Energy => 0u64,
+        Objective::Latency => 1,
+    };
+    let knobs_fp = crate::util::fnv1a(
+        solver_vals
+            .into_iter()
+            .chain([
+                objective,
+                job.batch,
+                job.dp.ks as u64,
+                job.dp.max_seg_len as u64,
+                job.dp.max_rounds,
+                job.dp.top_per_span as u64,
+                job.dp.part_order as u64,
+            ]),
+    );
+    StoreKey {
+        net_fp: net_fingerprint(&job.net),
+        arch_fp: crate::cost::cache::arch_fingerprint(arch),
+        knobs_fp,
+    }
+}
+
+/// [`run_job_with`] over the persistent warm tier. With a store attached,
+/// a job whose content address is already on disk is answered by *replay*:
+/// the stored schedule is decoded and re-simulated once
+/// (`sim::pipeline::evaluate_schedule` — which bypasses the evaluation
+/// memo entirely, so `lookups` stays flat), giving a byte-identical
+/// `SolveResult` with zero detailed-evaluation work. A miss solves cold
+/// through `cost` and records the result — unless it is degraded (a
+/// deadline-cancelled incumbent is not a deterministic function of the
+/// request and must never be replayed as if it were).
+///
+/// The result's `cache` snapshot carries the store counters
+/// (`store_lookups`/`store_hits`) overlaid on the session counters.
+pub fn run_job_persistent(
+    arch: &ArchConfig,
+    job: &Job,
+    cost: &dyn EvalCache,
+    store: Option<&ScheduleStore>,
+) -> Result<SolveResult, SolveError> {
+    let Some(store) = store else {
+        return run_job_with(arch, job, cost);
+    };
+    let key = store_key_for(arch, job);
+    if let Some(stored) = store.lookup(&key) {
+        let t = crate::util::Timer::start();
+        let eval = crate::sim::pipeline::evaluate_schedule(arch, &job.net, &stored.schedule);
+        let mut cache = cost.stats();
+        cache.store_lookups = store.lookups();
+        cache.store_hits = store.hits();
+        return Ok(SolveResult {
+            schedule: stored.schedule,
+            eval,
+            solve_s: t.elapsed_s(),
+            cache,
+            prune: stored.prune,
+            bnb: stored.bnb,
+            degraded: None,
+        });
+    }
+    let mut r = run_job_with(arch, job, cost)?;
+    if r.degraded.is_none() {
+        // A full-fidelity solve is a pure function of the key: safe to
+        // publish. Store I/O failure (read-only dir, disk full) must not
+        // fail the solve we already have.
+        let _ = store.record(&key, &r.schedule, r.prune.as_ref(), r.bnb.as_ref());
+    }
+    r.cache.store_lookups = store.lookups();
+    r.cache.store_hits = store.hits();
+    Ok(r)
 }
 
 /// Default byte budget of the session `run_jobs` creates: large enough
@@ -254,6 +369,21 @@ mod tests {
         assert!(JobKnobs::default().apply(DpConfig::default()).part_floor);
         assert!(JobKnobs::default().parse_token("part_floor=maybe").is_err());
 
+        // part_order: floor|enum, defaulting to floor through apply().
+        let mut po = JobKnobs::default();
+        assert_eq!(po.parse_token("part_order=enum"), Ok(true));
+        assert_eq!(po.apply(DpConfig::default()).part_order, PartOrder::Enum);
+        assert_eq!(JobKnobs::default().apply(DpConfig::default()).part_order, PartOrder::Floor);
+        assert!(JobKnobs::default().parse_token("part_order=sorted").is_err());
+
+        // persist: boolean spellings, recorded on the knobs (not a
+        // DpConfig field — the service/CLI consult it directly).
+        let mut pe = JobKnobs::default();
+        assert_eq!(pe.parse_token("persist=off"), Ok(true));
+        assert_eq!(pe.persist, Some(false));
+        assert_eq!(JobKnobs::default().persist, None);
+        assert!(JobKnobs::default().parse_token("persist=maybe").is_err());
+
         assert!(JobKnobs::default().parse_token("threads=0").is_err());
         assert!(JobKnobs::default().parse_token("threads=two").is_err());
         assert!(JobKnobs::default().parse_token("objective=speed").is_err());
@@ -299,6 +429,48 @@ mod tests {
         }
         // And the per-result snapshot exposes the reuse.
         assert!(second.cache.intra_hits > first.cache.intra_hits);
+    }
+
+    #[test]
+    fn persistent_store_replays_with_zero_evaluations() {
+        let arch = presets::bench_multi_node();
+        let job = Job {
+            net: nets::mlp(),
+            batch: 8,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+            deadline_ms: None,
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("kapla-coord-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ScheduleStore::open(&dir).unwrap();
+        let s1 = SessionCache::unbounded();
+        let cold = run_job_persistent(&arch, &job, &s1, Some(&store)).unwrap();
+        assert_eq!(cold.cache.store_lookups, 1);
+        assert_eq!(cold.cache.store_hits, 0);
+
+        // "Restart": a fresh session and a fresh handle on the same
+        // directory. The warm request must replay the stored schedule
+        // byte-identically without a single detailed evaluation.
+        let store2 = ScheduleStore::open(&dir).unwrap();
+        let s2 = SessionCache::unbounded();
+        let warm = run_job_persistent(&arch, &job, &s2, Some(&store2)).unwrap();
+        assert_eq!(warm.cache.store_hits, 1);
+        assert_eq!(s2.stats().lookups, 0, "replay must issue zero detailed evaluations");
+        assert_eq!(s2.stats().intra_lookups, 0, "replay must not even consult the scan memo");
+        assert_eq!(format!("{:?}", warm.schedule), format!("{:?}", cold.schedule));
+        assert_eq!(warm.eval.energy.total(), cold.eval.energy.total());
+        assert!(warm.degraded.is_none());
+
+        // persist=off semantics live in the callers; key stability is what
+        // makes the address content-based: same job, same key.
+        assert_eq!(store_key_for(&arch, &job), store_key_for(&arch, &job));
+        let mut other = job.clone();
+        other.batch = 16;
+        assert_ne!(store_key_for(&arch, &job), store_key_for(&arch, &other));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

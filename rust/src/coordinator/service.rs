@@ -12,7 +12,8 @@
 //! Positional fields keep their legacy order; `key=value` knobs may appear
 //! anywhere after the network and set per-request solver parameters
 //! (`threads=4`, `objective=latency`, `ks=2`, `max_seg_len=3`,
-//! `max_rounds=16`, `top_per_span=1`, `part_floor=off`, `deadline_ms=250`).
+//! `max_rounds=16`, `top_per_span=1`, `part_floor=off`, `part_order=enum`,
+//! `deadline_ms=250`, `persist=off`).
 //! Malformed requests — unknown
 //! network/solver/knob, unparseable value — get a structured
 //! `{"ok":false,"error":...}` response instead of silently falling back to
@@ -43,13 +44,14 @@
 use std::io::{BufRead, Write};
 
 use crate::arch::ArchConfig;
+use crate::cost::store::ScheduleStore;
 use crate::cost::{CacheBudget, EvalCache as _, SessionCache};
 use crate::interlayer::dp::DpConfig;
 use crate::solvers::Objective;
 use crate::util::json::Json;
 use crate::workloads;
 
-use super::{run_job_with, Job, JobKnobs, SolverKind};
+use super::{run_job_persistent, Job, JobKnobs, SolverKind};
 
 /// Ceiling on the per-request `threads=` knob: schedules are identical for
 /// any thread count, so capping at the paper's 8-parallel-process budget
@@ -115,21 +117,49 @@ impl ChaosKnob {
 /// Handle a single request line against the connection's scheduling
 /// session; `None` means "quit".
 pub fn handle_line(arch: &ArchConfig, session: &SessionCache, line: &str) -> Option<Json> {
+    handle_line_store(arch, session, None, line)
+}
+
+/// [`handle_line`] with the persistent warm tier attached: `schedule`
+/// requests consult (and feed) the content-addressed schedule store unless
+/// they opt out with `persist=off`, and every reported `cache` object
+/// carries the store counters. `store: None` is byte-identical to the
+/// store-less service.
+pub fn handle_line_store(
+    arch: &ArchConfig,
+    session: &SessionCache,
+    store: Option<&ScheduleStore>,
+    line: &str,
+) -> Option<Json> {
     let toks: Vec<&str> = line.split_whitespace().collect();
     match toks.as_slice() {
         [] => Some(err_json("empty request")),
         ["quit"] | ["exit"] => None,
         ["stats"] => {
             let mut o = Json::obj();
-            o.set("ok", true.into()).set("cache", session.stats().to_json());
+            o.set("ok", true.into()).set("cache", stats_with_store(session, store).to_json());
             Some(o)
         }
-        ["schedule", rest @ ..] => Some(match handle_schedule(arch, session, rest) {
+        ["schedule", rest @ ..] => Some(match handle_schedule(arch, session, store, rest) {
             Ok(json) => json,
             Err(msg) => err_json(&msg),
         }),
         _ => Some(err_json(&format!("unknown request: {line}"))),
     }
+}
+
+/// Session counters with the store counters overlaid (the session knows
+/// nothing about the store; the coordinator owns both).
+pub(crate) fn stats_with_store(
+    session: &SessionCache,
+    store: Option<&ScheduleStore>,
+) -> crate::cost::CacheStats {
+    let mut st = session.stats();
+    if let Some(s) = store {
+        st.store_lookups = s.lookups();
+        st.store_hits = s.hits();
+    }
+    st
 }
 
 pub(crate) fn err_json(msg: &str) -> Json {
@@ -141,6 +171,7 @@ pub(crate) fn err_json(msg: &str) -> Json {
 fn handle_schedule(
     arch: &ArchConfig,
     session: &SessionCache,
+    store: Option<&ScheduleStore>,
     args: &[&str],
 ) -> Result<Json, String> {
     let (&net_name, rest) = args.split_first().ok_or("schedule: missing network")?;
@@ -245,8 +276,13 @@ fn handle_schedule(
     // Under `chaos=` the session's model is wrapped in a FaultInjector;
     // injected panics unwind past this call into the transport worker's
     // catch_unwind (the stdin loop intentionally dies — chaos is opt-in).
+    // `persist=off` opts this request out of the warm tier; chaos requests
+    // bypass it unconditionally — a fault-injected solve is not a
+    // deterministic function of the request and must neither answer from
+    // nor feed the store.
+    let eff_store = if knobs.persist.unwrap_or(true) { store } else { None };
     let r = match chaos {
-        None => run_job_with(arch, &job, session),
+        None => run_job_persistent(arch, &job, session, eff_store),
         Some(c) => {
             let tiered = crate::cost::TieredCost::over(session);
             let inj =
@@ -326,7 +362,28 @@ pub fn serve(arch: &ArchConfig) {
 /// Run the blocking stdin/stdout service loop; all requests share one
 /// `SessionCache` under `budget` (CLI `--cache-budget`).
 pub fn serve_with(arch: &ArchConfig, budget: CacheBudget) {
+    serve_persistent(arch, budget, None)
+}
+
+/// Stdin/stdout loop with an optional warm tier: with a `cache_dir` the
+/// single-user layout `<dir>/session.snap` + `<dir>/store/` is loaded
+/// before the first request and the snapshot is rewritten on clean exit
+/// (`quit` / EOF). A kill mid-run loses only the in-memory memo deltas;
+/// the schedule store writes through on every recorded solve.
+pub fn serve_persistent(
+    arch: &ArchConfig,
+    budget: CacheBudget,
+    cache_dir: Option<&std::path::Path>,
+) {
     let session = SessionCache::new(budget);
+    let store = cache_dir.and_then(|dir| {
+        if let Err(e) = crate::cost::load_session(&session, &dir.join("session.snap"), Some(arch)) {
+            eprintln!("warm tier: cannot load session snapshot: {e}");
+        }
+        crate::cost::store::ScheduleStore::open(&dir.join("store"))
+            .inspect_err(|e| eprintln!("warm tier: cannot open schedule store: {e}"))
+            .ok()
+    });
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();
     eprintln!(
@@ -338,12 +395,17 @@ pub fn serve_with(arch: &ArchConfig, budget: CacheBudget) {
             Ok(l) => l,
             Err(_) => break,
         };
-        match handle_line(arch, &session, &line) {
+        match handle_line_store(arch, &session, store.as_ref(), &line) {
             Some(resp) => {
                 let _ = writeln!(stdout, "{}", resp.to_string_compact());
                 let _ = stdout.flush();
             }
             None => break,
+        }
+    }
+    if let Some(dir) = cache_dir {
+        if let Err(e) = crate::cost::save_session(&session, &dir.join("session.snap")) {
+            eprintln!("warm tier: cannot save session snapshot: {e}");
         }
     }
 }
@@ -537,6 +599,60 @@ mod tests {
                 r.to_string_compact()
             );
         }
+    }
+
+    #[test]
+    fn persist_knob_and_store_counters() {
+        let arch = presets::bench_multi_node();
+        let dir =
+            std::env::temp_dir().join(format!("kapla-service-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ScheduleStore::open(&dir).unwrap();
+        let s = SessionCache::unbounded();
+        let req = "schedule mlp 4 kapla threads=1 max_rounds=4";
+        let cold = handle_line_store(&arch, &s, Some(&store), req).unwrap();
+        assert_eq!(cold.get("ok"), Some(&Json::Bool(true)), "{}", cold.to_string_compact());
+        let cc = cold.get("cache").unwrap();
+        assert_eq!(cc.get("store_lookups").unwrap().as_f64(), Some(1.0));
+        assert_eq!(cc.get("store_hits").unwrap().as_f64(), Some(0.0));
+
+        // Fresh session = "restarted process": the repeat answers from the
+        // store with zero detailed evaluations and an identical chain.
+        let s2 = SessionCache::unbounded();
+        let warm = handle_line_store(&arch, &s2, Some(&store), req).unwrap();
+        let wc = warm.get("cache").unwrap();
+        assert!(wc.get("store_hits").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(wc.get("lookups").unwrap().as_f64(), Some(0.0));
+        assert_eq!(warm.get("energy_pj"), cold.get("energy_pj"));
+        assert_eq!(
+            warm.get("chain").unwrap().to_string_compact(),
+            cold.get("chain").unwrap().to_string_compact()
+        );
+
+        // persist=off bypasses the store entirely for that request.
+        let before = store.lookups();
+        let off = handle_line_store(
+            &arch,
+            &s2,
+            Some(&store),
+            "schedule mlp 4 kapla threads=1 max_rounds=4 persist=off",
+        )
+        .unwrap();
+        assert_eq!(off.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(store.lookups(), before, "persist=off must not touch the store");
+        assert_eq!(off.get("energy_pj"), cold.get("energy_pj"));
+
+        // Malformed persist values are rejected, not defaulted.
+        let bad = handle_line_store(&arch, &s2, Some(&store), "schedule mlp persist=maybe")
+            .unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+
+        // `stats` overlays the store counters onto the session's.
+        let st = handle_line_store(&arch, &s2, Some(&store), "stats").unwrap();
+        assert!(
+            st.get("cache").unwrap().get("store_lookups").unwrap().as_f64().unwrap() > 0.0
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -33,12 +33,14 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 use crate::arch::ArchConfig;
-use crate::cost::{CacheBudget, CacheStats, EvalCache as _, SessionCache};
+use crate::cost::store::ScheduleStore;
+use crate::cost::{load_session, save_session, CacheBudget, CacheStats, SessionCache};
 use crate::util::json::Json;
 use crate::util::queue::BoundedQueue;
 use crate::util::Timer;
@@ -82,6 +84,14 @@ pub struct ServiceConfig {
     /// disconnect. `None` (the default) keeps connections open
     /// indefinitely, the pre-flag behavior.
     pub idle_timeout: Option<Duration>,
+    /// Root of the persistent warm tier (`--cache-dir`). When set, each
+    /// tenant namespace gets `<dir>/tenants/<name>/` holding its session
+    /// snapshot (loaded at tenant creation, saved at graceful shutdown)
+    /// and its content-addressed schedule store; anonymous connections
+    /// share the `<dir>/anon/store` schedule store (no session snapshot —
+    /// anonymous sessions are per-connection and ephemeral by design).
+    /// `None` (the default) is the pre-persistence in-memory service.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -94,28 +104,64 @@ impl Default for ServiceConfig {
             max_connections: 256,
             metrics_interval: None,
             idle_timeout: None,
+            cache_dir: None,
         }
     }
 }
 
 /// Named per-tenant `SessionCache` namespaces, created lazily on first
-/// use, each under its own independent budget.
+/// use, each under its own independent budget — plus, when a `cache_dir`
+/// is configured, each tenant's slice of the persistent warm tier: its
+/// session snapshot (loaded on creation, fingerprint-checked per entry)
+/// and its content-addressed schedule store.
 pub struct TenantRegistry {
     budget: CacheBudget,
     max_tenants: usize,
-    map: Mutex<HashMap<String, Arc<SessionCache>>>,
+    /// Warm-tier root; tenants live under `<dir>/tenants/<name>/`.
+    cache_dir: Option<PathBuf>,
+    /// Arch the service solves against — the snapshot load filter, so a
+    /// cache dir carried across a hardware reconfiguration degrades to a
+    /// cold start instead of replaying foreign evaluations.
+    arch: Option<ArchConfig>,
+    map: Mutex<HashMap<String, (Arc<SessionCache>, Option<Arc<ScheduleStore>>)>>,
 }
 
 impl TenantRegistry {
     pub fn new(budget: CacheBudget, max_tenants: usize) -> TenantRegistry {
-        TenantRegistry { budget, max_tenants, map: Mutex::new(HashMap::new()) }
+        TenantRegistry {
+            budget,
+            max_tenants,
+            cache_dir: None,
+            arch: None,
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// A registry backed by the persistent warm tier rooted at `dir`.
+    pub fn persistent(
+        budget: CacheBudget,
+        max_tenants: usize,
+        dir: PathBuf,
+        arch: ArchConfig,
+    ) -> TenantRegistry {
+        TenantRegistry {
+            budget,
+            max_tenants,
+            cache_dir: Some(dir),
+            arch: Some(arch),
+            map: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Tenant names come from untrusted request lines: short alnum plus
-    /// `. _ -` only (they become JSON keys in `metrics` output).
+    /// `. _ -` only (they become JSON keys in `metrics` output and, with a
+    /// `cache_dir`, directory names — which is why the `.`/`..` path
+    /// components are rejected explicitly on top of the charset).
     pub fn valid_name(name: &str) -> bool {
         !name.is_empty()
             && name.len() <= 64
+            && name != "."
+            && name != ".."
             && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
     }
 
@@ -124,12 +170,24 @@ impl TenantRegistry {
     /// (existing tenants keep working — the cap bounds memory, it is not
     /// an eviction policy).
     pub fn session(&self, name: &str) -> Result<Arc<SessionCache>, String> {
+        self.warm(name).map(|(s, _)| s)
+    }
+
+    /// The tenant's session plus its slice of the warm tier (store handle;
+    /// `None` without a `cache_dir`). On first use with persistence, the
+    /// tenant's session snapshot is loaded — fingerprint-checked per
+    /// entry, anything unrecognized skipped and counted — and its schedule
+    /// store opened under `<dir>/tenants/<name>/`.
+    pub fn warm(
+        &self,
+        name: &str,
+    ) -> Result<(Arc<SessionCache>, Option<Arc<ScheduleStore>>), String> {
         if !Self::valid_name(name) {
             return Err(format!("bad tenant name {name:?}: use 1-64 chars of [a-zA-Z0-9._-]"));
         }
         let mut map = self.map.lock().unwrap();
-        if let Some(s) = map.get(name) {
-            return Ok(Arc::clone(s));
+        if let Some((s, st)) = map.get(name) {
+            return Ok((Arc::clone(s), st.clone()));
         }
         if map.len() >= self.max_tenants {
             return Err(format!(
@@ -138,16 +196,39 @@ impl TenantRegistry {
             ));
         }
         let s = Arc::new(SessionCache::new(self.budget));
-        map.insert(name.to_string(), Arc::clone(&s));
-        Ok(s)
+        let store = self.cache_dir.as_ref().and_then(|dir| {
+            let tenant_dir = dir.join("tenants").join(name);
+            // A missing/unreadable snapshot is a clean cold start; partial
+            // corruption is skipped per entry inside load_session.
+            let _ = load_session(&s, &tenant_dir.join("session.snap"), self.arch.as_ref());
+            // A store that cannot be opened (read-only fs) just means this
+            // tenant serves without one.
+            ScheduleStore::open(&tenant_dir.join("store")).ok().map(Arc::new)
+        });
+        map.insert(name.to_string(), (Arc::clone(&s), store.clone()));
+        Ok((s, store))
     }
 
-    /// Per-tenant cache-stats snapshot, name-sorted so `metrics` output is
-    /// deterministic.
+    /// Persist every tenant's session snapshot (graceful shutdown). A
+    /// tenant whose directory cannot be written is skipped — shutdown must
+    /// not fail over a full disk.
+    pub fn save_all(&self) {
+        let Some(dir) = &self.cache_dir else { return };
+        let map = self.map.lock().unwrap();
+        for (name, (session, _)) in map.iter() {
+            let path = dir.join("tenants").join(name).join("session.snap");
+            let _ = save_session(session, &path);
+        }
+    }
+
+    /// Per-tenant cache-stats snapshot (store counters overlaid),
+    /// name-sorted so `metrics` output is deterministic.
     pub fn snapshot(&self) -> Vec<(String, CacheStats)> {
         let map = self.map.lock().unwrap();
-        let mut v: Vec<(String, CacheStats)> =
-            map.iter().map(|(name, s)| (name.clone(), s.stats())).collect();
+        let mut v: Vec<(String, CacheStats)> = map
+            .iter()
+            .map(|(name, (s, st))| (name.clone(), service::stats_with_store(s, st.as_deref())))
+            .collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
@@ -186,6 +267,9 @@ pub fn split_tenant(line: &str) -> Result<(Option<&str>, String), String> {
 struct SolveRequest {
     line: String,
     session: Arc<SessionCache>,
+    /// The request's slice of the persistent warm tier (tenant store, or
+    /// the shared anonymous store); `None` when serving without one.
+    store: Option<Arc<ScheduleStore>>,
     resp: mpsc::Sender<Json>,
     /// Started at admission, so workers can see how long the request sat
     /// in the queue.
@@ -215,6 +299,10 @@ struct ServeCtx {
     arch: ArchConfig,
     cfg: ServiceConfig,
     tenants: TenantRegistry,
+    /// Schedule store shared by `tenant=`-less requests across all
+    /// connections (`<cache_dir>/anon/store`); anonymous *sessions* stay
+    /// per-connection and ephemeral.
+    anon_store: Option<Arc<ScheduleStore>>,
     queue: BoundedQueue<SolveRequest>,
     metrics: Metrics,
     stop: Arc<AtomicBool>,
@@ -255,12 +343,12 @@ fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) ->
         Ok(split) => split,
         Err(e) => return Flow::Respond(service::err_json(&e)),
     };
-    let session = match tenant {
-        Some(name) => match ctx.tenants.session(name) {
-            Ok(s) => s,
+    let (session, store) = match tenant {
+        Some(name) => match ctx.tenants.warm(name) {
+            Ok(pair) => pair,
             Err(e) => return Flow::Respond(service::err_json(&e)),
         },
-        None => Arc::clone(default_session),
+        None => (Arc::clone(default_session), ctx.anon_store.clone()),
     };
     match plain.split_whitespace().next().unwrap_or("") {
         // The metrics surface lives above the pure line protocol.
@@ -270,8 +358,14 @@ fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) ->
         "schedule" => {
             let (tx, rx) = mpsc::channel();
             let deadline_ms = scan_deadline_ms(&plain);
-            let req =
-                SolveRequest { line: plain, session, resp: tx, admitted: Timer::start(), deadline_ms };
+            let req = SolveRequest {
+                line: plain,
+                session,
+                store,
+                resp: tx,
+                admitted: Timer::start(),
+                deadline_ms,
+            };
             match ctx.queue.try_push(req) {
                 Ok(()) => match rx.recv() {
                     Ok(resp) => Flow::Respond(resp),
@@ -289,7 +383,7 @@ fn serve_line(req: &str, default_session: &Arc<SessionCache>, ctx: &ServeCtx) ->
         // saturated solve queue.
         _ => {
             let t = Timer::start();
-            match service::handle_line(&ctx.arch, &session, &plain) {
+            match service::handle_line_store(&ctx.arch, &session, store.as_deref(), &plain) {
                 Some(resp) => {
                     ctx.metrics.record_response(&resp, t.elapsed_s());
                     Flow::Respond(resp)
@@ -324,7 +418,7 @@ fn worker_loop(ctx: &ServeCtx) {
             }
         }
         let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            service::handle_line(&ctx.arch, &req.session, &req.line)
+            service::handle_line_store(&ctx.arch, &req.session, req.store.as_deref(), &req.line)
         }))
         .unwrap_or_else(|payload| {
             let msg = payload
@@ -606,9 +700,23 @@ fn metrics_ticker(ctx: &ServeCtx, interval: Duration) {
 pub fn run(arch: &ArchConfig, cfg: ServiceConfig, listeners: Vec<Listener>, stop: Arc<AtomicBool>) {
     let queue_depth = cfg.queue_depth.max(1);
     let workers = cfg.workers.max(1);
+    let tenants = match &cfg.cache_dir {
+        Some(dir) => TenantRegistry::persistent(
+            cfg.budget,
+            cfg.max_tenants.max(1),
+            dir.clone(),
+            arch.clone(),
+        ),
+        None => TenantRegistry::new(cfg.budget, cfg.max_tenants.max(1)),
+    };
+    let anon_store = cfg
+        .cache_dir
+        .as_ref()
+        .and_then(|dir| ScheduleStore::open(&dir.join("anon").join("store")).ok().map(Arc::new));
     let ctx = ServeCtx {
         arch: arch.clone(),
-        tenants: TenantRegistry::new(cfg.budget, cfg.max_tenants.max(1)),
+        tenants,
+        anon_store,
         queue: BoundedQueue::new(queue_depth),
         metrics: Metrics::new(),
         stop,
@@ -636,6 +744,12 @@ pub fn run(arch: &ArchConfig, cfg: ServiceConfig, listeners: Vec<Listener>, stop
             ctx.queue.close();
         });
     });
+    // Every worker and connection has exited: persist the tenants' session
+    // snapshots so the next process starts warm. (Schedule stores write
+    // through on every solve and need no flush; a kill before this point
+    // loses at most the in-memory evaluation memos, never store integrity —
+    // all disk writes are temp-file+rename.)
+    ctx.tenants.save_all();
 }
 
 /// A service running in background threads; the handle is how tests and
@@ -756,5 +870,53 @@ mod tests {
         assert_eq!(reg.len(), 2);
         let names: Vec<String> = reg.snapshot().into_iter().map(|(n, _)| n).collect();
         assert_eq!(names, ["alpha", "beta-2.x"]);
+        // Path components: tenant names become directories under a
+        // cache_dir, so the dot traversals are rejected outright.
+        assert!(!TenantRegistry::valid_name("."));
+        assert!(!TenantRegistry::valid_name(".."));
+    }
+
+    #[test]
+    fn persistent_registry_restores_tenant_sessions() {
+        use crate::arch::presets;
+        use crate::cost::EvalCache as _;
+        use crate::coordinator::{run_job_persistent, Job};
+        use crate::interlayer::dp::DpConfig;
+        use crate::solvers::{Objective, SolverKind};
+
+        let dir =
+            std::env::temp_dir().join(format!("kapla-transport-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let arch = presets::bench_multi_node();
+        let job = Job {
+            net: crate::workloads::nets::mlp(),
+            batch: 4,
+            objective: Objective::Energy,
+            solver: SolverKind::Kapla,
+            dp: DpConfig { max_rounds: 8, ..DpConfig::default() },
+            deadline_ms: None,
+        };
+
+        let reg =
+            TenantRegistry::persistent(CacheBudget::entries(65536), 4, dir.clone(), arch.clone());
+        let (session, store) = reg.warm("acme").unwrap();
+        let store = store.expect("persistent registry must open a tenant store");
+        let cold = run_job_persistent(&arch, &job, &*session, Some(&*store)).unwrap();
+        assert!(session.stats().entries > 0, "cold solve must populate the session");
+        reg.save_all();
+
+        // "Restart": a second registry instance over the same directory.
+        let reg2 =
+            TenantRegistry::persistent(CacheBudget::entries(65536), 4, dir.clone(), arch.clone());
+        let (s2, st2) = reg2.warm("acme").unwrap();
+        assert!(s2.stats().entries > 0, "snapshot must restore the evaluation memo");
+        assert_eq!(s2.stats().load_skipped, 0, "clean snapshot loads without skips");
+        let warm = run_job_persistent(&arch, &job, &*s2, st2.as_deref()).unwrap();
+        assert!(warm.cache.store_hits > 0, "restarted tenant must hit the schedule store");
+        assert_eq!(format!("{:?}", warm.schedule), format!("{:?}", cold.schedule));
+        // Isolation: a different tenant starts cold (its own directory).
+        let (other, _) = reg2.warm("zeta").unwrap();
+        assert_eq!(other.stats().entries, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

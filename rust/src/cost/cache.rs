@@ -40,15 +40,15 @@ use crate::sim::LayerEval;
 /// alias entries across hardware configs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub(crate) struct SchemeKey {
-    arch_fp: u64,
-    shape: LayerShape,
-    array: (u64, u64),
-    dataflow: PeDataflow,
-    rs_chunk: u64,
-    part: PartitionScheme,
-    regf: LevelBlock,
-    gbuf: LevelBlock,
-    ifm_on_chip: bool,
+    pub(crate) arch_fp: u64,
+    pub(crate) shape: LayerShape,
+    pub(crate) array: (u64, u64),
+    pub(crate) dataflow: PeDataflow,
+    pub(crate) rs_chunk: u64,
+    pub(crate) part: PartitionScheme,
+    pub(crate) regf: LevelBlock,
+    pub(crate) gbuf: LevelBlock,
+    pub(crate) ifm_on_chip: bool,
 }
 
 impl SchemeKey {
@@ -127,6 +127,19 @@ pub struct CacheStats {
     /// Argmin-memo lookups answered from a recorded scan — each hit skips
     /// an entire intra-layer search, not just one evaluation.
     pub intra_hits: u64,
+    /// Lookups into the content-addressed on-disk schedule store
+    /// (`cost::store`) — whole-request granularity, one per solve that
+    /// consulted the store. Zero when no store is configured.
+    pub store_lookups: u64,
+    /// Store lookups answered by replaying a recorded `SolveResult` — each
+    /// hit skips the entire search, every scan and every detailed
+    /// evaluation.
+    pub store_hits: u64,
+    /// Snapshot/store entries rejected at load time (bad checksum, unknown
+    /// version or tag, mismatched fingerprint). Skipped entries only cost
+    /// warmth — they are never trusted — but a nonzero value on a freshly
+    /// written snapshot indicates corruption.
+    pub load_skipped: u64,
 }
 
 impl CacheStats {
@@ -158,7 +171,10 @@ impl CacheStats {
             .set("entries", self.entries.into())
             .set("hit_rate", self.hit_rate().into())
             .set("intra_lookups", self.intra_lookups.into())
-            .set("intra_hits", self.intra_hits.into());
+            .set("intra_hits", self.intra_hits.into())
+            .set("store_lookups", self.store_lookups.into())
+            .set("store_hits", self.store_hits.into())
+            .set("load_skipped", self.load_skipped.into());
         o
     }
 }

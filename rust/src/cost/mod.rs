@@ -23,12 +23,16 @@
 pub mod cache;
 pub mod fault;
 pub mod model;
+pub mod persist;
 pub mod session;
+pub mod store;
 
 pub use cache::{CacheStats, CostCache, EvalCache};
 pub use fault::FaultInjector;
 pub use model::{CostModel, TieredCost};
-pub use session::{CacheBudget, IntraKey, SessionCache};
+pub use persist::{load_session, save_session, SnapshotStats};
+pub use session::{CacheBudget, EvictPolicy, IntraKey, SessionCache};
+pub use store::{net_fingerprint, ScheduleStore, StoreKey};
 
 use crate::arch::{energy as earch, ArchConfig};
 use crate::interlayer::Segment;

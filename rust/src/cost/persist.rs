@@ -1,0 +1,685 @@
+//! On-disk session snapshots: the persistence layer of the warm tier
+//! (ROADMAP item 2), serializing the [`SessionCache`] evaluation memo and
+//! the `IntraKey -> argmin` memo so a service restart or a fresh CI shard
+//! starts warm at the *scan* granularity.
+//!
+//! The format is hand-rolled length-prefixed binary (the crate is
+//! zero-dependency): an 8-byte magic + u32 version header, then a stream
+//! of self-delimiting records `[tag u8][len u32][payload][fnv1a u64]`.
+//! Floats travel as `f64::to_bits`, enums as explicit u8 maps, so a
+//! round-trip is bit-exact. Safety comes from never trusting the file:
+//!
+//! * every record carries an FNV-1a checksum of its payload — torn or
+//!   flipped bytes fail it and the record is skipped;
+//! * entries are self-describing via the same fingerprints the in-memory
+//!   memos key on (`arch_fp` inside [`SchemeKey`] / [`IntraKey`]), so a
+//!   snapshot written for different hardware warms nothing — mismatched
+//!   entries are skipped, not aliased;
+//! * an unknown magic, version, tag or enum byte skips (file, record,
+//!   record respectively) rather than guessing — forward compatibility is
+//!   "start cold", never "trust stale bytes";
+//! * everything skipped is counted ([`SnapshotStats::skipped`], surfaced
+//!   as `load_skipped` in [`super::CacheStats`]) so corruption is visible
+//!   even though it is harmless.
+//!
+//! Writes are atomic: the snapshot is staged to a pid-suffixed temp file
+//! in the same directory and `rename`d into place, so a killed process
+//! leaves either the old snapshot or the new one, never a torn file.
+//! Because the evaluator and every intra-layer solver are pure in exactly
+//! the fingerprinted inputs, loading a snapshot can only change *when*
+//! searches run, never their results — the same invariant the in-memory
+//! session relies on.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::arch::{ArchConfig, PeDataflow};
+use crate::directives::scheme::AccessCounts;
+use crate::directives::{Grp, LayerScheme, LevelBlock, LoopOrder, Qty};
+use crate::mapping::{ArrayMapping, LayerShape, RowStationary, Systolic, UnitMap};
+use crate::partition::PartitionScheme;
+use crate::sim::{EnergyBreakdown, LayerEval};
+use crate::workloads::LayerKind;
+
+use super::cache::{arch_fingerprint, SchemeKey};
+use super::session::{IntraKey, SessionCache};
+
+const SNAPSHOT_MAGIC: &[u8; 8] = b"KAPLASNP";
+/// Bumped on any encoding change; a mismatch loads nothing (cold start).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const TAG_EVAL: u8 = 1;
+const TAG_INTRA: u8 = 2;
+
+/// What a snapshot load (or save) touched. `skipped` counts records
+/// rejected rather than trusted: bad checksum, unknown tag/enum byte,
+/// truncation remainder, or a fingerprint that doesn't match the session's
+/// arch filter.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    pub eval_entries: u64,
+    pub intra_entries: u64,
+    pub skipped: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Byte codec (shared with `cost::store`).
+
+/// Little-endian byte sink for the snapshot/store payloads.
+#[derive(Default)]
+pub(crate) struct ByteWriter {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    pub(crate) fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+}
+
+/// Bounds-checked little-endian reader: every accessor returns `None` on
+/// truncation, and `bool` rejects anything but 0/1 so corrupted payloads
+/// fail decoding instead of smuggling garbage in.
+pub(crate) struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Option<u8> {
+        self.take(1).map(|s| s[0])
+    }
+    pub(crate) fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    pub(crate) fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+    pub(crate) fn f64(&mut self) -> Option<f64> {
+        self.u64().map(f64::from_bits)
+    }
+    pub(crate) fn bool(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a over raw bytes — the per-record checksum.
+pub(crate) fn bytes_fp(b: &[u8]) -> u64 {
+    crate::util::fnv1a(b.iter().map(|&x| x as u64))
+}
+
+/// Append one framed record: `[tag][len u32][payload][fnv1a(payload) u64]`.
+pub(crate) fn push_record(out: &mut Vec<u8>, tag: u8, payload: &[u8]) {
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&bytes_fp(payload).to_le_bytes());
+}
+
+/// Stage `bytes` to a uniquely-named temp file beside `path` and rename
+/// it into place — readers see the old file or the new one, never a torn
+/// mix. The temp name carries the pid *and* a process-wide sequence
+/// number so concurrent writers (other processes, or threads of this
+/// one) each stage to their own file; last rename wins whole.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(format!(
+        ".tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = std::path::PathBuf::from(tmp);
+    fs::write(&tmp, bytes)?;
+    fs::rename(&tmp, path).inspect_err(|_| {
+        let _ = fs::remove_file(&tmp);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Struct codecs. Enum byte maps are explicit (declaration order) so the
+// on-disk values are stable against source reordering only if the maps
+// here change with them — which is what SNAPSHOT_VERSION exists to gate.
+
+fn write_grp(w: &mut ByteWriter, g: Grp) {
+    w.u8(match g {
+        Grp::B => 0,
+        Grp::C => 1,
+        Grp::K => 2,
+    });
+}
+
+fn read_grp(r: &mut ByteReader) -> Option<Grp> {
+    match r.u8()? {
+        0 => Some(Grp::B),
+        1 => Some(Grp::C),
+        2 => Some(Grp::K),
+        _ => None,
+    }
+}
+
+fn write_kind(w: &mut ByteWriter, k: LayerKind) {
+    w.u8(match k {
+        LayerKind::Conv => 0,
+        LayerKind::DWConv => 1,
+        LayerKind::Fc => 2,
+        LayerKind::Pool => 3,
+        LayerKind::Eltwise => 4,
+        LayerKind::ConvBwWeight => 5,
+        LayerKind::ConvBwAct => 6,
+        LayerKind::DWConvBwAct => 7,
+    });
+}
+
+fn read_kind(r: &mut ByteReader) -> Option<LayerKind> {
+    match r.u8()? {
+        0 => Some(LayerKind::Conv),
+        1 => Some(LayerKind::DWConv),
+        2 => Some(LayerKind::Fc),
+        3 => Some(LayerKind::Pool),
+        4 => Some(LayerKind::Eltwise),
+        5 => Some(LayerKind::ConvBwWeight),
+        6 => Some(LayerKind::ConvBwAct),
+        7 => Some(LayerKind::DWConvBwAct),
+        _ => None,
+    }
+}
+
+fn write_dataflow(w: &mut ByteWriter, d: PeDataflow) {
+    w.u8(match d {
+        PeDataflow::RowStationary => 0,
+        PeDataflow::Systolic => 1,
+    });
+}
+
+fn read_dataflow(r: &mut ByteReader) -> Option<PeDataflow> {
+    match r.u8()? {
+        0 => Some(PeDataflow::RowStationary),
+        1 => Some(PeDataflow::Systolic),
+        _ => None,
+    }
+}
+
+/// The array-mapping trait object travels as a template tag; decode
+/// resolves it back to the two statics (the same pair
+/// `mapping::array_mapping` dispatches to).
+fn mapping_tag(m: &'static dyn ArrayMapping) -> u8 {
+    if m.name() == RowStationary.name() {
+        0
+    } else {
+        1
+    }
+}
+
+fn read_mapping(r: &mut ByteReader) -> Option<&'static dyn ArrayMapping> {
+    match r.u8()? {
+        0 => Some(&RowStationary),
+        1 => Some(&Systolic),
+        _ => None,
+    }
+}
+
+fn write_qty(w: &mut ByteWriter, q: Qty) {
+    w.u64(q.b);
+    w.u64(q.c);
+    w.u64(q.k);
+}
+
+fn read_qty(r: &mut ByteReader) -> Option<Qty> {
+    Some(Qty { b: r.u64()?, c: r.u64()?, k: r.u64()? })
+}
+
+fn write_level(w: &mut ByteWriter, l: LevelBlock) {
+    write_qty(w, l.qty);
+    for g in l.order.0 {
+        write_grp(w, g);
+    }
+}
+
+fn read_level(r: &mut ByteReader) -> Option<LevelBlock> {
+    let qty = read_qty(r)?;
+    let order = LoopOrder([read_grp(r)?, read_grp(r)?, read_grp(r)?]);
+    Some(LevelBlock { qty, order })
+}
+
+fn write_shape(w: &mut ByteWriter, s: LayerShape) {
+    write_kind(w, s.kind);
+    for v in [s.n, s.c, s.k, s.xo, s.yo, s.r, s.s, s.stride] {
+        w.u64(v);
+    }
+}
+
+fn read_shape(r: &mut ByteReader) -> Option<LayerShape> {
+    Some(LayerShape {
+        kind: read_kind(r)?,
+        n: r.u64()?,
+        c: r.u64()?,
+        k: r.u64()?,
+        xo: r.u64()?,
+        yo: r.u64()?,
+        r: r.u64()?,
+        s: r.u64()?,
+        stride: r.u64()?,
+    })
+}
+
+fn write_part(w: &mut ByteWriter, p: PartitionScheme) {
+    for v in [p.region.0, p.region.1, p.pn, p.pk, p.pc, p.px, p.py] {
+        w.u64(v);
+    }
+    w.bool(p.share_ifm);
+    w.bool(p.share_wgt);
+}
+
+fn read_part(r: &mut ByteReader) -> Option<PartitionScheme> {
+    Some(PartitionScheme {
+        region: (r.u64()?, r.u64()?),
+        pn: r.u64()?,
+        pk: r.u64()?,
+        pc: r.u64()?,
+        px: r.u64()?,
+        py: r.u64()?,
+        share_ifm: r.bool()?,
+        share_wgt: r.bool()?,
+    })
+}
+
+fn write_unit(w: &mut ByteWriter, u: &UnitMap) {
+    w.u8(mapping_tag(u.mapping));
+    write_shape(w, u.shape);
+    w.u64(u.array.0);
+    w.u64(u.array.1);
+    write_qty(w, u.totals);
+    write_qty(w, u.granule);
+    w.f64(u.utilization);
+    w.u64(u.rs_chunk);
+}
+
+fn read_unit(r: &mut ByteReader) -> Option<UnitMap> {
+    Some(UnitMap {
+        mapping: read_mapping(r)?,
+        shape: read_shape(r)?,
+        array: (r.u64()?, r.u64()?),
+        totals: read_qty(r)?,
+        granule: read_qty(r)?,
+        utilization: r.f64()?,
+        rs_chunk: r.u64()?,
+    })
+}
+
+pub(crate) fn write_layer_scheme(w: &mut ByteWriter, s: &LayerScheme) {
+    write_part(w, s.part);
+    write_unit(w, &s.unit);
+    write_level(w, s.regf);
+    write_level(w, s.gbuf);
+}
+
+pub(crate) fn read_layer_scheme(r: &mut ByteReader) -> Option<LayerScheme> {
+    Some(LayerScheme {
+        part: read_part(r)?,
+        unit: read_unit(r)?,
+        regf: read_level(r)?,
+        gbuf: read_level(r)?,
+    })
+}
+
+fn write_scheme_key(w: &mut ByteWriter, k: &SchemeKey) {
+    w.u64(k.arch_fp);
+    write_shape(w, k.shape);
+    w.u64(k.array.0);
+    w.u64(k.array.1);
+    write_dataflow(w, k.dataflow);
+    w.u64(k.rs_chunk);
+    write_part(w, k.part);
+    write_level(w, k.regf);
+    write_level(w, k.gbuf);
+    w.bool(k.ifm_on_chip);
+}
+
+fn read_scheme_key(r: &mut ByteReader) -> Option<SchemeKey> {
+    Some(SchemeKey {
+        arch_fp: r.u64()?,
+        shape: read_shape(r)?,
+        array: (r.u64()?, r.u64()?),
+        dataflow: read_dataflow(r)?,
+        rs_chunk: r.u64()?,
+        part: read_part(r)?,
+        regf: read_level(r)?,
+        gbuf: read_level(r)?,
+        ifm_on_chip: r.bool()?,
+    })
+}
+
+fn write_layer_eval(w: &mut ByteWriter, e: &LayerEval) {
+    let en = &e.energy;
+    for v in [en.alu_pj, en.regf_pj, en.bus_pj, en.gbuf_pj, en.noc_pj, en.dram_pj] {
+        w.f64(v);
+    }
+    w.f64(e.latency_cycles);
+    let a = &e.access;
+    for v in a.dram {
+        w.u64(v);
+    }
+    for v in a.gbuf {
+        w.u64(v);
+    }
+    w.u64(a.gbuf_regf_side);
+    w.u64(a.regf);
+    w.f64(a.noc_word_hops);
+    w.u64(a.macs);
+    w.f64(e.compute_cycles);
+    w.f64(e.dram_cycles);
+}
+
+fn read_layer_eval(r: &mut ByteReader) -> Option<LayerEval> {
+    let energy = EnergyBreakdown {
+        alu_pj: r.f64()?,
+        regf_pj: r.f64()?,
+        bus_pj: r.f64()?,
+        gbuf_pj: r.f64()?,
+        noc_pj: r.f64()?,
+        dram_pj: r.f64()?,
+    };
+    let latency_cycles = r.f64()?;
+    let access = AccessCounts {
+        dram: [r.u64()?, r.u64()?, r.u64()?],
+        gbuf: [r.u64()?, r.u64()?, r.u64()?],
+        gbuf_regf_side: r.u64()?,
+        regf: r.u64()?,
+        noc_word_hops: r.f64()?,
+        macs: r.u64()?,
+    };
+    Some(LayerEval {
+        energy,
+        latency_cycles,
+        access,
+        compute_cycles: r.f64()?,
+        dram_cycles: r.f64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot save / load.
+
+fn encode_eval_record(key: &SchemeKey, eval: &LayerEval) -> Vec<u8> {
+    let mut w = ByteWriter::default();
+    write_scheme_key(&mut w, key);
+    write_layer_eval(&mut w, eval);
+    w.buf
+}
+
+fn encode_intra_record(key: &IntraKey, argmin: &Option<LayerScheme>) -> Vec<u8> {
+    let mut w = ByteWriter::default();
+    w.u64(key.arch_fp);
+    w.u64(key.ctx_fp);
+    w.u64(key.solver_fp);
+    match argmin {
+        None => w.u8(0),
+        Some(s) => {
+            w.u8(1);
+            write_layer_scheme(&mut w, s);
+        }
+    }
+    w.buf
+}
+
+/// Serialize every resident memo entry of `cache` to `path`, atomically.
+/// Returns what was written (skipped is always 0 on save).
+pub fn save_session(cache: &SessionCache, path: &Path) -> io::Result<SnapshotStats> {
+    let mut out = Vec::with_capacity(64 * 1024);
+    out.extend_from_slice(SNAPSHOT_MAGIC);
+    out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    let mut stats = SnapshotStats::default();
+    for (key, eval) in cache.export_eval() {
+        push_record(&mut out, TAG_EVAL, &encode_eval_record(&key, &eval));
+        stats.eval_entries += 1;
+    }
+    for (key, argmin) in cache.export_intra() {
+        push_record(&mut out, TAG_INTRA, &encode_intra_record(&key, &argmin));
+        stats.intra_entries += 1;
+    }
+    write_atomic(path, &out)?;
+    Ok(stats)
+}
+
+/// Load a snapshot into `cache`, skipping (and counting) anything
+/// unrecognized: bad header, bad checksum, unknown tag, bad enum byte,
+/// truncation, or — when `arch` is given — entries fingerprinted for
+/// different hardware. A missing file is a clean cold start. Skips are
+/// also reported to the session's `load_skipped` counter; the cache is
+/// never poisoned and this never panics on any byte sequence.
+pub fn load_session(
+    cache: &SessionCache,
+    path: &Path,
+    arch: Option<&ArchConfig>,
+) -> io::Result<SnapshotStats> {
+    let bytes = match fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(SnapshotStats::default()),
+        Err(e) => return Err(e),
+    };
+    let mut stats = SnapshotStats::default();
+    let header_ok = bytes.len() >= 12
+        && &bytes[..8] == SNAPSHOT_MAGIC
+        && bytes[8..12] == SNAPSHOT_VERSION.to_le_bytes();
+    if !header_ok {
+        stats.skipped = 1;
+        cache.note_load_skipped(stats.skipped);
+        return Ok(stats);
+    }
+    let want_fp = arch.map(arch_fingerprint);
+    let mut pos = 12;
+    while pos < bytes.len() {
+        // Frame: tag + len, payload, checksum. A truncated frame counts
+        // once and stops — after a broken length there is no resync point.
+        if bytes.len() - pos < 5 {
+            stats.skipped += 1;
+            break;
+        }
+        let tag = bytes[pos];
+        let len = u32::from_le_bytes(bytes[pos + 1..pos + 5].try_into().unwrap()) as usize;
+        pos += 5;
+        if bytes.len() - pos < len + 8 {
+            stats.skipped += 1;
+            break;
+        }
+        let payload = &bytes[pos..pos + len];
+        let ck = u64::from_le_bytes(bytes[pos + len..pos + len + 8].try_into().unwrap());
+        pos += len + 8;
+        if bytes_fp(payload) != ck {
+            stats.skipped += 1;
+            continue;
+        }
+        let mut r = ByteReader::new(payload);
+        match tag {
+            TAG_EVAL => match read_scheme_key(&mut r).zip(read_layer_eval(&mut r)) {
+                Some((key, eval))
+                    if r.is_empty() && want_fp.is_none_or(|fp| key.arch_fp == fp) =>
+                {
+                    cache.import_eval(key, eval);
+                    stats.eval_entries += 1;
+                }
+                _ => stats.skipped += 1,
+            },
+            TAG_INTRA => {
+                let decoded = (|| {
+                    let key = IntraKey {
+                        arch_fp: r.u64()?,
+                        ctx_fp: r.u64()?,
+                        solver_fp: r.u64()?,
+                    };
+                    let argmin = match r.u8()? {
+                        0 => None,
+                        1 => Some(read_layer_scheme(&mut r)?),
+                        _ => return None,
+                    };
+                    Some((key, argmin))
+                })();
+                match decoded {
+                    Some((key, argmin))
+                        if r.is_empty() && want_fp.is_none_or(|fp| key.arch_fp == fp) =>
+                    {
+                        cache.import_intra(key, argmin);
+                        stats.intra_entries += 1;
+                    }
+                    _ => stats.skipped += 1,
+                }
+            }
+            _ => stats.skipped += 1,
+        }
+    }
+    cache.note_load_skipped(stats.skipped);
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::EvalCache;
+    use crate::directives::{Grp, LoopOrder, Qty};
+    use crate::workloads::Layer;
+
+    fn scheme(arch: &ArchConfig, k: u64) -> LayerScheme {
+        let l = Layer::conv("c", 16, k, 14, 3, 1);
+        let part = PartitionScheme::single();
+        let unit = UnitMap::build(arch, part.node_shape(&l, 4));
+        LayerScheme {
+            part,
+            unit,
+            regf: LevelBlock { qty: Qty::new(1, 2, 2), order: LoopOrder([Grp::B, Grp::K, Grp::C]) },
+            gbuf: LevelBlock { qty: Qty::new(1, 8, 8), order: LoopOrder([Grp::B, Grp::C, Grp::K]) },
+        }
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "kapla-persist-unit-{}-{}-{}.snap",
+            std::process::id(),
+            name,
+            n
+        ))
+    }
+
+    #[test]
+    fn codec_round_trips_scheme_and_eval_bit_exact() {
+        let arch = presets::multi_node_eyeriss();
+        let s = scheme(&arch, 32);
+        let ev = crate::sim::evaluate_layer(&arch, &s, false);
+        let key = SchemeKey::of(&arch, &s, false);
+        let rec = encode_eval_record(&key, &ev);
+        let mut r = ByteReader::new(&rec);
+        let (k2, e2) = read_scheme_key(&mut r).zip(read_layer_eval(&mut r)).expect("decodes");
+        assert!(r.is_empty(), "trailing bytes after decode");
+        assert_eq!(k2, key);
+        assert_eq!(format!("{e2:?}"), format!("{ev:?}"));
+        // The scheme itself (trait object included) round-trips too.
+        let mut w = ByteWriter::default();
+        write_layer_scheme(&mut w, &s);
+        let s2 = read_layer_scheme(&mut ByteReader::new(&w.buf)).expect("decodes");
+        assert_eq!(format!("{s2:?}"), format!("{s:?}"));
+        assert_eq!(s2.unit.mapping.name(), s.unit.mapping.name());
+    }
+
+    #[test]
+    fn save_load_round_trip_restores_both_memos() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::unbounded();
+        let schemes: Vec<LayerScheme> = [16u64, 32, 64].iter().map(|&k| scheme(&arch, k)).collect();
+        for s in &schemes {
+            sc.evaluate_layer(&arch, s, false);
+        }
+        EvalCache::record_intra_argmin(&sc, IntraKey::of(&arch, 0xC0DE, 0xF00D), Some(schemes[0]));
+        EvalCache::record_intra_argmin(&sc, IntraKey::of(&arch, 0xBEEF, 0xF00D), None);
+
+        let path = tmp_path("roundtrip");
+        let saved = save_session(&sc, &path).expect("save");
+        assert_eq!((saved.eval_entries, saved.intra_entries, saved.skipped), (3, 2, 0));
+
+        let warm = SessionCache::unbounded();
+        let loaded = load_session(&warm, &path, Some(&arch)).expect("load");
+        assert_eq!(loaded, saved);
+        assert_eq!(warm.len(), 3);
+        assert_eq!(warm.intra_len(), 2);
+        assert_eq!(warm.load_skipped(), 0);
+        // Every reloaded entry hits and matches the simulator bit-exactly.
+        for s in &schemes {
+            let got = warm.evaluate_layer(&arch, s, false);
+            let want = crate::sim::evaluate_layer(&arch, s, false);
+            assert_eq!(format!("{got:?}"), format!("{want:?}"));
+        }
+        assert_eq!(warm.hits(), 3, "reloaded evaluations must hit");
+        assert!(matches!(
+            EvalCache::intra_argmin(&warm, &IntraKey::of(&arch, 0xBEEF, 0xF00D)),
+            Some(None)
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_cold_start() {
+        let sc = SessionCache::unbounded();
+        let st = load_session(&sc, &tmp_path("missing"), None).expect("ok");
+        assert_eq!(st, SnapshotStats::default());
+        assert_eq!(sc.load_skipped(), 0);
+    }
+
+    #[test]
+    fn arch_filter_skips_foreign_entries() {
+        let a1 = presets::eyeriss_like((4, 4), (8, 8), 64, 32 * 1024);
+        let a2 = presets::eyeriss_like((4, 4), (8, 8), 64, 64 * 1024);
+        let sc = SessionCache::unbounded();
+        sc.evaluate_layer(&a1, &scheme(&a1, 32), false);
+        sc.evaluate_layer(&a2, &scheme(&a2, 32), false);
+        let path = tmp_path("archfilter");
+        save_session(&sc, &path).expect("save");
+        let warm = SessionCache::unbounded();
+        let st = load_session(&warm, &path, Some(&a1)).expect("load");
+        assert_eq!((st.eval_entries, st.skipped), (1, 1));
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm.load_skipped(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -42,9 +42,9 @@ use super::cache::{arch_fingerprint, shard_of, CacheStats, EvalCache, SchemeKey,
 /// schedule changing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct IntraKey {
-    arch_fp: u64,
-    ctx_fp: u64,
-    solver_fp: u64,
+    pub(crate) arch_fp: u64,
+    pub(crate) ctx_fp: u64,
+    pub(crate) solver_fp: u64,
 }
 
 impl IntraKey {
@@ -122,12 +122,51 @@ impl CacheBudget {
     }
 }
 
+/// Eviction policy of a [`SessionCache`].
+///
+/// `Clock` is the original one-bit second-chance sweep. `SegmentedLru`
+/// approximates a protected/probationary segmented LRU with a second bit:
+/// a hit on an already-referenced entry promotes it to *protected*, and
+/// the victim sweep demotes (protected → referenced-clear → evict) instead
+/// of evicting outright — so an entry must go un-touched for two full
+/// sweeps before it leaves, holding multi-hit NAS layers longer under
+/// churn. Either policy only changes *when* the simulator re-runs, never
+/// what callers see (the evaluator is pure), so schedules stay
+/// byte-identical across policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    Clock,
+    SegmentedLru,
+}
+
+impl EvictPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictPolicy::Clock => "clock",
+            EvictPolicy::SegmentedLru => "slru",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<EvictPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "clock" => Ok(EvictPolicy::Clock),
+            "slru" | "segmented-lru" => Ok(EvictPolicy::SegmentedLru),
+            other => Err(format!("bad evict policy {other:?}: expected clock|slru")),
+        }
+    }
+}
+
 /// One resident evaluation in a shard's clock ring.
 struct ClockEntry {
     key: SchemeKey,
     eval: LayerEval,
     /// Second-chance bit: set on hit, cleared as the hand sweeps past.
     referenced: bool,
+    /// Segmented-LRU protection bit: set when a *referenced* entry is hit
+    /// again (promotion to the protected segment), cleared by the sweep
+    /// before the entry becomes evictable. Never set under
+    /// [`EvictPolicy::Clock`], so that policy's behavior is unchanged.
+    protected: bool,
 }
 
 #[derive(Default)]
@@ -140,16 +179,22 @@ struct Shard {
 }
 
 impl Shard {
-    /// Advance the hand to the first unreferenced entry (clearing reference
-    /// bits on the way) and return its slot. Terminates: one full sweep
-    /// clears every bit. Must only be called on a non-empty ring.
+    /// Advance the hand to the first unreferenced, unprotected entry
+    /// (clearing reference bits, then protection bits, on the way) and
+    /// return its slot. Terminates: one full sweep clears every reference
+    /// bit and a second clears every protection bit. Must only be called
+    /// on a non-empty ring.
     fn clock_victim(&mut self) -> usize {
         loop {
             if self.hand >= self.ring.len() {
                 self.hand = 0;
             }
-            if self.ring[self.hand].referenced {
-                self.ring[self.hand].referenced = false;
+            let e = &mut self.ring[self.hand];
+            if e.referenced {
+                e.referenced = false;
+                self.hand += 1;
+            } else if e.protected {
+                e.protected = false;
                 self.hand += 1;
             } else {
                 let slot = self.hand;
@@ -187,6 +232,12 @@ pub struct SessionCache {
     intra_cap: usize,
     intra_lookups: AtomicU64,
     intra_hits: AtomicU64,
+    /// Eviction policy (one-bit clock vs. two-bit segmented LRU).
+    policy: EvictPolicy,
+    /// Snapshot/store entries rejected at load time (`cost::persist`,
+    /// `cost::store`): bad checksum, unknown version/tag, mismatched
+    /// fingerprint. Surfaced through [`CacheStats::load_skipped`].
+    load_skipped: AtomicU64,
 }
 
 #[derive(Default)]
@@ -197,6 +248,13 @@ struct IntraMemo {
 
 impl SessionCache {
     pub fn new(budget: CacheBudget) -> SessionCache {
+        SessionCache::with_policy(budget, EvictPolicy::Clock)
+    }
+
+    /// A session under an explicit eviction policy. `new` keeps the clock
+    /// default; the segmented-LRU variant exists for the perf_hotpath
+    /// hit-rate comparison and stays opt-in unless that row shows a win.
+    pub fn with_policy(budget: CacheBudget, policy: EvictPolicy) -> SessionCache {
         let intra_cap = if budget.is_unbounded() {
             usize::MAX
         } else if budget.max_entries == 0 {
@@ -219,6 +277,8 @@ impl SessionCache {
             intra_cap,
             intra_lookups: AtomicU64::new(0),
             intra_hits: AtomicU64::new(0),
+            policy,
+            load_skipped: AtomicU64::new(0),
         }
     }
 
@@ -265,6 +325,55 @@ impl SessionCache {
         EvalCache::stats(self).hit_rate()
     }
 
+    /// The eviction policy this session was built with.
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
+    /// Snapshot entries rejected at load time so far.
+    pub fn load_skipped(&self) -> u64 {
+        self.load_skipped.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` snapshot/store entries that were rejected rather than
+    /// trusted at load time (`cost::persist` / `cost::store` report here).
+    pub(crate) fn note_load_skipped(&self, n: u64) {
+        if n > 0 {
+            self.load_skipped.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Every resident evaluation, for the session snapshot
+    /// (`cost::persist::save_session`). Shard-by-shard ring order, so the
+    /// output is deterministic for a deterministic insert history.
+    pub(crate) fn export_eval(&self) -> Vec<(SchemeKey, LayerEval)> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            let sh = sh.lock().unwrap();
+            out.extend(sh.ring.iter().map(|e| (e.key, e.eval)));
+        }
+        out
+    }
+
+    /// Every recorded intra-layer argmin, in FIFO (recording) order.
+    pub(crate) fn export_intra(&self) -> Vec<(IntraKey, Option<LayerScheme>)> {
+        let memo = self.intra.lock().unwrap();
+        memo.fifo.iter().filter_map(|k| memo.map.get(k).map(|v| (*k, *v))).collect()
+    }
+
+    /// Insert a snapshot-loaded evaluation without counting a lookup. Goes
+    /// through the normal budgeted insert path, so a snapshot larger than
+    /// the budget warms up to the budget and no further.
+    pub(crate) fn import_eval(&self, key: SchemeKey, eval: LayerEval) {
+        self.insert(shard_of(&key), key, eval);
+    }
+
+    /// Insert a snapshot-loaded argmin (first-in wins, FIFO-bounded — the
+    /// same rules as a live recording).
+    pub(crate) fn import_intra(&self, key: IntraKey, argmin: Option<LayerScheme>) {
+        EvalCache::record_intra_argmin(self, key, argmin);
+    }
+
     /// Insert a freshly computed evaluation, staying within the budget: a
     /// full cache evicts a clock victim from the entry's own shard; if the
     /// own shard is empty (budgets smaller than the shard count), a victim
@@ -289,7 +398,7 @@ impl SessionCache {
                 let slot = sh.clock_victim();
                 let old = sh.ring[slot].key;
                 sh.index.remove(&old);
-                sh.ring[slot] = ClockEntry { key, eval, referenced: false };
+                sh.ring[slot] = ClockEntry { key, eval, referenced: false, protected: false };
                 sh.index.insert(key, slot);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
                 return;
@@ -317,7 +426,7 @@ impl SessionCache {
         let prev = self.count.fetch_add(1, Ordering::Relaxed);
         if prev < self.cap {
             let slot = sh.ring.len();
-            sh.ring.push(ClockEntry { key, eval, referenced: false });
+            sh.ring.push(ClockEntry { key, eval, referenced: false, protected: false });
             sh.index.insert(key, slot);
             true
         } else {
@@ -367,9 +476,15 @@ impl EvalCache for SessionCache {
         {
             let mut sh = self.shards[si].lock().unwrap();
             if let Some(&slot) = sh.index.get(&key) {
-                sh.ring[slot].referenced = true;
+                let e = &mut sh.ring[slot];
+                // Segmented LRU: a second hit (entry already referenced)
+                // promotes to the protected segment.
+                if self.policy == EvictPolicy::SegmentedLru && e.referenced {
+                    e.protected = true;
+                }
+                e.referenced = true;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return sh.ring[slot].eval;
+                return e.eval;
             }
         }
         let ev = crate::sim::evaluate_layer(arch, s, ifm_on_chip);
@@ -422,6 +537,10 @@ impl EvalCache for SessionCache {
             entries: self.len(),
             intra_lookups: self.intra_lookups.load(Ordering::Relaxed),
             intra_hits,
+            load_skipped: self.load_skipped(),
+            // Store counters live on the `cost::store::ScheduleStore`
+            // serving this session; the coordinator overlays them.
+            ..Default::default()
         }
     }
 }
@@ -603,5 +722,31 @@ mod tests {
         }
         assert!(sc.len() <= 4);
         assert_eq!(sc.lookups(), 32);
+    }
+
+    #[test]
+    fn segmented_lru_protects_twice_hit_entries() {
+        let arch = presets::multi_node_eyeriss();
+        let sc = SessionCache::with_policy(CacheBudget::entries(2), EvictPolicy::SegmentedLru);
+        assert_eq!(sc.policy().name(), "slru");
+        let hot = scheme(&arch, 32);
+        sc.evaluate_layer(&arch, &hot, false);
+        sc.evaluate_layer(&arch, &hot, false); // sets the reference bit
+        sc.evaluate_layer(&arch, &hot, false); // promotes to protected
+        let mut hot_hits = 0;
+        for k in [8u64, 16, 24, 40, 48, 56] {
+            sc.evaluate_layer(&arch, &scheme(&arch, k), false);
+            let before = sc.hits();
+            let got = sc.evaluate_layer(&arch, &hot, false);
+            hot_hits += (sc.hits() - before) as usize;
+            // Evicted or resident, results always match the simulator.
+            let want = crate::sim::evaluate_layer(&arch, &hot, false);
+            assert_eq!(format!("{got:?}"), format!("{want:?}"));
+            assert!(sc.len() <= 2, "len {} exceeds budget", sc.len());
+        }
+        assert!(hot_hits > 0, "protected hot key never survived eviction");
+        assert_eq!(EvictPolicy::parse("segmented-lru"), Ok(EvictPolicy::SegmentedLru));
+        assert_eq!(EvictPolicy::parse("clock"), Ok(EvictPolicy::Clock));
+        assert!(EvictPolicy::parse("lfu").is_err());
     }
 }

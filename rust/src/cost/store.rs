@@ -1,0 +1,516 @@
+//! Content-addressed on-disk schedule store — the top level of the
+//! memoization hierarchy (evaluation memo → intra-argmin memo → whole
+//! `SolveResult`s). Solving is fully deterministic given
+//! `(net, arch, knobs)`, so a completed schedule can be stored under the
+//! fingerprint triple and replayed verbatim: a repeated request after a
+//! full process restart is answered with zero detailed evaluations and a
+//! byte-identical schedule.
+//!
+//! Layout: one file per solve under the store directory,
+//! `<net_fp>-<arch_fp>-<knobs_fp>.sched` (hex), so a plain shared
+//! directory doubles as a fleet-wide warm tier — writers use the same
+//! atomic temp-file+rename discipline as the session snapshot
+//! (`persist::write_atomic`), so concurrent shards and killed processes
+//! can never publish a torn file.
+//!
+//! Safety discipline matches [`super::persist`]: every file carries a
+//! magic, a format version, the full key triple and a checksum over the
+//! payload, and the payload must decode exactly (no trailing bytes).
+//! Anything that fails any of these checks is *skipped and counted*
+//! (`skipped()`), never trusted — the caller falls back to a cold solve,
+//! which is always correct. Degraded (deadline-cancelled) results are the
+//! caller's responsibility to keep out of the store: only full solves are
+//! deterministic replays of the request.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::{fs, io};
+
+use crate::interlayer::prune::PruneStats;
+use crate::interlayer::{Schedule, Segment};
+use crate::solvers::BnbStats;
+use crate::util::fnv1a;
+use crate::workloads::{Network, PrevRef};
+
+use super::persist::{
+    bytes_fp, read_layer_scheme, write_atomic, write_layer_scheme, ByteReader, ByteWriter,
+};
+
+/// Store format version. Bump on ANY layout change — a version mismatch is
+/// a skip (cold solve), never a reinterpretation.
+pub const STORE_VERSION: u32 = 1;
+
+const MAGIC: [u8; 8] = *b"KAPLASTO";
+
+/// The content address of one solve: fingerprints of everything the
+/// (deterministic) solver output depends on.
+///
+/// * `net_fp` — [`net_fingerprint`]: topology + every layer dimension.
+/// * `arch_fp` — `cache::arch_fingerprint`: the full resource/energy
+///   description.
+/// * `knobs_fp` — solver kind + every determinism-relevant DP/search knob
+///   (assembled by the coordinator). Wall-clock-only knobs (threads,
+///   deadline, speculation window) are deliberately excluded: they change
+///   how fast the same schedule is found, not which one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    pub net_fp: u64,
+    pub arch_fp: u64,
+    pub knobs_fp: u64,
+}
+
+impl StoreKey {
+    fn file_name(&self) -> String {
+        format!("{:016x}-{:016x}-{:016x}.sched", self.net_fp, self.arch_fp, self.knobs_fp)
+    }
+}
+
+/// Deterministic fingerprint of a network: name, input dims, every layer's
+/// kind and dimensions, and the DAG topology. Two nets with equal
+/// fingerprints produce identical solver inputs.
+pub fn net_fingerprint(net: &Network) -> u64 {
+    let mut vals: Vec<u64> = Vec::with_capacity(16 + net.layers.len() * 12);
+    vals.push(net.name.len() as u64);
+    vals.extend(net.name.bytes().map(u64::from));
+    vals.extend([net.input.0, net.input.1, net.input.2]);
+    vals.push(net.layers.len() as u64);
+    for (l, prevs) in net.layers.iter().zip(&net.prevs) {
+        vals.push(l.name.len() as u64);
+        vals.extend(l.name.bytes().map(u64::from));
+        vals.extend([
+            l.kind as u64,
+            l.c,
+            l.k,
+            l.xo,
+            l.yo,
+            l.r,
+            l.s,
+            l.stride,
+            l.no_batch as u64,
+        ]);
+        vals.push(prevs.len() as u64);
+        vals.extend(prevs.iter().map(|p| match p {
+            PrevRef::Input => u64::MAX,
+            PrevRef::Layer(j) => *j as u64,
+        }));
+    }
+    fnv1a(vals)
+}
+
+/// A stored solve: the schedule plus the solve-time statistics that
+/// describe the search which produced it (replayed verbatim so a warm
+/// response reports the same pruning table as the original).
+#[derive(Debug, Clone)]
+pub struct StoredResult {
+    pub schedule: Schedule,
+    pub prune: Option<PruneStats>,
+    pub bnb: Option<BnbStats>,
+}
+
+/// Handle on one store directory. All counters are monotonic over the
+/// handle's lifetime and surface through `CacheStats`
+/// (`store_lookups`/`store_hits`) and the metrics endpoint.
+#[derive(Debug)]
+pub struct ScheduleStore {
+    dir: PathBuf,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    skipped: AtomicU64,
+    writes: AtomicU64,
+}
+
+impl ScheduleStore {
+    /// Open (creating if necessary) a store rooted at `dir`.
+    pub fn open(dir: &Path) -> io::Result<ScheduleStore> {
+        fs::create_dir_all(dir)?;
+        Ok(ScheduleStore {
+            dir: dir.to_path_buf(),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Files that existed but failed a safety check (magic, version, key,
+    /// checksum, exact decode) and were ignored.
+    pub fn skipped(&self) -> u64 {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes.load(Ordering::Relaxed)
+    }
+
+    /// Look up a stored solve. A missing file is a plain miss; a present
+    /// but unreadable/undecodable file is a miss *and* bumps `skipped()`.
+    pub fn lookup(&self, key: &StoreKey) -> Option<StoredResult> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let path = self.dir.join(key.file_name());
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return None,
+            Err(_) => {
+                self.skipped.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        match decode_stored(&bytes, key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(r)
+            }
+            None => {
+                self.skipped.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a completed (non-degraded) solve. Atomic: readers — in this
+    /// process or any other shard sharing the directory — see either the
+    /// old file or the complete new one, never a torn write.
+    pub fn record(
+        &self,
+        key: &StoreKey,
+        schedule: &Schedule,
+        prune: Option<&PruneStats>,
+        bnb: Option<&BnbStats>,
+    ) -> io::Result<()> {
+        let bytes = encode_stored(key, schedule, prune, bnb);
+        write_atomic(&self.dir.join(key.file_name()), &bytes)?;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+// --- codec ---------------------------------------------------------------
+
+fn encode_stored(
+    key: &StoreKey,
+    schedule: &Schedule,
+    prune: Option<&PruneStats>,
+    bnb: Option<&BnbStats>,
+) -> Vec<u8> {
+    let mut w = ByteWriter::default();
+    w.u64(key.net_fp);
+    w.u64(key.arch_fp);
+    w.u64(key.knobs_fp);
+    write_schedule(&mut w, schedule);
+    match prune {
+        Some(p) => {
+            w.u8(1);
+            write_prune(&mut w, p);
+        }
+        None => w.u8(0),
+    }
+    match bnb {
+        Some(b) => {
+            w.u8(1);
+            write_bnb(&mut w, b);
+        }
+        None => w.u8(0),
+    }
+    let payload = w.buf;
+    let mut out = Vec::with_capacity(payload.len() + 20);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&STORE_VERSION.to_le_bytes());
+    out.extend_from_slice(&bytes_fp(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn decode_stored(bytes: &[u8], want: &StoreKey) -> Option<StoredResult> {
+    if bytes.len() < 20 || bytes[..8] != MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().ok()?);
+    if version != STORE_VERSION {
+        return None;
+    }
+    let sum = u64::from_le_bytes(bytes[12..20].try_into().ok()?);
+    let payload = &bytes[20..];
+    if bytes_fp(payload) != sum {
+        return None;
+    }
+    let mut r = ByteReader::new(payload);
+    // The embedded key must match the address the caller computed — a
+    // renamed/cross-copied file answers under the wrong key otherwise.
+    let key =
+        StoreKey { net_fp: r.u64()?, arch_fp: r.u64()?, knobs_fp: r.u64()? };
+    if key != *want {
+        return None;
+    }
+    let schedule = read_schedule(&mut r)?;
+    let prune = match r.u8()? {
+        0 => None,
+        1 => Some(read_prune(&mut r)?),
+        _ => return None,
+    };
+    let bnb = match r.u8()? {
+        0 => None,
+        1 => Some(read_bnb(&mut r)?),
+        _ => return None,
+    };
+    if !r.is_empty() {
+        return None;
+    }
+    Some(StoredResult { schedule, prune, bnb })
+}
+
+fn write_schedule(w: &mut ByteWriter, s: &Schedule) {
+    w.u32(s.segments.len() as u32);
+    for (seg, schemes) in &s.segments {
+        w.u32(seg.layers.len() as u32);
+        for &li in &seg.layers {
+            w.u64(li as u64);
+        }
+        w.u32(seg.regions.len() as u32);
+        for &(a, b) in &seg.regions {
+            w.u64(a);
+            w.u64(b);
+        }
+        w.bool(seg.spatial);
+        w.u64(seg.rounds);
+        w.u32(schemes.len() as u32);
+        for sc in schemes {
+            write_layer_scheme(w, sc);
+        }
+    }
+}
+
+fn read_schedule(r: &mut ByteReader) -> Option<Schedule> {
+    let nseg = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(nseg.min(1024));
+    for _ in 0..nseg {
+        let nl = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(nl.min(1024));
+        for _ in 0..nl {
+            layers.push(r.u64()? as usize);
+        }
+        let nr = r.u32()? as usize;
+        let mut regions = Vec::with_capacity(nr.min(1024));
+        for _ in 0..nr {
+            regions.push((r.u64()?, r.u64()?));
+        }
+        let spatial = r.bool()?;
+        let rounds = r.u64()?;
+        let seg = Segment { layers, regions, spatial, rounds };
+        let ns = r.u32()? as usize;
+        let mut schemes = Vec::with_capacity(ns.min(1024));
+        for _ in 0..ns {
+            schemes.push(read_layer_scheme(r)?);
+        }
+        segments.push((seg, schemes));
+    }
+    Some(Schedule { segments })
+}
+
+fn write_prune(w: &mut ByteWriter, p: &PruneStats) {
+    for v in [
+        p.total,
+        p.after_validity,
+        p.after_pareto,
+        p.spans_total,
+        p.spans_pruned,
+        p.schemes_bound_pruned,
+        p.tables_built,
+    ] {
+        w.u64(v as u64);
+    }
+}
+
+fn read_prune(r: &mut ByteReader) -> Option<PruneStats> {
+    Some(PruneStats {
+        total: r.u64()? as usize,
+        after_validity: r.u64()? as usize,
+        after_pareto: r.u64()? as usize,
+        spans_total: r.u64()? as usize,
+        spans_pruned: r.u64()? as usize,
+        schemes_bound_pruned: r.u64()? as usize,
+        tables_built: r.u64()? as usize,
+    })
+}
+
+fn write_bnb(w: &mut ByteWriter, b: &BnbStats) {
+    w.bool(b.part_floor);
+    for v in [
+        b.parts_visited,
+        b.parts_pruned,
+        b.prefixes_visited,
+        b.prefixes_pruned,
+        b.bound_evals,
+        b.schemes_visited,
+        b.schemes_skipped,
+        b.tightness_permille,
+    ] {
+        w.u64(v);
+    }
+}
+
+fn read_bnb(r: &mut ByteReader) -> Option<BnbStats> {
+    Some(BnbStats {
+        part_floor: r.bool()?,
+        parts_visited: r.u64()?,
+        parts_pruned: r.u64()?,
+        prefixes_visited: r.u64()?,
+        prefixes_pruned: r.u64()?,
+        bound_evals: r.u64()?,
+        schemes_visited: r.u64()?,
+        schemes_skipped: r.u64()?,
+        tightness_permille: r.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::cache::arch_fingerprint;
+    use crate::solvers::{SolveCtx, SolverKind};
+    use crate::workloads::nets;
+    use std::sync::atomic::AtomicUsize;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "kapla-store-unit-{}-{}-{}",
+            std::process::id(),
+            name,
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sched_key(tag: u64) -> StoreKey {
+        StoreKey { net_fp: tag, arch_fp: tag.wrapping_mul(3), knobs_fp: tag.wrapping_mul(7) }
+    }
+
+    #[test]
+    fn net_fingerprint_separates_nets_and_is_stable() {
+        let a = nets::mlp();
+        let b = nets::alexnet();
+        assert_eq!(net_fingerprint(&a), net_fingerprint(&a));
+        assert_ne!(net_fingerprint(&a), net_fingerprint(&b));
+        // A single dimension tweak must move the fingerprint.
+        let mut c = nets::mlp();
+        c.layers[0].k += 1;
+        assert_ne!(net_fingerprint(&a), net_fingerprint(&c));
+    }
+
+    #[test]
+    fn record_then_lookup_round_trips_schedule_bytes() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let r = SolveCtx::new(&arch).run(&net, 4, SolverKind::Kapla).unwrap();
+        let dir = tmp_dir("roundtrip");
+        let store = ScheduleStore::open(&dir).unwrap();
+        let key = StoreKey {
+            net_fp: net_fingerprint(&net),
+            arch_fp: arch_fingerprint(&arch),
+            knobs_fp: 42,
+        };
+        assert!(store.lookup(&key).is_none(), "store starts cold");
+        store.record(&key, &r.schedule, r.prune.as_ref(), r.bnb.as_ref()).unwrap();
+        let got = store.lookup(&key).expect("recorded entry");
+        assert_eq!(
+            format!("{:?}", got.schedule),
+            format!("{:?}", r.schedule),
+            "schedule must replay byte-identical"
+        );
+        assert_eq!(store.lookups(), 2);
+        assert_eq!(store.hits(), 1);
+        assert_eq!(store.skipped(), 0);
+        // A fresh handle on the same directory (a "restarted process")
+        // still answers.
+        let reopened = ScheduleStore::open(&dir).unwrap();
+        assert!(reopened.lookup(&key).is_some());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_files_are_skipped_not_trusted() {
+        let arch = presets::bench_multi_node();
+        let net = nets::mlp();
+        let r = SolveCtx::new(&arch).run(&net, 4, SolverKind::Kapla).unwrap();
+        let dir = tmp_dir("corrupt");
+        let store = ScheduleStore::open(&dir).unwrap();
+        let key = sched_key(9);
+        store.record(&key, &r.schedule, None, None).unwrap();
+        let path = dir.join(key.file_name());
+        let clean = fs::read(&path).unwrap();
+
+        // Truncation, flipped version byte, flipped payload byte, and a
+        // wrong-key rename each degrade to a miss with skipped bumped.
+        let cases: Vec<Vec<u8>> = vec![
+            clean[..clean.len() / 2].to_vec(),
+            {
+                let mut b = clean.clone();
+                b[8] ^= 0xFF; // version
+                b
+            },
+            {
+                let mut b = clean.clone();
+                let last = b.len() - 1;
+                b[last] ^= 0x01; // payload (checksum mismatch)
+                b
+            },
+        ];
+        for (i, bad) in cases.iter().enumerate() {
+            fs::write(&path, bad).unwrap();
+            let before = store.skipped();
+            assert!(store.lookup(&key).is_none(), "case {i} must miss");
+            assert_eq!(store.skipped(), before + 1, "case {i} must be counted");
+        }
+        // Wrong key: intact bytes copied under another address.
+        fs::write(&path, &clean).unwrap();
+        let other = sched_key(10);
+        fs::write(dir.join(other.file_name()), &clean).unwrap();
+        assert!(store.lookup(&other).is_none(), "cross-copied file must not answer");
+        assert!(store.lookup(&key).is_some(), "original stays valid");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prune_and_bnb_stats_round_trip() {
+        let p = PruneStats {
+            total: 10,
+            after_validity: 9,
+            after_pareto: 5,
+            spans_total: 4,
+            spans_pruned: 2,
+            schemes_bound_pruned: 3,
+            tables_built: 2,
+        };
+        let b = BnbStats {
+            part_floor: true,
+            parts_visited: 7,
+            parts_pruned: 6,
+            prefixes_visited: 5,
+            prefixes_pruned: 4,
+            bound_evals: 3,
+            schemes_visited: 2,
+            schemes_skipped: 1,
+            tightness_permille: 1234,
+        };
+        let sched = Schedule { segments: Vec::new() };
+        let key = sched_key(1);
+        let bytes = encode_stored(&key, &sched, Some(&p), Some(&b));
+        let got = decode_stored(&bytes, &key).unwrap();
+        assert_eq!(format!("{:?}", got.prune.unwrap()), format!("{p:?}"));
+        assert_eq!(got.bnb.unwrap(), b);
+    }
+}

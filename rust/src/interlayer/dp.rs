@@ -52,6 +52,13 @@ pub struct DpConfig {
     /// scans before enumerating a partition's blockings (`off` for triage;
     /// the argmin is provably identical either way).
     pub part_floor: bool,
+    /// Partition visiting order in the staged intra-layer scans:
+    /// `Floor` (default) sorts partitions by ascending admissible floor so
+    /// the incumbent tightens sooner and `part_floor` prunes more; `Enum`
+    /// keeps raw enumeration order. Both are exact on the optimum *value*;
+    /// ties may resolve to a different equal-cost scheme, which is why the
+    /// exhaustive solvers fold the order into their memo fingerprint.
+    pub part_order: crate::solvers::space::PartOrder,
 }
 
 impl Default for DpConfig {
@@ -65,6 +72,7 @@ impl Default for DpConfig {
             parallel_table_min: 1024,
             spec_window: 8,
             part_floor: true,
+            part_order: crate::solvers::space::PartOrder::Floor,
         }
     }
 }

@@ -13,7 +13,10 @@
 
 use kapla::arch::{presets, ArchConfig};
 use kapla::coordinator::{self, service, transport, Job, SolverKind};
-use kapla::cost::{CacheBudget, CacheStats, EvalCache as _, SessionCache};
+use kapla::cost::{
+    load_session, save_session, CacheBudget, CacheStats, EvalCache as _, ScheduleStore,
+    SessionCache,
+};
 use kapla::directives::emit::emit_layer;
 use kapla::interlayer::dp::DpConfig;
 use kapla::report::{eng, Table};
@@ -22,6 +25,7 @@ use kapla::util::stats::fmt_duration;
 use kapla::workloads;
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::process::ExitCode;
 
 fn main() -> ExitCode {
@@ -52,7 +56,7 @@ fn usage() {
          [--solver k|b|s|r[:p=P,seed=S]|m[:rounds=R,batch=B,seed=S]] \
          [--objective energy|latency] [--train] \
          [--threads N] [--cache-budget N|unbounded|64mb] \
-         [--deadline-ms MS]\n\
+         [--cache-dir DIR] [--deadline-ms MS]\n\
          serve only: [--listen HOST:PORT|unix:PATH] [--tenants N] \
          [--queue-depth N] [--workers N] [--max-connections N] \
          [--metrics-interval SECS] [--idle-timeout SECS]"
@@ -77,12 +81,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> ExitCode {
         None => CacheBudget::bytes(coordinator::DEFAULT_SESSION_BYTES),
     };
     let arch = arch_of(flags);
+    let cache_dir = flags.get("cache-dir").map(PathBuf::from);
     let Some(spec) = flags.get("listen") else {
-        service::serve_with(&arch, budget);
+        service::serve_persistent(&arch, budget, cache_dir.as_deref());
         return ExitCode::SUCCESS;
     };
 
-    let mut cfg = transport::ServiceConfig { budget, ..Default::default() };
+    let mut cfg = transport::ServiceConfig { budget, cache_dir, ..Default::default() };
     for (key, slot) in [
         ("queue-depth", &mut cfg.queue_depth),
         ("tenants", &mut cfg.max_tenants),
@@ -256,7 +261,28 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         solver.label()
     );
     let session = SessionCache::new(budget);
-    let r = match coordinator::run_job_with(&arch, &job, &session) {
+    // Warm tier (single-user layout): `<dir>/session.snap` holds the
+    // evaluation/argmin memos, `<dir>/store/` the content-addressed
+    // schedules. Both are optional accelerators — any load failure is
+    // reported and the run proceeds cold.
+    let cache_dir = flags.get("cache-dir").map(PathBuf::from);
+    let store = cache_dir.as_ref().and_then(|dir| {
+        match load_session(&session, &dir.join("session.snap"), Some(&arch)) {
+            Ok(snap) => {
+                if snap.eval_entries + snap.intra_entries + snap.skipped > 0 {
+                    println!(
+                        "session snapshot: {} evaluations, {} argmins restored, {} skipped",
+                        snap.eval_entries, snap.intra_entries, snap.skipped
+                    );
+                }
+            }
+            Err(e) => eprintln!("warm tier: cannot load session snapshot: {e}"),
+        }
+        ScheduleStore::open(&dir.join("store"))
+            .inspect_err(|e| eprintln!("warm tier: cannot open schedule store: {e}"))
+            .ok()
+    });
+    let r = match coordinator::run_job_persistent(&arch, &job, &session, store.as_ref()) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("scheduling failed: {e}");
@@ -264,6 +290,20 @@ fn cmd_schedule(flags: &HashMap<String, String>, emit: bool) -> ExitCode {
         }
     };
     print_cache_stats("evaluation cache", &r.cache);
+    if let Some(st) = &store {
+        println!(
+            "schedule store: {} lookups, {} hits, {} writes, {} skipped",
+            st.lookups(),
+            st.hits(),
+            st.writes(),
+            st.skipped()
+        );
+    }
+    if let Some(dir) = &cache_dir {
+        if let Err(e) = save_session(&session, &dir.join("session.snap")) {
+            eprintln!("warm tier: cannot save session snapshot: {e}");
+        }
+    }
     if let Some(d) = &r.degraded {
         println!(
             "note: best-effort schedule — {} tripped after {:.1} ms, \

@@ -178,6 +178,7 @@ impl<'a> SolveCtx<'a> {
                     with_sharing: kind == SolverKind::DirectiveExhaustive,
                     stats: Some(&counters),
                     part_floor: self.dp.part_floor,
+                    part_order: self.dp.part_order,
                     cancel: self.cancel.active(),
                 };
                 let mut r = self.exact_dp(net, batch, &intra)?;

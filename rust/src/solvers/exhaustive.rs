@@ -17,7 +17,7 @@ use crate::cost::CostModel;
 use crate::directives::LayerScheme;
 use crate::workloads::Layer;
 
-use super::space::{visit_schemes_staged, BnbCounters, StagedQuery};
+use super::space::{visit_schemes_staged, BnbCounters, PartOrder, StagedQuery};
 use super::{IntraCtx, IntraSolver};
 
 /// Exhaustive intra-layer solver. The scan runs on the staged
@@ -37,6 +37,12 @@ pub struct ExhaustiveIntra<'a> {
     /// for triage — the argmin is identical either way, so the solver
     /// fingerprint and the cross-job argmin memo are unaffected).
     pub part_floor: bool,
+    /// Partition visiting order (`DpConfig::part_order`). Unlike
+    /// `part_floor`, the order can move the *first* minimum onto a
+    /// different equal-cost scheme, so it IS folded into the solver
+    /// fingerprint — memo entries recorded under one order never answer
+    /// queries issued under the other.
+    pub part_order: PartOrder,
     /// Cooperative cancellation, polled by the staged scan at its
     /// partition/prefix yield points. A trip returns the scan's current
     /// incumbent — or, with no incumbent yet, the always-valid
@@ -50,13 +56,25 @@ pub struct ExhaustiveIntra<'a> {
 
 impl Default for ExhaustiveIntra<'_> {
     fn default() -> Self {
-        ExhaustiveIntra { with_sharing: false, stats: None, part_floor: true, cancel: None }
+        ExhaustiveIntra {
+            with_sharing: false,
+            stats: None,
+            part_floor: true,
+            part_order: PartOrder::Floor,
+            cancel: None,
+        }
     }
 }
 
 impl ExhaustiveIntra<'_> {
     pub fn new(with_sharing: bool) -> ExhaustiveIntra<'static> {
-        ExhaustiveIntra { with_sharing, stats: None, part_floor: true, cancel: None }
+        ExhaustiveIntra {
+            with_sharing,
+            stats: None,
+            part_floor: true,
+            part_order: PartOrder::Floor,
+            cancel: None,
+        }
     }
 }
 
@@ -78,6 +96,7 @@ impl IntraSolver for ExhaustiveIntra<'_> {
     ) -> Option<LayerScheme> {
         let mut q = StagedQuery::for_ctx(arch, layer, ctx, self.with_sharing, model)
             .part_floor(self.part_floor)
+            .part_order(self.part_order)
             .cancel(self.cancel);
         if let Some(c) = self.stats {
             q = q.counters(c);
@@ -100,6 +119,18 @@ impl IntraSolver for ExhaustiveIntra<'_> {
                 None
             }
         })
+    }
+
+    fn fingerprint(&self) -> u64 {
+        // The default name-only fingerprint would alias Floor- and
+        // Enum-order scans in the cross-job argmin memo; the two return
+        // equal-*cost* but potentially different schemes, so the order is
+        // part of the search policy and must key the memo. `part_floor`
+        // stays unfolded: the floor is admissible, so it provably cannot
+        // change the first minimum within a fixed order.
+        crate::util::fnv1a(
+            self.name().bytes().map(u64::from).chain([self.part_order as u64 + 1]),
+        )
     }
 
     fn cancel_token(&self) -> Option<&crate::util::cancel::CancelToken> {
@@ -155,12 +186,8 @@ mod tests {
         let arch = presets::bench_multi_node();
         let l = crate::workloads::Layer::conv("c", 64, 64, 28, 3, 1);
         let counters = BnbCounters::new();
-        let solver = ExhaustiveIntra {
-            with_sharing: true,
-            stats: Some(&counters),
-            part_floor: true,
-            cancel: None,
-        };
+        let solver =
+            ExhaustiveIntra { with_sharing: true, stats: Some(&counters), ..Default::default() };
         let s = solver.solve(&arch, &l, &ctx((2, 2), 8), &TieredCost::fresh()).unwrap();
         s.validate(&arch).unwrap();
         let st = counters.snapshot();

@@ -39,7 +39,7 @@ pub mod random;
 pub mod space;
 
 pub use engine::SolveCtx;
-pub use space::{BnbCounters, BnbStats};
+pub use space::{BnbCounters, BnbStats, PartOrder};
 
 use std::collections::{HashMap, HashSet};
 

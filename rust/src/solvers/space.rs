@@ -189,7 +189,7 @@ pub struct BnbStats {
     pub bound_evals: u64,
     pub schemes_visited: u64,
     pub schemes_skipped: u64,
-    tightness_permille: u64,
+    pub(crate) tightness_permille: u64,
 }
 
 impl BnbStats {
@@ -231,6 +231,46 @@ impl BnbStats {
     }
 }
 
+/// Partition visiting order of the staged scans (ROADMAP item 3's
+/// ordering-heuristic successor).
+///
+/// `Floor` visits partitions in ascending `CostModel::bound_partition`
+/// order, so cheap partitions are scored first and the incumbent tightens
+/// sooner — strictly more partition- and prefix-level pruning from the
+/// same admissible bounds. Still exact: every partition that could hold a
+/// strictly better scheme is still enumerated, so the argmin *value* is
+/// untouched. What can change is the first-minimum *identity* among
+/// equal-cost optima (callers keep the first strict minimum they see), so
+/// order-sensitive consumers gate on cost, not bytes, and
+/// `ExhaustiveIntra::fingerprint` folds the order so memoized argmins
+/// never alias across orders.
+///
+/// `Enum` is the raw `enumerate_partitions` order — the historical
+/// behavior that `visit_schemes` shares, kept for byte-order equivalence
+/// tests and triage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartOrder {
+    Floor,
+    Enum,
+}
+
+impl PartOrder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartOrder::Floor => "floor",
+            PartOrder::Enum => "enum",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PartOrder, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "floor" => Ok(PartOrder::Floor),
+            "enum" => Ok(PartOrder::Enum),
+            other => Err(format!("bad part_order {other:?}: expected floor|enum")),
+        }
+    }
+}
+
 /// One staged enumeration query: the layer context plus the cost model
 /// whose detailed tier scores (and, when it opts in via
 /// `CostModel::staged`, bounds) the candidates.
@@ -248,6 +288,11 @@ pub struct StagedQuery<'a> {
     /// before enumerating a partition's blockings (default on; `off` is a
     /// debugging/triage mode — the argmin is identical either way).
     pub part_floor: bool,
+    /// Partition visiting order. [`StagedQuery::for_ctx`] defaults to
+    /// [`PartOrder::Enum`] (the `visit_schemes` order the equivalence
+    /// tests pin); the engine threads `DpConfig::part_order`, whose
+    /// default is [`PartOrder::Floor`].
+    pub part_order: PartOrder,
     /// Cooperative cancellation: polled at the partition and gbuf-prefix
     /// yield points; a trip abandons the remaining scan (the caller keeps
     /// whatever incumbent its visitor accumulated — anytime semantics).
@@ -274,6 +319,7 @@ impl<'a> StagedQuery<'a> {
             model,
             counters: None,
             part_floor: true,
+            part_order: PartOrder::Enum,
             cancel: None,
         }
     }
@@ -285,6 +331,11 @@ impl<'a> StagedQuery<'a> {
 
     pub fn part_floor(mut self, on: bool) -> StagedQuery<'a> {
         self.part_floor = on;
+        self
+    }
+
+    pub fn part_order(mut self, order: PartOrder) -> StagedQuery<'a> {
+        self.part_order = order;
         self
     }
 
@@ -335,10 +386,39 @@ pub fn visit_schemes_staged(
     q: &StagedQuery<'_>,
     mut visit: impl FnMut(&LayerScheme, &CostEstimate) -> Option<f64>,
 ) {
-    let parts = enumerate_partitions(q.layer, q.rb, q.region, q.with_sharing);
     let orders = LoopOrder::all();
+    // Stage every partition's unit map, staged evaluator and (admissible,
+    // gq-independent) partition floor up front — the same per-partition
+    // work the loop below used to do inline, hoisted so the visiting order
+    // becomes a free choice.
+    let enumerated = enumerate_partitions(q.layer, q.rb, q.region, q.with_sharing);
+    let mut parts = Vec::with_capacity(enumerated.len());
+    for part in enumerated {
+        // Cancellation yield point: staging builds unit maps and staged
+        // access calculi, so a tripped token stops paying for them.
+        if q.cancel.is_some_and(|c| c.is_cancelled()) {
+            return;
+        }
+        let unit = UnitMap::build(q.arch, part.node_shape(q.layer, q.rb));
+        let staged = q.model.staged(q.arch, &part, &unit, q.ifm_on_chip);
+        let floor = staged
+            .as_ref()
+            .map(|st| q.objective.of(&q.model.bound_partition(st)))
+            .unwrap_or(f64::INFINITY);
+        parts.push((part, unit, staged, floor));
+    }
+    // Floor order: ascending partition floor, so likely-cheap partitions
+    // tighten the incumbent before expensive ones are bounded against it.
+    // The sort is stable (ties and floor-less partitions keep enumeration
+    // order; the latter carry an INFINITY placeholder and sort last, where
+    // they are still *visited* — a placeholder is not an admissible bound,
+    // so it must never prune).
+    if q.part_order == PartOrder::Floor {
+        parts.sort_by(|a, b| a.3.total_cmp(&b.3));
+    }
     let mut incumbent = f64::INFINITY;
-    for part in parts {
+    for (part, unit, staged, floor) in &parts {
+        let (part, unit) = (*part, *unit);
         // Cancellation yield point (partition granularity): a tripped token
         // abandons the rest of the scan. Purely an early exit — iteration
         // order and scoring are untouched when the token stays live, so
@@ -346,23 +426,18 @@ pub fn visit_schemes_staged(
         if q.cancel.is_some_and(|c| c.is_cancelled()) {
             return;
         }
-        let unit = UnitMap::build(q.arch, part.node_shape(q.layer, q.rb));
-        let staged = q.model.staged(q.arch, &part, &unit, q.ifm_on_chip);
         // Partition-level branch-and-bound: the gq-independent floor over
         // every blocking of this partition, checked before the blocking
         // loops spawn. Admissible (bound_partition <= bound_prefix <=
         // evaluate for every completion), so skipping cannot change the
-        // first-minimum argmin.
-        if q.part_floor && incumbent.is_finite() {
-            if let Some(st) = &staged {
-                let bound = q.model.bound_partition(st);
-                if q.objective.of(&bound) >= incumbent {
-                    if let Some(c) = q.counters {
-                        c.add(&c.parts_pruned, 1);
-                    }
-                    continue;
-                }
+        // first-minimum argmin. Checked per partition (no sorted early
+        // break): the incumbent only tightens mid-scan, and the INFINITY
+        // placeholders of floor-less partitions sit past any break point.
+        if q.part_floor && incumbent.is_finite() && staged.is_some() && *floor >= incumbent {
+            if let Some(c) = q.counters {
+                c.add(&c.parts_pruned, 1);
             }
+            continue;
         }
         if let Some(c) = q.counters {
             c.add(&c.parts_visited, 1);
@@ -665,6 +740,59 @@ mod tests {
             let ost = off_counters.snapshot();
             assert_eq!(ost.parts_pruned, 0);
             assert!(ost.parts_visited >= st.parts_visited + st.parts_pruned);
+        }
+    }
+
+    #[test]
+    fn part_order_floor_preserves_argmin_value() {
+        // Floor ordering re-sorts partitions by their admissible floor, so
+        // the *first* minimum can land on a different (equal-cost) scheme —
+        // the pin is therefore on the optimum value and coverage, not on
+        // candidate bytes. Floor order must also never prune more than it
+        // is entitled to: every partition is either visited or pruned, and
+        // the totals match enumeration order.
+        use crate::cost::TieredCost;
+        let arch = presets::bench_multi_node();
+        let ctx = IntraCtx {
+            region: (2, 2),
+            rb: 4,
+            ifm_on_chip: false,
+            objective: Objective::Energy,
+        };
+        for l in [Layer::conv("c", 32, 64, 28, 3, 1), Layer::fc("f", 256, 512)] {
+            let model = TieredCost::fresh();
+            let mut best = [f64::INFINITY; 2];
+            let mut totals = [0u64; 2];
+            let mut pruned_cnt = [0u64; 2];
+            for (i, order) in [PartOrder::Enum, PartOrder::Floor].into_iter().enumerate() {
+                let counters = BnbCounters::new();
+                let q = StagedQuery::for_ctx(&arch, &l, &ctx, true, &model)
+                    .counters(&counters)
+                    .part_order(order);
+                let mut inc = f64::INFINITY;
+                visit_schemes_staged(&q, |_, est| {
+                    if est.energy_pj < inc {
+                        inc = est.energy_pj;
+                    }
+                    Some(inc)
+                });
+                best[i] = inc;
+                let st = counters.snapshot();
+                totals[i] = st.parts_visited + st.parts_pruned;
+                pruned_cnt[i] = st.parts_pruned;
+            }
+            assert!(best[0].is_finite(), "{}: no scheme found", l.name);
+            assert_eq!(best[0], best[1], "{}: part_order changed the optimum", l.name);
+            assert_eq!(totals[0], totals[1], "{}: partition coverage diverged", l.name);
+            // The whole point of floor ordering: the incumbent tightens
+            // sooner, so at least as many partitions get bounded away.
+            assert!(
+                pruned_cnt[1] >= pruned_cnt[0],
+                "{}: floor order pruned fewer partitions ({} < {})",
+                l.name,
+                pruned_cnt[1],
+                pruned_cnt[0]
+            );
         }
     }
 

@@ -1,0 +1,294 @@
+//! Warm-tier robustness: snapshot round-trips, schedule-store replay
+//! across a process "restart" (fresh handles over the same directory),
+//! and the corruption battery — every damaged input degrades to a cold
+//! start (counted in `load_skipped` / the store's `skipped`) with a
+//! correct schedule, never a panic and never a stale result.
+
+use kapla::arch::{presets, ArchConfig};
+use kapla::coordinator::{run_job_persistent, run_job_with, store_key_for, Job, SolverKind};
+use kapla::cost::{
+    load_session, save_session, CacheBudget, EvalCache as _, ScheduleStore, SessionCache,
+};
+use kapla::interlayer::dp::DpConfig;
+use kapla::solvers::{Objective, SolveResult};
+use kapla::workloads::nets;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "kapla-persist-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn arch() -> ArchConfig {
+    presets::bench_multi_node()
+}
+
+fn job() -> Job {
+    Job {
+        net: nets::mlp(),
+        batch: 4,
+        objective: Objective::Energy,
+        solver: SolverKind::Kapla,
+        dp: DpConfig { max_rounds: 8, solve_threads: 1, ..DpConfig::default() },
+        deadline_ms: None,
+    }
+}
+
+fn assert_same_schedule(a: &SolveResult, b: &SolveResult) {
+    assert_eq!(format!("{:?}", a.schedule), format!("{:?}", b.schedule));
+    assert_eq!(a.eval.energy.total().to_bits(), b.eval.energy.total().to_bits());
+}
+
+/// The single `.sched` file a one-entry store wrote.
+fn only_sched_file(dir: &Path) -> PathBuf {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "sched"))
+        .collect();
+    assert_eq!(files.len(), 1, "expected exactly one store file in {dir:?}");
+    files.pop().unwrap()
+}
+
+#[test]
+fn snapshot_round_trip_restores_stats_and_hits() {
+    let dir = tmp_dir("roundtrip");
+    let arch = arch();
+    let job = job();
+    let snap = dir.join("session.snap");
+
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let cold = run_job_with(&arch, &job, &s1).unwrap();
+    let saved = save_session(&s1, &snap).unwrap();
+    assert!(saved.eval_entries > 0, "cold solve must leave evaluations to save");
+    assert_eq!(saved.skipped, 0);
+
+    // Load into a fresh session: every record must come back, none skipped.
+    let s2 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let loaded = load_session(&s2, &snap, Some(&arch)).unwrap();
+    assert_eq!(loaded.eval_entries, saved.eval_entries);
+    assert_eq!(loaded.intra_entries, saved.intra_entries);
+    assert_eq!(loaded.skipped, 0);
+    assert_eq!(s2.load_skipped(), 0);
+
+    // Re-saving the loaded session keeps the same population (record
+    // order may differ — the memo is a map — but the contents round-trip).
+    let resaved = save_session(&s2, &dir.join("resave.snap")).unwrap();
+    assert_eq!(resaved.eval_entries, saved.eval_entries);
+    assert_eq!(resaved.intra_entries, saved.intra_entries);
+
+    // The warm session answers the repeat solve from the memo with a
+    // byte-identical schedule.
+    let warm = run_job_with(&arch, &job, &s2).unwrap();
+    assert_same_schedule(&cold, &warm);
+    assert!(warm.cache.hits > 0, "warm session never hit the restored memo");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_replay_is_byte_identical_across_restart() {
+    let dir = tmp_dir("replay");
+    let arch = arch();
+    let job = job();
+
+    let store = ScheduleStore::open(&dir.join("store")).unwrap();
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let cold = run_job_persistent(&arch, &job, &s1, Some(&store)).unwrap();
+    assert_eq!(store.hits(), 0);
+    assert_eq!(store.writes(), 1);
+    drop(store);
+    drop(s1);
+
+    // "Restart": fresh handles over the same directory, empty session.
+    let store = ScheduleStore::open(&dir.join("store")).unwrap();
+    let s2 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let warm = run_job_persistent(&arch, &job, &s2, Some(&store)).unwrap();
+    assert_eq!(store.hits(), 1);
+    assert_eq!(store.skipped(), 0);
+    assert_same_schedule(&cold, &warm);
+    // The replay bypasses the detailed-evaluation tier entirely.
+    let st = s2.stats();
+    assert_eq!(st.lookups, 0, "store hit must not touch the evaluation memo");
+    assert_eq!(st.intra_lookups, 0);
+    assert!(warm.cache.store_hits > 0);
+
+    // Never stale: a different request (other batch) has another key and
+    // must miss rather than replay the batch-4 schedule.
+    let other = Job { batch: 8, ..job.clone() };
+    assert_ne!(store_key_for(&arch, &other), store_key_for(&arch, &job));
+    assert!(store.lookup(&store_key_for(&arch, &other)).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_snapshot_degrades_to_cold_start() {
+    let dir = tmp_dir("trunc");
+    let arch = arch();
+    let job = job();
+    let snap = dir.join("session.snap");
+
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let cold = run_job_with(&arch, &job, &s1).unwrap();
+    save_session(&s1, &snap).unwrap();
+    let full = std::fs::read(&snap).unwrap();
+    assert!(full.len() > 32);
+
+    // Cut inside the header, one byte into the first frame, and inside
+    // the last frame's checksum — all provably mid-structure: every
+    // prefix loads without error, counts at least one skip, and the
+    // session still solves to the correct schedule. (A cut at an exact
+    // frame boundary is simply a shorter valid snapshot, so those are
+    // not in the battery.)
+    for cut in [4usize, 13, full.len() - 3] {
+        std::fs::write(&snap, &full[..cut]).unwrap();
+        let s = SessionCache::new(CacheBudget::UNBOUNDED);
+        let st = load_session(&s, &snap, Some(&arch)).unwrap();
+        assert!(st.skipped > 0, "truncation at {cut} went unnoticed");
+        assert!(s.load_skipped() > 0);
+        let r = run_job_with(&arch, &job, &s).unwrap();
+        assert_same_schedule(&cold, &r);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flipped_version_byte_rejects_whole_snapshot() {
+    let dir = tmp_dir("version");
+    let arch = arch();
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    run_job_with(&arch, &job(), &s1).unwrap();
+    let snap = dir.join("session.snap");
+    save_session(&s1, &snap).unwrap();
+
+    let mut bytes = std::fs::read(&snap).unwrap();
+    bytes[8] ^= 0xFF; // version field, little-endian low byte
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let s2 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let st = load_session(&s2, &snap, Some(&arch)).unwrap();
+    assert_eq!(st.eval_entries, 0, "future-versioned snapshot must not be trusted");
+    assert_eq!(st.intra_entries, 0);
+    assert_eq!(st.skipped, 1);
+    assert_eq!(s2.stats().entries, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wrong_arch_fingerprint_entries_are_skipped() {
+    let dir = tmp_dir("archfp");
+    let bench = arch();
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    run_job_with(&bench, &job(), &s1).unwrap();
+    let snap = dir.join("session.snap");
+    let saved = save_session(&s1, &snap).unwrap();
+
+    // Same bytes, different hardware: every entry is fingerprinted for
+    // the bench mesh and must be dropped when loading for the edge TPU.
+    let edge = presets::edge_tpu();
+    let s2 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let st = load_session(&s2, &snap, Some(&edge)).unwrap();
+    assert_eq!(st.eval_entries, 0);
+    assert_eq!(st.intra_entries, 0);
+    assert_eq!(st.skipped, saved.eval_entries + saved.intra_entries);
+    assert_eq!(s2.stats().entries, 0);
+    assert_eq!(s2.load_skipped(), st.skipped);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_store_file_falls_back_to_cold_solve() {
+    let dir = tmp_dir("storecorrupt");
+    let arch = arch();
+    let job = job();
+    let store_dir = dir.join("store");
+
+    let store = ScheduleStore::open(&store_dir).unwrap();
+    let s1 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let pristine = run_job_persistent(&arch, &job, &s1, Some(&store)).unwrap();
+
+    // Flip one payload byte: the checksum kills the entry, the request
+    // re-solves cold (correct result), and the rewrite heals the store.
+    let file = only_sched_file(&store_dir);
+    let mut bytes = std::fs::read(&file).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(&file, &bytes).unwrap();
+
+    let store = ScheduleStore::open(&store_dir).unwrap();
+    let s2 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let healed = run_job_persistent(&arch, &job, &s2, Some(&store)).unwrap();
+    assert_eq!(store.hits(), 0, "corrupt entry must never count as a hit");
+    assert!(store.skipped() > 0);
+    assert_eq!(store.writes(), 1, "cold re-solve must rewrite the entry");
+    assert_same_schedule(&pristine, &healed);
+
+    // After the heal the very same handle serves the replay.
+    let s3 = SessionCache::new(CacheBudget::UNBOUNDED);
+    let replay = run_job_persistent(&arch, &job, &s3, Some(&store)).unwrap();
+    assert_eq!(store.hits(), 1);
+    assert_same_schedule(&pristine, &replay);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_writers_never_corrupt_snapshot_or_store() {
+    let dir = tmp_dir("concurrent");
+    let arch = arch();
+    let job = job();
+    let snap = dir.join("session.snap");
+    let store_dir = dir.join("store");
+
+    let session = SessionCache::new(CacheBudget::UNBOUNDED);
+    let expected = run_job_with(&arch, &job, &session).unwrap();
+    let saved = save_session(&session, &snap).unwrap();
+    let store = ScheduleStore::open(&store_dir).unwrap();
+    let key = store_key_for(&arch, &job);
+
+    // Hammer the same snapshot path and the same store entry from
+    // several threads while a reader loads mid-flight. Atomic
+    // temp-file+rename publication means every observation is either the
+    // old complete file or the new complete file — never a torn one.
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let session = &session;
+            let snap = &snap;
+            let store = &store;
+            let expected = &expected;
+            let key = &key;
+            scope.spawn(move || {
+                for _ in 0..10 {
+                    save_session(session, snap).unwrap();
+                    store
+                        .record(key, &expected.schedule, expected.prune.as_ref(), None)
+                        .unwrap();
+                }
+            });
+        }
+        let arch = &arch;
+        let snap = &snap;
+        scope.spawn(move || {
+            for _ in 0..20 {
+                let probe = SessionCache::new(CacheBudget::UNBOUNDED);
+                let st = load_session(&probe, snap, Some(arch)).unwrap();
+                assert_eq!(st.skipped, 0, "reader saw a torn snapshot");
+            }
+        });
+    });
+
+    let fresh = SessionCache::new(CacheBudget::UNBOUNDED);
+    let st = load_session(&fresh, &snap, Some(&arch)).unwrap();
+    assert_eq!(st.skipped, 0);
+    assert_eq!(st.eval_entries, saved.eval_entries);
+    let stored = store.lookup(&key).expect("store entry readable after the write storm");
+    assert_eq!(format!("{:?}", stored.schedule), format!("{:?}", expected.schedule));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -14,7 +14,7 @@ use kapla::mapping::UnitMap;
 use kapla::partition::enumerate_partitions;
 use kapla::sim::{evaluate_layer, StagedEval};
 use kapla::solvers::exhaustive::ExhaustiveIntra;
-use kapla::solvers::space::{qty_candidates, visit_schemes, BnbCounters};
+use kapla::solvers::space::{qty_candidates, visit_schemes, BnbCounters, PartOrder};
 use kapla::solvers::{IntraCtx, IntraSolver as _, Objective};
 use kapla::util::SplitMix64;
 use kapla::workloads::nets;
@@ -167,10 +167,13 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
             let (full_cost, full_scheme) = full.expect("space non-empty");
 
             let counters = BnbCounters::new();
+            // Enum order: this test pins byte-identity against the naive
+            // enumeration-order scan, so the first-minimum identity matters.
             let solver = ExhaustiveIntra {
                 with_sharing: true,
                 stats: Some(&counters),
                 part_floor: true,
+                part_order: PartOrder::Enum,
                 cancel: None,
             };
             let pruned = solver.solve(&arch, layer, &ctx, &TieredCost::fresh()).unwrap();
@@ -204,6 +207,7 @@ fn pruned_exhaustive_equals_full_scan_on_zoo_layers() {
                 with_sharing: true,
                 stats: None,
                 part_floor: false,
+                part_order: PartOrder::Enum,
                 cancel: None,
             }
                 .solve(&arch, layer, &ctx, &TieredCost::fresh())
